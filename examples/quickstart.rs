@@ -1,0 +1,55 @@
+//! Quickstart: load the AOT artifacts, run one dithered gradient step,
+//! inspect the paper's headline quantities.
+//!
+//! ```bash
+//! make artifacts && cargo run --offline --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use ditherprop::data;
+use ditherprop::runtime::Engine;
+
+fn main() -> Result<()> {
+    // 1. Load the manifest + PJRT CPU client.  Everything below runs on
+    //    AOT-compiled XLA; python is not involved.
+    let engine = Engine::load("artifacts")?;
+    println!("platform: {}", engine.platform());
+
+    // 2. Open a training session: model x method x batch pins one
+    //    compiled executable.
+    let session = engine.training_session("mlp500", "dithered", 64)?;
+    println!(
+        "model mlp500: {} params, {} weights, {} quantized layers",
+        session.entry.n_params(),
+        session.entry.total_weights(),
+        session.entry.n_qlayers
+    );
+
+    // 3. Initialize parameters (init artifact) and synthesize a batch.
+    let params = engine.init_params("mlp500", 0)?;
+    let ds = data::build("digits", 256, 64, 7);
+    let mut iter = ditherprop::data::BatchIter::new(&ds.train, 64, 1);
+    iter.next_batch(&ds.train);
+
+    // 4. One gradient step with dither scale s = 2 (the paper's single
+    //    global hyperparameter).
+    let out = session.grad(&params, &iter.x, &iter.y, /*seed=*/ 123, /*s=*/ 2.0)?;
+    println!("loss: {:.4}   batch accuracy: {:.2}%", out.loss, out.correct / 64.0 * 100.0);
+    println!("per-layer delta_z sparsity: {:?}", out.sparsity);
+    println!("per-layer max |level|:      {:?}", out.max_level);
+    println!(
+        "mean sparsity {:.1}%  worst-case bitwidth {} bits (paper: 75-99%, <= 8 bits)",
+        out.mean_sparsity() * 100.0,
+        out.max_bitwidth()
+    );
+
+    // 5. The same step without dithering, for contrast.
+    let base = engine.training_session("mlp500", "baseline", 64)?;
+    let bout = base.grad(&params, &iter.x, &iter.y, 123, 0.0)?;
+    println!(
+        "baseline sparsity {:.1}% -> dithered {:.1}% (the Table 1 effect)",
+        bout.mean_sparsity() * 100.0,
+        out.mean_sparsity() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Sparsity/accuracy trade-off sweep over the dither scale s — the
+//! paper's single hyperparameter knob, on one model, with the Eq. 12 and
+//! SCNN projections attached to each operating point.
+//!
+//! ```bash
+//! cargo run --offline --release --example sparsity_sweep -- --model mlp500 --steps 200
+//! ```
+
+use anyhow::Result;
+use ditherprop::costmodel;
+use ditherprop::data;
+use ditherprop::metrics::Table;
+use ditherprop::runtime::Engine;
+use ditherprop::train::{train, TrainConfig};
+use ditherprop::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.str_or("model", "mlp500");
+    let steps = args.usize_or("steps", 200);
+    let engine = Engine::load(args.str_or("artifacts", "artifacts"))?;
+    let entry = engine.manifest.model(&model)?;
+    let ds = data::build(&entry.dataset, 4096, 512, 7);
+
+    let mut table = Table::new(&[
+        "s", "test acc%", "sparsity%", "bits", "P0 analytic", "Eq12 ratio", "SCNN speedup",
+    ]);
+    for s in [0.0, 0.5, 1.0, 2.0, 4.0, 6.0, 8.0] {
+        let method = if s == 0.0 { "baseline" } else { "dithered" };
+        let cfg = TrainConfig::quick(&model, method, s, steps);
+        let res = train(&engine, &ds, &cfg)?;
+        let sp = res.history.mean_sparsity();
+        table.row(&[
+            format!("{s:.1}"),
+            format!("{:.2}", res.test_acc * 100.0),
+            format!("{:.2}", sp * 100.0),
+            format!("{}", res.history.max_bits()),
+            format!("{:.3}", costmodel::p_zero(s as f64)),
+            format!("{:.3}", costmodel::savings_ratio(500, 1.0 - sp as f64)),
+            format!("x{:.1}", costmodel::speedup(sp as f64)),
+        ]);
+        println!("s={s}: acc {:.3} sparsity {:.3}", res.test_acc, sp);
+    }
+    println!("\n{}", table.render());
+    println!("note: measured sparsity exceeds the pure-Gaussian P0 when delta_z is\nheavier-tailed than Gaussian (most real layers), matching the paper's 75-99% range.");
+    Ok(())
+}

@@ -1,0 +1,161 @@
+"""AOT compiler: lower every step function to HLO text + manifest.json.
+
+Run once at build time (``make artifacts``); the rust coordinator then
+loads ``artifacts/*.hlo.txt`` via PJRT and never touches python again.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).  We lower with
+``return_tuple=True`` and the rust side unwraps the tuple.
+
+Artifact set (DESIGN.md §Artifacts):
+  init_<model>.hlo.txt                      (seed:u32) -> params...
+  eval_<model>_b<B>.hlo.txt                 (params..., x, y) -> (loss, correct)
+  grad_<model>_<method>_b<B>.hlo.txt        (params..., x, y, seed:u32, s:f32)
+                                            -> (grads..., loss, correct,
+                                                sparsity[L], maxlevel[L])
+
+Methods: baseline / dithered / int8 / int8_dithered for every model at
+train and worker batch sizes; meProp (Fig. 4 comparator) for mlp500 at a
+sweep of k values, since k is trace-time static.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    example_batch,
+    get_model,
+    make_eval_step,
+    make_grad_step,
+    make_init_step,
+    param_structs,
+)
+from .models import MODELS
+
+TRAIN_BATCH = 64
+WORKER_BATCH = 1          # distributed setting, paper §4.3: batch 1 per node
+EVAL_BATCH = 256
+MEPROP_KS = (5, 10, 25, 50, 125)
+CORE_METHODS = ("baseline", "dithered", "int8", "int8_dithered")
+# Ablation methods (lowered at the train batch only, mlp500-scale study).
+ABLATION_METHODS = ("detq",)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, fname: str, text: str) -> str:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    return fname
+
+
+def _scalar(dtype):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def lower_model(name: str, out_dir: str, verbose: bool = True):
+    model = get_model(name)
+    pstructs = param_structs(model)
+    entry = {
+        "dataset": model.spec.dataset,
+        "input_shape": list(model.spec.input_shape),
+        "num_classes": model.spec.num_classes,
+        "n_qlayers": model.spec.n_qlayers,
+        "params": [
+            {"name": n, "shape": list(s.shape)}
+            for n, s in zip(model.spec.param_names, pstructs)
+        ],
+        "artifacts": {"grad": []},
+    }
+
+    def log(msg):
+        if verbose:
+            print(f"  {msg}", flush=True)
+
+    t0 = time.time()
+    lowered = jax.jit(make_init_step(model)).lower(_scalar(jnp.uint32))
+    entry["artifacts"]["init"] = _write(out_dir, f"init_{name}.hlo.txt", to_hlo_text(lowered))
+    log(f"init ({time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    xs, ys = example_batch(model, EVAL_BATCH)
+    lowered = jax.jit(make_eval_step(model)).lower(*pstructs, xs, ys)
+    entry["artifacts"]["eval"] = _write(
+        out_dir, f"eval_{name}_b{EVAL_BATCH}.hlo.txt", to_hlo_text(lowered)
+    )
+    entry["eval_batch"] = EVAL_BATCH
+    log(f"eval b{EVAL_BATCH} ({time.time() - t0:.1f}s)")
+
+    methods = list(CORE_METHODS)
+    if name == "mlp500":
+        methods += [f"meprop_k{k}" for k in MEPROP_KS]
+        methods += list(ABLATION_METHODS)
+
+    for method in methods:
+        # meprop's k is trace-time static and encoded in the method string,
+        # so each k is its own artifact (Fig. 4 sweep); other methods are
+        # runtime-tunable via the s input and need one artifact per batch.
+        step = make_grad_step(model, method)
+        ablation = method.startswith("meprop") or method in ABLATION_METHODS
+        batches = (TRAIN_BATCH,) if ablation else (TRAIN_BATCH, WORKER_BATCH)
+        for batch in batches:
+            t0 = time.time()
+            xs, ys = example_batch(model, batch)
+            lowered = jax.jit(step).lower(
+                *pstructs, xs, ys, _scalar(jnp.uint32), _scalar(jnp.float32)
+            )
+            fname = _write(
+                out_dir, f"grad_{name}_{method}_b{batch}.hlo.txt", to_hlo_text(lowered)
+            )
+            entry["artifacts"]["grad"].append(
+                {"method": method, "batch": batch, "path": fname}
+            )
+            log(f"grad {method} b{batch} ({time.time() - t0:.1f}s)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--models", default=",".join(MODELS), help="comma list")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "train_batch": TRAIN_BATCH,
+        "worker_batch": WORKER_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "meprop_ks": list(MEPROP_KS),
+        "models": {},
+    }
+    t0 = time.time()
+    for name in args.models.split(","):
+        print(f"[aot] lowering {name}", flush=True)
+        manifest["models"][name] = lower_model(name, args.out, verbose=not args.quiet)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json ({time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Shared utilities for the Pallas kernels (L1).
+
+Everything here is build-time Python: these functions are traced by JAX
+once, lowered into the HLO artifacts, and never run on the rust request
+path.
+
+The counter-based RNG below is the TPU-friendly way to produce the dither
+signal: instead of materialising a noise tensor in HBM and streaming it in
+(doubling the kernel's memory traffic), each VMEM tile hashes its own
+``(seed, global element index)`` pairs on the VPU.  The hash is an
+xxhash/murmur-style avalanche mix — far cheaper than threefry and easily
+good enough for dither noise (we verify uniformity statistically in
+``python/tests/test_rng.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Default tile shape for elementwise kernels.  (8, 128) is the native TPU
+# vector-register tile for f32; interpret mode does not care but we keep the
+# real-hardware shape so the BlockSpecs in DESIGN.md §Perf are meaningful.
+TILE_M = 8
+TILE_N = 128
+
+_GOLDEN = np.uint32(0x9E3779B9)
+_MIX1 = np.uint32(0x85EBCA6B)
+_MIX2 = np.uint32(0xC2B2AE35)
+
+
+def hash_u32(idx: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Avalanche-mix ``idx`` (uint32 counters) with ``seed`` (uint32 scalar).
+
+    murmur3-style finalizer; uint32 arithmetic wraps in XLA, which is
+    exactly what we want.
+    """
+    h = (idx ^ seed) * _GOLDEN
+    h = (h ^ (h >> 16)) * _MIX1
+    h = (h ^ (h >> 13)) * _MIX2
+    return h ^ (h >> 16)
+
+
+def uniform_from_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Map uint32 bits to f32 uniform in [0, 1).
+
+    Fill the 23-bit mantissa, force the exponent to [1, 2), subtract 1.
+    Bit-exact reproducible on every backend (no division involved).
+    """
+    fbits = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
+    return lax.bitcast_convert_type(fbits, jnp.float32) - 1.0
+
+
+def dither_noise(shape, seed: jnp.ndarray, base: jnp.ndarray) -> jnp.ndarray:
+    """Uniform noise in (-1/2, 1/2) for a tile.
+
+    ``base`` is the linear index of the tile's first element in the padded
+    global tensor; element (r, c) of an (m, n) tile gets counter
+    ``base + r * ROW_STRIDE + c`` so tiles never overlap counters.
+    """
+    m, n = shape
+    rows = lax.broadcasted_iota(jnp.uint32, (m, n), 0)
+    cols = lax.broadcasted_iota(jnp.uint32, (m, n), 1)
+    idx = base + rows * np.uint32(ROW_STRIDE) + cols
+    return uniform_from_bits(hash_u32(idx, seed)) - 0.5
+
+
+# Counter stride between consecutive rows of the *global* (padded) tensor.
+# A fixed power of two keeps the counter math cheap and collision-free for
+# any tensor with fewer than 2^16 columns (all our layers qualify).
+ROW_STRIDE = 1 << 16
+
+
+def pad2d(x: jnp.ndarray, tm: int, tn: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to multiples of (tm, tn)."""
+    m, n = x.shape
+    pm = (-m) % tm
+    pn = (-n) % tn
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def as2d(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
+    """Collapse an N-D tensor to 2-D (leading dim, rest), remember shape."""
+    shape = x.shape
+    if x.ndim == 2:
+        return x, shape
+    return x.reshape(shape[0], -1), shape
+
+
+def from2d(x2: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    return x2.reshape(shape)

@@ -1,0 +1,141 @@
+"""L1 Pallas kernel: non-subtractive dithered (NSD) quantization.
+
+Implements the paper's Eq. 4,
+
+    x~ = Delta * floor( (x + nu)/Delta + 1/2 ),   nu ~ U(-Delta/2, Delta/2)
+
+applied tile-by-tile to the pre-activation gradient tensor.  Delta is the
+per-layer step ``s * std(delta_z)`` (Alg. 1); the standard deviation is a
+single cheap reduction left to XLA in L2, so the kernel receives Delta as a
+scalar operand.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the dither signal is
+generated *inside* the kernel by a counter-based hash RNG keyed on
+``(seed, global element index)`` — no noise tensor in HBM, so the kernel is
+a single-pass read-modify-write over delta_z with pure-VPU arithmetic.
+
+Must run with ``interpret=True`` on this image (CPU PJRT cannot execute
+Mosaic custom-calls); under ``jax.jit`` tracing the interpreted kernel
+inlines into the surrounding HLO, which is what ``aot.py`` ships to rust.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .common import (
+    ROW_STRIDE,
+    TILE_M,
+    TILE_N,
+    cdiv,
+    dither_noise,
+    pad2d,
+)
+
+
+def _nsd_kernel(seed_ref, delta_ref, g_ref, o_ref, *, tile_m: int, tile_n: int):
+    """One (tile_m, tile_n) tile: add dither, round to the Delta grid."""
+    g = g_ref[...]
+    seed = seed_ref[0]
+    delta = delta_ref[0]
+
+    # Counter base of this tile in the padded global tensor.
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    base = (
+        ti.astype(jnp.uint32) * np.uint32(tile_m) * np.uint32(ROW_STRIDE)
+        + tj.astype(jnp.uint32) * np.uint32(tile_n)
+    )
+    nu = dither_noise((tile_m, tile_n), seed, base) * delta
+
+    # Guard Delta == 0 (s == 0 or a dead layer with std == 0): identity.
+    safe = jnp.where(delta > 0.0, delta, 1.0)
+    q = safe * jnp.floor((g + nu) / safe + 0.5)
+    o_ref[...] = jnp.where(delta > 0.0, q, g)
+
+
+def pick_tile(m: int, n: int) -> tuple[int, int]:
+    """Adaptive tile for the NSD kernel (§Perf L1).
+
+    Output values are tiling-invariant (the RNG counter is global — see
+    test_tiling_invariance), so the tile is pure scheduling.  Grid-step
+    count dominates both the interpret-mode loop overhead and, on real
+    TPU, the per-step control cost; large tensors therefore take (32,
+    512) tiles (64 KiB f32 — comfortably VMEM-resident with
+    double-buffering) and small ones the native (8, 128) vreg tile.
+    """
+    tm = 32 if m >= 64 else TILE_M
+    tn = 512 if n >= 1024 else TILE_N
+    return tm, tn
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
+def nsd_quantize_2d(
+    g: jnp.ndarray,
+    delta: jnp.ndarray,
+    seed: jnp.ndarray,
+    *,
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Quantize a 2-D f32 tensor with NSD at step ``delta``.
+
+    Args:
+      g: (M, N) f32 — pre-activation gradients.
+      delta: scalar f32 — quantization step (s * sigma).
+      seed: scalar uint32 — dither seed for this (layer, step).
+    Returns:
+      (M, N) f32 on the Delta grid (exact integer multiples of Delta).
+    """
+    m, n = g.shape
+    gp = pad2d(g, tile_m, tile_n)
+    mp, np_ = gp.shape
+    grid = (cdiv(mp, tile_m), cdiv(np_, tile_n))
+
+    out = pl.pallas_call(
+        functools.partial(_nsd_kernel, tile_m=tile_m, tile_n=tile_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(
+        seed.reshape((1,)).astype(jnp.uint32),
+        delta.reshape((1,)).astype(jnp.float32),
+        gp,
+    )
+    return out[:m, :n]
+
+
+def nsd_quantize(g: jnp.ndarray, s: jnp.ndarray, seed: jnp.ndarray, *, interpret: bool = True):
+    """Full Alg. 1: sigma = std(g); Delta = s * sigma; quantize.
+
+    Accepts any rank; internally flattens to 2-D.  Returns
+    ``(q, delta, stats)`` where stats is ``[sparsity, max_abs_level]``:
+      - sparsity: fraction of exact zeros in q,
+      - max_abs_level: max |q| / Delta — an integer-valued float whose
+        ceil(log2(.+1))+1 is the worst-case bitwidth of Fig. 6b.
+    """
+    shape = g.shape
+    g2 = g.reshape(shape[0], -1) if g.ndim != 2 else g
+    sigma = jnp.std(g2)
+    delta = (s * sigma).astype(jnp.float32)
+    tm, tn = pick_tile(*g2.shape)
+    q2 = nsd_quantize_2d(g2, delta, seed, tile_m=tm, tile_n=tn, interpret=interpret)
+    q = q2.reshape(shape)
+    sparsity = jnp.mean(q == 0.0)
+    safe = jnp.where(delta > 0.0, delta, 1.0)
+    max_level = jnp.where(delta > 0.0, jnp.max(jnp.abs(q)) / safe, 0.0)
+    stats = jnp.stack([sparsity, max_level]).astype(jnp.float32)
+    return q, delta, stats

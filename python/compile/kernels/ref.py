@@ -1,0 +1,95 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Two kinds of reference:
+
+  * *bit-exact* oracles (``nsd_quantize_2d_ref``) replicate the kernels'
+    counter-based RNG with plain jnp ops, so pytest can require exact
+    equality with the Pallas output on every shape/seed hypothesis draws;
+
+  * *mathematical* oracles (``nsd_apply_ref``, plain ``a @ b``) implement
+    the paper's equations directly and back the statistical invariants
+    (unbiasedness Eq. 5, variance bound Eq. 6, sparsity curve Fig. 2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .common import ROW_STRIDE, hash_u32, pad2d, uniform_from_bits
+
+
+def dither_noise_ref(padded_shape, seed):
+    """The kernel's in-tile noise, recomputed globally with plain jnp.
+
+    Tile (ti, tj) of shape (tm, tn) uses counter base
+    ``ti*tm*ROW_STRIDE + tj*tn`` and per-element offset ``r*ROW_STRIDE + c``;
+    globally that is exactly ``row * ROW_STRIDE + col`` of the padded
+    tensor, independent of the tiling — which is what makes a bit-exact
+    whole-tensor reference possible.
+    """
+    m, n = padded_shape
+    rows = lax.broadcasted_iota(jnp.uint32, (m, n), 0)
+    cols = lax.broadcasted_iota(jnp.uint32, (m, n), 1)
+    idx = rows * np.uint32(ROW_STRIDE) + cols
+    return uniform_from_bits(hash_u32(idx, seed.astype(jnp.uint32))) - 0.5
+
+
+def nsd_quantize_2d_ref(g, delta, seed, tile_m=8, tile_n=128):
+    """Bit-exact oracle for ``nsd.nsd_quantize_2d``."""
+    m, n = g.shape
+    gp = pad2d(g, tile_m, tile_n)
+    nu = dither_noise_ref(gp.shape, seed) * delta
+    safe = jnp.where(delta > 0.0, delta, 1.0)
+    q = safe * jnp.floor((gp + nu) / safe + 0.5)
+    q = jnp.where(delta > 0.0, q, gp)
+    return q[:m, :n]
+
+
+def nsd_apply_ref(g, delta, noise):
+    """Paper Eq. 4 with externally supplied dither ``noise ~ U(-1/2, 1/2)``.
+
+    Used for statistical tests where the noise source must be an
+    *independent, known-good* uniform (jax.random), not the kernel's hash.
+    """
+    safe = jnp.where(delta > 0.0, delta, 1.0)
+    q = safe * jnp.floor((g + noise * delta) / safe + 0.5)
+    return jnp.where(delta > 0.0, q, g)
+
+
+def matmul_ref(a, b):
+    """Dense oracle for the block-sparse GEMMs."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def sparsity_ref(q):
+    return jnp.mean(q == 0.0)
+
+
+def gauss_uniform_p0(s: float) -> float:
+    """Fig. 2 closed form: P(quantized value == 0) for g ~ N(0, sigma^2),
+    Delta = s * sigma.
+
+    A value quantizes to 0 iff g + nu in (-Delta/2, Delta/2) with
+    nu ~ U(-Delta/2, Delta/2); integrating out nu gives (sigma = 1,
+    Delta = s)
+
+        P0 = E_nu[ Phi(s/2 - nu) - Phi(-s/2 - nu) ].
+
+    Evaluated by midpoint quadrature; rust `costmodel/analytic.rs`
+    reimplements this and the benches compare the two curves.
+    """
+    if s <= 0:
+        return 0.0
+    from math import erf, sqrt
+
+    def phi(x):
+        return 0.5 * (1.0 + erf(x / sqrt(2.0)))
+
+    n = 4096
+    acc = 0.0
+    for i in range(n):
+        nu = -s / 2 + (i + 0.5) * s / n
+        acc += phi(s / 2 - nu) - phi(-s / 2 - nu)
+    return acc / n

@@ -1,0 +1,113 @@
+"""L1 Pallas kernels: block-sparse GEMMs for the dithered backward pass.
+
+The paper computes both backward products with the NSD-quantized gradient
+``qg``::
+
+    dx = qg @ W^T        (Eq. 8, sparse LHS)
+    dW = x^T @ qg        (Eq. 9, sparse RHS)
+
+and relies on element-level sparse kernels / SCNN-class hardware for the
+savings.  Element-unstructured sparsity is hostile to the TPU MXU, so the
+TPU adaptation (DESIGN.md §Hardware-Adaptation) works at *block*
+granularity: the sparse operand is tiled (TM, TK) / (TK, TN), and any tile
+that is entirely zero skips its MXU contraction via ``pl.when``
+predication.  After NSD at the paper's operating points (75–99% element
+sparsity) a large fraction of 8x128 tiles are exactly zero, so skipped
+blocks translate one-for-one into MXU cycles saved; the rust cost model
+(`costmodel/`) accounts both the element-level (paper Eq. 12) and the
+block-level (this kernel) savings.
+
+interpret=True everywhere on this image; the predication still shapes the
+lowered HLO (a cond per grid cell), and correctness vs the dense oracle is
+exercised in python/tests/test_sparse_matmul.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pad2d
+
+# Default GEMM tiles.  TM/TN match the MXU native 128 lane dimension; TK is
+# kept small (the batch dimension in dW) so zero-blocks are frequent.
+TM, TK, TN = 128, 128, 128
+
+
+def _sd_kernel(a_ref, b_ref, o_ref):
+    """out[i,j] += a[i,k] @ b[k,j], skipping all-zero A blocks (sparse LHS)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+
+    @pl.when(jnp.any(a != 0.0))
+    def _acc():
+        o_ref[...] += jnp.dot(a, b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _ds_kernel(a_ref, b_ref, o_ref):
+    """out[i,j] += a[i,k] @ b[k,j], skipping all-zero B blocks (sparse RHS)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    b = b_ref[...]
+
+    @pl.when(jnp.any(b != 0.0))
+    def _acc():
+        o_ref[...] += jnp.dot(a_ref[...], b, preferred_element_type=jnp.float32)
+
+
+def _block_matmul(a, b, kernel, tm, tk, tn, interpret):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    ap = pad2d(a, tm, tk)
+    bp = pad2d(b, tk, tn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (cdiv(mp, tm), cdiv(np_, tn), cdiv(kp, tk))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn", "interpret"))
+def sd_matmul(a_sparse, b, *, tm=TM, tk=TK, tn=TN, interpret=True):
+    """``a_sparse @ b`` where ``a_sparse`` is block-sparse (NSD output)."""
+    return _block_matmul(a_sparse, b, _sd_kernel, tm, tk, tn, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tk", "tn", "interpret"))
+def ds_matmul(a, b_sparse, *, tm=TM, tk=TK, tn=TN, interpret=True):
+    """``a @ b_sparse`` where ``b_sparse`` is block-sparse (NSD output)."""
+    return _block_matmul(a, b_sparse, _ds_kernel, tm, tk, tn, interpret)
+
+
+def block_occupancy(a: jnp.ndarray, tm: int = TM, tk: int = TK) -> jnp.ndarray:
+    """Fraction of (tm, tk) blocks of ``a`` with at least one nonzero.
+
+    This is the quantity that governs *our* (block-level) savings, vs the
+    paper's element-level p_nz; both are reported by the benches.
+    """
+    ap = pad2d(a, tm, tk)
+    m, k = ap.shape
+    blocks = ap.reshape(m // tm, tm, k // tk, tk)
+    nz = jnp.any(blocks != 0.0, axis=(1, 3))
+    return jnp.mean(nz.astype(jnp.float32))

@@ -1,0 +1,310 @@
+"""L2 layers: dense / conv with an instrumented, quantized backward pass.
+
+This is where the paper's algorithm lives.  Each layer is a
+``jax.custom_vjp`` whose *forward* is the ordinary affine op (optionally
+int8 fake-quantized, Banner et al. [14]) and whose *backward* implements
+Eqs. 7–9: the incoming cotangent ``g`` — which is exactly the
+pre-activation gradient ``delta_z`` of that layer — is compressed by the
+configured method before the two gradient GEMMs.
+
+Methods (``BwdCfg.method``):
+  baseline       g used as-is (paper's "Baseline" column)
+  dithered       NSD quantization, Delta = s * std(g)   (the contribution)
+  meprop         top-k magnitude selection (Sun et al. [18] comparator)
+  int8           deterministic 8-bit uniform quantization of g, plus int8
+                 fake-quant forward (Banner et al. [14] stand-in)
+  int8_dithered  int8 forward + NSD backward (paper's rightmost column)
+
+Stats plumbing — the sink trick: each layer takes a dummy ``sink`` input
+of zeros((2,)); its "cotangent" returned from the bwd rule carries
+``[sparsity, max_abs_level]`` of the quantized delta_z.  The step
+functions in model.py split these pseudo-gradients from the real ones.
+
+Seeds: the dither seed is a *traced* uint32 scalar input (so rust can
+re-seed every step); its cotangent is float0 as JAX requires for integer
+primals.  Each layer folds its static ``layer_idx`` into the seed so no
+two layers share dither noise within a step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.nsd import nsd_quantize
+from .kernels.sparse_matmul import ds_matmul, sd_matmul
+
+METHODS = ("baseline", "dithered", "meprop", "int8", "int8_dithered", "detq")
+
+
+@dataclasses.dataclass(frozen=True)
+class BwdCfg:
+    """Static (trace-time) configuration of one quantized layer.
+
+    ``method`` is one of METHODS; meProp's k (trace-time static) is
+    encoded in the string as ``meprop_k<N>`` (plain ``meprop`` uses
+    ``meprop_k`` below).
+    """
+
+    method: str = "baseline"
+    layer_idx: int = 0
+    # Use the Pallas block-sparse GEMMs for the two backward products of
+    # dense layers (conv layers always go through XLA's transposed convs).
+    use_pallas: bool = True
+    # meProp: keep this many largest-|g| entries per example row.
+    meprop_k: int = 32
+    # conv only:
+    stride: int = 1
+
+    def __post_init__(self):
+        base = self.method.split("_k")[0]
+        assert base in METHODS, self.method
+
+    @property
+    def kind(self) -> str:
+        return self.method.split("_k")[0]
+
+    @property
+    def topk(self) -> int:
+        if "_k" in self.method and self.method.startswith("meprop"):
+            return int(self.method.split("_k")[1])
+        return self.meprop_k
+
+
+def fold_seed(seed: jnp.ndarray, layer_idx: int) -> jnp.ndarray:
+    """Per-layer dither stream: mix the static layer index into the seed."""
+    return (seed.astype(jnp.uint32) ^ np.uint32((layer_idx * 0x9E3779B9 + 0x7F4A7C15) & 0xFFFFFFFF))
+
+
+def _float0_for(x):
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# forward-side int8 fake quantization (Banner et al. stand-in)
+# ---------------------------------------------------------------------------
+
+
+def fq8(t: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric per-tensor 8-bit fake quantization.
+
+    Values land on a 255-level uniform grid spanning [-max|t|, max|t|].
+    Used on weights and activations in the int8 forward pass; the
+    straight-through estimator is implicit here because fq8 is applied
+    *inside* custom_vjp forwards whose bwd rules differentiate the
+    unquantized graph.
+    """
+    amax = jnp.max(jnp.abs(t))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    return jnp.clip(jnp.round(t / scale), -127, 127) * scale
+
+
+def q8_det(g: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Deterministic 8-bit quantization of a gradient tensor (int8 method)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.round(g / scale) * scale
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# backward-side compression = the paper's Eq. 7 (and comparators)
+# ---------------------------------------------------------------------------
+
+
+def _meprop_topk(g: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Keep the k largest-|g| entries of each example row, zero the rest.
+
+    Implemented with sort rather than lax.top_k: jax lowers top_k to the
+    new `topk(..., largest=true)` HLO instruction whose text form the
+    pinned xla_extension 0.5.1 parser rejects; `sort` round-trips fine.
+    """
+    g2 = g.reshape(g.shape[0], -1)
+    n = g2.shape[1]
+    kk = min(k, n)
+    # threshold = k-th largest magnitude per row
+    sorted_abs = jnp.sort(jnp.abs(g2), axis=-1)          # ascending
+    top = sorted_abs[:, n - kk][:, None]
+    keep = jnp.abs(g2) >= top
+    out = jnp.where(keep, g2, 0.0)
+    return out.reshape(g.shape)
+
+
+def compress_grad(cfg: BwdCfg, g: jnp.ndarray, seed: jnp.ndarray, s: jnp.ndarray):
+    """Apply the configured delta_z compression.  Returns (qg, stats[2])."""
+    if cfg.kind in ("dithered", "int8_dithered"):
+        qg, _delta, stats = nsd_quantize(g, s, fold_seed(seed, cfg.layer_idx))
+        return qg, stats
+    if cfg.kind == "meprop":
+        qg = _meprop_topk(g, cfg.topk)
+        stats = jnp.stack([jnp.mean(qg == 0.0), jnp.float32(0.0)])
+        return qg, stats.astype(jnp.float32)
+    if cfg.kind == "int8":
+        qg, _scale = q8_det(g)
+        stats = jnp.stack([jnp.mean(qg == 0.0), jnp.float32(127.0)])
+        return qg, stats.astype(jnp.float32)
+    if cfg.kind == "detq":
+        # Ablation: the same Delta = s*std(g) grid as NSD but with plain
+        # deterministic rounding — no dither signal.  Isolates what the
+        # dither buys: detq's quantization error is *correlated with the
+        # signal* (biased conditional mean), the failure mode §1 warns
+        # about ("naive quantization may induce biased, non-linear
+        # errors with catastrophic effects for convergence").
+        sigma = jnp.std(g)
+        delta = (s * sigma).astype(jnp.float32)
+        safe = jnp.where(delta > 0.0, delta, 1.0)
+        qg = jnp.where(delta > 0.0, safe * jnp.floor(g / safe + 0.5), g)
+        max_level = jnp.where(delta > 0.0, jnp.max(jnp.abs(qg)) / safe, 0.0)
+        stats = jnp.stack([jnp.mean(qg == 0.0), max_level])
+        return qg, stats.astype(jnp.float32)
+    # baseline
+    stats = jnp.stack([jnp.mean(g == 0.0), jnp.float32(0.0)])
+    return g, stats.astype(jnp.float32)
+
+
+def _int8_fwd(cfg: BwdCfg) -> bool:
+    return cfg.kind in ("int8", "int8_dithered")
+
+
+# ---------------------------------------------------------------------------
+# quantized dense layer
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def qdense(cfg: BwdCfg, x, w, b, sink, seed, s):
+    """z = x @ w + b with the paper's instrumented backward pass.
+
+    x: (B, in), w: (in, out), b: (out,), sink: (2,) zeros, seed: uint32
+    scalar, s: f32 scalar (global dither scale).
+    """
+    if _int8_fwd(cfg):
+        x, w = fq8(x), fq8(w)
+    return x @ w + b
+
+
+def _qdense_fwd(cfg, x, w, b, sink, seed, s):
+    if _int8_fwd(cfg):
+        xq, wq = fq8(x), fq8(w)
+    else:
+        xq, wq = x, w
+    # Residuals hold the (possibly quantized) operands: Banner et al. run
+    # the backward GEMMs on the quantized values too.
+    return xq @ wq + b, (xq, wq, seed, s)
+
+
+def _qdense_bwd(cfg, res, g):
+    xq, wq, seed, s = res
+    qg, stats = compress_grad(cfg, g, seed, s)
+    if cfg.use_pallas:
+        dx = sd_matmul(qg, wq.T)          # Eq. 8: (W^T . dz)^T, sparse LHS
+        dw = ds_matmul(xq.T, qg)          # Eq. 9: dz . a^T,     sparse RHS
+    else:
+        dx = qg @ wq.T
+        dw = xq.T @ qg
+    db = qg.sum(axis=0)
+    return (dx, dw, db, stats, _float0_for(seed), jnp.zeros_like(s))
+
+
+qdense.defvjp(_qdense_fwd, _qdense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# quantized conv layer (NHWC, HWIO), SAME padding
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, stride):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def qconv(cfg: BwdCfg, x, w, b, sink, seed, s):
+    """z = conv(x, w) + b with instrumented backward.
+
+    x: (B, H, W, Cin), w: (kh, kw, Cin, Cout), b: (Cout,).
+    The quantized delta_z feeds XLA's transposed convolutions (the
+    Pallas block-sparse GEMM adaptation covers the dense layers; conv
+    savings are accounted by the cost model at element granularity, as in
+    the paper).
+    """
+    if _int8_fwd(cfg):
+        x, w = fq8(x), fq8(w)
+    return _conv(x, w, cfg.stride) + b
+
+
+def _qconv_fwd(cfg, x, w, b, sink, seed, s):
+    if _int8_fwd(cfg):
+        xq, wq = fq8(x), fq8(w)
+    else:
+        xq, wq = x, w
+    return _conv(xq, wq, cfg.stride) + b, (xq, wq, seed, s)
+
+
+def _qconv_bwd(cfg, res, g):
+    xq, wq, seed, s = res
+    qg, stats = compress_grad(cfg, g, seed, s)
+    _, vjp = jax.vjp(lambda xx, ww: _conv(xx, ww, cfg.stride), xq, wq)
+    dx, dw = vjp(qg)
+    db = qg.sum(axis=(0, 1, 2))
+    return (dx, dw, db, stats, _float0_for(seed), jnp.zeros_like(s))
+
+
+qconv.defvjp(_qconv_fwd, _qconv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# normalisation + misc building blocks (plain autodiff)
+# ---------------------------------------------------------------------------
+
+
+def batch_norm(x, gamma, beta, eps=1e-5):
+    """Training-mode batch norm over all axes but the channel axis.
+
+    No running statistics: the AOT eval artifact also normalises with
+    batch statistics (documented substitution — keeps the grad/eval
+    artifacts stateless).
+    """
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    xn = (x - mean) / jnp.sqrt(var + eps)
+    return xn * gamma + beta
+
+
+def range_bn(x, gamma, beta, eps=1e-5):
+    """Range Batch-Norm (Banner et al. [14]): scale by the value range
+    instead of the standard deviation — quantization-noise tolerant.
+
+        C(n) = sqrt(2 ln n);  x_hat = (x - mean) / (range(x) / (2 C(n)))
+    """
+    axes = tuple(range(x.ndim - 1))
+    n = 1
+    for a in axes:
+        n *= x.shape[a]
+    c = float(np.sqrt(2.0 * np.log(max(n, 2))))
+    mean = jnp.mean(x, axis=axes, keepdims=True)
+    rng = jnp.max(x, axis=axes, keepdims=True) - jnp.min(x, axis=axes, keepdims=True)
+    xn = (x - mean) / (rng / (2.0 * c) + eps)
+    return xn * gamma + beta
+
+
+def max_pool_2x2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)

@@ -1,0 +1,116 @@
+"""L2 step functions: the exact computations AOT-lowered to HLO artifacts.
+
+Three step kinds per model (DESIGN.md §Artifacts):
+
+  init_step(seed)                          -> params...
+  grad_step(params..., x, y, seed, s)      -> (grads..., loss, correct,
+                                               layer_sparsity[L],
+                                               layer_maxlevel[L])
+  eval_step(params..., x, y)               -> (loss, correct)
+
+All signatures are flat positional tensors so the rust runtime can marshal
+``xla::Literal``s positionally from manifest.json.  ``seed`` is uint32,
+``s`` the global dither scale (f32); the sink trick in layers.py routes
+per-layer stats out through the gradient of dummy inputs, which
+``grad_step`` splits off here.
+
+Python never runs at serving time: these functions exist to be traced by
+``aot.py`` once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .models import MODELS, Model
+
+
+def cross_entropy(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; y int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def make_init_step(model: Model):
+    def init_step(seed):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        return tuple(model.init(key))
+
+    return init_step
+
+
+def make_eval_step(model: Model, method: str = "baseline"):
+    n_q = model.spec.n_qlayers
+
+    def eval_step(*args):
+        params = list(args[:-2])
+        x, y = args[-2], args[-1]
+        sinks = [jnp.zeros((2,), jnp.float32)] * n_q
+        logits = model.apply(
+            method, params, sinks, x, jnp.uint32(0), jnp.float32(0.0)
+        )
+        loss = cross_entropy(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        return (loss, correct)
+
+    return eval_step
+
+
+def make_grad_step(model: Model, method: str):
+    """Gradient step: loss/accuracy + real grads + per-layer stats.
+
+    The returned callable has signature
+        (*params, x, y, seed, s) -> (*grads, loss, correct, sparsity, maxlevel)
+    with sparsity/maxlevel of shape (n_qlayers,).
+    """
+    n_q = model.spec.n_qlayers
+    n_p = len(model.spec.param_names)
+
+    def grad_step(*args):
+        params = list(args[:n_p])
+        x, y, seed, s = args[n_p], args[n_p + 1], args[n_p + 2], args[n_p + 3]
+        sinks = [jnp.zeros((2,), jnp.float32) for _ in range(n_q)]
+
+        def loss_fn(params, sinks):
+            logits = model.apply(method, params, sinks, x, seed, s)
+            loss = cross_entropy(logits, y)
+            correct = jnp.sum(
+                (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+            )
+            return loss, correct
+
+        (loss, correct), (gparams, gsinks) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(params, sinks)
+
+        # Anchor seed/s into the graph even for methods that ignore them
+        # (baseline, meprop): the StableHLO->HLO conversion prunes unused
+        # ENTRY parameters, which would leave different artifacts with
+        # different signatures and break positional marshalling in rust.
+        loss = loss + s * 0.0 + seed.astype(jnp.float32) * 0.0
+
+        stats = jnp.stack(gsinks)            # (n_q, 2)
+        sparsity = stats[:, 0]
+        maxlevel = stats[:, 1]
+        return (*gparams, loss, correct, sparsity, maxlevel)
+
+    return grad_step
+
+
+def example_batch(model: Model, batch: int):
+    """ShapeDtypeStructs for (x, y) at a given batch size."""
+    x = jax.ShapeDtypeStruct((batch, *model.spec.input_shape), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+def param_structs(model: Model, seed: int = 0):
+    """Parameter ShapeDtypeStructs (shapes derived by running init once)."""
+    params = model.init(jax.random.PRNGKey(seed))
+    return [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+
+
+def get_model(name: str) -> Model:
+    return MODELS[name]

@@ -1,0 +1,216 @@
+"""L2 model zoo.
+
+Models mirror the paper's evaluation set, scaled to this testbed
+(DESIGN.md §Substitutions):
+
+  lenet300100   784-300-100-10 MLP            (paper: LeNet300-100, MNIST)
+  lenet5        LeNet-5 convnet, 28x28x1      (paper: LeNet5, MNIST)
+  mlp500        784-500-500-10 MLP            (paper's meProp comparator)
+  minivgg       conv-BN stack on 16x16x3      (paper: VGG11/AlexNet, CIFAR)
+
+Every model is a plain function over an *ordered flat list* of parameter
+tensors — no pytree registry — so the rust side can marshal parameters
+positionally straight from manifest.json.
+
+``apply(cfg, params, sinks, x, seed, s)`` returns logits; ``sinks`` is a
+list of zeros((2,)) whose gradients carry per-layer [sparsity, max_level]
+(see layers.py).  ``init(key)`` returns the parameter list (He/Glorot
+init).  All models use ReLU; minivgg inserts BatchNorm (Range-BN when the
+method is int8*), reproducing the with-BN/without-BN contrast that drives
+Table 1's sparsity deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (
+    BwdCfg,
+    batch_norm,
+    max_pool_2x2,
+    qconv,
+    qdense,
+    range_bn,
+    relu,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    input_shape: tuple          # per-example, e.g. (784,) or (28, 28, 1)
+    num_classes: int
+    param_names: tuple          # ordered, matches init()/apply()
+    n_qlayers: int              # number of instrumented (sink-carrying) layers
+    dataset: str                # which rust data substrate feeds it
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def _mlp_spec(name, dims, dataset):
+    names = []
+    for i in range(len(dims) - 1):
+        names += [f"fc{i + 1}_w", f"fc{i + 1}_b"]
+    return ModelSpec(
+        name=name,
+        input_shape=(dims[0],),
+        num_classes=dims[-1],
+        param_names=tuple(names),
+        n_qlayers=len(dims) - 1,
+        dataset=dataset,
+    )
+
+
+def _mlp_init(dims, key):
+    params = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        params.append(_he(keys[i], (dims[i], dims[i + 1]), dims[i]))
+        params.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return params
+
+
+def _mlp_apply(dims, method, params, sinks, x, seed, s):
+    h = x.reshape(x.shape[0], -1)
+    nl = len(dims) - 1
+    for i in range(nl):
+        cfg = BwdCfg(method=method, layer_idx=i)
+        w, b = params[2 * i], params[2 * i + 1]
+        z = qdense(cfg, h, w, b, sinks[i], seed, s)
+        h = relu(z) if i < nl - 1 else z
+    return h
+
+
+# ---------------------------------------------------------------------------
+# LeNet-5 (28x28x1), classic 6/16 feature maps
+# ---------------------------------------------------------------------------
+
+_LENET5_PARAMS = (
+    "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+    "fc1_w", "fc1_b", "fc2_w", "fc2_b", "fc3_w", "fc3_b",
+)
+
+
+def _lenet5_init(key):
+    k = jax.random.split(key, 5)
+    return [
+        _he(k[0], (5, 5, 1, 6), 25), jnp.zeros((6,), jnp.float32),
+        _he(k[1], (5, 5, 6, 16), 150), jnp.zeros((16,), jnp.float32),
+        _he(k[2], (784, 120), 784), jnp.zeros((120,), jnp.float32),
+        _he(k[3], (120, 84), 120), jnp.zeros((84,), jnp.float32),
+        _he(k[4], (84, 10), 84), jnp.zeros((10,), jnp.float32),
+    ]
+
+
+def _lenet5_apply(method, params, sinks, x, seed, s):
+    (c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b, f3w, f3b) = params
+    x = x.reshape(x.shape[0], 28, 28, 1)
+    h = relu(qconv(BwdCfg(method=method, layer_idx=0), x, c1w, c1b, sinks[0], seed, s))
+    h = max_pool_2x2(h)                                   # 14x14x6
+    h = relu(qconv(BwdCfg(method=method, layer_idx=1), h, c2w, c2b, sinks[1], seed, s))
+    h = max_pool_2x2(h)                                   # 7x7x16 = 784
+    h = h.reshape(h.shape[0], -1)
+    h = relu(qdense(BwdCfg(method=method, layer_idx=2), h, f1w, f1b, sinks[2], seed, s))
+    h = relu(qdense(BwdCfg(method=method, layer_idx=3), h, f2w, f2b, sinks[3], seed, s))
+    return qdense(BwdCfg(method=method, layer_idx=4), h, f3w, f3b, sinks[4], seed, s)
+
+
+# ---------------------------------------------------------------------------
+# MiniVGG (16x16x3): conv-BN-relu x2 with pools, then 2 FC — the with-BN
+# regime of Table 1 (VGG11 stand-in).
+# ---------------------------------------------------------------------------
+
+_MINIVGG_PARAMS = (
+    "conv1_w", "conv1_b", "bn1_g", "bn1_b",
+    "conv2_w", "conv2_b", "bn2_g", "bn2_b",
+    "fc1_w", "fc1_b", "fc2_w", "fc2_b",
+)
+
+
+def _minivgg_init(key):
+    k = jax.random.split(key, 4)
+    return [
+        _he(k[0], (3, 3, 3, 16), 27), jnp.zeros((16,), jnp.float32),
+        jnp.ones((16,), jnp.float32), jnp.zeros((16,), jnp.float32),
+        _he(k[1], (3, 3, 16, 32), 144), jnp.zeros((32,), jnp.float32),
+        jnp.ones((32,), jnp.float32), jnp.zeros((32,), jnp.float32),
+        _he(k[2], (512, 128), 512), jnp.zeros((128,), jnp.float32),
+        _he(k[3], (128, 10), 128), jnp.zeros((10,), jnp.float32),
+    ]
+
+
+def _minivgg_apply(method, params, sinks, x, seed, s):
+    (c1w, c1b, g1, b1, c2w, c2b, g2, b2, f1w, f1b, f2w, f2b) = params
+    bn = range_bn if method.startswith("int8") else batch_norm
+    x = x.reshape(x.shape[0], 16, 16, 3)
+    h = qconv(BwdCfg(method=method, layer_idx=0), x, c1w, c1b, sinks[0], seed, s)
+    h = relu(bn(h, g1, b1))
+    h = max_pool_2x2(h)                                   # 8x8x16
+    h = qconv(BwdCfg(method=method, layer_idx=1), h, c2w, c2b, sinks[1], seed, s)
+    h = relu(bn(h, g2, b2))
+    h = max_pool_2x2(h)                                   # 4x4x32 = 512
+    h = h.reshape(h.shape[0], -1)
+    h = relu(qdense(BwdCfg(method=method, layer_idx=2), h, f1w, f1b, sinks[2], seed, s))
+    return qdense(BwdCfg(method=method, layer_idx=3), h, f2w, f2b, sinks[3], seed, s)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    spec: ModelSpec
+    init: callable              # key -> [params]
+    apply: callable             # (method, params, sinks, x, seed, s) -> logits
+
+
+def _make_mlp(name, dims, dataset):
+    return Model(
+        spec=_mlp_spec(name, dims, dataset),
+        init=partial(_mlp_init, dims),
+        apply=partial(_mlp_apply, dims),
+    )
+
+
+MODELS: dict[str, Model] = {
+    "lenet300100": _make_mlp("lenet300100", (784, 300, 100, 10), "digits"),
+    "mlp500": _make_mlp("mlp500", (784, 500, 500, 10), "digits"),
+    "lenet5": Model(
+        spec=ModelSpec(
+            name="lenet5",
+            input_shape=(28, 28, 1),
+            num_classes=10,
+            param_names=_LENET5_PARAMS,
+            n_qlayers=5,
+            dataset="digits",
+        ),
+        init=_lenet5_init,
+        apply=_lenet5_apply,
+    ),
+    "minivgg": Model(
+        spec=ModelSpec(
+            name="minivgg",
+            input_shape=(16, 16, 3),
+            num_classes=10,
+            param_names=_MINIVGG_PARAMS,
+            n_qlayers=4,
+            dataset="textures",
+        ),
+        init=_minivgg_init,
+        apply=_minivgg_apply,
+    ),
+}

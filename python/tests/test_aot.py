@@ -1,0 +1,73 @@
+"""AOT artifact integrity: manifest consistent, HLO text loadable by the
+same XLA the rust side embeds (xla_client mirrors xla_extension)."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_models_and_methods():
+    man = _manifest()
+    assert set(man["models"]) == {"lenet300100", "mlp500", "lenet5", "minivgg"}
+    for name, entry in man["models"].items():
+        methods = {g["method"] for g in entry["artifacts"]["grad"]}
+        assert {"baseline", "dithered", "int8", "int8_dithered"} <= methods
+        if name == "mlp500":
+            assert any(m.startswith("meprop_k") for m in methods)
+
+
+def test_all_artifact_files_exist_and_nonempty():
+    man = _manifest()
+    for entry in man["models"].values():
+        arts = entry["artifacts"]
+        paths = [arts["init"], arts["eval"]] + [g["path"] for g in arts["grad"]]
+        for p in paths:
+            full = os.path.join(ART, p)
+            assert os.path.exists(full), p
+            assert os.path.getsize(full) > 1000, p
+
+
+def test_param_shapes_in_manifest_match_models():
+    from compile.model import get_model, param_structs
+
+    man = _manifest()
+    for name, entry in man["models"].items():
+        m = get_model(name)
+        structs = param_structs(m)
+        assert [p["name"] for p in entry["params"]] == list(m.spec.param_names)
+        for pinfo, st in zip(entry["params"], structs):
+            assert tuple(pinfo["shape"]) == st.shape
+
+
+def test_hlo_text_has_expected_entry_signature():
+    """grad artifact entry computation: n_params + 4 inputs, tuple root."""
+    man = _manifest()
+    entry = man["models"]["mlp500"]
+    grad = next(g for g in entry["artifacts"]["grad"] if g["method"] == "dithered" and g["batch"] == man["train_batch"])
+    text = open(os.path.join(ART, grad["path"])).read()
+    assert "ENTRY" in text
+    n_params = len(entry["params"])
+    # params + x + y + seed + s parameters must appear
+    for i in range(n_params + 4):
+        assert f"parameter({i})" in text, i
+
+
+def test_batch1_worker_artifacts_present():
+    man = _manifest()
+    for name, entry in man["models"].items():
+        batches = {
+            (g["method"], g["batch"]) for g in entry["artifacts"]["grad"]
+        }
+        assert ("dithered", 1) in batches, name

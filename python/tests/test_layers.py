@@ -1,0 +1,193 @@
+"""L2 layer-level correctness: custom_vjp backward rules vs plain autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.layers import BwdCfg, fq8, q8_det, qconv, qdense
+
+
+def _inputs(seed=0, b=8, din=20, dout=12):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k[0], (b, din), jnp.float32)
+    w = jax.random.normal(k[1], (din, dout), jnp.float32) * 0.2
+    bias = jax.random.normal(k[2], (dout,), jnp.float32) * 0.1
+    return x, w, bias
+
+
+def _loss_dense(cfg, x, w, b, s=0.0, seed=0):
+    sink = jnp.zeros((2,), jnp.float32)
+    return jnp.sum(qdense(cfg, x, w, b, sink, jnp.uint32(seed), jnp.float32(s)) ** 2)
+
+
+def test_baseline_dense_grads_equal_autodiff():
+    x, w, b = _inputs()
+    cfg = BwdCfg(method="baseline", use_pallas=False)
+    gx, gw, gb = jax.grad(_loss_dense, argnums=(1, 2, 3))(cfg, x, w, b)
+
+    def plain(x, w, b):
+        return jnp.sum((x @ w + b) ** 2)
+
+    px, pw, pb = jax.grad(plain, argnums=(0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(px), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(pw), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(pb), rtol=1e-5, atol=1e-5)
+
+
+def test_dithered_s0_equals_baseline_pallas_path():
+    """s = 0 degeneracy through the *Pallas* GEMMs: bitwise-equal to the
+    dense baseline within float accumulation-order tolerance."""
+    x, w, b = _inputs(1)
+    g_d = jax.grad(_loss_dense, argnums=(1, 2, 3))(
+        BwdCfg(method="dithered", use_pallas=True), x, w, b, 0.0
+    )
+    g_b = jax.grad(_loss_dense, argnums=(1, 2, 3))(
+        BwdCfg(method="baseline", use_pallas=False), x, w, b
+    )
+    for a, bb in zip(g_d, g_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-5, atol=1e-5)
+
+
+def test_dithered_grads_unbiased_dense_layer():
+    """E[dithered dW] ~= baseline dW (Eq. 10) at the layer level."""
+    x, w, b = _inputs(2, b=32, din=64, dout=48)
+    cfg_b = BwdCfg(method="baseline", use_pallas=False)
+    _, gw_base, _ = jax.grad(_loss_dense, argnums=(1, 2, 3))(cfg_b, x, w, b)
+
+    acc = np.zeros(w.shape, np.float64)
+    n = 40
+    cfg_d = BwdCfg(method="dithered", use_pallas=False)
+    for seed in range(n):
+        _, gw, _ = jax.grad(_loss_dense, argnums=(1, 2, 3))(cfg_d, x, w, b, 2.0, seed)
+        acc += np.asarray(gw)
+    acc /= n
+    base = np.asarray(gw_base)
+    # relative bias of the mean, against the gradient's own scale
+    rel = np.abs(acc - base).mean() / (np.abs(base).mean() + 1e-12)
+    assert rel < 0.15, rel
+
+
+def test_sink_carries_stats():
+    x, w, b = _inputs(3)
+    cfg = BwdCfg(method="dithered")
+
+    def loss(x, w, b, sink):
+        return jnp.sum(qdense(cfg, x, w, b, sink, jnp.uint32(0), jnp.float32(4.0)) ** 2)
+
+    gsink = jax.grad(loss, argnums=3)(x, w, b, jnp.zeros((2,), jnp.float32))
+    sparsity, maxlevel = float(gsink[0]), float(gsink[1])
+    assert 0.3 < sparsity <= 1.0
+    assert maxlevel == round(maxlevel) and maxlevel >= 0
+
+
+def test_conv_baseline_grads_equal_autodiff():
+    k = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.normal(k[0], (2, 8, 8, 3), jnp.float32)
+    w = jax.random.normal(k[1], (3, 3, 3, 5), jnp.float32) * 0.2
+    b = jnp.zeros((5,), jnp.float32)
+    cfg = BwdCfg(method="baseline")
+
+    def loss_q(x, w, b):
+        sink = jnp.zeros((2,), jnp.float32)
+        return jnp.sum(qconv(cfg, x, w, b, sink, jnp.uint32(0), jnp.float32(0.0)) ** 2)
+
+    def loss_p(x, w, b):
+        z = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + b
+        return jnp.sum(z**2)
+
+    gq = jax.grad(loss_q, argnums=(0, 1, 2))(x, w, b)
+    gp = jax.grad(loss_p, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gq, gp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bb), rtol=1e-4, atol=1e-4)
+
+
+def test_meprop_topk_keeps_k_per_row():
+    g = jax.random.normal(jax.random.PRNGKey(5), (6, 50), jnp.float32)
+    out = layers._meprop_topk(g, 5)
+    nz = np.count_nonzero(np.asarray(out), axis=1)
+    assert (nz == 5).all()
+    # kept entries are the largest-|.| ones
+    a = np.abs(np.asarray(g))
+    kept = np.abs(np.asarray(out)) > 0
+    for r in range(6):
+        thresh = np.sort(a[r])[-5]
+        assert (a[r][kept[r]] >= thresh - 1e-7).all()
+
+
+def test_meprop_k_string_encoding():
+    cfg = BwdCfg(method="meprop_k7")
+    assert cfg.kind == "meprop" and cfg.topk == 7
+    g = jax.random.normal(jax.random.PRNGKey(6), (4, 30), jnp.float32)
+    qg, stats = layers.compress_grad(cfg, g, jnp.uint32(0), jnp.float32(0.0))
+    assert (np.count_nonzero(np.asarray(qg), axis=1) == 7).all()
+    np.testing.assert_allclose(float(stats[0]), 1 - 7 / 30, atol=1e-6)
+
+
+def test_fq8_grid_and_idempotence():
+    t = jax.random.normal(jax.random.PRNGKey(7), (64, 64), jnp.float32)
+    q = fq8(t)
+    scale = float(jnp.max(jnp.abs(t))) / 127.0
+    levels = np.asarray(q) / scale
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-3)
+    assert np.abs(levels).max() <= 127 + 1e-3  # f32 division rounding slack
+    np.testing.assert_allclose(np.asarray(fq8(q)), np.asarray(q), rtol=1e-5, atol=1e-6)
+
+
+def test_q8_det_max_error_half_step():
+    g = jax.random.normal(jax.random.PRNGKey(8), (32, 32), jnp.float32)
+    q, scale = q8_det(g)
+    assert float(jnp.max(jnp.abs(q - g))) <= float(scale) / 2 + 1e-6
+
+
+def test_int8_forward_quantizes_output():
+    x, w, b = _inputs(9)
+    cfg = BwdCfg(method="int8")
+    sink = jnp.zeros((2,), jnp.float32)
+    z = qdense(cfg, x, w, b, sink, jnp.uint32(0), jnp.float32(0.0))
+    zq = fq8(x) @ fq8(w) + b
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zq), rtol=1e-5, atol=1e-5)
+
+
+def test_batch_norm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(10), (32, 4, 4, 8), jnp.float32) * 3 + 1
+    out = layers.batch_norm(x, jnp.ones((8,)), jnp.zeros((8,)))
+    m = np.asarray(out).reshape(-1, 8)
+    np.testing.assert_allclose(m.mean(0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(m.std(0), 1.0, atol=1e-2)
+
+
+def test_range_bn_centers_and_is_finite():
+    x = jax.random.normal(jax.random.PRNGKey(11), (32, 4, 4, 8), jnp.float32) * 5
+    out = layers.range_bn(x, jnp.ones((8,)), jnp.zeros((8,)))
+    m = np.asarray(out).reshape(-1, 8)
+    np.testing.assert_allclose(m.mean(0), 0.0, atol=1e-4)
+    assert np.isfinite(m).all()
+
+
+def test_detq_same_grid_as_nsd_but_deterministic():
+    """Ablation method: detq rounds to the identical Delta grid but has
+    signal-correlated (biased) error, unlike NSD."""
+    g = jax.random.normal(jax.random.PRNGKey(12), (64, 200), jnp.float32) * 0.01
+    cfg = BwdCfg(method="detq")
+    q1, stats1 = layers.compress_grad(cfg, g, jnp.uint32(1), jnp.float32(2.0))
+    q2, _ = layers.compress_grad(cfg, g, jnp.uint32(999), jnp.float32(2.0))
+    # deterministic: seed must not matter
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    # on-grid at Delta = 2*std(g)
+    delta = 2.0 * float(jnp.std(g))
+    levels = np.asarray(q1) / delta
+    np.testing.assert_allclose(levels, np.round(levels), atol=1e-4)
+    assert 0.5 < float(stats1[0]) < 1.0  # sparsity comparable to NSD
+    # biased where NSD is not: E[detq] == detq != g in general
+    err = np.abs(np.asarray(q1) - np.asarray(g)).mean()
+    assert err > 0
+
+
+def test_fold_seed_distinct_per_layer():
+    s = jnp.uint32(1234)
+    seeds = {int(layers.fold_seed(s, i)) for i in range(16)}
+    assert len(seeds) == 16

@@ -1,0 +1,108 @@
+"""L2 model/step-function correctness: shapes, stats plumbing, learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    cross_entropy,
+    example_batch,
+    get_model,
+    make_eval_step,
+    make_grad_step,
+    make_init_step,
+)
+from compile.models import MODELS
+
+ALL_MODELS = list(MODELS)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_init_shapes_match_spec(name):
+    m = get_model(name)
+    params = make_init_step(m)(jnp.uint32(0))
+    assert len(params) == len(m.spec.param_names)
+    # weights He-scaled, biases zero
+    for pname, p in zip(m.spec.param_names, params):
+        if pname.endswith("_b") and not pname.startswith("bn"):
+            assert float(jnp.abs(p).max()) == 0.0
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+@pytest.mark.parametrize("method", ["baseline", "dithered"])
+def test_grad_step_output_layout(name, method):
+    m = get_model(name)
+    params = make_init_step(m)(jnp.uint32(1))
+    x = jnp.zeros((4, *m.spec.input_shape), jnp.float32)
+    y = jnp.zeros((4,), jnp.int32)
+    out = make_grad_step(m, method)(*params, x, y, jnp.uint32(2), jnp.float32(2.0))
+    n_p = len(m.spec.param_names)
+    assert len(out) == n_p + 4
+    for g, p in zip(out[:n_p], params):
+        assert g.shape == p.shape
+    loss, correct, sparsity, maxlevel = out[n_p:]
+    assert loss.shape == () and correct.shape == ()
+    assert sparsity.shape == (m.spec.n_qlayers,)
+    assert maxlevel.shape == (m.spec.n_qlayers,)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_eval_step(name):
+    m = get_model(name)
+    params = make_init_step(m)(jnp.uint32(1))
+    x = jnp.zeros((16, *m.spec.input_shape), jnp.float32)
+    y = jnp.zeros((16,), jnp.int32)
+    loss, correct = make_eval_step(m)(*params, x, y)
+    assert 0 <= float(correct) <= 16
+    assert np.isfinite(float(loss))
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((8, 10))
+    y = jnp.arange(8) % 10
+    np.testing.assert_allclose(float(cross_entropy(logits, y)), np.log(10), rtol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["baseline", "dithered", "int8", "int8_dithered"])
+def test_mlp_learns_toy_problem(method):
+    """A few SGD steps on separable data must reduce the loss — for every
+    method (the convergence claim at minimum viable scale)."""
+    m = get_model("lenet300100")
+    params = [np.asarray(p) for p in make_init_step(m)(jnp.uint32(3))]
+    k = jax.random.PRNGKey(0)
+    y = jnp.arange(32) % 10
+    # class-dependent mean pattern => linearly separable
+    x = jax.random.normal(k, (32, 784)) * 0.1
+    x = x + jax.nn.one_hot(y, 10).repeat(79, axis=1)[:, :784]
+    step = make_grad_step(m, method)
+
+    losses = []
+    for it in range(30):
+        out = step(*params, x, y, jnp.uint32(it), jnp.float32(1.0))
+        n_p = len(params)
+        grads, loss = out[:n_p], float(out[n_p])
+        losses.append(loss)
+        params = [p - 0.1 * np.asarray(g) for p, g in zip(params, grads)]
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_dithered_sparsity_exceeds_baseline():
+    """Table 1's core effect at step level: dithered sparsity >> baseline."""
+    m = get_model("mlp500")
+    params = make_init_step(m)(jnp.uint32(4))
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 784))
+    y = jnp.arange(32) % 10
+    n_p = len(params)
+    out_b = make_grad_step(m, "baseline")(*params, x, y, jnp.uint32(0), jnp.float32(0.0))
+    out_d = make_grad_step(m, "dithered")(*params, x, y, jnp.uint32(0), jnp.float32(2.0))
+    sp_b = float(jnp.mean(out_b[n_p + 2]))
+    sp_d = float(jnp.mean(out_d[n_p + 2]))
+    assert sp_d > sp_b + 0.3, (sp_b, sp_d)
+    assert sp_d > 0.7
+
+
+def test_example_batch_shapes():
+    m = get_model("minivgg")
+    x, y = example_batch(m, 32)
+    assert x.shape == (32, 16, 16, 3) and y.shape == (32,)

@@ -1,0 +1,134 @@
+"""Statistical invariants of NSD — the paper's convergence preconditions.
+
+Eq. 5:  E[eps] = 0              (unbiasedness)
+Eq. 6:  E[eps^2] < Delta^2 / 4  (bounded variance)
+Fig. 2: P(0) grows with s and matches the Gaussian (x) Uniform integral
+Fig. 6b: worst-case bitwidth of nonzero levels <= 8 for s >= 1
+§3.6:   averaging over N nodes shrinks the noise variance ~ 1/N
+
+These use the *mathematical* oracle with jax.random noise where
+independence from the kernel's hash matters, and the kernel itself where
+we are validating the shipped implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import nsd, ref
+
+
+def _big_grads(seed=0, shape=(256, 512), scale=0.01):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+@pytest.mark.parametrize("s", [0.5, 1.0, 2.0, 4.0])
+def test_unbiasedness_eq5(s):
+    """Mean quantization error -> 0 over many dither draws (kernel RNG)."""
+    g = _big_grads()
+    sigma = float(jnp.std(g))
+    delta = jnp.float32(s * sigma)
+    errs = []
+    for seed in range(20):
+        q = nsd.nsd_quantize_2d(g, delta, jnp.uint32(seed * 7919 + 13))
+        errs.append(float(jnp.mean(q - g)))
+    bias = abs(np.mean(errs))
+    # standard error of the estimate ~ delta / sqrt(20 * numel)
+    tol = 4.0 * float(delta) / np.sqrt(20 * g.size)
+    assert bias < tol, (bias, tol)
+
+
+@pytest.mark.parametrize("s", [1.0, 2.0, 4.0])
+def test_variance_bound_eq6(s):
+    """E[eps^2] < Delta^2/4 ... NSD's actual bound is Delta^2/4 + Delta^2/12
+    for the *total* error; the paper quotes the conditional-mean bound.
+    We assert the mathematically correct NSD bound E[eps^2] <= Delta^2/3
+    (uniform total-error second moment) and report the measured value."""
+    g = _big_grads(seed=1)
+    sigma = float(jnp.std(g))
+    delta = jnp.float32(s * sigma)
+    sq = []
+    for seed in range(10):
+        q = nsd.nsd_quantize_2d(g, delta, jnp.uint32(seed * 104729 + 7))
+        sq.append(float(jnp.mean((q - g) ** 2)))
+    msq = np.mean(sq)
+    assert msq <= float(delta) ** 2 / 3.0 * 1.05, (msq, float(delta) ** 2 / 3.0)
+
+
+def test_sparsity_monotone_in_s_fig2():
+    g = _big_grads(seed=2)
+    sparsities = []
+    for s in [0.5, 1.0, 2.0, 4.0, 8.0]:
+        _, _, stats = nsd.nsd_quantize(g, jnp.float32(s), jnp.uint32(3))
+        sparsities.append(float(stats[0]))
+    assert all(a < b for a, b in zip(sparsities, sparsities[1:])), sparsities
+
+
+@pytest.mark.parametrize("s", [1.0, 2.0, 4.0, 6.0])
+def test_sparsity_matches_analytic_fig2(s):
+    """Empirical P(0) on gaussian grads ~= closed-form Gauss (x) Uniform."""
+    g = jax.random.normal(jax.random.PRNGKey(4), (512, 512), jnp.float32)
+    _, _, stats = nsd.nsd_quantize(g, jnp.float32(s), jnp.uint32(11))
+    p0 = ref.gauss_uniform_p0(s)
+    assert abs(float(stats[0]) - p0) < 0.015, (float(stats[0]), p0)
+
+
+@pytest.mark.parametrize("s", [1.0, 2.0, 4.0])
+def test_bitwidth_leq_8_bits(s):
+    """Fig. 6b / §4.1: nonzero levels fit in <= 8 bits for s >= 1."""
+    g = _big_grads(seed=5)
+    _, _, stats = nsd.nsd_quantize(g, jnp.float32(s), jnp.uint32(17))
+    max_level = float(stats[1])
+    bits = 1 + int(np.ceil(np.log2(max_level + 1)))
+    assert bits <= 8, (max_level, bits)
+
+
+def test_noise_averaging_over_nodes_sec36():
+    """§3.6: averaging N independently-dithered copies of the same gradient
+    shrinks the error variance ~ 1/N."""
+    g = _big_grads(seed=6)
+    sigma = float(jnp.std(g))
+    delta = jnp.float32(2.0 * sigma)
+
+    def avg_err_var(n_nodes):
+        qs = [
+            nsd.nsd_quantize_2d(g, delta, jnp.uint32(1000 * n_nodes + i))
+            for i in range(n_nodes)
+        ]
+        avg = sum(qs) / n_nodes
+        return float(jnp.mean((avg - g) ** 2))
+
+    v1, v4, v16 = avg_err_var(1), avg_err_var(4), avg_err_var(16)
+    assert v4 < v1 / 2.5, (v1, v4)
+    assert v16 < v4 / 2.5, (v4, v16)
+
+
+def test_hash_uniformity():
+    """Kernel RNG sanity: mean ~ 0, var ~ 1/12, no fixed-point bias."""
+    noise = np.asarray(
+        ref.dither_noise_ref((512, 512), jnp.uint32(42))
+    )
+    assert abs(noise.mean()) < 2e-3
+    assert abs(noise.var() - 1.0 / 12.0) < 1e-3
+    assert noise.min() >= -0.5 and noise.max() < 0.5
+
+
+def test_meprop_is_biased_nsd_is_not():
+    """The paper's central argument vs meProp: top-k is a *biased*
+    estimator of the gradient, NSD is not."""
+    from compile.layers import _meprop_topk
+
+    g = _big_grads(seed=7, shape=(128, 64))
+    sigma = float(jnp.std(g))
+    delta = jnp.float32(2.0 * sigma)
+
+    nsd_mean = np.zeros(g.shape, np.float64)
+    for seed in range(30):
+        nsd_mean += np.asarray(nsd.nsd_quantize_2d(g, delta, jnp.uint32(seed)))
+    nsd_mean /= 30
+    nsd_bias = np.abs(nsd_mean - np.asarray(g)).mean()
+
+    mp = np.asarray(_meprop_topk(g, 8))  # deterministic: bias == error
+    mp_bias = np.abs(mp - np.asarray(g)).mean()
+    assert nsd_bias < mp_bias / 2.0, (nsd_bias, mp_bias)

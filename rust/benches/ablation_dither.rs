@@ -1,0 +1,94 @@
+//! Ablation (DESIGN.md design-choice check): does the *dither signal*
+//! itself matter, or would deterministic rounding to the same
+//! Delta = s*std(delta_z) grid do?
+//!
+//! `detq` quantizes the pre-activation gradients to the identical grid
+//! as NSD but without the random dither, so its error is deterministic
+//! and correlated with the signal — the biased regime §1 of the paper
+//! warns about.  The sweep compares final accuracy and sparsity of
+//! `dithered` vs `detq` across s, plus the gradient-estimate bias of
+//! each measured directly against the baseline gradient.
+//!
+//! `cargo bench --bench ablation_dither [-- --steps 200]`
+
+use anyhow::Result;
+use ditherprop::data;
+use ditherprop::metrics::Table;
+use ditherprop::runtime::Engine;
+use ditherprop::train::{train, TrainConfig};
+use ditherprop::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let steps = args.usize_or("steps", 200);
+    let engine = Engine::load(&artifacts)?;
+    let ds = data::build("digits", args.usize_or("n-train", 4096), 1024, 0xAB1A);
+
+    // --- direct bias measurement on one fixed batch ---------------------
+    let base = engine.training_session("mlp500", "baseline", 64)?;
+    let dith = engine.training_session("mlp500", "dithered", 64)?;
+    let detq = engine.training_session("mlp500", "detq", 64)?;
+    let params = engine.init_params("mlp500", 3)?;
+    let mut it = data::BatchIter::new(&ds.train, 64, 1);
+    it.next_batch(&ds.train);
+    let g0 = base.grad(&params, &it.x, &it.y, 0, 0.0)?;
+
+    let bias_of = |outs: Vec<ditherprop::runtime::GradOut>| -> f64 {
+        // mean over seeds of grads, L1 distance to baseline, first layer
+        let n = outs.len() as f64;
+        let len = g0.grads[0].len();
+        let mut acc = vec![0.0f64; len];
+        for o in &outs {
+            for (a, &v) in acc.iter_mut().zip(o.grads[0].data()) {
+                *a += v as f64 / n;
+            }
+        }
+        acc.iter()
+            .zip(g0.grads[0].data())
+            .map(|(a, &b)| (a - b as f64).abs())
+            .sum::<f64>()
+            / len as f64
+    };
+    let s_bias = 4.0f32;
+    let dith_outs: Vec<_> = (0..16)
+        .map(|seed| dith.grad(&params, &it.x, &it.y, 1000 + seed, s_bias).unwrap())
+        .collect();
+    let detq_outs: Vec<_> = (0..16)
+        .map(|seed| detq.grad(&params, &it.x, &it.y, 1000 + seed, s_bias).unwrap())
+        .collect();
+    let (bd, bq) = (bias_of(dith_outs), bias_of(detq_outs));
+    println!("gradient-estimate bias vs baseline (16 seeds, s={s_bias}, layer fc1):");
+    println!("  dithered (NSD): {bd:.3e}   detq (no dither): {bq:.3e}   ratio x{:.1}", bq / bd.max(1e-12));
+
+    // --- training sweep --------------------------------------------------
+    let mut t = Table::new(&["s", "dithered acc%", "dithered sp%", "detq acc%", "detq sp%"]);
+    for s in [2.0f32, 4.0, 6.0, 8.0] {
+        let run = |method: &str| -> Result<(f32, f32)> {
+            let mut accs = Vec::new();
+            let mut sp = 0.0;
+            for rep in 0..2u64 {
+                let mut cfg = TrainConfig::quick("mlp500", method, s, steps);
+                cfg.seed = 42 + rep * 999;
+                let res = train(&engine, &ds, &cfg)?;
+                accs.push(res.test_acc);
+                sp = res.history.mean_sparsity();
+            }
+            Ok((accs.iter().sum::<f32>() / accs.len() as f32, sp))
+        };
+        let (da, dsp) = run("dithered")?;
+        let (qa, qsp) = run("detq")?;
+        t.row(&[
+            format!("{s:.0}"),
+            format!("{:.2}", da * 100.0),
+            format!("{:.2}", dsp * 100.0),
+            format!("{:.2}", qa * 100.0),
+            format!("{:.2}", qsp * 100.0),
+        ]);
+        println!("s={s}: dithered {:.4} vs detq {:.4}", da, qa);
+    }
+    println!("\n=== Ablation: NSD vs deterministic grid quantization ===");
+    print!("{}", t.render());
+    println!("\ninterpretation: identical grid, identical sparsity mechanism — the only\ndelta is the dither signal. NSD's unbiasedness (Eq. 5) is what keeps\naccuracy at high s; detq's signal-correlated error is the 'naive\nquantization' failure mode of §1.");
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 1 (delta_z histogram before/after NSD) from
+//! real batch-1 gradient executions.
+//!
+//! `cargo bench --bench fig1_hist [-- --model mlp500 --s 2 --examples 64]`
+
+use ditherprop::experiments::{artifacts_dir, fig1};
+use ditherprop::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let data = fig1::collect(
+        &artifacts_dir(&args),
+        &args.str_or("model", "mlp500"),
+        args.f32_or("s", 2.0),
+        args.usize_or("examples", 64),
+    )?;
+    println!("=== Fig 1 (reproduction) ===");
+    print!("{}", fig1::render(&data, args.usize_or("bins", 41)));
+    println!("\npaper reference: right histogram collapses to few non-zero buckets (low bitwidth) with a dominant zero bucket.");
+    Ok(())
+}

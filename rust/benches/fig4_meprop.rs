@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 4 / Fig. .9 — accuracy vs sparsity for
+//! dithered backprop vs meProp vs baseline on MLP-500-500.
+//!
+//! `cargo bench --bench fig4_meprop [-- --quick --reps 3]`
+
+use ditherprop::experiments::{artifacts_dir, fig4, Scale};
+use ditherprop::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = Scale::from_args(&args);
+    let points = fig4::run(&artifacts_dir(&args), scale, true)?;
+    println!("=== Fig 4 / .9 (reproduction, {} reps) ===", scale.reps);
+    print!("{}", fig4::render(&points));
+    println!("\npaper reference: dithered 98.14% acc @ 99.15% sparsity vs meProp 97.89% @ 94.11% — unbiased beats biased at matched sparsity.");
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Figs. 5, 6a, 6b (+ .10/.11) — distributed SSGD
+//! sweeps over the number of nodes N with s growing alongside.
+//!
+//! `cargo bench --bench fig56_distributed [-- --quick --nodes 1,2,4,8]`
+
+use ditherprop::experiments::{artifacts_dir, fig56, Scale};
+use ditherprop::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale = Scale::from_args(&args);
+    let nodes: Vec<usize> = args
+        .list_or("nodes", &["1", "2", "4", "8"])
+        .iter()
+        .map(|s| s.parse().expect("--nodes expects integers"))
+        .collect();
+    let model = args.str_or("model", "mlp500");
+    let points = fig56::run(&artifacts_dir(&args), &model, &nodes, scale, true)?;
+    println!("=== Figs 5 / 6a / 6b (reproduction, model {model}) ===");
+    print!("{}", fig56::render(&points));
+    println!("\npaper reference: accuracy ~flat in N; sparsity grows with N; worst-case bitwidth shrinks with N.");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Bench: L3 hot-path microbenchmarks (§Perf) — grad-step execution,
+//! literal marshalling, optimizer update, sparse codecs, server
+//! aggregation.  The numbers here drive the EXPERIMENTS.md §Perf log.
+//!
+//! `cargo bench --bench runtime_hotpath [-- --iters 30]`
+
+use ditherprop::bench_util::{bench_fn, report_header};
+use ditherprop::coordinator::comm::EncodedGrads;
+use ditherprop::data;
+use ditherprop::optim::{Sgd, SgdConfig};
+use ditherprop::runtime::Engine;
+use ditherprop::sparse::{BitmapVec, CsrVec};
+use ditherprop::tensor::Tensor;
+use ditherprop::util::cli::Args;
+use ditherprop::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let iters = args.usize_or("iters", 30);
+    let artifacts = args.str_or("artifacts", "artifacts");
+    println!("{}", report_header());
+
+    // --- end-to-end grad step (the dominating cost) -------------------
+    let engine = Engine::load(&artifacts)?;
+    let mut results = Vec::new();
+    for (model, batch) in [("mlp500", 64), ("mlp500", 1), ("lenet5", 64), ("minivgg", 64)] {
+        for method in ["baseline", "dithered"] {
+            let session = engine.training_session(model, method, batch)?;
+            let params = engine.init_params(model, 0)?;
+            let ds = data::build(&session.entry.dataset.clone(), batch.max(64), 64, 3);
+            let mut it = data::BatchIter::new(&ds.train, batch, 1);
+            it.next_batch(&ds.train);
+            let mut seed = 0u32;
+            let r = bench_fn(
+                &format!("grad {model}/{method} b{batch}"),
+                3,
+                iters,
+                || {
+                    seed = seed.wrapping_add(1);
+                    session.grad(&params, &it.x, &it.y, seed, 2.0).unwrap();
+                },
+            );
+            println!("{}", r.report());
+            results.push(r);
+        }
+    }
+
+    // --- optimizer update ---------------------------------------------
+    let params0 = engine.init_params("mlp500", 0)?;
+    let grads: Vec<Tensor> = params0.iter().map(|p| {
+        let mut rng = Rng::new(4);
+        Tensor::from_vec(p.shape(), (0..p.len()).map(|_| rng.normal() * 0.01).collect())
+    }).collect();
+    let mut params = params0.clone();
+    let mut opt = Sgd::new(SgdConfig::paper(0.1, 1000), &params);
+    let r = bench_fn("sgd update mlp500 (648k weights)", 3, iters.max(100), || {
+        opt.apply(&mut params, &grads);
+    });
+    println!("{}", r.report());
+
+    // --- sparse codecs -------------------------------------------------
+    let mut rng = Rng::new(7);
+    let sparse_vec: Vec<f32> = (0..648_010)
+        .map(|_| if rng.uniform() < 0.05 { rng.normal() } else { 0.0 })
+        .collect();
+    let r = bench_fn("csr encode 648k @5% density", 2, iters.max(50), || {
+        std::hint::black_box(CsrVec::encode(&sparse_vec));
+    });
+    println!("{}", r.report());
+    let enc = CsrVec::encode(&sparse_vec);
+    let mut out = vec![0.0f32; sparse_vec.len()];
+    let r = bench_fn("csr axpy-decode 648k @5%", 2, iters.max(50), || {
+        enc.axpy_into(0.25, &mut out);
+    });
+    println!("{}", r.report());
+    let r = bench_fn("bitmap encode 648k @5%", 2, iters.max(50), || {
+        std::hint::black_box(BitmapVec::encode(&sparse_vec));
+    });
+    println!("{}", r.report());
+
+    // --- server aggregation (decode + average of N node messages) ------
+    let tensors: Vec<Tensor> = params0
+        .iter()
+        .map(|p| {
+            let mut rng = Rng::new(9);
+            Tensor::from_vec(
+                p.shape(),
+                (0..p.len())
+                    .map(|_| if rng.uniform() < 0.05 { rng.normal() } else { 0.0 })
+                    .collect(),
+            )
+        })
+        .collect();
+    let msg = EncodedGrads::encode(&tensors, 0.0, 0.0, vec![0.95; 3], vec![3.0; 3]);
+    let shapes: Vec<Vec<usize>> = params0.iter().map(|p| p.shape().to_vec()).collect();
+    let r = bench_fn("server decode+avg 1 node msg (648k)", 2, iters.max(50), || {
+        let mut acc: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for (a, (e, s)) in acc.iter_mut().zip(msg.tensors.iter().zip(shapes.iter())) {
+            a.axpy(0.25, &e.decode(s));
+        }
+        std::hint::black_box(acc);
+    });
+    println!("{}", r.report());
+    Ok(())
+}

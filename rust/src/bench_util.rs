@@ -1,0 +1,133 @@
+//! Benchmark harness (no `criterion` in the offline vendor set).
+//!
+//! `cargo bench` runs each `[[bench]]` target with `harness = false`;
+//! targets use [`bench_fn`] for microbenchmarks (warmup + N timed
+//! iterations, median/mean/min reporting) and plain stopwatch timing for
+//! the end-to-end experiment harnesses.
+
+use crate::util::math::{mean, median, std_dev};
+use std::time::Instant;
+
+/// Result of a microbenchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall times, seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn std_s(&self) -> f64 {
+        std_dev(&self.samples)
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>10} {:>10}  ({} iters)",
+            self.name,
+            fmt_time(self.median_s()),
+            fmt_time(self.mean_s()),
+            fmt_time(self.min_s()),
+            self.iters
+        )
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, samples }
+}
+
+/// Header line matching `BenchResult::report` columns.
+pub fn report_header() -> String {
+    format!(
+        "{:<40} {:>10} {:>10} {:>10}",
+        "benchmark", "median", "mean", "min"
+    )
+}
+
+/// Simple stopwatch for end-to-end experiment timing.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_fn("spin", 2, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.min_s() <= r.median_s());
+        assert!(!r.report().is_empty());
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0025), "2.500ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500us");
+        assert_eq!(fmt_time(5e-9), "5.0ns");
+    }
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.elapsed_s() >= 0.002);
+    }
+}

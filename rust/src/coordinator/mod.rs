@@ -1,0 +1,25 @@
+//! Distributed training coordinator: synchronous SGD with a parameter
+//! server (paper §3.6 / §4.3).
+//!
+//! Topology: one server (this thread) + N worker nodes (OS threads, one
+//! per node, each owning its *own* PJRT engine + compiled batch-1 grad
+//! executable — mirroring the paper's one-runtime-per-node deployment).
+//! Each round:
+//!
+//!   1. server broadcasts the parameter vector to all nodes,
+//!   2. every node runs one forward + dithered backward pass on its own
+//!      next example (batch 1, per-node dither seed),
+//!   3. nodes sparse-encode their weight gradients ([`comm`]) and send
+//!      them up; the server decodes, averages, and applies SGD.
+//!
+//! Because NSD noise is unbiased with bounded variance, the averaging
+//! cancels it ~ 1/N — so `s` can grow with N (stronger quantization,
+//! cheaper per-node compute) at constant final accuracy.  That scaling
+//! law is exactly what Fig. 5 / Fig. 6 measure.
+
+pub mod comm;
+pub mod server;
+pub mod worker;
+
+pub use comm::{CommStats, EncodedGrads};
+pub use server::{DistConfig, DistResult, run_distributed};

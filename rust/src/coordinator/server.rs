@@ -1,0 +1,184 @@
+//! Parameter server + synchronous-SGD round orchestration.
+//!
+//! The server owns the canonical parameters and the optimizer; each
+//! round it broadcasts parameters, gathers every node's sparse-encoded
+//! batch-1 gradient, averages them (where the 1/N dither-noise
+//! cancellation happens), and applies one SGD step.  The run ends with
+//! a test-split evaluation on the server's own engine.
+
+use super::comm::CommStats;
+use super::worker::{worker_main, FromWorker, ToWorker, WorkerCfg};
+use crate::data::Dataset;
+use crate::metrics::{History, StepRecord};
+use crate::optim::{Sgd, SgdConfig};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Distributed run configuration (paper §4.3 setup).
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub method: String,
+    /// Dither scale; the Fig. 5/6 sweep grows this with `nodes`.
+    pub s: f32,
+    pub nodes: usize,
+    pub rounds: usize,
+    pub opt: SgdConfig,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+/// Outcome of a distributed run.
+pub struct DistResult {
+    pub params: Vec<Tensor>,
+    pub history: History,
+    pub comm: CommStats,
+    pub test_acc: f32,
+    /// Mean per-node delta_z sparsity over the whole run (Fig. 6a).
+    pub mean_sparsity: f32,
+    /// Worst-case bitwidth over nodes and rounds (Fig. 6b).
+    pub max_bits: u32,
+}
+
+/// Run synchronous distributed SGD with `cfg.nodes` worker threads.
+pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
+    let engine = Engine::load(&cfg.artifacts_dir).context("server loading artifacts")?;
+    let entry = engine.manifest.model(&cfg.model)?.clone();
+    let mut params = engine.init_params(&cfg.model, cfg.seed as u32)?;
+    let mut opt = Sgd::new(cfg.opt, &params);
+    let param_bytes: usize = params.iter().map(|p| 4 * p.len()).sum();
+
+    // Spawn workers, each with a contiguous shard of the training split.
+    let (up_tx, up_rx) = mpsc::channel::<FromWorker>();
+    let mut to_workers = Vec::with_capacity(cfg.nodes);
+    let mut handles = Vec::with_capacity(cfg.nodes);
+    for node in 0..cfg.nodes {
+        let (tx, rx) = mpsc::channel::<ToWorker>();
+        let wcfg = WorkerCfg {
+            node,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            model: cfg.model.clone(),
+            method: cfg.method.clone(),
+            s: cfg.s,
+            shard: data.train.shard(node, cfg.nodes),
+            seed: cfg.seed,
+        };
+        let up = up_tx.clone();
+        handles.push(std::thread::spawn(move || worker_main(wcfg, rx, up)));
+        to_workers.push(tx);
+    }
+    drop(up_tx);
+
+    let mut history = History::default();
+    let mut comm = CommStats::default();
+    let inv_n = 1.0 / cfg.nodes as f32;
+
+    for round in 0..cfg.rounds {
+        // 1. broadcast
+        let shared = Arc::new(params.clone());
+        for tx in &to_workers {
+            tx.send(ToWorker::Round { round, params: shared.clone() })
+                .map_err(|_| anyhow::anyhow!("worker died before round {round}"))?;
+            comm.record_down(param_bytes);
+        }
+
+        // 2. gather + average (decode sparse gradients server-side)
+        let mut avg: Vec<Tensor> =
+            entry.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let (mut loss, mut correct) = (0.0f32, 0.0f32);
+        let mut sparsity_acc = 0.0f32;
+        let mut max_bits = 0u32;
+        for _ in 0..cfg.nodes {
+            let msg = up_rx.recv().context("gather: all workers disconnected")?;
+            debug_assert_eq!(msg.round, round);
+            comm.record_up(&msg.grads, param_bytes);
+            for (acc, (enc, info)) in avg
+                .iter_mut()
+                .zip(msg.grads.tensors.iter().zip(entry.params.iter()))
+            {
+                acc.axpy(inv_n, &enc.decode(&info.shape));
+            }
+            loss += msg.grads.loss * inv_n;
+            correct += msg.grads.correct;
+            let ms = if msg.grads.sparsity.is_empty() {
+                0.0
+            } else {
+                msg.grads.sparsity.iter().sum::<f32>() / msg.grads.sparsity.len() as f32
+            };
+            sparsity_acc += ms * inv_n;
+            let bits = msg
+                .grads
+                .max_level
+                .iter()
+                .map(|&l| crate::util::math::bitwidth_for_level(l))
+                .max()
+                .unwrap_or(0);
+            max_bits = max_bits.max(bits);
+        }
+        comm.rounds += 1;
+
+        // 3. update
+        opt.apply(&mut params, &avg);
+        history.push(StepRecord {
+            step: round,
+            loss,
+            acc: correct / cfg.nodes as f32,
+            sparsity: sparsity_acc,
+            bits: max_bits,
+            layer_sparsity: vec![],
+        });
+        if cfg.verbose && (round + 1) % 100 == 0 {
+            println!(
+                "[dist {}x{}] round {}: loss {:.4} sparsity {:.3} bits {}",
+                cfg.nodes, cfg.method, round + 1, loss, sparsity_acc, max_bits
+            );
+        }
+    }
+
+    // Shut down workers.
+    for tx in &to_workers {
+        let _ = tx.send(ToWorker::Shutdown);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    }
+
+    // Final evaluation on the server engine.
+    let session = engine.training_session(&cfg.model, "baseline", engine.manifest.train_batch)?;
+    let eb = session.entry.eval_batch;
+    let usable = (data.test.len() / eb) * eb;
+    anyhow::ensure!(usable > 0, "test split smaller than eval batch");
+    let eval = session.eval_dataset(&params, &data.test.images, &data.test.labels)?;
+    let test_acc = eval.correct / usable as f32;
+
+    let mean_sparsity = history.mean_sparsity();
+    let max_bits = history.max_bits();
+    Ok(DistResult { params, history, comm, test_acc, mean_sparsity, max_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dist_config_is_cloneable_and_debuggable() {
+        let c = DistConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "mlp500".into(),
+            method: "dithered".into(),
+            s: 2.0,
+            nodes: 4,
+            rounds: 10,
+            opt: SgdConfig::plain(0.1),
+            seed: 1,
+            verbose: false,
+        };
+        let d = c.clone();
+        assert_eq!(format!("{:?}", c).is_empty(), false);
+        assert_eq!(d.nodes, 4);
+    }
+}

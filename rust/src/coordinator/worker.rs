@@ -1,0 +1,111 @@
+//! Worker node: one OS thread owning its own PJRT engine.
+//!
+//! Receives parameter broadcasts, runs one batch-1 forward + dithered
+//! backward pass per round on its private data shard, sparse-encodes the
+//! gradients and sends them to the server.  Seeds are derived from
+//! (node id, round) so no two nodes ever share dither noise — the
+//! independence the 1/N averaging argument needs.
+
+use super::comm::EncodedGrads;
+use crate::data::Split;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Server -> worker message.
+pub enum ToWorker {
+    /// New round: fresh parameters (shared, read-only).
+    Round { round: usize, params: Arc<Vec<Tensor>> },
+    Shutdown,
+}
+
+/// Worker -> server message.
+pub struct FromWorker {
+    pub node: usize,
+    pub round: usize,
+    pub grads: EncodedGrads,
+}
+
+/// Per-node static configuration.
+pub struct WorkerCfg {
+    pub node: usize,
+    pub artifacts_dir: String,
+    pub model: String,
+    pub method: String,
+    pub s: f32,
+    pub shard: Split,
+    pub seed: u64,
+}
+
+/// Worker main loop; runs until `Shutdown` (or a dropped channel).
+pub fn worker_main(
+    cfg: WorkerCfg,
+    rx: Receiver<ToWorker>,
+    tx: Sender<FromWorker>,
+) -> Result<()> {
+    // Each node owns its own engine — its own PJRT client + compiled
+    // executable — exactly as a real deployment would.
+    let engine = Engine::load(&cfg.artifacts_dir)
+        .with_context(|| format!("worker {} loading artifacts", cfg.node))?;
+    let session = engine.training_session(&cfg.model, &cfg.method, 1)?;
+    let dim = session.input_numel();
+    let mut rng = Rng::new(cfg.seed ^ (cfg.node as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut x = vec![0.0f32; dim];
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Shutdown => break,
+            ToWorker::Round { round, params } => {
+                // Draw this node's next example.
+                let idx = rng.below(cfg.shard.len());
+                cfg.shard.example(idx, &mut x);
+                let y = [cfg.shard.labels[idx]];
+
+                let seed = node_round_seed(cfg.node, round, cfg.seed);
+                let out = session.grad(&params, &x, &y, seed, cfg.s)?;
+                let msg = EncodedGrads::encode(
+                    &out.grads,
+                    out.loss,
+                    out.correct,
+                    out.sparsity,
+                    out.max_level,
+                );
+                if tx.send(FromWorker { node: cfg.node, round, grads: msg }).is_err() {
+                    break; // server gone
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Unique dither seed per (node, round).
+pub fn node_round_seed(node: usize, round: usize, base: u64) -> u32 {
+    let mut z = base
+        .wrapping_add((node as u64) << 32)
+        .wrapping_add(round as u64)
+        .wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 29;
+    z as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_unique_across_nodes_and_rounds() {
+        let mut seen = std::collections::HashSet::new();
+        for node in 0..16 {
+            for round in 0..500 {
+                assert!(
+                    seen.insert(node_round_seed(node, round, 7)),
+                    "collision at node {node} round {round}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig. 2 closed form: probability of quantizing to zero.
+//!
+//! For gradients g ~ N(0, sigma^2) dithered with nu ~ U(-Delta/2,
+//! Delta/2) at Delta = s*sigma, a value quantizes to 0 iff
+//! g + nu in (-Delta/2, Delta/2).  Integrating the uniform out:
+//!
+//!   P0(s) = E_nu[ Phi((Delta/2 - nu)/sigma) - Phi((-Delta/2 - nu)/sigma) ]
+//!
+//! which is scale-free in sigma (substitute u = nu/sigma).  The python
+//! oracle `ref.gauss_uniform_p0` computes the same quantity; the Fig. 2
+//! bench prints both plus a Monte-Carlo check.
+
+use crate::util::math::{integrate, phi};
+
+/// P(quantized value == 0) at scale factor `s` (Delta = s * sigma).
+pub fn p_zero(s: f64) -> f64 {
+    if s <= 0.0 {
+        return 0.0;
+    }
+    // average over nu/sigma in (-s/2, s/2)
+    integrate(|nu| phi(s / 2.0 - nu) - phi(-s / 2.0 - nu), -s / 2.0, s / 2.0, 4096) / s
+}
+
+/// Expected density (1 - sparsity), convenience for Fig. 3b comparisons.
+pub fn density(s: f64) -> f64 {
+    1.0 - p_zero(s)
+}
+
+/// Monte-Carlo estimate of the same probability (validation only).
+pub fn p_zero_monte_carlo(s: f64, samples: usize, seed: u64) -> f64 {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut zeros = 0usize;
+    for _ in 0..samples {
+        let g = rng.normal() as f64;
+        let nu = rng.range(-0.5, 0.5) as f64 * s;
+        let q = s * ((g + nu) / s + 0.5).floor();
+        if q == 0.0 {
+            zeros += 1;
+        }
+    }
+    zeros as f64 / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_in_s() {
+        let ps: Vec<f64> = [0.5, 1.0, 2.0, 4.0, 8.0].iter().map(|&s| p_zero(s)).collect();
+        for w in ps.windows(2) {
+            assert!(w[0] < w[1], "{ps:?}");
+        }
+    }
+
+    #[test]
+    fn limits() {
+        assert_eq!(p_zero(0.0), 0.0);
+        assert!(p_zero(0.1) < 0.1);
+        // large-s limit: P0 ~ 1 - E|g|/s = 1 - sqrt(2/pi)/s (slow approach)
+        assert!(p_zero(20.0) > 0.95 && p_zero(20.0) < 1.0);
+    }
+
+    #[test]
+    fn matches_monte_carlo() {
+        for &s in &[1.0, 2.0, 4.0] {
+            let a = p_zero(s);
+            let mc = p_zero_monte_carlo(s, 200_000, 7);
+            assert!((a - mc).abs() < 0.01, "s={s}: analytic {a} vs mc {mc}");
+        }
+    }
+
+    #[test]
+    fn paper_operating_range() {
+        // the paper reports 75-99% sparsity at practical s; our curve
+        // should reach 75% within s in [1, 8]
+        assert!(p_zero(8.0) > 0.75);
+    }
+
+    #[test]
+    fn density_complements() {
+        assert!((p_zero(2.0) + density(2.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,112 @@
+//! Eq. 12: arithmetic-operation accounting for the backward pass.
+//!
+//! For a layer with weight matrix W (m x k) and pre-activation gradient
+//! matrix G (k x n):
+//!
+//!   dense backward GEMM cost    ~ O(m k n)
+//!   dithered cost               ~ O(k n  +  p_nz * m k n)
+//!                                  ^NSD     ^sparse product
+//!   savings ratio               = 1/m + p_nz   -->  p_nz for m >> 1
+//!
+//! `NSD_OPS_PER_ELEMENT` is the paper's ~9 arithmetic ops per element
+//! (std pass, uniform draw, quantize).
+
+/// Paper §3.4: ~9 arithmetic ops per element for NSD itself.
+pub const NSD_OPS_PER_ELEMENT: f64 = 9.0;
+
+/// Op counts for one backward GEMM of shape (m x k) . (k x n).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackwardCost {
+    /// Dense multiply-accumulate ops.
+    pub dense_ops: f64,
+    /// NSD overhead ops.
+    pub nsd_ops: f64,
+    /// Sparse product ops at the measured nonzero probability.
+    pub sparse_ops: f64,
+}
+
+impl BackwardCost {
+    /// Total dithered cost (overhead + sparse product).
+    pub fn dithered_ops(&self) -> f64 {
+        self.nsd_ops + self.sparse_ops
+    }
+
+    /// Measured savings factor (dense / dithered).
+    pub fn speedup(&self) -> f64 {
+        self.dense_ops / self.dithered_ops()
+    }
+}
+
+/// Cost of the backward GEMM pair for one layer, given the measured
+/// nonzero probability `p_nz` of the quantized gradient (k x n here is
+/// the delta_z matrix; m the weight rows feeding Eq. 8/9).
+pub fn backward_gemm_ops(m: usize, k: usize, n: usize, p_nz: f64) -> BackwardCost {
+    let (m, k, n) = (m as f64, k as f64, n as f64);
+    BackwardCost {
+        dense_ops: m * k * n,
+        nsd_ops: NSD_OPS_PER_ELEMENT * k * n,
+        sparse_ops: p_nz * m * k * n,
+    }
+}
+
+/// Eq. 12 exactly: the asymptotic savings ratio `1/m + p_nz`
+/// (dithered / dense; lower is better).
+pub fn savings_ratio(m: usize, p_nz: f64) -> f64 {
+    1.0 / m as f64 + p_nz
+}
+
+/// Fully-connected layer backward cost for a (batch b, in d_in, out
+/// d_out) layer at measured gradient density `p_nz`:
+/// Eq. 8 (dx = qg . W^T) + Eq. 9 (dW = x^T . qg).
+pub fn fc_backward_cost(b: usize, d_in: usize, d_out: usize, p_nz: f64) -> BackwardCost {
+    let (bf, di, do_) = (b as f64, d_in as f64, d_out as f64);
+    let dense = 2.0 * bf * di * do_;
+    BackwardCost {
+        dense_ops: dense,
+        nsd_ops: NSD_OPS_PER_ELEMENT * bf * do_,
+        sparse_ops: p_nz * dense,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq12_limits() {
+        // m large: ratio -> p_nz
+        assert!((savings_ratio(1_000_000, 0.08) - 0.08).abs() < 1e-5);
+        // m = 1: ratio -> 1 + p_nz (no savings possible)
+        assert!((savings_ratio(1, 0.5) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_vs_dithered_consistency() {
+        let c = backward_gemm_ops(512, 128, 64, 0.1);
+        assert_eq!(c.dense_ops, 512.0 * 128.0 * 64.0);
+        assert!(c.speedup() > 5.0 && c.speedup() < 10.0);
+        // ratio approximates Eq. 12
+        let ratio = c.dithered_ops() / c.dense_ops;
+        let eq12 = savings_ratio(512, 0.1) + NSD_OPS_PER_ELEMENT / 512.0 - 1.0 / 512.0;
+        assert!((ratio - eq12).abs() < 1e-9, "{ratio} vs {eq12}");
+    }
+
+    #[test]
+    fn zero_sparsity_means_no_savings() {
+        let c = backward_gemm_ops(256, 64, 64, 1.0);
+        assert!(c.speedup() < 1.0); // NSD overhead makes it slightly worse
+    }
+
+    #[test]
+    fn full_sparsity_cost_is_overhead_only() {
+        let c = backward_gemm_ops(256, 64, 64, 0.0);
+        assert_eq!(c.dithered_ops(), NSD_OPS_PER_ELEMENT * 64.0 * 64.0);
+    }
+
+    #[test]
+    fn fc_cost_counts_both_gemms() {
+        let c = fc_backward_cost(128, 784, 500, 0.05);
+        assert_eq!(c.dense_ops, 2.0 * 128.0 * 784.0 * 500.0);
+        assert!(c.speedup() > 10.0);
+    }
+}

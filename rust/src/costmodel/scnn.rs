@@ -1,0 +1,75 @@
+//! SCNN-class accelerator gains (paper §3.4 "Practical savings").
+//!
+//! The paper cites [24] (SCNN, ISCA'17): x1.5–x8 speedup and x1.5–x6
+//! energy gain at 75%–95% sparsity, and projects "x5 speedup / x4.5
+//! energy on average" for dithered backprop's 92% average sparsity.
+//! This module encodes that published operating curve as a
+//! piecewise-linear lookup so the benches can translate our *measured*
+//! sparsities into the same projected-gain numbers the paper reports.
+
+/// Piecewise-linear interpolation over (sparsity, gain) anchor points.
+fn interp(curve: &[(f64, f64)], sparsity: f64) -> f64 {
+    let s = sparsity.clamp(0.0, 1.0);
+    if s <= curve[0].0 {
+        return curve[0].1;
+    }
+    for w in curve.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if s <= x1 {
+            return y0 + (y1 - y0) * (s - x0) / (x1 - x0);
+        }
+    }
+    curve.last().unwrap().1
+}
+
+/// SCNN speedup anchors: x1 at dense, x1.5 @75%, x5 @92% (the paper's
+/// own average projection), x8 @95%.
+const SPEEDUP_CURVE: [(f64, f64); 4] = [(0.0, 1.0), (0.75, 1.5), (0.92, 5.0), (0.95, 8.0)];
+
+/// SCNN energy anchors: x1 dense, x1.5 @75%, x4.5 @92%, x6 @95%.
+const ENERGY_CURVE: [(f64, f64); 4] = [(0.0, 1.0), (0.75, 1.5), (0.92, 4.5), (0.95, 6.0)];
+
+/// Projected accelerator speedup at a measured sparsity ratio.
+pub fn speedup(sparsity: f64) -> f64 {
+    interp(&SPEEDUP_CURVE, sparsity)
+}
+
+/// Projected accelerator energy gain at a measured sparsity ratio.
+pub fn energy_gain(sparsity: f64) -> f64 {
+    interp(&ENERGY_CURVE, sparsity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_exact() {
+        assert_eq!(speedup(0.0), 1.0);
+        assert_eq!(speedup(0.75), 1.5);
+        assert_eq!(speedup(0.92), 5.0);
+        assert_eq!(speedup(0.95), 8.0);
+        assert_eq!(energy_gain(0.92), 4.5);
+    }
+
+    #[test]
+    fn paper_headline_projection() {
+        // "these results may potentially translate to x5 speedups and
+        // x4.5 energy gains on average" at 92% average sparsity
+        assert!((speedup(0.92) - 5.0).abs() < 1e-9);
+        assert!((energy_gain(0.92) - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_and_clamped() {
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let v = speedup(i as f64 / 100.0);
+            assert!(v >= prev);
+            prev = v;
+        }
+        assert_eq!(speedup(1.5), 8.0);
+        assert_eq!(speedup(-0.2), 1.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Dataset substrates (DESIGN.md §Substitutions).
+//!
+//! The paper trains on MNIST / CIFAR10 / CIFAR100 / ImageNet; none are
+//! downloadable on this image, so we build two procedural datasets that
+//! are genuinely learnable and exercise the identical code paths:
+//!
+//! * [`synth_digits`] — 28x28x1, 10 classes: glyph-rendered digits with
+//!   random affine jitter, stroke-intensity variation and pixel noise
+//!   (MNIST stand-in; drives lenet300100 / lenet5 / mlp500).
+//! * [`textures`] — 16x16x3, 10 classes: class-conditional oriented
+//!   sinusoid textures with color bias + noise (CIFAR stand-in; drives
+//!   minivgg).
+//!
+//! [`loader`] holds the split + shuffled mini-batch iterator.
+
+pub mod loader;
+pub mod synth_digits;
+pub mod textures;
+
+pub use loader::{BatchIter, Dataset, Split};
+
+/// Build the dataset a model asks for (manifest `dataset` field).
+pub fn build(kind: &str, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    match kind {
+        "digits" => synth_digits::generate(n_train + n_test, seed).split_at(n_train),
+        "textures" => textures::generate(n_train + n_test, seed).split_at(n_train),
+        other => panic!("unknown dataset kind '{other}' (expected digits|textures)"),
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig. 1: distribution of pre-activation gradients before / after NSD.
+//!
+//! At batch 1 the bias gradient of a dense layer *is* its delta_z row
+//! (db = sum over the batch of delta_z), so we harvest real delta_z
+//! vectors straight from the AOT pipeline: the baseline batch-1 grad
+//! artifact gives the "before" distribution, the dithered one the
+//! "after" — no reimplementation, the histograms come from the very
+//! tensors the backward GEMMs consume.
+
+use crate::data;
+use crate::runtime::Engine;
+use crate::train::step_seed;
+use anyhow::Result;
+
+/// Histogram with uniform bins.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<usize>,
+    pub total: usize,
+    pub zero_fraction: f32,
+    pub distinct_nonzero: usize,
+}
+
+pub fn histogram(values: &[f32], bins: usize) -> Histogram {
+    let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-12);
+    let mut counts = vec![0usize; bins];
+    let mut zeros = 0usize;
+    let mut distinct: Vec<f32> = Vec::new();
+    for &v in values {
+        let b = (((v - lo) / span) * bins as f32).min(bins as f32 - 1.0) as usize;
+        counts[b] += 1;
+        if v == 0.0 {
+            zeros += 1;
+        } else if !distinct.iter().any(|&d| (d - v).abs() < 1e-9) {
+            if distinct.len() < 1024 {
+                distinct.push(v);
+            }
+        }
+    }
+    Histogram {
+        lo,
+        hi,
+        counts,
+        total: values.len(),
+        zero_fraction: zeros as f32 / values.len().max(1) as f32,
+        distinct_nonzero: distinct.len(),
+    }
+}
+
+/// Harvested delta_z samples for one layer, before and after NSD.
+pub struct Fig1Data {
+    pub before: Vec<f32>,
+    pub after: Vec<f32>,
+    pub s: f32,
+}
+
+/// Collect delta_z of `model`'s first dense layer over `n_examples`
+/// batch-1 grad executions (a few steps into training so the gradients
+/// are not at the cold-start pathology).
+pub fn collect(artifacts: &str, model: &str, s: f32, n_examples: usize) -> Result<Fig1Data> {
+    let engine = Engine::load(artifacts)?;
+    let entry = engine.manifest.model(model)?.clone();
+    let ds = data::build(&entry.dataset, 1024, 256, 0xF161);
+    let base = engine.training_session(model, "baseline", 1)?;
+    let dith = engine.training_session(model, "dithered", 1)?;
+    let params = engine.init_params(model, 7)?;
+
+    // first bias parameter index = delta_z of layer 1 at batch 1
+    let bias_idx = entry
+        .params
+        .iter()
+        .position(|p| p.name.ends_with("_b") && !p.name.starts_with("bn"))
+        .ok_or_else(|| anyhow::anyhow!("no bias parameter found"))?;
+
+    let dim: usize = entry.input_shape.iter().product();
+    let mut x = vec![0.0f32; dim];
+    let (mut before, mut after) = (Vec::new(), Vec::new());
+    for i in 0..n_examples {
+        ds.train.example(i % ds.train.len(), &mut x);
+        let y = [ds.train.labels[i % ds.train.len()]];
+        let seed = step_seed(99, i);
+        let b = base.grad(&params, &x, &y, seed, 0.0)?;
+        let d = dith.grad(&params, &x, &y, seed, s)?;
+        before.extend_from_slice(b.grads[bias_idx].data());
+        after.extend_from_slice(d.grads[bias_idx].data());
+    }
+    Ok(Fig1Data { before, after, s })
+}
+
+/// Render the two histograms as ASCII bar charts.
+pub fn render(data: &Fig1Data, bins: usize) -> String {
+    let hb = histogram(&data.before, bins);
+    let ha = histogram(&data.after, bins);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "before NSD: {} values, zero fraction {:.3}, range [{:.2e}, {:.2e}]\n",
+        hb.total, hb.zero_fraction, hb.lo, hb.hi
+    ));
+    out.push_str(&bar_chart(&hb));
+    out.push_str(&format!(
+        "\nafter NSD (s={}): zero fraction {:.3}, distinct nonzero levels {} \
+         (low bucket count == low bitwidth, Fig. 1 right)\n",
+        data.s, ha.zero_fraction, ha.distinct_nonzero
+    ));
+    out.push_str(&bar_chart(&ha));
+    out
+}
+
+fn bar_chart(h: &Histogram) -> String {
+    let max = *h.counts.iter().max().unwrap_or(&1) as f32;
+    let mut out = String::new();
+    for (i, &c) in h.counts.iter().enumerate() {
+        let center = h.lo + (i as f32 + 0.5) / h.counts.len() as f32 * (h.hi - h.lo);
+        let width = (c as f32 / max * 60.0).round() as usize;
+        out.push_str(&format!("{center:>11.2e} |{}\n", "#".repeat(width)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_zero_fraction() {
+        let h = histogram(&[0.0, 0.0, 1.0, -1.0], 4);
+        assert_eq!(h.total, 4);
+        assert_eq!(h.zero_fraction, 0.5);
+        assert_eq!(h.counts.iter().sum::<usize>(), 4);
+        assert_eq!(h.distinct_nonzero, 2);
+    }
+
+    #[test]
+    fn histogram_single_value() {
+        let h = histogram(&[2.0, 2.0], 3);
+        assert_eq!(h.counts.iter().sum::<usize>(), 2);
+    }
+}

@@ -1,0 +1,73 @@
+//! Fig. 2: probability of quantizing to zero vs the scale factor s.
+//!
+//! Three independent computations of the same curve:
+//!   1. the closed-form Gaussian (x) Uniform integral (costmodel),
+//!   2. a Monte-Carlo estimate with the host RNG,
+//!   3. the host-reference NSD applied to actual Gaussian samples.
+//! Agreement across all three (and with the python oracle
+//! `ref.gauss_uniform_p0`, tested in pytest) pins the sparsity model the
+//! paper's compute-savings story rests on.
+
+use crate::costmodel::analytic::{p_zero, p_zero_monte_carlo};
+use crate::metrics::Table;
+use crate::quant::{grid_stats, nsd_host};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub s: f64,
+    pub analytic: f64,
+    pub monte_carlo: f64,
+    pub host_nsd: f64,
+}
+
+pub fn run(scales: &[f64], samples: usize) -> Vec<Fig2Row> {
+    let mut rng = Rng::new(0xF162);
+    let gauss: Vec<f32> = (0..samples).map(|_| rng.normal()).collect();
+    scales
+        .iter()
+        .map(|&s| {
+            let q = nsd_host(&gauss, s as f32, &mut Rng::new(0x51ED));
+            Fig2Row {
+                s,
+                analytic: p_zero(s),
+                monte_carlo: p_zero_monte_carlo(s, samples, 0xABCD),
+                host_nsd: grid_stats(&q, s as f32).sparsity as f64,
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[Fig2Row]) -> String {
+    let mut t = Table::new(&["s", "P0 analytic", "P0 monte-carlo", "P0 host NSD"]);
+    for r in rows {
+        t.row(&[
+            format!("{:.1}", r.s),
+            format!("{:.4}", r.analytic),
+            format!("{:.4}", r.monte_carlo),
+            format!("{:.4}", r.host_nsd),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_estimates_agree() {
+        for row in run(&[1.0, 2.0, 4.0], 100_000) {
+            assert!((row.analytic - row.monte_carlo).abs() < 0.02, "{row:?}");
+            assert!((row.analytic - row.host_nsd).abs() < 0.02, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn curve_monotone() {
+        let rows = run(&[0.5, 1.0, 2.0, 4.0, 8.0], 20_000);
+        for w in rows.windows(2) {
+            assert!(w[0].analytic < w[1].analytic);
+        }
+    }
+}

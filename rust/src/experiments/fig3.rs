@@ -1,0 +1,115 @@
+//! Fig. 3a/3b + appendix Figs. .7/.8: convergence and gradient density
+//! over training.
+//!
+//! 3a: test error vs training progress for baseline vs dithered — the
+//!     "no recognizable difference in convergence speed" claim.
+//! 3b: average density (1 - sparsity) of delta_z-tilde over training —
+//!     dithered density is far below baseline throughout.
+//! .7/.8 add the int8 and int8+dithered series (same harness, more
+//!     methods).
+
+use crate::data;
+use crate::metrics::Table;
+use crate::runtime::Engine;
+use crate::train::{train, TrainConfig};
+use anyhow::Result;
+
+use super::Scale;
+
+/// One method's training curves.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub method: String,
+    /// (step, test error %) — Fig. 3a series.
+    pub test_error: Vec<(usize, f32)>,
+    /// (step, mean density) — Fig. 3b series.
+    pub density: Vec<(usize, f32)>,
+    pub final_acc: f32,
+}
+
+pub fn run(
+    artifacts: &str,
+    model: &str,
+    methods: &[String],
+    s: f32,
+    scale: Scale,
+    verbose: bool,
+) -> Result<Vec<Curve>> {
+    let engine = Engine::load(artifacts)?;
+    let entry = engine.manifest.model(model)?;
+    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, 0xF163);
+    let eval_every = (scale.steps / 10).max(1);
+    let mut curves = Vec::new();
+    for method in methods {
+        let mut cfg = TrainConfig::quick(model, method, s, scale.steps);
+        cfg.eval_every = eval_every;
+        cfg.verbose = verbose;
+        let res = train(&engine, &ds, &cfg)?;
+        curves.push(Curve {
+            method: method.clone(),
+            test_error: res
+                .history
+                .evals
+                .iter()
+                .map(|&(st, a)| (st, (1.0 - a) * 100.0))
+                .collect(),
+            density: res.history.density_series(eval_every),
+            final_acc: res.test_acc,
+        });
+    }
+    Ok(curves)
+}
+
+pub fn render(curves: &[Curve]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 3a: test error (%) vs step\n");
+    let mut t = Table::new(
+        &std::iter::once("step".to_string())
+            .chain(curves.iter().map(|c| c.method.clone()))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    if let Some(first) = curves.first() {
+        for (i, &(step, _)) in first.test_error.iter().enumerate() {
+            let mut row = vec![format!("{step}")];
+            for c in curves {
+                row.push(
+                    c.test_error
+                        .get(i)
+                        .map(|&(_, e)| format!("{e:.2}"))
+                        .unwrap_or_default(),
+                );
+            }
+            t.row(&row);
+        }
+    }
+    out.push_str(&t.render());
+
+    out.push_str("\nFig 3b: delta_z density vs step\n");
+    let mut t = Table::new(
+        &std::iter::once("step".to_string())
+            .chain(curves.iter().map(|c| c.method.clone()))
+            .collect::<Vec<_>>()
+            .iter()
+            .map(|s| s.as_str())
+            .collect::<Vec<_>>(),
+    );
+    if let Some(first) = curves.first() {
+        for (i, &(step, _)) in first.density.iter().enumerate() {
+            let mut row = vec![format!("{step}")];
+            for c in curves {
+                row.push(
+                    c.density
+                        .get(i)
+                        .map(|&(_, d)| format!("{d:.3}"))
+                        .unwrap_or_default(),
+                );
+            }
+            t.row(&row);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}

@@ -1,0 +1,106 @@
+//! Fig. 4 / Fig. .9: learning performance vs average delta_z sparsity —
+//! dithered backprop against meProp (top-k) and the dense baseline.
+//!
+//! The paper's central comparison: at matched sparsity, NSD's *unbiased*
+//! compression preserves accuracy while meProp's biased top-k loses it.
+//! We sweep the dither scale s and meProp's k on the same MLP-500-500
+//! and report (mean sparsity, final accuracy +- std over seeds).
+
+use crate::data;
+use crate::metrics::Table;
+use crate::runtime::Engine;
+use crate::train::{train, TrainConfig};
+use crate::util::math::{mean, std_dev};
+use anyhow::Result;
+
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub label: String,
+    pub sparsity: f32,
+    pub acc_mean: f32,
+    pub acc_std: f32,
+}
+
+/// Dither scales swept (paper sweeps quantization strength).
+pub const DITHER_SCALES: [f32; 5] = [1.0, 2.0, 4.0, 6.0, 8.0];
+
+pub fn run(artifacts: &str, scale: Scale, verbose: bool) -> Result<Vec<SweepPoint>> {
+    let engine = Engine::load(artifacts)?;
+    let model = "mlp500";
+    let entry = engine.manifest.model(model)?;
+    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, 0xF164);
+
+    // method label -> (method string, s)
+    let mut configs: Vec<(String, String, f32)> =
+        vec![("baseline".into(), "baseline".into(), 0.0)];
+    for &s in &DITHER_SCALES {
+        configs.push((format!("dithered s={s}"), "dithered".into(), s));
+    }
+    for method in engine.manifest.model(model)?.methods() {
+        if method.starts_with("meprop_k") {
+            configs.push((method.clone(), method.clone(), 0.0));
+        }
+    }
+
+    let mut points = Vec::new();
+    for (label, method, s) in configs {
+        let mut accs = Vec::new();
+        let mut sparsities = Vec::new();
+        for rep in 0..scale.reps {
+            let mut cfg = TrainConfig::quick(model, &method, s, scale.steps);
+            cfg.seed = 42 + rep as u64 * 1000;
+            let res = train(&engine, &ds, &cfg)?;
+            accs.push(res.test_acc as f64);
+            sparsities.push(res.history.mean_sparsity() as f64);
+        }
+        let p = SweepPoint {
+            label,
+            sparsity: mean(&sparsities) as f32,
+            acc_mean: mean(&accs) as f32,
+            acc_std: std_dev(&accs) as f32,
+        };
+        if verbose {
+            println!(
+                "  {:<16} sparsity {:.3} acc {:.4} +- {:.4}",
+                p.label, p.sparsity, p.acc_mean, p.acc_std
+            );
+        }
+        points.push(p);
+    }
+    Ok(points)
+}
+
+pub fn render(points: &[SweepPoint]) -> String {
+    let mut t = Table::new(&["config", "sparsity%", "acc% (mean)", "acc% (std)"]);
+    for p in points {
+        t.row(&[
+            p.label.clone(),
+            format!("{:.2}", p.sparsity * 100.0),
+            format!("{:.2}", p.acc_mean * 100.0),
+            format!("{:.2}", p.acc_std * 100.0),
+        ]);
+    }
+    let mut out = t.render();
+    // paper's headline comparison: best dithered point vs best meprop
+    let best = |pred: &dyn Fn(&&SweepPoint) -> bool| -> Option<&SweepPoint> {
+        points
+            .iter()
+            .filter(pred)
+            .max_by(|a, b| a.acc_mean.partial_cmp(&b.acc_mean).unwrap())
+    };
+    if let (Some(d), Some(m)) = (
+        best(&|p| p.label.starts_with("dithered") && p.sparsity > 0.8),
+        best(&|p| p.label.starts_with("meprop")),
+    ) {
+        out.push_str(&format!(
+            "\nheadline: dithered {:.2}% acc @ {:.2}% sparsity  vs  meProp {:.2}% acc @ {:.2}% sparsity\n",
+            d.acc_mean * 100.0,
+            d.sparsity * 100.0,
+            m.acc_mean * 100.0,
+            m.sparsity * 100.0
+        ));
+    }
+    out
+}

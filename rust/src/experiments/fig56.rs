@@ -1,0 +1,131 @@
+//! Figs. 5, 6a, 6b (+ .10/.11): dithered backprop in distributed SSGD.
+//!
+//! Sweep the number of nodes N, growing the dither scale s with N
+//! (stronger quantization as averaging gets stronger).  Expected trends
+//! (the paper's §4.3 claims):
+//!   Fig. 5  — final accuracy ~ constant in N,
+//!   Fig. 6a — per-node delta_z sparsity grows with N,
+//!   Fig. 6b — worst-case bitwidth shrinks with N,
+//!   plus communication savings from sparse batch-1 weight gradients.
+
+use crate::coordinator::{run_distributed, DistConfig};
+use crate::data;
+use crate::metrics::Table;
+use crate::optim::SgdConfig;
+use crate::runtime::Engine;
+use anyhow::Result;
+
+use super::Scale;
+
+#[derive(Debug, Clone)]
+pub struct DistPoint {
+    pub nodes: usize,
+    pub s: f32,
+    pub acc: f32,
+    pub sparsity: f32,
+    pub max_bits: u32,
+    /// Upstream communication compression factor (dense / sparse bytes).
+    pub comm_savings: f64,
+    /// Eq. 12 per-node compute ratio at the measured density.
+    pub compute_ratio: f64,
+}
+
+/// The paper grows s with N; this schedule spans its Fig. 5 x-axis.
+pub fn s_for_nodes(n: usize) -> f32 {
+    match n {
+        0 | 1 => 2.0,
+        2 => 3.0,
+        4 => 4.0,
+        8 => 6.0,
+        _ => 8.0,
+    }
+}
+
+pub fn run(
+    artifacts: &str,
+    model: &str,
+    node_counts: &[usize],
+    scale: Scale,
+    verbose: bool,
+) -> Result<Vec<DistPoint>> {
+    let engine = Engine::load(artifacts)?;
+    let entry = engine.manifest.model(model)?.clone();
+    drop(engine); // workers + server each load their own
+    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, 0xF165);
+
+    let mut points = Vec::new();
+    for &n in node_counts {
+        let s = s_for_nodes(n);
+        let cfg = DistConfig {
+            artifacts_dir: artifacts.to_string(),
+            model: model.to_string(),
+            method: "dithered".into(),
+            s,
+            nodes: n,
+            rounds: scale.rounds,
+            // batch-1 rounds need a gentler lr than batch-64 training,
+            // and the paper's step decay to avoid late-round divergence
+            opt: SgdConfig {
+                lr: crate::optim::LrSchedule { base: 0.02, gamma: 0.1, every: (scale.rounds * 2 / 3).max(1) },
+                momentum: 0.9,
+                weight_decay: 5e-4,
+            },
+            seed: 42,
+            verbose,
+        };
+        let res = run_distributed(&ds, &cfg)?;
+        // weight rows m for Eq. 12: use the largest layer's output dim
+        let m = entry.params.iter().map(|p| *p.shape.last().unwrap_or(&1)).max().unwrap_or(1);
+        let p = DistPoint {
+            nodes: n,
+            s,
+            acc: res.test_acc,
+            sparsity: res.mean_sparsity,
+            max_bits: res.max_bits,
+            comm_savings: res.comm.up_savings(),
+            compute_ratio: crate::costmodel::savings_ratio(m, 1.0 - res.mean_sparsity as f64),
+        };
+        if verbose {
+            println!(
+                "  N={:<3} s={:<4} acc {:.4} sparsity {:.3} bits {} comm x{:.1} compute ratio {:.3}",
+                p.nodes, p.s, p.acc, p.sparsity, p.max_bits, p.comm_savings, p.compute_ratio
+            );
+        }
+        points.push(p);
+    }
+    Ok(points)
+}
+
+pub fn render(points: &[DistPoint]) -> String {
+    let mut t = Table::new(&[
+        "nodes", "s", "acc% (Fig 5)", "sparsity% (Fig 6a)", "max bits (Fig 6b)",
+        "comm savings", "Eq12 compute ratio",
+    ]);
+    for p in points {
+        t.row(&[
+            format!("{}", p.nodes),
+            format!("{:.1}", p.s),
+            format!("{:.2}", p.acc * 100.0),
+            format!("{:.2}", p.sparsity * 100.0),
+            format!("{}", p.max_bits),
+            format!("x{:.1}", p.comm_savings),
+            format!("{:.3}", p.compute_ratio),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_schedule_monotone() {
+        let mut prev = 0.0;
+        for n in [1, 2, 4, 8, 16] {
+            let s = s_for_nodes(n);
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Experiment harnesses: one module per paper table/figure.
+//!
+//! Every harness is a library function (so `cargo bench` targets, the
+//! CLI, and integration tests all share one implementation) that prints
+//! the same rows/series the paper reports and returns the data
+//! structurally for tests.
+//!
+//! | module    | reproduces                                            |
+//! |-----------|-------------------------------------------------------|
+//! | [`table1`]| Table 1: acc% + sparsity% across models x methods     |
+//! | [`fig1`]  | Fig. 1: delta_z histogram before/after NSD            |
+//! | [`fig2`]  | Fig. 2: P(0) vs scale factor s (analytic + MC + host) |
+//! | [`fig3`]  | Fig. 3a/b + Figs. .7/.8: convergence + density curves |
+//! | [`fig4`]  | Fig. 4 / Fig. .9: dithered vs meProp acc-vs-sparsity  |
+//! | [`fig56`] | Figs. 5, 6a, 6b, .10, .11: distributed N-node sweeps  |
+//! | [`eq12`]  | Eq. 12: savings ratio, theory vs measured op counts   |
+
+pub mod eq12;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig56;
+pub mod table1;
+
+/// Common scale knobs so `--quick` runs in seconds and full runs match
+/// the paper's regime as closely as the testbed allows.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    /// Training steps per Table-1 / Fig-3 / Fig-4 cell.
+    pub steps: usize,
+    /// Distributed rounds per Fig-5/6 point.
+    pub rounds: usize,
+    /// Training examples to synthesize.
+    pub n_train: usize,
+    /// Test examples to synthesize.
+    pub n_test: usize,
+    /// Seeds (repetitions) for error bars.
+    pub reps: usize,
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Scale { steps: 150, rounds: 150, n_train: 4096, n_test: 512, reps: 1 }
+    }
+
+    /// Calibrated to ~10 min total for `cargo bench` on the 1-core CPU
+    /// testbed (grad step: 10-100 ms depending on model — see
+    /// EXPERIMENTS.md §Perf); enough steps for every model to reach its
+    /// asymptotic accuracy on the synthetic workloads.
+    pub fn full() -> Self {
+        Scale { steps: 300, rounds: 400, n_train: 8192, n_test: 1024, reps: 2 }
+    }
+
+    pub fn from_args(args: &crate::util::cli::Args) -> Self {
+        let mut s = if args.has("quick") { Self::quick() } else { Self::full() };
+        s.steps = args.usize_or("steps", s.steps);
+        s.rounds = args.usize_or("rounds", s.rounds);
+        s.n_train = args.usize_or("n-train", s.n_train);
+        s.n_test = args.usize_or("n-test", s.n_test);
+        s.reps = args.usize_or("reps", s.reps);
+        s
+    }
+}
+
+/// Default artifacts directory (relative to the repo root, overridable
+/// with `--artifacts`).
+pub fn artifacts_dir(args: &crate::util::cli::Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}

@@ -1,0 +1,48 @@
+//! # ditherprop
+//!
+//! Production-grade reproduction of **"Dithered backprop: a sparse and
+//! quantized backpropagation algorithm for more efficient deep neural
+//! network training"** (Wiedemann, Mehari, Kepp, Samek, 2020).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas kernels (NSD dithered quantizer with in-kernel
+//!   counter RNG, block-sparse backward GEMMs), authored in
+//!   `python/compile/kernels/` and AOT-lowered into the HLO artifacts.
+//! * **L2** — JAX model zoo with instrumented `custom_vjp` backward
+//!   passes (dithered / meProp / int8 / baseline), lowered once by
+//!   `python/compile/aot.py` to `artifacts/*.hlo.txt` + `manifest.json`.
+//! * **L3** — this crate: the coordinator.  Loads the artifacts via the
+//!   PJRT CPU client ([`runtime`]), owns datasets ([`data`]), the
+//!   optimizer ([`optim`]), single-node training ([`train`]), the
+//!   synchronous-SGD parameter-server runtime of the paper's §3.6/§4.3
+//!   ([`coordinator`]), sparse gradient codecs ([`sparse`]), the
+//!   computational cost model of §3.4 ([`costmodel`]), and every
+//!   table/figure harness ([`experiments`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! rust binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ditherprop::runtime::Engine;
+//! let engine = Engine::load("artifacts").unwrap();
+//! let sess = engine.training_session("mlp500", "dithered", 64).unwrap();
+//! ```
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use tensor::Tensor;

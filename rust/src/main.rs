@@ -1,0 +1,247 @@
+//! `ditherprop` — leader binary: training, evaluation, distributed SSGD,
+//! and every paper table/figure, from the command line.
+//!
+//! ```text
+//! ditherprop info
+//! ditherprop train --model mlp500 --method dithered --s 2 --steps 500
+//! ditherprop distributed --model mlp500 --nodes 8 --rounds 300
+//! ditherprop table1 [--quick] [--models mlp500,lenet5]
+//! ditherprop fig1|fig2|fig3|fig4|fig56|eq12 [--quick]
+//! ```
+//!
+//! Python never runs here: all compute comes from `artifacts/*.hlo.txt`
+//! (build with `make artifacts`).
+
+use anyhow::Result;
+use ditherprop::coordinator::{run_distributed, DistConfig};
+use ditherprop::data;
+use ditherprop::experiments::{self, artifacts_dir, Scale};
+use ditherprop::optim::SgdConfig;
+use ditherprop::runtime::Engine;
+use ditherprop::train::{train, TrainConfig};
+use ditherprop::util::cli::Args;
+
+const USAGE: &str = "\
+ditherprop — dithered backprop (Wiedemann et al., 2020) coordinator
+
+USAGE: ditherprop <command> [--flags]
+
+COMMANDS
+  info          show manifest: models, artifacts, parameter counts
+  train         single-node training
+                  --model M --method {baseline|dithered|int8|int8_dithered|meprop_kN}
+                  --s S --steps N --batch B --lr LR --eval-every K --seed SEED
+  distributed   synchronous-SGD parameter server (paper §4.3)
+                  --model M --nodes N --rounds R --s S --method ...
+  table1        Table 1: acc% + sparsity% across models x methods
+  fig1          Fig. 1: delta_z histograms before/after NSD
+  fig2          Fig. 2: P(zero) vs scale factor s
+  fig3          Fig. 3a/b (+ .7/.8): convergence + density curves
+  fig4          Fig. 4 (+ .9): dithered vs meProp accuracy-vs-sparsity
+  fig56         Figs. 5/6 (+ .10/.11): distributed N-node sweeps
+  eq12          Eq. 12: savings ratio theory vs measured op counts
+
+COMMON FLAGS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --quick           reduced step counts for smoke runs
+  --steps/--rounds/--n-train/--n-test/--reps  scale overrides
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "train" => cmd_train(&args),
+        "distributed" => cmd_distributed(&args),
+        "table1" => cmd_table1(&args),
+        "fig1" => cmd_fig1(&args),
+        "fig2" => cmd_fig2(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "fig56" => cmd_fig56(&args),
+        "eq12" => cmd_eq12(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let engine = Engine::load(artifacts_dir(args))?;
+    println!("platform: {}", engine.platform());
+    println!(
+        "batches: train={} worker={} eval={}",
+        engine.manifest.train_batch, engine.manifest.worker_batch, engine.manifest.eval_batch
+    );
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "model {name}: dataset={} input={:?} classes={} qlayers={} params={} weights={}",
+            m.dataset,
+            m.input_shape,
+            m.num_classes,
+            m.n_qlayers,
+            m.n_params(),
+            m.total_weights()
+        );
+        println!("  methods: {:?}", m.methods());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::load(artifacts_dir(args))?;
+    let model = args.str_or("model", "mlp500");
+    let entry = engine.manifest.model(&model)?;
+    let scale = Scale::from_args(args);
+    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, args.u64_or("data-seed", 7));
+    let steps = args.usize_or("steps", scale.steps);
+    let cfg = TrainConfig {
+        model: model.clone(),
+        method: args.str_or("method", "dithered"),
+        s: args.f32_or("s", 2.0),
+        steps,
+        batch: args.usize_or("batch", engine.manifest.train_batch),
+        opt: SgdConfig::paper(args.f32_or("lr", 0.1), steps * 2 / 3),
+        eval_every: args.usize_or("eval-every", (steps / 10).max(1)),
+        seed: args.u64_or("seed", 42),
+        verbose: true,
+    };
+    let res = train(&engine, &ds, &cfg)?;
+    println!(
+        "final: test acc {:.4} | mean delta_z sparsity {:.4} | worst-case bits {}",
+        res.test_acc,
+        res.history.mean_sparsity(),
+        res.history.max_bits()
+    );
+    if let Some(path) = args.get("csv") {
+        res.history.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_distributed(args: &Args) -> Result<()> {
+    let artifacts = artifacts_dir(args);
+    let engine = Engine::load(&artifacts)?;
+    let model = args.str_or("model", "mlp500");
+    let entry = engine.manifest.model(&model)?.clone();
+    drop(engine);
+    let scale = Scale::from_args(args);
+    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, 7);
+    let nodes = args.usize_or("nodes", 4);
+    let cfg = DistConfig {
+        artifacts_dir: artifacts,
+        model,
+        method: args.str_or("method", "dithered"),
+        s: args.f32_or("s", experiments::fig56::s_for_nodes(nodes)),
+        nodes,
+        rounds: args.usize_or("rounds", scale.rounds),
+        opt: SgdConfig {
+            lr: ditherprop::optim::LrSchedule::constant(args.f32_or("lr", 0.02)),
+            momentum: 0.9,
+            weight_decay: 5e-4,
+        },
+        seed: args.u64_or("seed", 42),
+        verbose: true,
+    };
+    let res = run_distributed(&ds, &cfg)?;
+    println!(
+        "final: acc {:.4} | per-node sparsity {:.4} | bits {} | upstream comm x{:.1} \
+         ({} rounds, {} up-bytes vs {} dense)",
+        res.test_acc,
+        res.mean_sparsity,
+        res.max_bits,
+        res.comm.up_savings(),
+        res.comm.rounds,
+        res.comm.up_bytes,
+        res.comm.up_bytes_dense
+    );
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    let models = args.list_or("models", &["lenet300100", "lenet5", "mlp500", "minivgg"]);
+    let cells = experiments::table1::run(&artifacts_dir(args), &models, scale, true)?;
+    println!("\n=== Table 1 (reproduction) ===");
+    print!("{}", experiments::table1::render(&cells));
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let data = experiments::fig1::collect(
+        &artifacts_dir(args),
+        &args.str_or("model", "mlp500"),
+        args.f32_or("s", 2.0),
+        args.usize_or("examples", 64),
+    )?;
+    println!("=== Fig 1 (reproduction) ===");
+    print!("{}", experiments::fig1::render(&data, args.usize_or("bins", 41)));
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    let rows = experiments::fig2::run(
+        &[0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0],
+        args.usize_or("samples", 200_000),
+    );
+    println!("=== Fig 2 (reproduction) ===");
+    print!("{}", experiments::fig2::render(&rows));
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    let methods = args.list_or("methods", &["baseline", "dithered", "int8", "int8_dithered"]);
+    let curves = experiments::fig3::run(
+        &artifacts_dir(args),
+        &args.str_or("model", "minivgg"),
+        &methods,
+        args.f32_or("s", 2.0),
+        scale,
+        false,
+    )?;
+    println!("=== Fig 3 / .7 / .8 (reproduction) ===");
+    print!("{}", experiments::fig3::render(&curves));
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    let points = experiments::fig4::run(&artifacts_dir(args), scale, true)?;
+    println!("=== Fig 4 / .9 (reproduction) ===");
+    print!("{}", experiments::fig4::render(&points));
+    Ok(())
+}
+
+fn cmd_fig56(args: &Args) -> Result<()> {
+    let scale = Scale::from_args(args);
+    let nodes: Vec<usize> = args
+        .list_or("nodes", &["1", "2", "4", "8"])
+        .iter()
+        .map(|s| s.parse().expect("--nodes expects integers"))
+        .collect();
+    let points = experiments::fig56::run(
+        &artifacts_dir(args),
+        &args.str_or("model", "mlp500"),
+        &nodes,
+        scale,
+        true,
+    )?;
+    println!("=== Figs 5 / 6a / 6b (reproduction) ===");
+    print!("{}", experiments::fig56::render(&points));
+    Ok(())
+}
+
+fn cmd_eq12(args: &Args) -> Result<()> {
+    let rows = experiments::eq12::run(
+        &[1, 16, 128, 1024],
+        &[0.5, 0.25, 0.1, 0.05, 0.01],
+        args.u64_or("seed", 12),
+    );
+    println!("=== Eq. 12 (reproduction) ===");
+    print!("{}", experiments::eq12::render(&rows));
+    Ok(())
+}

@@ -1,0 +1,194 @@
+//! Training telemetry: per-step records, run summaries, CSV export.
+//!
+//! Every experiment harness logs through this module so Table 1 /
+//! Fig. 3 / Fig. 5-6 all consume the same record stream.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// One training-step record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// Batch top-1 accuracy.
+    pub acc: f32,
+    /// Mean delta_z-tilde sparsity over layers.
+    pub sparsity: f32,
+    /// Worst-case bitwidth over layers.
+    pub bits: u32,
+    /// Per-layer sparsities.
+    pub layer_sparsity: Vec<f32>,
+}
+
+/// Accumulating run history.
+#[derive(Debug, Default, Clone)]
+pub struct History {
+    pub steps: Vec<StepRecord>,
+    /// (step, test accuracy) from periodic evaluations.
+    pub evals: Vec<(usize, f32)>,
+}
+
+impl History {
+    pub fn push(&mut self, rec: StepRecord) {
+        self.steps.push(rec);
+    }
+
+    pub fn push_eval(&mut self, step: usize, acc: f32) {
+        self.evals.push((step, acc));
+    }
+
+    /// Average sparsity over all steps and layers — the paper's
+    /// "sparsity%" (Table 1: mean over all layers and iterations).
+    pub fn mean_sparsity(&self) -> f32 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|r| r.sparsity).sum::<f32>() / self.steps.len() as f32
+    }
+
+    /// Worst-case bitwidth over the run (Fig. 6b).
+    pub fn max_bits(&self) -> u32 {
+        self.steps.iter().map(|r| r.bits).max().unwrap_or(0)
+    }
+
+    /// Final test accuracy (last eval), if any.
+    pub fn final_acc(&self) -> Option<f32> {
+        self.evals.last().map(|&(_, a)| a)
+    }
+
+    /// Best test accuracy over the run.
+    pub fn best_acc(&self) -> Option<f32> {
+        self.evals
+            .iter()
+            .map(|&(_, a)| a)
+            .max_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean density (1 - sparsity) per bucket of `every` steps (Fig. 3b
+    /// series).
+    pub fn density_series(&self, every: usize) -> Vec<(usize, f32)> {
+        let every = every.max(1);
+        let mut out = Vec::new();
+        for chunk in self.steps.chunks(every) {
+            let d = 1.0 - chunk.iter().map(|r| r.sparsity).sum::<f32>() / chunk.len() as f32;
+            out.push((chunk[0].step, d));
+        }
+        out
+    }
+
+    /// Dump step records as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,acc,sparsity,bits\n");
+        for r in &self.steps {
+            let _ = writeln!(s, "{},{},{},{},{}", r.step, r.loss, r.acc, r.sparsity, r.bits);
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Fixed-width ASCII table writer for bench/experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String], widths: &[usize]| {
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(out, "| {c:w$} ", w = w);
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers, &widths);
+        for w in &widths {
+            let _ = write!(out, "|{}", "-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            line(&mut out, row, &widths);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, sparsity: f32, bits: u32) -> StepRecord {
+        StepRecord { step, loss: 1.0, acc: 0.5, sparsity, bits, layer_sparsity: vec![] }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut h = History::default();
+        h.push(rec(0, 0.8, 3));
+        h.push(rec(1, 0.9, 5));
+        h.push_eval(1, 0.91);
+        h.push_eval(2, 0.93);
+        assert!((h.mean_sparsity() - 0.85).abs() < 1e-6);
+        assert_eq!(h.max_bits(), 5);
+        assert_eq!(h.final_acc(), Some(0.93));
+        assert_eq!(h.best_acc(), Some(0.93));
+    }
+
+    #[test]
+    fn density_series_buckets() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.push(rec(i, if i < 5 { 0.8 } else { 0.9 }, 2));
+        }
+        let s = h.density_series(5);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 0.2).abs() < 1e-6);
+        assert!((s[1].1 - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut h = History::default();
+        h.push(rec(3, 0.75, 4));
+        let csv = h.to_csv();
+        assert!(csv.starts_with("step,loss,acc,sparsity,bits\n"));
+        assert!(csv.contains("3,1,0.5,0.75,4"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "acc%"]);
+        t.row(&["lenet5".into(), "99.31".into()]);
+        let s = t.render();
+        assert!(s.contains("| model  | acc%  |"));
+        assert!(s.contains("| lenet5 | 99.31 |"));
+    }
+
+    #[test]
+    fn empty_history_defaults() {
+        let h = History::default();
+        assert_eq!(h.mean_sparsity(), 0.0);
+        assert_eq!(h.max_bits(), 0);
+        assert_eq!(h.final_acc(), None);
+    }
+}

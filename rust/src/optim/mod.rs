@@ -1,0 +1,11 @@
+//! Optimizer: SGD + momentum + weight decay + step-decay LR schedule.
+//!
+//! Matches the paper's §4 training setting (momentum 0.9, weight decay
+//! 5e-4, step LR decay).  The weight update is the one computation the
+//! paper keeps in full precision on the host side; here it runs in rust
+//! on the coordinator — the same place the parameter server applies
+//! averaged gradients in the distributed setting.
+
+pub mod sgd;
+
+pub use sgd::{LrSchedule, Sgd, SgdConfig};

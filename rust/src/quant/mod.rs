@@ -1,0 +1,148 @@
+//! Host-side quantization-grid analysis.
+//!
+//! The L1 kernel does the actual NSD quantization; this module analyses
+//! its *outputs* on the coordinator: recovering the Delta grid from a
+//! tensor, worst-case bitwidth (Fig. 6b), and a host reference NSD used
+//! by property tests and the Fig. 1 histogram bench.
+
+use crate::util::math::bitwidth_for_level;
+use crate::util::rng::Rng;
+
+/// Summary of a quantized tensor's grid occupancy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GridStats {
+    pub sparsity: f32,
+    pub max_abs_level: f32,
+    pub bits: u32,
+}
+
+/// Analyse a tensor known to lie on the `delta` grid.
+pub fn grid_stats(values: &[f32], delta: f32) -> GridStats {
+    if values.is_empty() || delta <= 0.0 {
+        return GridStats { sparsity: 0.0, max_abs_level: 0.0, bits: 0 };
+    }
+    let mut zeros = 0usize;
+    let mut max_level = 0.0f32;
+    for &v in values {
+        if v == 0.0 {
+            zeros += 1;
+        } else {
+            max_level = max_level.max((v / delta).abs().round());
+        }
+    }
+    GridStats {
+        sparsity: zeros as f32 / values.len() as f32,
+        max_abs_level: max_level,
+        bits: bitwidth_for_level(max_level),
+    }
+}
+
+/// Host reference NSD (paper Eq. 4) with an explicit RNG — used by rust
+/// property tests and the Fig. 1/Fig. 2 benches, mirroring
+/// `python/compile/kernels/ref.py::nsd_apply_ref`.
+pub fn nsd_host(values: &[f32], delta: f32, rng: &mut Rng) -> Vec<f32> {
+    if delta <= 0.0 {
+        return values.to_vec();
+    }
+    values
+        .iter()
+        .map(|&x| {
+            let nu = rng.range(-0.5, 0.5) * delta;
+            delta * ((x + nu) / delta + 0.5).floor()
+        })
+        .collect()
+}
+
+/// Standard deviation of a slice (Alg. 1 line 2).
+pub fn std_of(values: &[f32]) -> f32 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let mean = values.iter().sum::<f32>() / values.len() as f32;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / values.len() as f32;
+    var.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn grid_stats_basic() {
+        let s = grid_stats(&[0.0, 0.5, -1.0, 0.0], 0.5);
+        assert_eq!(s.sparsity, 0.5);
+        assert_eq!(s.max_abs_level, 2.0);
+        assert_eq!(s.bits, 3);
+    }
+
+    #[test]
+    fn nsd_host_on_grid_and_unbiased() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f32> = (0..2000).map(|_| rng.normal() * 0.02).collect();
+        let delta = 2.0 * std_of(&xs);
+        // on-grid property
+        let q = nsd_host(&xs, delta, &mut rng);
+        for &v in &q {
+            let l = v / delta;
+            assert!((l - l.round()).abs() < 1e-4);
+        }
+        // unbiasedness over repeated draws (Eq. 5)
+        let mut acc = vec![0.0f64; xs.len()];
+        let n = 200;
+        for seed in 0..n {
+            let mut r = Rng::new(seed);
+            for (a, v) in acc.iter_mut().zip(nsd_host(&xs, delta, &mut r)) {
+                *a += v as f64;
+            }
+        }
+        let bias: f64 = acc
+            .iter()
+            .zip(xs.iter())
+            .map(|(a, &x)| (a / n as f64 - x as f64).abs())
+            .sum::<f64>()
+            / xs.len() as f64;
+        assert!(bias < delta as f64 * 0.05, "bias {bias} vs delta {delta}");
+    }
+
+    #[test]
+    fn nsd_variance_bounded_eq6() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..5000).map(|_| rng.normal() * 0.05).collect();
+        let delta = 1.5 * std_of(&xs);
+        let q = nsd_host(&xs, delta, &mut rng);
+        let msq: f64 = q
+            .iter()
+            .zip(xs.iter())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64;
+        // total NSD error second moment <= Delta^2/3 (uniform + rounding)
+        assert!(msq <= (delta as f64).powi(2) / 3.0 * 1.05, "{msq}");
+    }
+
+    #[test]
+    fn sparsity_grows_with_delta_property() {
+        check("sparsity monotone in delta", 50, |g: &mut Gen| {
+            let mut rng = Rng::new(g.u32() as u64);
+            let xs: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+            let q1 = nsd_host(&xs, 1.0, &mut Rng::new(1));
+            let q4 = nsd_host(&xs, 4.0, &mut Rng::new(1));
+            grid_stats(&q4, 4.0).sparsity >= grid_stats(&q1, 1.0).sparsity - 0.05
+        });
+    }
+
+    #[test]
+    fn delta_zero_identity() {
+        let xs = [0.1, -0.2];
+        let mut rng = Rng::new(1);
+        assert_eq!(nsd_host(&xs, 0.0, &mut rng), xs.to_vec());
+    }
+
+    #[test]
+    fn std_matches_definition() {
+        assert!((std_of(&[1.0, 1.0, 1.0]) - 0.0).abs() < 1e-7);
+        assert!((std_of(&[0.0, 2.0]) - 1.0).abs() < 1e-6);
+        assert_eq!(std_of(&[5.0]), 0.0);
+    }
+}

@@ -1,0 +1,287 @@
+//! manifest.json schema + parsing (model registry of the AOT artifacts).
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor: name + shape, positional order matters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One grad-step artifact: method ("baseline", "dithered",
+/// "meprop_k25", ...) at a fixed batch size.
+#[derive(Debug, Clone)]
+pub struct GradArtifact {
+    pub method: String,
+    pub batch: usize,
+    pub path: String,
+}
+
+/// Per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub n_qlayers: usize,
+    pub params: Vec<ParamInfo>,
+    pub init_path: String,
+    pub eval_path: String,
+    pub eval_batch: usize,
+    pub grads: Vec<GradArtifact>,
+}
+
+impl ModelEntry {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Find the grad artifact for (method, batch).
+    pub fn grad(&self, method: &str, batch: usize) -> Result<&GradArtifact> {
+        self.grads
+            .iter()
+            .find(|g| g.method == method && g.batch == batch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model '{}' has no grad artifact for method='{method}' batch={batch} \
+                     (available: {:?})",
+                    self.name,
+                    self.grads
+                        .iter()
+                        .map(|g| format!("{}@{}", g.method, g.batch))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// All methods available for this model.
+    pub fn methods(&self) -> Vec<String> {
+        let mut m: Vec<String> = self.grads.iter().map(|g| g.method.clone()).collect();
+        m.sort();
+        m.dedup();
+        m
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub worker_batch: usize,
+    pub eval_batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        Self::from_value(dir, &root)
+    }
+
+    fn from_value(dir: PathBuf, root: &Value) -> Result<Self> {
+        let version = root.get("version").and_then(Value::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let num = |k: &str| -> Result<usize> {
+            root.get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing numeric '{k}'"))
+        };
+        let mut models = BTreeMap::new();
+        let mobj = root
+            .get("models")
+            .and_then(Value::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        for (name, entry) in mobj {
+            models.insert(name.clone(), parse_model(name, entry)?);
+        }
+        Ok(Manifest {
+            dir,
+            train_batch: num("train_batch")?,
+            worker_batch: num("worker_batch")?,
+            eval_batch: num("eval_batch")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown model '{name}' (available: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+fn parse_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape is not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+        .collect()
+}
+
+fn parse_model(name: &str, v: &Value) -> Result<ModelEntry> {
+    let ctx = |k: &str| format!("model '{name}' missing '{k}'");
+    let params = v
+        .get("params")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!(ctx("params")))?
+        .iter()
+        .map(|p| {
+            Ok(ParamInfo {
+                name: p
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string(),
+                shape: parse_shape(p.req("shape").map_err(|e| anyhow!(e))?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let arts = v.get("artifacts").ok_or_else(|| anyhow!(ctx("artifacts")))?;
+    let grads = arts
+        .get("grad")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!(ctx("artifacts.grad")))?
+        .iter()
+        .map(|g| {
+            Ok(GradArtifact {
+                method: g
+                    .get("method")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("grad missing method"))?
+                    .to_string(),
+                batch: g
+                    .get("batch")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("grad missing batch"))?,
+                path: g
+                    .get("path")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("grad missing path"))?
+                    .to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    Ok(ModelEntry {
+        name: name.to_string(),
+        dataset: v
+            .get("dataset")
+            .and_then(Value::as_str)
+            .unwrap_or("digits")
+            .to_string(),
+        input_shape: parse_shape(v.get("input_shape").ok_or_else(|| anyhow!(ctx("input_shape")))?)?,
+        num_classes: v
+            .get("num_classes")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!(ctx("num_classes")))?,
+        n_qlayers: v
+            .get("n_qlayers")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!(ctx("n_qlayers")))?,
+        params,
+        init_path: arts
+            .get("init")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!(ctx("artifacts.init")))?
+            .to_string(),
+        eval_path: arts
+            .get("eval")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!(ctx("artifacts.eval")))?
+            .to_string(),
+        eval_batch: v
+            .get("eval_batch")
+            .and_then(Value::as_usize)
+            .unwrap_or(256),
+        grads,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "train_batch": 64, "worker_batch": 1, "eval_batch": 256,
+      "models": {
+        "mlp500": {
+          "dataset": "digits", "input_shape": [784], "num_classes": 10,
+          "n_qlayers": 3, "eval_batch": 256,
+          "params": [
+            {"name": "fc1_w", "shape": [784, 500]},
+            {"name": "fc1_b", "shape": [500]}
+          ],
+          "artifacts": {
+            "init": "init_mlp500.hlo.txt",
+            "eval": "eval_mlp500_b256.hlo.txt",
+            "grad": [
+              {"method": "baseline", "batch": 64, "path": "g1.hlo.txt"},
+              {"method": "dithered", "batch": 1, "path": "g2.hlo.txt"}
+            ]
+          }
+        }
+      }
+    }"#;
+
+    fn sample() -> Manifest {
+        let v = json::parse(SAMPLE).unwrap();
+        Manifest::from_value(PathBuf::from("/tmp"), &v).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = sample();
+        assert_eq!(m.train_batch, 64);
+        let e = m.model("mlp500").unwrap();
+        assert_eq!(e.params.len(), 2);
+        assert_eq!(e.params[0].shape, vec![784, 500]);
+        assert_eq!(e.params[0].numel(), 392_000);
+        assert_eq!(e.total_weights(), 392_500);
+        assert_eq!(e.grad("dithered", 1).unwrap().path, "g2.hlo.txt");
+        assert_eq!(e.methods(), vec!["baseline", "dithered"]);
+    }
+
+    #[test]
+    fn unknown_model_and_grad_error() {
+        let m = sample();
+        assert!(m.model("nope").is_err());
+        let e = m.model("mlp500").unwrap();
+        assert!(e.grad("dithered", 64).is_err());
+    }
+
+    #[test]
+    fn version_check() {
+        let v = json::parse(r#"{"version": 2, "models": {}}"#).unwrap();
+        assert!(Manifest::from_value(PathBuf::from("."), &v).is_err());
+    }
+}

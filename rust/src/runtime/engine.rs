@@ -1,0 +1,119 @@
+//! PJRT engine: one CPU client + a cache of compiled executables.
+//!
+//! Compilation (HLO text -> parse -> XLA compile) costs tens to hundreds
+//! of milliseconds per artifact; the cache makes every artifact a
+//! compile-once, execute-many object, which is the whole point of the
+//! AOT design — the rust hot loop only ever calls `execute`.
+
+use super::artifact::Manifest;
+use super::step::TrainingSession;
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Loaded runtime: manifest + PJRT client + executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest-relative path.
+    pub fn executable(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(rel_path) {
+            return Ok(exe.clone());
+        }
+        let full = self.manifest.artifact_path(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(&full)
+            .with_context(|| format!("parsing HLO text {}", full.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {rel_path}"))?,
+        );
+        self.cache.borrow_mut().insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact on literal inputs; outputs are the flattened
+    /// tuple elements (aot.py lowers with return_tuple=True).
+    pub fn run(&self, rel_path: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(rel_path)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {rel_path}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Initialize a model's parameters via its init artifact.
+    pub fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.model(model)?;
+        let outs = self.run(&entry.init_path.clone(), &[xla::Literal::scalar(seed)])?;
+        anyhow::ensure!(
+            outs.len() == entry.n_params(),
+            "init artifact returned {} tensors, manifest lists {}",
+            outs.len(),
+            entry.n_params()
+        );
+        outs.iter()
+            .zip(entry.params.iter())
+            .map(|(lit, info)| literal_to_tensor(lit, &info.shape))
+            .collect()
+    }
+
+    /// Open a typed training session (grad + eval execution) for one
+    /// model/method/batch combination.
+    pub fn training_session(
+        &self,
+        model: &str,
+        method: &str,
+        batch: usize,
+    ) -> Result<TrainingSession<'_>> {
+        TrainingSession::new(self, model, method, batch)
+    }
+}
+
+/// Convert an XLA literal to a host tensor, validating the shape.
+pub fn literal_to_tensor(lit: &xla::Literal, expect_shape: &[usize]) -> Result<Tensor> {
+    let data: Vec<f32> = lit.to_vec()?;
+    anyhow::ensure!(
+        data.len() == expect_shape.iter().product::<usize>(),
+        "literal has {} elements, expected shape {:?}",
+        data.len(),
+        expect_shape
+    );
+    Ok(Tensor::from_vec(expect_shape, data))
+}
+
+/// Convert a host tensor to an XLA literal with its shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: vec1 gives rank-1 of size 1; reshape to scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&t.dims_i64())?)
+    }
+}

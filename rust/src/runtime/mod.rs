@@ -1,0 +1,17 @@
+//! Runtime: load + execute the AOT artifacts through PJRT.
+//!
+//! `python/compile/aot.py` lowers every step function to HLO **text**
+//! (jax >= 0.5 protos are rejected by the pinned xla_extension 0.5.1 —
+//! DESIGN.md §2) and writes `manifest.json`.  This module parses the
+//! manifest ([`artifact`]), compiles artifacts on the PJRT CPU client
+//! with caching ([`engine`]), and exposes typed step invocations
+//! ([`step`]) so the rest of the coordinator never touches `xla::*`
+//! directly.
+
+pub mod artifact;
+pub mod engine;
+pub mod step;
+
+pub use artifact::{GradArtifact, Manifest, ModelEntry, ParamInfo};
+pub use engine::Engine;
+pub use step::{EvalOut, GradOut, TrainingSession};

@@ -1,0 +1,225 @@
+//! Typed step invocation: the coordinator-facing API over raw artifacts.
+//!
+//! A [`TrainingSession`] pins (model, method, batch) to concrete grad +
+//! eval executables and marshals `Tensor`s / labels to XLA literals and
+//! back, splitting the grad artifact's output tuple into real gradients
+//! and the per-layer statistics the paper reports (sparsity of the
+//! quantized pre-activation gradients, worst-case |level|).
+
+use super::artifact::ModelEntry;
+use super::engine::{literal_to_tensor, tensor_to_literal, Engine};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::rc::Rc;
+
+/// Output of one gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    /// Parameter gradients, positionally matching `ModelEntry::params`.
+    pub grads: Vec<Tensor>,
+    /// Mean cross-entropy over the batch.
+    pub loss: f32,
+    /// Number of correct top-1 predictions in the batch.
+    pub correct: f32,
+    /// Per-quantized-layer sparsity of delta_z-tilde (Table 1 metric).
+    pub sparsity: Vec<f32>,
+    /// Per-quantized-layer max |quantization level| (Fig. 6b metric).
+    pub max_level: Vec<f32>,
+}
+
+impl GradOut {
+    /// Mean sparsity over layers (the paper's "sparsity%" column).
+    pub fn mean_sparsity(&self) -> f32 {
+        if self.sparsity.is_empty() {
+            return 0.0;
+        }
+        self.sparsity.iter().sum::<f32>() / self.sparsity.len() as f32
+    }
+
+    /// Worst-case bitwidth across layers (Fig. 6b).
+    pub fn max_bitwidth(&self) -> u32 {
+        self.max_level
+            .iter()
+            .map(|&l| crate::util::math::bitwidth_for_level(l))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Output of one eval step.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+/// A compiled (model, method, batch) execution context.
+pub struct TrainingSession<'e> {
+    engine: &'e Engine,
+    pub entry: ModelEntry,
+    pub method: String,
+    pub batch: usize,
+    grad_exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl<'e> TrainingSession<'e> {
+    pub fn new(engine: &'e Engine, model: &str, method: &str, batch: usize) -> Result<Self> {
+        let entry = engine.manifest.model(model)?.clone();
+        let grad_rel = entry.grad(method, batch)?.path.clone();
+        let grad_exe = engine.executable(&grad_rel)?;
+        let eval_exe = engine.executable(&entry.eval_path.clone())?;
+        Ok(TrainingSession {
+            engine,
+            entry,
+            method: method.to_string(),
+            batch,
+            grad_exe,
+            eval_exe,
+        })
+    }
+
+    pub fn input_numel(&self) -> usize {
+        self.entry.input_shape.iter().product()
+    }
+
+    /// Marshal a batch into (x, y) literals.  `x` must hold
+    /// `batch * input_numel` f32s; `y` `batch` labels.
+    fn batch_literals(&self, x: &[f32], y: &[i32], batch: usize) -> Result<(xla::Literal, xla::Literal)> {
+        ensure!(
+            x.len() == batch * self.input_numel(),
+            "x has {} values, expected {} (batch {} x input {})",
+            x.len(),
+            batch * self.input_numel(),
+            batch,
+            self.input_numel()
+        );
+        ensure!(y.len() == batch, "y has {} labels, expected {batch}", y.len());
+        let mut xdims = vec![batch as i64];
+        xdims.extend(self.entry.input_shape.iter().map(|&d| d as i64));
+        let xl = xla::Literal::vec1(x).reshape(&xdims)?;
+        let yl = xla::Literal::vec1(y);
+        Ok((xl, yl))
+    }
+
+    /// One gradient step: `(params, x, y, seed, s) -> GradOut`.
+    pub fn grad(
+        &self,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        seed: u32,
+        s: f32,
+    ) -> Result<GradOut> {
+        let n_p = self.entry.n_params();
+        ensure!(params.len() == n_p, "expected {n_p} params, got {}", params.len());
+        let mut inputs = Vec::with_capacity(n_p + 4);
+        for p in params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let (xl, yl) = self.batch_literals(x, y, self.batch)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        inputs.push(xla::Literal::scalar(seed));
+        inputs.push(xla::Literal::scalar(s));
+
+        let result = self.grad_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(
+            outs.len() == n_p + 4,
+            "grad artifact returned {} outputs, expected {}",
+            outs.len(),
+            n_p + 4
+        );
+
+        let mut grads = Vec::with_capacity(n_p);
+        for (lit, info) in outs[..n_p].iter().zip(self.entry.params.iter()) {
+            grads.push(literal_to_tensor(lit, &info.shape)?);
+        }
+        let loss = outs[n_p].to_vec::<f32>()?[0];
+        let correct = outs[n_p + 1].to_vec::<f32>()?[0];
+        let sparsity = outs[n_p + 2].to_vec::<f32>()?;
+        let max_level = outs[n_p + 3].to_vec::<f32>()?;
+        ensure!(sparsity.len() == self.entry.n_qlayers, "bad sparsity vector length");
+        Ok(GradOut { grads, loss, correct, sparsity, max_level })
+    }
+
+    /// One eval step at the manifest's eval batch size.
+    pub fn eval(&self, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+        let n_p = self.entry.n_params();
+        ensure!(params.len() == n_p);
+        let mut inputs = Vec::with_capacity(n_p + 2);
+        for p in params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let (xl, yl) = self.batch_literals(x, y, self.entry.eval_batch)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        let result = self.eval_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
+        Ok(EvalOut {
+            loss: outs[0].to_vec::<f32>()?[0],
+            correct: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Evaluate accuracy over a full dataset split, chunking into eval
+    /// batches (remainder examples are dropped, mirroring the paper's
+    /// fixed-batch evaluation).
+    pub fn eval_dataset(&self, params: &[Tensor], xs: &[f32], ys: &[i32]) -> Result<EvalOut> {
+        let eb = self.entry.eval_batch;
+        let per = self.input_numel();
+        let n_batches = ys.len() / eb;
+        ensure!(n_batches > 0, "dataset smaller than eval batch {eb}");
+        let (mut loss, mut correct) = (0.0f64, 0.0f64);
+        for b in 0..n_batches {
+            let out = self.eval(
+                params,
+                &xs[b * eb * per..(b + 1) * eb * per],
+                &ys[b * eb..(b + 1) * eb],
+            )?;
+            loss += out.loss as f64;
+            correct += out.correct as f64;
+        }
+        Ok(EvalOut {
+            loss: (loss / n_batches as f64) as f32,
+            correct: correct as f32,
+        })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_out_aggregates() {
+        let g = GradOut {
+            grads: vec![],
+            loss: 1.0,
+            correct: 5.0,
+            sparsity: vec![0.9, 0.8],
+            max_level: vec![3.0, 7.0],
+        };
+        assert!((g.mean_sparsity() - 0.85).abs() < 1e-6);
+        assert_eq!(g.max_bitwidth(), 4); // level 7 -> sign + 3 bits
+    }
+
+    #[test]
+    fn empty_stats() {
+        let g = GradOut {
+            grads: vec![],
+            loss: 0.0,
+            correct: 0.0,
+            sparsity: vec![],
+            max_level: vec![],
+        };
+        assert_eq!(g.mean_sparsity(), 0.0);
+        assert_eq!(g.max_bitwidth(), 0);
+    }
+}

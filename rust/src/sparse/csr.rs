@@ -1,0 +1,118 @@
+//! CSR-style sparse vector: (u32 index, f32 value) pairs + length.
+//!
+//! The flat-vector analogue of CSR (gradients are encoded per-tensor,
+//! flattened); decode is exact — the codec must round-trip bit-perfectly
+//! because the server averages decoded gradients.
+
+/// Sparse vector encoding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrVec {
+    pub len: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrVec {
+    /// Encode a dense slice (exact zeros are dropped).
+    pub fn encode(dense: &[f32]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        CsrVec { len: dense.len(), indices, values }
+    }
+
+    /// Decode into a fresh dense vector.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Decode into an existing buffer (zeroed first).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        out.fill(0.0);
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            out[i as usize] = v;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Wire size in bytes: 4 (len) + 4/idx + 4/value.
+    pub fn encoded_bytes(&self) -> usize {
+        encoded_bytes(self.len, self.nnz())
+    }
+
+    /// Accumulate `alpha * self` into a dense buffer without
+    /// materialising the decoded vector (server-side hot path: cost is
+    /// O(nnz), which is where Eq. 12's savings show up in aggregation).
+    pub fn axpy_into(&self, alpha: f32, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            out[i as usize] += alpha * v;
+        }
+    }
+}
+
+/// Wire size for (n, nnz) without building the encoding.
+pub fn encoded_bytes(_n: usize, nnz: usize) -> usize {
+    4 + 8 * nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn roundtrip_simple() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let enc = CsrVec::encode(&dense);
+        assert_eq!(enc.nnz(), 2);
+        assert_eq!(enc.decode(), dense);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("csr roundtrip == identity", 300, |g: &mut Gen| {
+            let density = g.f32_in(0.0, 1.0);
+            let dense = g.sparse_f32(0..=512, density);
+            CsrVec::encode(&dense).decode() == dense
+        });
+    }
+
+    #[test]
+    fn axpy_matches_decode_then_axpy() {
+        check("csr axpy == decode+axpy", 200, |g: &mut Gen| {
+            let dense = g.sparse_f32(1..=256, 0.3);
+            let enc = CsrVec::encode(&dense);
+            let mut a = vec![0.0f32; dense.len()];
+            enc.axpy_into(0.5, &mut a);
+            let b: Vec<f32> = dense.iter().map(|v| 0.5 * v).collect();
+            a.iter().zip(b.iter()).all(|(x, y)| (x - y).abs() < 1e-6)
+        });
+    }
+
+    #[test]
+    fn empty_and_all_zero() {
+        assert_eq!(CsrVec::encode(&[]).decode(), Vec::<f32>::new());
+        let z = CsrVec::encode(&[0.0; 8]);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.decode(), vec![0.0; 8]);
+        assert_eq!(z.encoded_bytes(), 4);
+    }
+
+    #[test]
+    fn bytes_formula() {
+        let dense = vec![1.0; 10];
+        assert_eq!(CsrVec::encode(&dense).encoded_bytes(), 4 + 80);
+    }
+}

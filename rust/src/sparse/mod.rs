@@ -1,0 +1,58 @@
+//! Sparse + quantized gradient codecs.
+//!
+//! In the paper's distributed setting (§4.3, batch 1 per node) the
+//! NSD-sparsified pre-activation gradients make the *weight gradients*
+//! sparse too, so workers can ship compressed gradients to the parameter
+//! server.  These codecs implement that wire format and provide the
+//! byte accounting the communication-savings analysis uses:
+//!
+//! * [`csr`]    — index+value encoding (good below ~30% density)
+//! * [`bitmap`] — 1 bit/position presence mask + values (good above)
+//! * [`packed`] — integer-level packing of Delta-grid tensors at the
+//!   worst-case bitwidth (Fig. 6b: levels fit in <= 8 bits)
+
+pub mod bitmap;
+pub mod csr;
+pub mod packed;
+
+pub use bitmap::BitmapVec;
+pub use csr::CsrVec;
+pub use packed::PackedGrid;
+
+/// Encoded sizes in bytes for a dense f32 tensor of `n` elements.
+pub fn dense_bytes(n: usize) -> usize {
+    4 * n
+}
+
+/// Pick the cheaper of CSR / bitmap for the given density; returns
+/// (encoding name, bytes).  The crossover is the codec-selection policy
+/// the coordinator's comm channel uses.
+pub fn best_encoding_bytes(n: usize, nnz: usize) -> (&'static str, usize) {
+    let csr = csr::encoded_bytes(n, nnz);
+    let bmp = bitmap::encoded_bytes(n, nnz);
+    let dense = dense_bytes(n);
+    let mut best = ("dense", dense);
+    if csr < best.1 {
+        best = ("csr", csr);
+    }
+    if bmp < best.1 {
+        best = ("bitmap", bmp);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossovers() {
+        // fully dense: dense wins
+        assert_eq!(best_encoding_bytes(1000, 1000).0, "dense");
+        // very sparse: csr wins
+        assert_eq!(best_encoding_bytes(1000, 10).0, "csr");
+        // mid density: bitmap beats csr (indices cost 4B each)
+        let (name, _) = best_encoding_bytes(1000, 500);
+        assert_eq!(name, "bitmap");
+    }
+}

@@ -1,0 +1,186 @@
+//! Minimal dense f32 tensor used on the coordinator side.
+//!
+//! The heavy math lives in the AOT-compiled XLA artifacts; the
+//! coordinator only needs a host-side container for parameters,
+//! gradients and batches, plus the handful of elementwise ops the
+//! optimizer and the parameter server perform (axpy-style updates,
+//! averaging).  Row-major, contiguous, f32 only — deliberately not a
+//! general ndarray.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from raw data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Shape as i64 for the XLA literal API.
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+
+    /// First element (useful for scalar outputs).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    /// In-place `self += alpha * other` (the optimizer/server hot op).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Fraction of exact zeros (sparsity of the tensor itself).
+    pub fn sparsity(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|&&v| v == 0.0).count();
+        z as f32 / self.data.len() as f32
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Max |element|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+/// Elementwise average of per-node gradients into `acc` (server-side
+/// aggregation primitive; `acc` must be zeroed or hold a partial sum).
+pub fn accumulate_mean(acc: &mut [Tensor], node: &[Tensor], inv_n: f32) {
+    debug_assert_eq!(acc.len(), node.len());
+    for (a, g) in acc.iter_mut().zip(node.iter()) {
+        a.axpy(inv_n, g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.sparsity(), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 10.0, 10.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 7.0, 8.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(&[4], vec![0.0, -2.0, 0.0, 1.0]);
+        assert_eq!(t.sparsity(), 0.5);
+        assert_eq!(t.abs_max(), 2.0);
+        assert!((t.mean() - (-0.25)).abs() < 1e-6);
+        assert!((t.norm() - (5.0f32).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulate_mean_averages() {
+        let mut acc = vec![Tensor::zeros(&[2])];
+        let g1 = vec![Tensor::from_vec(&[2], vec![2.0, 4.0])];
+        let g2 = vec![Tensor::from_vec(&[2], vec![4.0, 8.0])];
+        accumulate_mean(&mut acc, &g1, 0.5);
+        accumulate_mean(&mut acc, &g2, 0.5);
+        assert_eq!(acc[0].data(), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(7.5).item(), 7.5);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, bare boolean `--flag`, and
+//! positional arguments.  Typed getters with defaults + a `usage` helper
+//! keep the binaries self-documenting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags seen without a value (`--quick`).
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.switches.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn kinds_of_flags() {
+        let a = parse("train --model mlp500 --s=2.5 --quick --steps 300 pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.get("model"), Some("mlp500"));
+        assert_eq!(a.f32_or("s", 0.0), 2.5);
+        assert_eq!(a.usize_or("steps", 0), 300);
+        assert!(a.has("quick"));
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.str_or("model", "lenet5"), "lenet5");
+        assert_eq!(a.usize_or("nodes", 4), 4);
+        assert_eq!(a.u64_or("seed", 9), 9);
+    }
+
+    #[test]
+    fn switch_before_flag() {
+        let a = parse("--quick --model mlp500");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("model"), Some("mlp500"));
+    }
+
+    #[test]
+    fn list_values() {
+        let a = parse("--methods baseline,dithered");
+        assert_eq!(a.list_or("methods", &[]), vec!["baseline", "dithered"]);
+        assert_eq!(a.list_or("models", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--lr -0.1": '-0.1' does not start with '--' so it binds as value
+        let a = parse("--lr -0.1");
+        assert_eq!(a.f32_or("lr", 0.0), -0.1);
+    }
+}

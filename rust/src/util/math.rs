@@ -1,0 +1,115 @@
+//! Numerical helpers for the analytic cost/sparsity models (Fig. 2,
+//! Eq. 12): error function, standard normal CDF, midpoint quadrature.
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|eps| <= 1.5e-7).
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF.
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Midpoint-rule integral of `f` over [a, b] with `n` panels.
+pub fn integrate<F: Fn(f64) -> f64>(f: F, a: f64, b: f64, n: usize) -> f64 {
+    let h = (b - a) / n as f64;
+    (0..n).map(|i| f(a + (i as f64 + 0.5) * h)).sum::<f64>() * h
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies + sorts).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Worst-case bitwidth to represent signed integer levels up to
+/// `max_abs_level` (Fig. 6b): sign bit + magnitude bits; 0 levels need 0
+/// bits (everything quantized away).
+pub fn bitwidth_for_level(max_abs_level: f32) -> u32 {
+    let m = max_abs_level.round() as u64;
+    if m == 0 {
+        0
+    } else {
+        1 + (64 - m.leading_zeros() as u64) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phi_symmetry() {
+        assert!((phi(0.0) - 0.5).abs() < 1e-9);
+        for x in [0.3, 1.1, 2.5] {
+            assert!((phi(x) + phi(-x) - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn integrate_parabola() {
+        let v = integrate(|x| x * x, 0.0, 1.0, 10_000);
+        assert!((v - 1.0 / 3.0).abs() < 1e-7, "{v}");
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert!((std_dev(&xs) - 1.29099).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bitwidths() {
+        assert_eq!(bitwidth_for_level(0.0), 0);
+        assert_eq!(bitwidth_for_level(1.0), 2); // sign + 1
+        assert_eq!(bitwidth_for_level(3.0), 3);
+        assert_eq!(bitwidth_for_level(127.0), 8);
+        assert_eq!(bitwidth_for_level(128.0), 9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities reimplemented in-repo because the offline build
+//! environment vendors only the `xla` crate closure (DESIGN.md §6):
+//!
+//! * [`json`] — minimal JSON parser/serializer (no `serde_json`)
+//! * [`cli`] — argument parsing (no `clap`)
+//! * [`rng`] — SplitMix64 PRNG + distributions (no `rand`)
+//! * [`prop`] — property-testing harness (no `proptest`)
+//! * [`math`] — erf / normal CDF / quadrature for the analytic models
+
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;

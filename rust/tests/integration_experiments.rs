@@ -1,0 +1,95 @@
+//! Integration: experiment harnesses at smoke scale + render contracts.
+
+use ditherprop::experiments::{eq12, fig1, fig2, fig4, table1};
+use ditherprop::util::cli::Args;
+
+fn artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+#[test]
+fn fig1_harvests_real_delta_z() {
+    let data = fig1::collect(&artifacts(), "mlp500", 2.0, 8).unwrap();
+    assert_eq!(data.before.len(), data.after.len());
+    assert!(!data.before.is_empty());
+    let hb = fig1::histogram(&data.before, 21);
+    let ha = fig1::histogram(&data.after, 21);
+    // NSD must raise the zero fraction on real delta_z
+    assert!(
+        ha.zero_fraction > hb.zero_fraction + 0.1,
+        "before {} after {}",
+        hb.zero_fraction,
+        ha.zero_fraction
+    );
+    // render smoke
+    let txt = fig1::render(&data, 21);
+    assert!(txt.contains("after NSD"));
+}
+
+#[test]
+fn fig2_rows_render_and_agree() {
+    let rows = fig2::run(&[1.0, 4.0], 50_000);
+    let txt = fig2::render(&rows);
+    assert!(txt.contains("P0 analytic"));
+    for r in rows {
+        assert!((r.analytic - r.host_nsd).abs() < 0.03);
+    }
+}
+
+#[test]
+fn eq12_render_includes_all_cells() {
+    let rows = eq12::run(&[16, 256], &[0.5, 0.05], 1);
+    assert_eq!(rows.len(), 4);
+    let txt = eq12::render(&rows);
+    assert!(txt.matches('\n').count() >= 6);
+}
+
+#[test]
+fn table1_render_averages_and_headline() {
+    let mk = |model: &str, method: &str, acc: f32, sp: f32| table1::Cell {
+        model: model.into(),
+        method: method.into(),
+        acc,
+        sparsity: sp,
+        max_bits: 6,
+    };
+    let mut cells = Vec::new();
+    for m in ["a", "b"] {
+        cells.push(mk(m, "baseline", 0.9, 0.3));
+        cells.push(mk(m, "dithered", 0.9, 0.9));
+        cells.push(mk(m, "int8", 0.9, 0.35));
+        cells.push(mk(m, "int8_dithered", 0.9, 0.92));
+    }
+    let txt = table1::render(&cells);
+    assert!(txt.contains("Average"));
+    assert!(txt.contains("sparsity boost (dithered - baseline): +60.0%"));
+    assert!(txt.contains("projected SCNN gains"));
+}
+
+#[test]
+fn fig4_render_headline_logic() {
+    let p = |label: &str, sp: f32, acc: f32| fig4::SweepPoint {
+        label: label.into(),
+        sparsity: sp,
+        acc_mean: acc,
+        acc_std: 0.01,
+    };
+    let pts = vec![
+        p("baseline", 0.3, 0.99),
+        p("dithered s=4", 0.9, 0.985),
+        p("meprop_k5", 0.95, 0.97),
+    ];
+    let txt = fig4::render(&pts);
+    assert!(txt.contains("headline: dithered 98.50% acc"));
+    assert!(txt.contains("meProp 97.00%"));
+}
+
+#[test]
+fn scale_parsing_from_cli() {
+    let args = Args::parse(
+        "x --quick --steps 42".split_whitespace().map(String::from),
+    );
+    let s = ditherprop::experiments::Scale::from_args(&args);
+    assert_eq!(s.steps, 42); // override wins over quick default
+    assert_eq!(s.reps, 1); // quick default
+}

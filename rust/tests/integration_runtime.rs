@@ -1,0 +1,165 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These require `make artifacts` to have run; they exercise the full
+//! rust-side stack against the actual compiled HLO (init / grad / eval),
+//! checking paper invariants end to end.
+
+use ditherprop::data;
+use ditherprop::runtime::Engine;
+use ditherprop::train::step_seed;
+
+fn engine() -> Engine {
+    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_lists_all_models() {
+    let e = engine();
+    for m in ["lenet300100", "lenet5", "mlp500", "minivgg"] {
+        let entry = e.manifest.model(m).unwrap();
+        assert!(entry.n_params() >= 6);
+        assert!(entry.total_weights() > 10_000);
+    }
+}
+
+#[test]
+fn init_params_match_manifest_shapes_and_are_reproducible() {
+    let e = engine();
+    let p1 = e.init_params("mlp500", 7).unwrap();
+    let p2 = e.init_params("mlp500", 7).unwrap();
+    let p3 = e.init_params("mlp500", 8).unwrap();
+    let entry = e.manifest.model("mlp500").unwrap();
+    for (t, info) in p1.iter().zip(entry.params.iter()) {
+        assert_eq!(t.shape(), &info.shape[..]);
+    }
+    for (a, b) in p1.iter().zip(p2.iter()) {
+        assert_eq!(a.data(), b.data(), "init not deterministic");
+    }
+    assert!(p1.iter().zip(p3.iter()).any(|(a, b)| a.data() != b.data()));
+    // weights nonzero, biases zero
+    assert!(p1[0].abs_max() > 0.0);
+    assert_eq!(p1[1].abs_max(), 0.0);
+}
+
+#[test]
+fn grad_step_shapes_losses_and_stats() {
+    let e = engine();
+    let sess = e.training_session("mlp500", "dithered", 64).unwrap();
+    let params = e.init_params("mlp500", 0).unwrap();
+    let ds = data::build("digits", 256, 64, 5);
+    let mut it = data::BatchIter::new(&ds.train, 64, 1);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 9, 2.0).unwrap();
+    assert_eq!(out.grads.len(), 6);
+    assert!(out.loss > 1.5 && out.loss < 4.0, "fresh-init CE loss ~ln(10), got {}", out.loss);
+    assert!(out.correct >= 0.0 && out.correct <= 64.0);
+    assert_eq!(out.sparsity.len(), 3);
+    assert!(out.mean_sparsity() > 0.5, "dithered sparsity too low: {:?}", out.sparsity);
+    assert!(out.max_bitwidth() <= 8, "bits {} > 8", out.max_bitwidth());
+}
+
+#[test]
+fn dithered_s0_matches_baseline_grads() {
+    let e = engine();
+    let db = e.training_session("mlp500", "baseline", 64).unwrap();
+    let dd = e.training_session("mlp500", "dithered", 64).unwrap();
+    let params = e.init_params("mlp500", 1).unwrap();
+    let ds = data::build("digits", 128, 64, 6);
+    let mut it = data::BatchIter::new(&ds.train, 64, 2);
+    it.next_batch(&ds.train);
+    let gb = db.grad(&params, &it.x, &it.y, 3, 0.0).unwrap();
+    let gd = dd.grad(&params, &it.x, &it.y, 3, 0.0).unwrap();
+    for (a, b) in gb.grads.iter().zip(gd.grads.iter()) {
+        let diff = a
+            .data()
+            .iter()
+            .zip(b.data().iter())
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(diff < 2e-5, "s=0 dithered != baseline (max diff {diff})");
+    }
+}
+
+#[test]
+fn dither_seed_changes_grads_baseline_ignores_it() {
+    let e = engine();
+    let sess = e.training_session("mlp500", "dithered", 64).unwrap();
+    let base = e.training_session("mlp500", "baseline", 64).unwrap();
+    let params = e.init_params("mlp500", 2).unwrap();
+    let ds = data::build("digits", 128, 64, 7);
+    let mut it = data::BatchIter::new(&ds.train, 64, 3);
+    it.next_batch(&ds.train);
+    let g1 = sess.grad(&params, &it.x, &it.y, 1, 2.0).unwrap();
+    let g2 = sess.grad(&params, &it.x, &it.y, 2, 2.0).unwrap();
+    assert!(g1.grads[0].data() != g2.grads[0].data(), "seed had no effect");
+    let b1 = base.grad(&params, &it.x, &it.y, 1, 2.0).unwrap();
+    let b2 = base.grad(&params, &it.x, &it.y, 2, 2.0).unwrap();
+    assert_eq!(b1.grads[0].data(), b2.grads[0].data(), "baseline must be seed-independent");
+}
+
+#[test]
+fn sparsity_grows_with_s_through_real_artifacts() {
+    let e = engine();
+    let sess = e.training_session("mlp500", "dithered", 64).unwrap();
+    let params = e.init_params("mlp500", 3).unwrap();
+    let ds = data::build("digits", 128, 64, 8);
+    let mut it = data::BatchIter::new(&ds.train, 64, 4);
+    it.next_batch(&ds.train);
+    let mut prev = 0.0;
+    for s in [0.5f32, 1.0, 2.0, 4.0, 8.0] {
+        let out = sess.grad(&params, &it.x, &it.y, 11, s).unwrap();
+        let sp = out.mean_sparsity();
+        assert!(sp >= prev - 0.03, "sparsity not monotone at s={s}: {sp} < {prev}");
+        prev = sp;
+    }
+    assert!(prev > 0.9, "s=8 sparsity only {prev}");
+}
+
+#[test]
+fn eval_counts_correct_predictions() {
+    let e = engine();
+    let sess = e.training_session("lenet300100", "baseline", 64).unwrap();
+    let params = e.init_params("lenet300100", 4).unwrap();
+    let ds = data::build("digits", 512, 256, 9);
+    let out = sess
+        .eval_dataset(&params, &ds.test.images, &ds.test.labels)
+        .unwrap();
+    // fresh init: accuracy near chance (10%), loss near ln(10)
+    let acc = out.correct / 256.0;
+    assert!(acc < 0.4, "untrained acc suspiciously high: {acc}");
+    assert!(out.loss > 1.5 && out.loss < 4.0);
+}
+
+#[test]
+fn executable_cache_hits() {
+    let e = engine();
+    let before = e.cached_executables();
+    let _s1 = e.training_session("mlp500", "dithered", 64).unwrap();
+    let mid = e.cached_executables();
+    let _s2 = e.training_session("mlp500", "dithered", 64).unwrap();
+    assert_eq!(e.cached_executables(), mid, "session reopen recompiled");
+    assert!(mid > before);
+}
+
+#[test]
+fn meprop_artifacts_execute_with_row_sparsity() {
+    let e = engine();
+    let sess = e.training_session("mlp500", "meprop_k25", 64).unwrap();
+    let params = e.init_params("mlp500", 5).unwrap();
+    let ds = data::build("digits", 128, 64, 10);
+    let mut it = data::BatchIter::new(&ds.train, 64, 5);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 1, 0.0).unwrap();
+    // hidden 500 keep 25 -> 95% sparsity on hidden layers
+    assert!(out.sparsity[0] > 0.9 && out.sparsity[1] > 0.9, "{:?}", out.sparsity);
+}
+
+#[test]
+fn step_seed_is_stable_contract() {
+    // rust-side seeds feed the AOT dither; pin the function so runs are
+    // reproducible across refactors
+    assert_eq!(step_seed(42, 0), step_seed(42, 0));
+    assert_ne!(step_seed(42, 0), step_seed(42, 1));
+    assert_ne!(step_seed(42, 0), step_seed(43, 0));
+}
