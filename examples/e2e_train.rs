@@ -19,11 +19,14 @@ use ditherprop::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let model = args.str_or("model", "lenet5");
     let steps = args.usize_or("steps", 300);
     let s = args.f32_or("s", 2.0);
 
     let engine = Engine::load(args.str_or("artifacts", "artifacts"))?;
+    // lenet5 needs the XLA backend; the native zoo substitutes mlp500
+    let default_model =
+        if engine.manifest.models.contains_key("lenet5") { "lenet5" } else { "mlp500" };
+    let model = args.str_or("model", default_model);
     let entry = engine.manifest.model(&model)?;
     let ds = data::build(&entry.dataset, 4096, 512, 7);
     println!(

@@ -1,8 +1,9 @@
-//! Quickstart: load the AOT artifacts, run one dithered gradient step,
+//! Quickstart: load the runtime (native backend out of the box; AOT
+//! artifacts under the `xla` feature), run one dithered gradient step,
 //! inspect the paper's headline quantities.
 //!
 //! ```bash
-//! make artifacts && cargo run --offline --release --example quickstart
+//! cargo run --offline --release --example quickstart
 //! ```
 
 use anyhow::Result;
@@ -10,8 +11,9 @@ use ditherprop::data;
 use ditherprop::runtime::Engine;
 
 fn main() -> Result<()> {
-    // 1. Load the manifest + PJRT CPU client.  Everything below runs on
-    //    AOT-compiled XLA; python is not involved.
+    // 1. Load the runtime.  Backend selection is automatic: AOT
+    //    artifacts when present (feature `xla`), else the native
+    //    pure-rust executor.  Python is never involved.
     let engine = Engine::load("artifacts")?;
     println!("platform: {}", engine.platform());
 

@@ -3,14 +3,16 @@
 //!
 //! `cargo bench --bench fig3_convergence [-- --quick --model minivgg]`
 
-use ditherprop::experiments::{artifacts_dir, fig3, Scale};
+use ditherprop::experiments::{artifacts_dir, default_model, fig3, Scale};
+use ditherprop::runtime::Engine;
 use ditherprop::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let scale = Scale::from_args(&args);
     let methods = args.list_or("methods", &["baseline", "dithered", "int8", "int8_dithered"]);
-    let model = args.str_or("model", "minivgg");
+    let preferred = default_model(&Engine::load(artifacts_dir(&args))?.manifest);
+    let model = args.str_or("model", &preferred);
     let curves = fig3::run(&artifacts_dir(&args), &model, &methods, args.f32_or("s", 2.0), scale, false)?;
     println!("=== Fig 3a/3b + .7/.8 (reproduction, model {model}) ===");
     print!("{}", fig3::render(&curves));

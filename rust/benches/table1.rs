@@ -3,13 +3,16 @@
 //! `cargo bench --bench table1 [-- --quick --models mlp500]`
 
 use ditherprop::bench_util::Stopwatch;
-use ditherprop::experiments::{artifacts_dir, table1, Scale};
+use ditherprop::experiments::{all_models, artifacts_dir, table1, Scale};
+use ditherprop::runtime::Engine;
 use ditherprop::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let scale = Scale::from_args(&args);
-    let models = args.list_or("models", &["lenet300100", "lenet5", "mlp500", "minivgg"]);
+    let available = all_models(&Engine::load(artifacts_dir(&args))?.manifest);
+    let defaults: Vec<&str> = available.iter().map(String::as_str).collect();
+    let models = args.list_or("models", &defaults);
     let sw = Stopwatch::start();
     let cells = table1::run(&artifacts_dir(&args), &models, scale, true)?;
     println!("\n=== Table 1 (reproduction, {} steps/cell, {:.1}s total) ===", scale.steps, sw.elapsed_s());

@@ -2,9 +2,9 @@
 //! server (paper §3.6 / §4.3).
 //!
 //! Topology: one server (this thread) + N worker nodes (OS threads, one
-//! per node, each owning its *own* PJRT engine + compiled batch-1 grad
-//! executable — mirroring the paper's one-runtime-per-node deployment).
-//! Each round:
+//! per node, each owning its *own* engine — backend instance + batch-1
+//! grad session — mirroring the paper's one-runtime-per-node
+//! deployment).  Each round:
 //!
 //!   1. server broadcasts the parameter vector to all nodes,
 //!   2. every node runs one forward + dithered backward pass on its own

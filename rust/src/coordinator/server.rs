@@ -4,7 +4,9 @@
 //! round it broadcasts parameters, gathers every node's sparse-encoded
 //! batch-1 gradient, averages them (where the 1/N dither-noise
 //! cancellation happens), and applies one SGD step.  The run ends with
-//! a test-split evaluation on the server's own engine.
+//! a test-split evaluation on the server's own engine.  Backend-agnostic
+//! end to end: the same orchestration runs on the native executor or on
+//! AOT artifacts, since server and workers only touch `Engine`.
 
 use super::comm::CommStats;
 use super::worker::{worker_main, FromWorker, ToWorker, WorkerCfg};

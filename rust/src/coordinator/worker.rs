@@ -1,4 +1,6 @@
-//! Worker node: one OS thread owning its own PJRT engine.
+//! Worker node: one OS thread owning its own engine (its own backend
+//! instance — a private executor cache under XLA, a private native
+//! executor otherwise).
 //!
 //! Receives parameter broadcasts, runs one batch-1 forward + dithered
 //! backward pass per round on its private data shard, sparse-encodes the
@@ -46,8 +48,8 @@ pub fn worker_main(
     rx: Receiver<ToWorker>,
     tx: Sender<FromWorker>,
 ) -> Result<()> {
-    // Each node owns its own engine — its own PJRT client + compiled
-    // executable — exactly as a real deployment would.
+    // Each node owns its own engine — its own backend instance —
+    // exactly as a real deployment would.
     let engine = Engine::load(&cfg.artifacts_dir)
         .with_context(|| format!("worker {} loading artifacts", cfg.node))?;
     let session = engine.training_session(&cfg.model, &cfg.method, 1)?;

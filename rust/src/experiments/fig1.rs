@@ -2,10 +2,10 @@
 //!
 //! At batch 1 the bias gradient of a dense layer *is* its delta_z row
 //! (db = sum over the batch of delta_z), so we harvest real delta_z
-//! vectors straight from the AOT pipeline: the baseline batch-1 grad
-//! artifact gives the "before" distribution, the dithered one the
-//! "after" — no reimplementation, the histograms come from the very
-//! tensors the backward GEMMs consume.
+//! vectors straight from whichever backend the engine runs: the
+//! baseline batch-1 grad step gives the "before" distribution, the
+//! dithered one the "after" — no reimplementation, the histograms come
+//! from the very tensors the backward GEMMs consume.
 
 use crate::data;
 use crate::runtime::Engine;

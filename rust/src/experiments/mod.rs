@@ -68,3 +68,20 @@ impl Scale {
 pub fn artifacts_dir(args: &crate::util::cli::Args) -> String {
     args.str_or("artifacts", "artifacts")
 }
+
+/// Every model the loaded registry provides — the backend-aware default
+/// row set for Table 1 (the native backend ships MLPs only; the XLA
+/// backend adds the conv models).
+pub fn all_models(manifest: &crate::runtime::Manifest) -> Vec<String> {
+    manifest.models.keys().cloned().collect()
+}
+
+/// Preferred single-model demo target: the paper's conv model when the
+/// backend can run it, else the MLP-500-500 comparator.
+pub fn default_model(manifest: &crate::runtime::Manifest) -> String {
+    if manifest.models.contains_key("minivgg") {
+        "minivgg".to_string()
+    } else {
+        "mlp500".to_string()
+    }
+}

@@ -2,10 +2,11 @@
 //! {baseline, dithered, 8-bit, 8-bit + dithered} across the model zoo.
 //!
 //! Paper rows (LeNet5/MNIST ... ResNet18/ImageNet) map onto our scaled
-//! testbed (DESIGN.md §Substitutions): lenet300100 + lenet5 + mlp500 on
-//! synth-digits and minivgg on synth-textures.  The claim under test is
-//! the *shape*: dithered sparsity >> baseline sparsity at ~equal
-//! accuracy, for both fp32 and int8 training.
+//! testbed (DESIGN.md §Substitutions): the MLP zoo on synth-digits (+
+//! mlptex on synth-textures) under the native backend, with lenet5 and
+//! minivgg joining when the XLA artifacts are available.  The claim
+//! under test is the *shape*: dithered sparsity >> baseline sparsity at
+//! ~equal accuracy, for both fp32 and int8 training.
 
 use crate::data;
 use crate::metrics::Table;
@@ -19,6 +20,7 @@ use super::Scale;
 #[derive(Debug, Clone)]
 pub struct Cell {
     pub model: String,
+    pub dataset: String,
     pub method: String,
     pub acc: f32,
     pub sparsity: f32,
@@ -49,6 +51,7 @@ pub fn run(artifacts: &str, models: &[String], scale: Scale, verbose: bool) -> R
             let res = train(&engine, &ds, &cfg)?;
             let cell = Cell {
                 model: model.clone(),
+                dataset: entry.dataset.clone(),
                 method: method.to_string(),
                 acc: res.test_acc,
                 sparsity: res.history.mean_sparsity(),
@@ -92,10 +95,9 @@ pub fn render(cells: &[Cell]) -> String {
             sums[2 * k] += c.acc as f64;
             sums[2 * k + 1] += c.sparsity as f64;
         }
-        let dataset = if model.contains("vgg") { "textures" } else { "digits" };
         t.row(&[
             model.clone(),
-            dataset.to_string(),
+            b.dataset.clone(),
             format!("{:.2}", b.acc * 100.0),
             format!("{:.2}", b.sparsity * 100.0),
             format!("{:.2}", d.acc * 100.0),

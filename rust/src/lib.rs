@@ -4,29 +4,31 @@
 //! quantized backpropagation algorithm for more efficient deep neural
 //! network training"** (Wiedemann, Mehari, Kepp, Samek, 2020).
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! Architecture (see `DESIGN.md`): a backend-agnostic runtime under a
+//! coordinator stack.
 //!
-//! * **L1** — Pallas kernels (NSD dithered quantizer with in-kernel
-//!   counter RNG, block-sparse backward GEMMs), authored in
-//!   `python/compile/kernels/` and AOT-lowered into the HLO artifacts.
-//! * **L2** — JAX model zoo with instrumented `custom_vjp` backward
-//!   passes (dithered / meProp / int8 / baseline), lowered once by
-//!   `python/compile/aot.py` to `artifacts/*.hlo.txt` + `manifest.json`.
-//! * **L3** — this crate: the coordinator.  Loads the artifacts via the
-//!   PJRT CPU client ([`runtime`]), owns datasets ([`data`]), the
-//!   optimizer ([`optim`]), single-node training ([`train`]), the
-//!   synchronous-SGD parameter-server runtime of the paper's §3.6/§4.3
-//!   ([`coordinator`]), sparse gradient codecs ([`sparse`]), the
-//!   computational cost model of §3.4 ([`costmodel`]), and every
-//!   table/figure harness ([`experiments`]).
-//!
-//! Python never runs on the request path: after `make artifacts` the
-//! rust binary is self-contained.
+//! * **Runtime** ([`runtime`]) — an [`runtime::Engine`] façade over the
+//!   [`runtime::Backend`] trait:
+//!   - the **native backend** (default): pure-rust CPU MLP
+//!     forward/backward with the paper's compressed backward pass (NSD
+//!     dither / meProp top-k / int8) and skip-on-zero sparse backward
+//!     GEMMs — builds and runs with zero external dependencies;
+//!   - the **PJRT backend** (feature `xla`): AOT HLO artifacts authored
+//!     as Pallas kernels + JAX `custom_vjp` models in `python/compile/`
+//!     and lowered once by `python/compile/aot.py`, executed through
+//!     the PJRT CPU client. Python never runs on the request path.
+//! * **Coordinator** — datasets ([`data`]), the optimizer ([`optim`]),
+//!   single-node training ([`train`]), the synchronous-SGD parameter
+//!   server of the paper's §3.6/§4.3 ([`coordinator`]), sparse gradient
+//!   codecs ([`sparse`]), the computational cost model of §3.4
+//!   ([`costmodel`]), and every table/figure harness ([`experiments`]).
 //!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use ditherprop::runtime::Engine;
+//! // Native backend out of the box; picks up AOT artifacts instead
+//! // when built with the `xla` feature and they exist.
 //! let engine = Engine::load("artifacts").unwrap();
 //! let sess = engine.training_session("mlp500", "dithered", 64).unwrap();
 //! ```

@@ -9,8 +9,11 @@
 //! ditherprop fig1|fig2|fig3|fig4|fig56|eq12 [--quick]
 //! ```
 //!
-//! Python never runs here: all compute comes from `artifacts/*.hlo.txt`
-//! (build with `make artifacts`).
+//! Backend-agnostic: by default all compute runs on the native
+//! pure-rust executor (built-in model zoo, or `--artifacts DIR` with a
+//! `models.json`).  Built with the `xla` feature and pointed at AOT
+//! artifacts (`python3 python/compile/aot.py --out artifacts`), the
+//! same commands run the compiled HLO instead.
 
 use anyhow::Result;
 use ditherprop::coordinator::{run_distributed, DistConfig};
@@ -42,7 +45,8 @@ COMMANDS
   eq12          Eq. 12: savings ratio theory vs measured op counts
 
 COMMON FLAGS
-  --artifacts DIR   artifact directory (default: artifacts)
+  --artifacts DIR   artifact/registry directory (default: artifacts;
+                    missing dir = built-in native model zoo)
   --quick           reduced step counts for smoke runs
   --steps/--rounds/--n-train/--n-test/--reps  scale overrides
 ";
@@ -71,6 +75,7 @@ fn main() -> Result<()> {
 fn info(args: &Args) -> Result<()> {
     let engine = Engine::load(artifacts_dir(args))?;
     println!("platform: {}", engine.platform());
+    println!("backend:  {}", engine.capabilities().summary());
     println!(
         "batches: train={} worker={} eval={}",
         engine.manifest.train_batch, engine.manifest.worker_batch, engine.manifest.eval_batch
@@ -163,7 +168,10 @@ fn cmd_distributed(args: &Args) -> Result<()> {
 
 fn cmd_table1(args: &Args) -> Result<()> {
     let scale = Scale::from_args(args);
-    let models = args.list_or("models", &["lenet300100", "lenet5", "mlp500", "minivgg"]);
+    // Default rows: whatever the loaded backend's registry provides.
+    let available = experiments::all_models(&Engine::load(artifacts_dir(args))?.manifest);
+    let defaults: Vec<&str> = available.iter().map(String::as_str).collect();
+    let models = args.list_or("models", &defaults);
     let cells = experiments::table1::run(&artifacts_dir(args), &models, scale, true)?;
     println!("\n=== Table 1 (reproduction) ===");
     print!("{}", experiments::table1::render(&cells));
@@ -195,9 +203,10 @@ fn cmd_fig2(args: &Args) -> Result<()> {
 fn cmd_fig3(args: &Args) -> Result<()> {
     let scale = Scale::from_args(args);
     let methods = args.list_or("methods", &["baseline", "dithered", "int8", "int8_dithered"]);
+    let default_model = experiments::default_model(&Engine::load(artifacts_dir(args))?.manifest);
     let curves = experiments::fig3::run(
         &artifacts_dir(args),
-        &args.str_or("model", "minivgg"),
+        &args.str_or("model", &default_model),
         &methods,
         args.f32_or("s", 2.0),
         scale,

@@ -1,4 +1,10 @@
-//! manifest.json schema + parsing (model registry of the AOT artifacts).
+//! Model registry surface: manifest.json schema + parsing.
+//!
+//! [`ModelEntry`] is the shared registry record both backends expose —
+//! the XLA backend fills the artifact paths from `manifest.json`
+//! ([`Manifest::load`]), the native backend derives entries from its
+//! `models.json` topology specs (leaving the paths empty). Everything
+//! above the runtime keys off this one surface.
 
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, Context, Result};
@@ -93,7 +99,14 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+            .with_context(|| {
+                format!(
+                    "reading {} (generate the AOT artifacts with \
+                     `python3 python/compile/aot.py --out {}`?)",
+                    path.display(),
+                    dir.display()
+                )
+            })?;
         let root = json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
         Self::from_value(dir, &root)
     }

@@ -1,0 +1,152 @@
+//! The backend contract: everything the coordinator needs from an
+//! executor, behind one object-safe trait.
+//!
+//! `Engine` (and with it `train`, `coordinator`, and every experiment
+//! harness) dispatches through [`Backend`] instead of owning a PJRT
+//! client, so the same training loops run on:
+//!
+//! * [`native`] — the default pure-rust CPU executor: host MLP
+//!   forward/backward with method-compressed backward passes (NSD
+//!   dither, meProp top-k, int8) and skip-on-zero backward GEMMs.
+//! * [`pjrt`] (feature `xla`) — the AOT HLO artifact executor over the
+//!   PJRT CPU client, unchanged from the original three-layer design.
+//!
+//! Contract invariants every backend must uphold (see DESIGN.md
+//! §Backend-contract):
+//!
+//! 1. `init_params` is deterministic in `seed` and returns tensors
+//!    positionally matching `ModelEntry::params`.
+//! 2. `grad_step` returns gradients in the same positional order, plus
+//!    per-quantized-layer `sparsity` / `max_level` vectors of length
+//!    `n_qlayers` (forward layer order).
+//! 3. The dither signal is a pure function of `(seed, layer)`: same
+//!    seed, same gradients; methods that ignore the seed (baseline,
+//!    meprop) must be seed-invariant.
+//! 4. `s == 0` disables quantization: `dithered` degenerates to
+//!    `baseline` exactly.
+//! 5. `eval_step` always runs the un-instrumented (baseline, fp32)
+//!    forward pass at `ModelEntry::eval_batch`.
+
+use super::artifact::Manifest;
+use super::step::{EvalOut, GradOut};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+#[cfg(feature = "native")]
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+
+/// Capability / platform introspection, so callers can pick models and
+/// methods a backend actually supports instead of failing mid-run.
+#[derive(Debug, Clone)]
+pub struct Capabilities {
+    /// Platform name ("native-cpu", "cpu" for PJRT, ...).
+    pub platform: String,
+    /// Whether step functions are AOT-compiled (vs interpreted host loops).
+    pub compiled: bool,
+    /// Whether convolutional topologies (lenet5, minivgg) are executable.
+    pub conv: bool,
+    /// Backward-compression method families the backend implements.
+    pub methods: Vec<String>,
+}
+
+impl Capabilities {
+    /// Human-readable one-liner for `ditherprop info`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ({}, conv {}) methods: {}",
+            self.platform,
+            if self.compiled { "compiled" } else { "interpreted" },
+            if self.conv { "yes" } else { "no" },
+            self.methods.join("|"),
+        )
+    }
+}
+
+/// A pinned (model, method, batch) execution context.
+///
+/// `TrainingSession` validates one of these once via
+/// [`Backend::prepare`], then passes it to every step call; backends
+/// key their internal caches (compiled executables, parsed topologies)
+/// off it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionSpec {
+    pub model: String,
+    pub method: String,
+    /// Gradient-step batch size (eval always uses the model's
+    /// `eval_batch`).
+    pub batch: usize,
+}
+
+/// One training/eval executor. Object-safe: `Engine` owns a
+/// `Box<dyn Backend>`.
+pub trait Backend {
+    /// Platform name of the underlying executor.
+    fn platform(&self) -> String;
+
+    /// What this backend can run.
+    fn capabilities(&self) -> Capabilities;
+
+    /// The model registry: one [`super::artifact::ModelEntry`] surface
+    /// shared by manifest-based XLA artifacts and native model specs.
+    fn manifest(&self) -> &Manifest;
+
+    /// Validate (and warm: compile executables, parse topology) a
+    /// session before the first step. Called once by
+    /// `TrainingSession::new`.
+    fn prepare(&self, spec: &SessionSpec) -> Result<()>;
+
+    /// Deterministically initialize a model's parameters.
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>>;
+
+    /// One gradient step on `spec.batch` examples.
+    /// `x`: `batch * input_numel` f32 features; `y`: `batch` labels.
+    fn grad_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        seed: u32,
+        s: f32,
+    ) -> Result<GradOut>;
+
+    /// One eval step on `eval_batch` examples (baseline fp32 forward).
+    fn eval_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capabilities_summary_mentions_platform_and_methods() {
+        let c = Capabilities {
+            platform: "native-cpu".into(),
+            compiled: false,
+            conv: false,
+            methods: vec!["baseline".into(), "dithered".into()],
+        };
+        let s = c.summary();
+        assert!(s.contains("native-cpu"));
+        assert!(s.contains("baseline|dithered"));
+        assert!(s.contains("interpreted"));
+    }
+
+    #[test]
+    fn session_spec_equality() {
+        let a = SessionSpec { model: "m".into(), method: "dithered".into(), batch: 64 };
+        assert_eq!(a, a.clone());
+        assert_ne!(
+            a,
+            SessionSpec { model: "m".into(), method: "dithered".into(), batch: 1 }
+        );
+    }
+}

@@ -1,0 +1,301 @@
+//! Backward-compression methods for the native executor — the paper's
+//! Eq. 7 (and its comparators), applied to the pre-activation gradient
+//! `delta_z` before the two backward GEMMs.
+//!
+//! Mirrors `python/compile/layers.py::compress_grad` so the native and
+//! XLA backends report the same statistics:
+//!
+//! * `baseline`       — `g` used as-is.
+//! * `dithered`       — NSD quantization (Eq. 4), `Delta = s * std(g)`,
+//!   via the host reference kernel [`crate::quant::nsd_host`] with the
+//!   counter RNG in [`crate::util::rng`].
+//! * `detq`           — same grid, deterministic rounding (ablation).
+//! * `int8`           — deterministic symmetric 8-bit quantization.
+//! * `int8_dithered`  — int8 forward is handled in `mlp`; the backward
+//!   compression is identical to `dithered`.
+//! * `meprop_k<N>`    — per-example top-k magnitude selection (Sun et
+//!   al., the biased comparator of Fig. 4).
+
+use crate::quant::{grid_stats, nsd_host, std_of};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed backward-compression method string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Baseline,
+    Dithered,
+    /// Deterministic rounding to the NSD grid (ablation).
+    Detq,
+    Int8,
+    Int8Dithered,
+    /// meProp with `k` kept entries per example row.
+    Meprop(usize),
+}
+
+impl Method {
+    /// Parse a method string ("baseline", "dithered", "meprop_k25", ...).
+    pub fn parse(s: &str) -> Result<Method> {
+        match s {
+            "baseline" => Ok(Method::Baseline),
+            "dithered" => Ok(Method::Dithered),
+            "detq" => Ok(Method::Detq),
+            "int8" => Ok(Method::Int8),
+            "int8_dithered" => Ok(Method::Int8Dithered),
+            // plain "meprop" uses the L2 default k (layers.py BwdCfg).
+            "meprop" => Ok(Method::Meprop(32)),
+            other => {
+                if let Some(k) = other.strip_prefix("meprop_k") {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| anyhow!("bad meProp k in method '{other}'"))?;
+                    if k == 0 {
+                        bail!("meProp k must be >= 1 (got '{other}')");
+                    }
+                    return Ok(Method::Meprop(k));
+                }
+                bail!(
+                    "unknown method '{other}' (expected baseline|dithered|detq|int8|\
+                     int8_dithered|meprop_k<N>)"
+                )
+            }
+        }
+    }
+
+    /// Whether the forward pass fake-quantizes activations and weights
+    /// to 8 bits (Banner et al. regime).
+    pub fn int8_forward(self) -> bool {
+        matches!(self, Method::Int8 | Method::Int8Dithered)
+    }
+}
+
+/// Per-layer statistics of the compressed `delta_z` (the paper's
+/// Table 1 sparsity and Fig. 6b bitwidth inputs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GradStats {
+    /// Fraction of exact zeros in the compressed tensor.
+    pub sparsity: f32,
+    /// Max |quantization level| (0 for methods without a grid).
+    pub max_level: f32,
+}
+
+/// Per-layer dither stream: mix the static layer index into the step
+/// seed (same mixing constants as `layers.py::fold_seed`).
+pub fn fold_seed(seed: u32, layer_idx: usize) -> u32 {
+    seed ^ (layer_idx as u32)
+        .wrapping_mul(0x9E37_79B9)
+        .wrapping_add(0x7F4A_7C15)
+}
+
+fn zero_fraction(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let zeros = values.iter().filter(|&&v| v == 0.0).count();
+    zeros as f32 / values.len() as f32
+}
+
+/// Apply the configured `delta_z` compression to a `(rows, cols)`
+/// gradient tensor (row-major). Returns the compressed tensor and its
+/// statistics.
+pub fn compress_grad(
+    method: Method,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    seed: u32,
+    s: f32,
+) -> (Vec<f32>, GradStats) {
+    debug_assert_eq!(g.len(), rows * cols);
+    match method {
+        Method::Baseline => (
+            g.to_vec(),
+            GradStats { sparsity: zero_fraction(g), max_level: 0.0 },
+        ),
+        Method::Dithered | Method::Int8Dithered => {
+            let delta = s * std_of(g);
+            if delta <= 0.0 {
+                return (
+                    g.to_vec(),
+                    GradStats { sparsity: zero_fraction(g), max_level: 0.0 },
+                );
+            }
+            let mut rng = Rng::new(seed as u64);
+            let q = nsd_host(g, delta, &mut rng);
+            let gs = grid_stats(&q, delta);
+            (q, GradStats { sparsity: gs.sparsity, max_level: gs.max_abs_level })
+        }
+        Method::Detq => {
+            let delta = s * std_of(g);
+            if delta <= 0.0 {
+                return (
+                    g.to_vec(),
+                    GradStats { sparsity: zero_fraction(g), max_level: 0.0 },
+                );
+            }
+            let q: Vec<f32> = g.iter().map(|&v| delta * (v / delta + 0.5).floor()).collect();
+            let gs = grid_stats(&q, delta);
+            (q, GradStats { sparsity: gs.sparsity, max_level: gs.max_abs_level })
+        }
+        Method::Int8 => {
+            let amax = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if amax == 0.0 {
+                return (g.to_vec(), GradStats { sparsity: zero_fraction(g), max_level: 0.0 });
+            }
+            let scale = amax / 127.0;
+            let q: Vec<f32> = g.iter().map(|&v| (v / scale).round() * scale).collect();
+            let sp = zero_fraction(&q);
+            (q, GradStats { sparsity: sp, max_level: 127.0 })
+        }
+        Method::Meprop(k) => {
+            let q = meprop_topk(g, rows, cols, k);
+            let sp = zero_fraction(&q);
+            (q, GradStats { sparsity: sp, max_level: 0.0 })
+        }
+    }
+}
+
+/// Keep the k largest-|g| entries of each example row, zero the rest
+/// (ties at the threshold are kept, matching `layers.py::_meprop_topk`).
+fn meprop_topk(g: &[f32], rows: usize, cols: usize, k: usize) -> Vec<f32> {
+    let kk = k.min(cols);
+    if kk == cols {
+        return g.to_vec();
+    }
+    let mut q = vec![0.0f32; g.len()];
+    let mut mags = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = &g[r * cols..(r + 1) * cols];
+        for (m, v) in mags.iter_mut().zip(row.iter()) {
+            *m = v.abs();
+        }
+        // total_cmp: a NaN gradient (diverged run) must not panic the
+        // executor — NaNs sort to the front and get "kept" as-is.
+        mags.sort_by(|a, b| b.total_cmp(a));
+        let threshold = mags[kk - 1];
+        let dst = &mut q[r * cols..(r + 1) * cols];
+        for (d, &v) in dst.iter_mut().zip(row.iter()) {
+            if v.abs() >= threshold {
+                *d = v;
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() * 0.01).collect()
+    }
+
+    #[test]
+    fn parse_all_methods() {
+        assert_eq!(Method::parse("baseline").unwrap(), Method::Baseline);
+        assert_eq!(Method::parse("dithered").unwrap(), Method::Dithered);
+        assert_eq!(Method::parse("detq").unwrap(), Method::Detq);
+        assert_eq!(Method::parse("int8").unwrap(), Method::Int8);
+        assert_eq!(Method::parse("int8_dithered").unwrap(), Method::Int8Dithered);
+        assert_eq!(Method::parse("meprop_k25").unwrap(), Method::Meprop(25));
+        assert_eq!(Method::parse("meprop").unwrap(), Method::Meprop(32));
+        assert!(Method::parse("meprop_k0").is_err());
+        assert!(Method::parse("meprop_kX").is_err());
+        assert!(Method::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn int8_forward_flag() {
+        assert!(Method::Int8.int8_forward());
+        assert!(Method::Int8Dithered.int8_forward());
+        assert!(!Method::Dithered.int8_forward());
+        assert!(!Method::Meprop(5).int8_forward());
+    }
+
+    #[test]
+    fn fold_seed_decorrelates_layers() {
+        let mut seen = std::collections::HashSet::new();
+        for layer in 0..8 {
+            assert!(seen.insert(fold_seed(42, layer)));
+        }
+        assert_eq!(fold_seed(42, 3), fold_seed(42, 3));
+    }
+
+    #[test]
+    fn baseline_is_identity() {
+        let g = gaussian(64, 1);
+        let (q, st) = compress_grad(Method::Baseline, &g, 8, 8, 9, 2.0);
+        assert_eq!(q, g);
+        assert_eq!(st.max_level, 0.0);
+    }
+
+    #[test]
+    fn dithered_s0_is_identity() {
+        let g = gaussian(64, 2);
+        let (q, _) = compress_grad(Method::Dithered, &g, 8, 8, 9, 0.0);
+        assert_eq!(q, g);
+    }
+
+    #[test]
+    fn dithered_lands_on_grid_and_sparsifies() {
+        let g = gaussian(2048, 3);
+        let delta = 2.0 * std_of(&g);
+        let (q, st) = compress_grad(Method::Dithered, &g, 32, 64, 7, 2.0);
+        for &v in &q {
+            let level = v / delta;
+            assert!((level - level.round()).abs() < 1e-3, "off-grid value {v}");
+        }
+        assert!(st.sparsity > 0.5, "s=2 sparsity only {}", st.sparsity);
+        assert!(st.max_level >= 1.0);
+    }
+
+    #[test]
+    fn dithered_seed_changes_output() {
+        let g = gaussian(512, 4);
+        let (q1, _) = compress_grad(Method::Dithered, &g, 8, 64, 1, 2.0);
+        let (q2, _) = compress_grad(Method::Dithered, &g, 8, 64, 2, 2.0);
+        let (q1b, _) = compress_grad(Method::Dithered, &g, 8, 64, 1, 2.0);
+        assert_ne!(q1, q2);
+        assert_eq!(q1, q1b, "same seed must reproduce");
+    }
+
+    #[test]
+    fn detq_is_deterministic_and_on_grid() {
+        let g = gaussian(512, 5);
+        let (q1, st) = compress_grad(Method::Detq, &g, 8, 64, 1, 2.0);
+        let (q2, _) = compress_grad(Method::Detq, &g, 8, 64, 99, 2.0);
+        assert_eq!(q1, q2, "detq must ignore the seed");
+        assert!(st.sparsity > 0.3);
+    }
+
+    #[test]
+    fn int8_has_full_level_range() {
+        let g = gaussian(256, 6);
+        let (q, st) = compress_grad(Method::Int8, &g, 4, 64, 0, 0.0);
+        assert_eq!(st.max_level, 127.0);
+        let amax_in = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let amax_out = q.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!((amax_in - amax_out).abs() < 1e-6 * amax_in.max(1.0));
+    }
+
+    #[test]
+    fn meprop_keeps_k_per_row() {
+        let g = gaussian(8 * 100, 7);
+        let (q, st) = compress_grad(Method::Meprop(10), &g, 8, 100, 0, 0.0);
+        for r in 0..8 {
+            let nnz = q[r * 100..(r + 1) * 100].iter().filter(|&&v| v != 0.0).count();
+            assert!(nnz <= 10, "row {r} kept {nnz} > 10");
+            assert!(nnz >= 9, "row {r} kept only {nnz}");
+        }
+        assert!((st.sparsity - 0.9).abs() < 0.02);
+    }
+
+    #[test]
+    fn meprop_k_larger_than_row_is_identity() {
+        let g = gaussian(32, 8);
+        let (q, _) = compress_grad(Method::Meprop(64), &g, 4, 8, 0, 0.0);
+        assert_eq!(q, g);
+    }
+}

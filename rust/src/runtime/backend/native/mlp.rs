@@ -1,0 +1,410 @@
+//! Native MLP executor: forward/backward with the paper's compressed
+//! backward pass (Eqs. 7–9) in pure rust.
+//!
+//! The forward is the ordinary affine stack (optionally int8
+//! fake-quantized, Banner et al.); the backward compresses each layer's
+//! pre-activation gradient `delta_z` with the configured method
+//! ([`super::methods`]) and then runs *skip-on-zero* backward GEMMs:
+//! each example row of the compressed `delta_z` is CSR-encoded
+//! ([`crate::sparse::CsrVec`]) and only its nonzeros touch the weight
+//! and input-gradient accumulators — the SparseProp-style vectorizable
+//! host realization of the savings Eq. 12 models.
+
+use super::methods::{self, GradStats, Method};
+use super::models::MlpSpec;
+use crate::runtime::step::{EvalOut, GradOut};
+use crate::sparse::CsrVec;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Symmetric per-tensor 8-bit fake quantization (layers.py::fq8).
+pub fn fq8(values: &[f32]) -> Vec<f32> {
+    let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return values.to_vec();
+    }
+    let scale = amax / 127.0;
+    values
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) * scale)
+        .collect()
+}
+
+/// z = x @ w + b (x: batch×din, w: din×dout row-major). Skips zero
+/// activations (ReLU makes many), k-i-j loop order for cache locality.
+fn affine(x: &[f32], w: &[f32], b: &[f32], batch: usize, din: usize, dout: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    let mut z = vec![0.0f32; batch * dout];
+    for bi in 0..batch {
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        zrow.copy_from_slice(b);
+        let xrow = &x[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[a * dout..(a + 1) * dout];
+            for (zv, &wv) in zrow.iter_mut().zip(wrow.iter()) {
+                *zv += xv * wv;
+            }
+        }
+    }
+    z
+}
+
+/// w (din×dout) -> w^T (dout×din), so the input-gradient GEMM reads
+/// contiguous rows.
+fn transpose(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
+    let mut wt = vec![0.0f32; w.len()];
+    for a in 0..din {
+        for j in 0..dout {
+            wt[j * din + a] = w[a * dout + j];
+        }
+    }
+    wt
+}
+
+/// Residuals of one forward pass, as consumed by the backward rules.
+struct Forward {
+    /// Per-layer GEMM input activations (fq8'd when int8): batch×dims[i].
+    xq: Vec<Vec<f32>>,
+    /// Per-layer fq8'd weights when int8 (None = use `params` directly).
+    wq: Vec<Option<Vec<f32>>>,
+    /// ReLU masks of hidden layers: mask[i] = (z_i > 0), batch×dims[i+1].
+    mask: Vec<Vec<bool>>,
+    /// Final logits, batch×classes.
+    logits: Vec<f32>,
+}
+
+fn forward(spec: &MlpSpec, params: &[Tensor], x: &[f32], batch: usize, int8: bool) -> Forward {
+    let nl = spec.n_layers();
+    let mut xq = Vec::with_capacity(nl);
+    let mut wq = Vec::with_capacity(nl);
+    let mut mask = Vec::with_capacity(nl.saturating_sub(1));
+    let mut logits = Vec::new();
+    let mut h = x.to_vec();
+    for i in 0..nl {
+        let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+        let w = params[2 * i].data();
+        let b = params[2 * i + 1].data();
+        let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
+        let wlayer = if int8 { Some(fq8(w)) } else { None };
+        let weff: &[f32] = wlayer.as_deref().unwrap_or(w);
+        let z = affine(&hq, weff, b, batch, din, dout);
+        xq.push(hq);
+        wq.push(wlayer);
+        if i < nl - 1 {
+            mask.push(z.iter().map(|&v| v > 0.0).collect());
+            h = z.iter().map(|&v| v.max(0.0)).collect();
+        } else {
+            logits = z;
+        }
+    }
+    Forward { xq, wq, mask, logits }
+}
+
+/// Mean softmax cross-entropy + correct count; optionally the logits
+/// cotangent `(softmax - onehot) / batch` (model.py::cross_entropy).
+fn softmax_xent(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+    want_grad: bool,
+) -> Result<(f32, f32, Vec<f32>)> {
+    let batch = y.len();
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f32;
+    let mut dlogits = if want_grad { vec![0.0f32; logits.len()] } else { Vec::new() };
+    let inv_b = 1.0 / batch as f32;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let label = y[bi];
+        ensure!(
+            label >= 0 && (label as usize) < classes,
+            "label {label} out of range for {classes} classes (example {bi})"
+        );
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - max).exp();
+        }
+        let lse = max + sum.ln();
+        loss += (lse - row[label as usize]) as f64;
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == label as usize {
+            correct += 1.0;
+        }
+        if want_grad {
+            let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+            for (c, (&v, d)) in row.iter().zip(drow.iter_mut()).enumerate() {
+                let p = (v - lse).exp();
+                *d = (p - if c == label as usize { 1.0 } else { 0.0 }) * inv_b;
+            }
+        }
+    }
+    Ok(((loss / batch as f64) as f32, correct, dlogits))
+}
+
+fn check_inputs(spec: &MlpSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<usize> {
+    let nl = spec.n_layers();
+    ensure!(
+        params.len() == 2 * nl,
+        "model '{}' expects {} params, got {}",
+        spec.name,
+        2 * nl,
+        params.len()
+    );
+    for i in 0..nl {
+        let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+        ensure!(
+            params[2 * i].shape() == &[din, dout][..],
+            "param fc{}_w has shape {:?}, expected [{din}, {dout}]",
+            i + 1,
+            params[2 * i].shape()
+        );
+        ensure!(
+            params[2 * i + 1].shape() == &[dout][..],
+            "param fc{}_b has shape {:?}, expected [{dout}]",
+            i + 1,
+            params[2 * i + 1].shape()
+        );
+    }
+    let batch = y.len();
+    ensure!(batch > 0, "empty batch");
+    ensure!(
+        x.len() == batch * spec.input_numel(),
+        "x has {} values, expected {} (batch {batch} x input {})",
+        x.len(),
+        batch * spec.input_numel(),
+        spec.input_numel()
+    );
+    Ok(batch)
+}
+
+/// One gradient step: forward, loss, method-compressed backward with
+/// sparse GEMMs. Gradients are positional `[fc1_w, fc1_b, fc2_w, ...]`.
+pub fn grad_step(
+    spec: &MlpSpec,
+    method: Method,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+    seed: u32,
+    s: f32,
+) -> Result<GradOut> {
+    let batch = check_inputs(spec, params, x, y)?;
+    let nl = spec.n_layers();
+    let fwd = forward(spec, params, x, batch, method.int8_forward());
+    let (loss, correct, dlogits) = softmax_xent(&fwd.logits, y, spec.num_classes(), true)?;
+
+    let mut grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut sparsity = vec![0.0f32; nl];
+    let mut max_level = vec![0.0f32; nl];
+
+    // g = cotangent of z_i (delta_z), walked from the top layer down.
+    let mut g = dlogits;
+    for i in (0..nl).rev() {
+        let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+        let (qg, stats): (Vec<f32>, GradStats) =
+            methods::compress_grad(method, &g, batch, dout, methods::fold_seed(seed, i), s);
+        sparsity[i] = stats.sparsity;
+        max_level[i] = stats.max_level;
+
+        // CSR-encode each example row of delta_z-tilde once; both
+        // backward GEMMs then skip its zeros entirely.
+        let rows: Vec<CsrVec> = (0..batch)
+            .map(|bi| CsrVec::encode(&qg[bi * dout..(bi + 1) * dout]))
+            .collect();
+
+        let xq = &fwd.xq[i];
+        let weff: &[f32] = fwd.wq[i].as_deref().unwrap_or(params[2 * i].data());
+
+        // Eq. 9: dW = a^T . delta_z-tilde,  db = column sums.
+        let mut dw = vec![0.0f32; din * dout];
+        let mut db = vec![0.0f32; dout];
+        for (bi, row) in rows.iter().enumerate() {
+            if row.nnz() == 0 {
+                continue;
+            }
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                db[j as usize] += v;
+            }
+            let xrow = &xq[bi * din..(bi + 1) * din];
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let dst = &mut dw[a * dout..(a + 1) * dout];
+                for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                    dst[j as usize] += xv * v;
+                }
+            }
+        }
+
+        // Eq. 8: g_prev = (delta_z-tilde . W^T) ⊙ relu'(z_prev).
+        if i > 0 {
+            let wt = transpose(weff, din, dout);
+            let mut gp = vec![0.0f32; batch * din];
+            for (bi, row) in rows.iter().enumerate() {
+                if row.nnz() == 0 {
+                    continue;
+                }
+                let dst = &mut gp[bi * din..(bi + 1) * din];
+                for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                    let wrow = &wt[(j as usize) * din..(j as usize + 1) * din];
+                    for (d, &wv) in dst.iter_mut().zip(wrow.iter()) {
+                        *d += v * wv;
+                    }
+                }
+            }
+            let mask = &fwd.mask[i - 1];
+            for (gv, &m) in gp.iter_mut().zip(mask.iter()) {
+                if !m {
+                    *gv = 0.0;
+                }
+            }
+            g = gp;
+        }
+
+        grads[2 * i] = Tensor::from_vec(&[din, dout], dw);
+        grads[2 * i + 1] = Tensor::from_vec(&[dout], db);
+    }
+
+    Ok(GradOut { grads, loss, correct, sparsity, max_level })
+}
+
+/// One eval step: baseline fp32 forward + loss/correct (matching the
+/// AOT eval artifacts, which always evaluate un-instrumented).
+pub fn eval_step(spec: &MlpSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+    let batch = check_inputs(spec, params, x, y)?;
+    let fwd = forward(spec, params, x, batch, false);
+    let (loss, correct, _) = softmax_xent(&fwd.logits, y, spec.num_classes(), false)?;
+    Ok(EvalOut { loss, correct })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_spec() -> MlpSpec {
+        MlpSpec {
+            name: "tiny".into(),
+            dims: vec![4, 3, 2],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into(), "dithered".into()],
+        }
+    }
+
+    fn tiny_params(seed: u64) -> Vec<Tensor> {
+        let spec = tiny_spec();
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        for i in 0..spec.n_layers() {
+            let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+            let w: Vec<f32> = (0..din * dout).map(|_| rng.normal() * 0.5).collect();
+            params.push(Tensor::from_vec(&[din, dout], w));
+            let b: Vec<f32> = (0..dout).map(|_| rng.normal() * 0.1).collect();
+            params.push(Tensor::from_vec(&[dout], b));
+        }
+        params
+    }
+
+    #[test]
+    fn affine_matches_manual() {
+        // x: 1x2, w: 2x2, b: 2
+        let z = affine(&[1.0, 2.0], &[10.0, 20.0, 30.0, 40.0], &[1.0, 2.0], 1, 2, 2);
+        // z0 = 1*10 + 2*30 + 1 = 71; z1 = 1*20 + 2*40 + 2 = 102
+        assert_eq!(z, vec![71.0, 102.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let w: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2x3
+        let wt = transpose(&w, 2, 3);
+        assert_eq!(wt, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&wt, 3, 2), w);
+    }
+
+    #[test]
+    fn fq8_is_idempotent_and_range_preserving() {
+        let v = vec![0.5, -1.0, 0.25, 0.0];
+        let q = fq8(&v);
+        assert_eq!(q.iter().cloned().fold(0.0f32, |m, x| m.max(x.abs())), 1.0);
+        let q2 = fq8(&q);
+        for (a, b) in q.iter().zip(q2.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(fq8(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_grad_rows_sum_to_zero() {
+        let logits = vec![0.3, -0.2, 1.1, 0.0, 0.0, 0.0];
+        let (loss, correct, g) = softmax_xent(&logits, &[2, 0], 3, true).unwrap();
+        assert!(loss > 0.0);
+        assert!((0.0..=2.0).contains(&correct));
+        for bi in 0..2 {
+            let sum: f32 = g[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!(sum.abs() < 1e-6, "grad row {bi} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn softmax_xent_rejects_bad_labels() {
+        assert!(softmax_xent(&[0.0, 0.0], &[2], 2, false).is_err());
+        assert!(softmax_xent(&[0.0, 0.0], &[-1], 2, false).is_err());
+    }
+
+    #[test]
+    fn grad_step_shapes_and_baseline_loss_matches_eval() {
+        let spec = tiny_spec();
+        let params = tiny_params(3);
+        let x: Vec<f32> = {
+            let mut rng = Rng::new(7);
+            (0..2 * 4).map(|_| rng.uniform()).collect()
+        };
+        let y = [1, 0];
+        let out = grad_step(&spec, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        assert_eq!(out.grads.len(), 4);
+        assert_eq!(out.grads[0].shape(), &[4, 3]);
+        assert_eq!(out.grads[3].shape(), &[2]);
+        assert_eq!(out.sparsity.len(), 2);
+        assert_eq!(out.max_level.len(), 2);
+        let ev = eval_step(&spec, &params, &x, &y).unwrap();
+        assert!((out.loss - ev.loss).abs() < 1e-6);
+        assert_eq!(out.correct, ev.correct);
+    }
+
+    #[test]
+    fn dithered_s0_equals_baseline_exactly() {
+        let spec = tiny_spec();
+        let params = tiny_params(5);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..4 * 4).map(|_| rng.uniform()).collect();
+        let y = [0, 1, 1, 0];
+        let b = grad_step(&spec, Method::Baseline, &params, &x, &y, 9, 0.0).unwrap();
+        let d = grad_step(&spec, Method::Dithered, &params, &x, &y, 9, 0.0).unwrap();
+        for (gb, gd) in b.grads.iter().zip(d.grads.iter()) {
+            assert_eq!(gb.data(), gd.data());
+        }
+    }
+
+    #[test]
+    fn bad_param_shapes_rejected() {
+        let spec = tiny_spec();
+        let mut params = tiny_params(1);
+        params[0] = Tensor::zeros(&[4, 4]);
+        let err = grad_step(&spec, Method::Baseline, &params, &[0.0; 4], &[0], 0, 0.0);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("fc1_w"));
+    }
+}

@@ -1,0 +1,236 @@
+//! The native backend: pure-rust CPU execution of the paper's training
+//! step, no Python, no artifacts, no external runtime.
+//!
+//! SparseProp (Nikdan et al., 2023) showed backward passes sparse in
+//! `delta_z` run efficiently in plain vectorized CPU code; this module
+//! is that realization for the dithered-backprop family. Model
+//! topologies come from a `models.json` registry ([`models`], parsed
+//! with `util::json` exactly like the AOT manifest) with a built-in
+//! default zoo, so `Engine::load` works on a bare checkout.
+//!
+//! * [`models`]  — MLP topology registry, shared `ModelEntry` surface.
+//! * [`methods`] — `delta_z` compression (NSD / detq / int8 / meProp).
+//! * [`mlp`]     — forward/backward with skip-on-zero backward GEMMs.
+
+pub mod methods;
+pub mod mlp;
+pub mod models;
+
+use super::{Backend, Capabilities, SessionSpec};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::step::{EvalOut, GradOut};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub use methods::Method;
+pub use models::MlpSpec;
+
+/// Pure-rust CPU executor over the native model registry.
+pub struct NativeBackend {
+    manifest: Manifest,
+    specs: BTreeMap<String, MlpSpec>,
+}
+
+impl NativeBackend {
+    /// The built-in model zoo (no files needed).
+    pub fn builtin() -> Result<Self> {
+        Self::from_json(models::BUILTIN_MODELS, Path::new("."))
+    }
+
+    /// Load `dir/models.json` when present, else the built-in zoo.
+    /// (`dir` is the same directory the XLA backend reads artifacts
+    /// from, so one `--artifacts` flag serves both backends.)
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("models.json");
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            Self::from_json(&text, dir)
+        } else {
+            Self::from_json(models::BUILTIN_MODELS, dir)
+        }
+    }
+
+    /// Build from a registry document (tests inject custom topologies
+    /// this way).
+    pub fn from_json(text: &str, dir: &Path) -> Result<Self> {
+        let reg = models::parse_registry(text)?;
+        let mut entries = BTreeMap::new();
+        for (name, spec) in &reg.specs {
+            entries.insert(name.clone(), spec.entry());
+        }
+        Ok(NativeBackend {
+            manifest: Manifest {
+                dir: dir.to_path_buf(),
+                train_batch: reg.train_batch,
+                worker_batch: reg.worker_batch,
+                eval_batch: reg.eval_batch,
+                models: entries,
+            },
+            specs: reg.specs,
+        })
+    }
+
+    fn spec(&self, model: &str) -> Result<&MlpSpec> {
+        self.specs.get(model).ok_or_else(|| {
+            anyhow!(
+                "unknown native model '{model}' (available: {:?})",
+                self.specs.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            platform: "native-cpu".to_string(),
+            compiled: false,
+            conv: false,
+            methods: [
+                "baseline",
+                "dithered",
+                "detq",
+                "int8",
+                "int8_dithered",
+                "meprop_k<N>",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        }
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prepare(&self, spec: &SessionSpec) -> Result<()> {
+        let model = self.spec(&spec.model)?;
+        Method::parse(&spec.method)?;
+        // Mirror the XLA backend, which only has artifacts for the
+        // methods a model registers: reject unadvertised methods so
+        // sessions validate identically on both backends.
+        ensure!(
+            model.methods.iter().any(|m| m == &spec.method),
+            "model '{}' does not register method '{}' (available: {:?})",
+            spec.model,
+            spec.method,
+            model.methods
+        );
+        ensure!(spec.batch > 0, "batch must be >= 1");
+        Ok(())
+    }
+
+    /// He init, mirroring the L2 zoo: weights `normal * sqrt(2/fan_in)`
+    /// from a per-layer forked stream, biases zero. Deterministic in
+    /// `seed`.
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
+        let spec = self.spec(model)?;
+        let mut root = Rng::new(seed as u64);
+        let mut params = Vec::with_capacity(2 * spec.n_layers());
+        for i in 0..spec.n_layers() {
+            let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
+            let mut layer_rng = root.fork(i as u64);
+            let scale = (2.0 / din as f32).sqrt();
+            let w: Vec<f32> = (0..din * dout).map(|_| layer_rng.normal() * scale).collect();
+            params.push(Tensor::from_vec(&[din, dout], w));
+            params.push(Tensor::zeros(&[dout]));
+        }
+        Ok(params)
+    }
+
+    fn grad_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        seed: u32,
+        s: f32,
+    ) -> Result<GradOut> {
+        let model = self.spec(&spec.model)?;
+        let method = Method::parse(&spec.method)?;
+        mlp::grad_step(model, method, params, x, y, seed, s)
+    }
+
+    fn eval_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut> {
+        let model = self.spec(&spec.model)?;
+        mlp::eval_step(model, params, x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_backend_lists_models() {
+        let b = NativeBackend::builtin().unwrap();
+        assert_eq!(b.platform(), "native-cpu");
+        assert!(b.manifest().models.contains_key("mlp500"));
+        assert!(b.manifest().models.contains_key("lenet300100"));
+        let caps = b.capabilities();
+        assert!(!caps.conv);
+        assert!(caps.methods.iter().any(|m| m == "dithered"));
+    }
+
+    #[test]
+    fn load_falls_back_to_builtin_when_dir_missing() {
+        let b = NativeBackend::load("/definitely/not/a/dir").unwrap();
+        assert!(b.manifest().models.contains_key("mlp128"));
+    }
+
+    #[test]
+    fn prepare_validates() {
+        let b = NativeBackend::builtin().unwrap();
+        let ok = SessionSpec { model: "mlp128".into(), method: "meprop_k10".into(), batch: 8 };
+        assert!(b.prepare(&ok).is_ok());
+        let bad_model = SessionSpec { model: "nope".into(), method: "baseline".into(), batch: 8 };
+        assert!(b.prepare(&bad_model).is_err());
+        let bad_method = SessionSpec { model: "mlp128".into(), method: "warp".into(), batch: 8 };
+        assert!(b.prepare(&bad_method).is_err());
+        // parseable but not registered for this model -> rejected,
+        // mirroring the XLA backend's artifact lookup
+        let unregistered =
+            SessionSpec { model: "mlptex".into(), method: "meprop_k10".into(), batch: 8 };
+        assert!(b.prepare(&unregistered).is_err());
+        let bad_batch = SessionSpec { model: "mlp128".into(), method: "baseline".into(), batch: 0 };
+        assert!(b.prepare(&bad_batch).is_err());
+    }
+
+    #[test]
+    fn init_params_deterministic_he() {
+        let b = NativeBackend::builtin().unwrap();
+        let p1 = b.init_params("mlp128", 7).unwrap();
+        let p2 = b.init_params("mlp128", 7).unwrap();
+        let p3 = b.init_params("mlp128", 8).unwrap();
+        assert_eq!(p1.len(), 4);
+        assert_eq!(p1[0].shape(), &[784, 128]);
+        assert_eq!(p1[1].shape(), &[128]);
+        for (a, b2) in p1.iter().zip(p2.iter()) {
+            assert_eq!(a.data(), b2.data());
+        }
+        assert!(p1[0].data() != p3[0].data());
+        // weights nonzero, biases zero
+        assert!(p1[0].abs_max() > 0.0);
+        assert_eq!(p1[1].abs_max(), 0.0);
+        // He scale: std ~ sqrt(2/784) ~ 0.0505
+        let std = crate::quant::std_of(p1[0].data());
+        assert!((std - (2.0f32 / 784.0).sqrt()).abs() < 0.005, "std {std}");
+    }
+}

@@ -1,0 +1,255 @@
+//! Native model registry: MLP topologies parsed from a `models.json`
+//! registry (mirroring `artifact.rs`'s manifest parsing), plus the
+//! built-in zoo used when no registry file is present.
+//!
+//! Native specs and XLA manifest entries share one
+//! [`ModelEntry`] surface, so `train`, `coordinator`, and the
+//! experiment harnesses never care which backend owns a model.
+
+use super::methods::Method;
+use crate::runtime::artifact::{GradArtifact, ModelEntry, ParamInfo};
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// One native model: an MLP topology the host kernels execute.
+#[derive(Debug, Clone)]
+pub struct MlpSpec {
+    pub name: String,
+    /// Layer widths `[input, hidden..., classes]`.
+    pub dims: Vec<usize>,
+    /// Which data substrate feeds it ("digits" | "textures").
+    pub dataset: String,
+    pub eval_batch: usize,
+    /// Advertised method strings (what the harnesses sweep over).
+    pub methods: Vec<String>,
+}
+
+impl MlpSpec {
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn input_numel(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn num_classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// The shared registry surface for this model. Parameter order is
+    /// `fc1_w, fc1_b, fc2_w, ...` — positionally identical to the MLP
+    /// entries the AOT manifest lists.
+    pub fn entry(&self) -> ModelEntry {
+        let mut params = Vec::with_capacity(2 * self.n_layers());
+        for i in 0..self.n_layers() {
+            params.push(ParamInfo {
+                name: format!("fc{}_w", i + 1),
+                shape: vec![self.dims[i], self.dims[i + 1]],
+            });
+            params.push(ParamInfo {
+                name: format!("fc{}_b", i + 1),
+                shape: vec![self.dims[i + 1]],
+            });
+        }
+        ModelEntry {
+            name: self.name.clone(),
+            dataset: self.dataset.clone(),
+            input_shape: vec![self.dims[0]],
+            num_classes: self.num_classes(),
+            n_qlayers: self.n_layers(),
+            params,
+            // Native models have no artifact files; the advertised
+            // methods are surfaced through `grads` so
+            // `ModelEntry::methods()` lists them for the harnesses.
+            // `ModelEntry::grad()` (an artifact lookup keyed on exact
+            // batch) remains XLA-only — the native executor accepts
+            // any batch and validates methods in `prepare`.
+            init_path: String::new(),
+            eval_path: String::new(),
+            eval_batch: self.eval_batch,
+            grads: self
+                .methods
+                .iter()
+                .map(|m| GradArtifact { method: m.clone(), batch: 0, path: "native".into() })
+                .collect(),
+        }
+    }
+}
+
+/// Parsed `models.json`: global batch defaults + model specs.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub train_batch: usize,
+    pub worker_batch: usize,
+    pub eval_batch: usize,
+    pub specs: BTreeMap<String, MlpSpec>,
+}
+
+/// Built-in registry: the paper's MLP rows scaled to this testbed plus
+/// two small models (fast smoke/test target, textures substrate).
+/// Conv topologies (lenet5, minivgg) need the `xla` backend.
+pub const BUILTIN_MODELS: &str = r#"{
+  "version": 1,
+  "train_batch": 64,
+  "worker_batch": 1,
+  "eval_batch": 256,
+  "models": {
+    "lenet300100": {
+      "dims": [784, 300, 100, 10],
+      "dataset": "digits",
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered",
+                  "meprop_k10", "meprop_k25", "meprop_k50"]
+    },
+    "mlp500": {
+      "dims": [784, 500, 500, 10],
+      "dataset": "digits",
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered",
+                  "meprop_k10", "meprop_k25", "meprop_k50"]
+    },
+    "mlp128": {
+      "dims": [784, 128, 10],
+      "dataset": "digits",
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered",
+                  "meprop_k10", "meprop_k25"]
+    },
+    "mlptex": {
+      "dims": [768, 256, 10],
+      "dataset": "textures",
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
+    }
+  }
+}"#;
+
+/// Parse a `models.json` registry document.
+pub fn parse_registry(text: &str) -> Result<Registry> {
+    let root = json::parse(text).map_err(|e| anyhow!("models.json parse error: {e}"))?;
+    let version = root.get("version").and_then(Value::as_usize).unwrap_or(0);
+    if version != 1 {
+        bail!("unsupported native model registry version {version}");
+    }
+    let num = |k: &str, default: usize| -> usize {
+        root.get(k).and_then(Value::as_usize).unwrap_or(default)
+    };
+    let eval_batch = num("eval_batch", 256);
+    let mobj = root
+        .get("models")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| anyhow!("models.json missing 'models'"))?;
+    let mut specs = BTreeMap::new();
+    for (name, v) in mobj {
+        specs.insert(name.clone(), parse_model(name, v, eval_batch)?);
+    }
+    if specs.is_empty() {
+        bail!("models.json lists no models");
+    }
+    Ok(Registry {
+        train_batch: num("train_batch", 64),
+        worker_batch: num("worker_batch", 1),
+        eval_batch,
+        specs,
+    })
+}
+
+fn parse_model(name: &str, v: &Value, default_eval_batch: usize) -> Result<MlpSpec> {
+    let dims: Vec<usize> = v
+        .get("dims")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("model '{name}' missing 'dims'"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("model '{name}': bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+        bail!("model '{name}': dims {dims:?} must list >= 2 nonzero layer widths");
+    }
+    let methods: Vec<String> = match v.get("methods").and_then(Value::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|m| {
+                m.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("model '{name}': non-string method"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => vec!["baseline".to_string(), "dithered".to_string()],
+    };
+    for m in &methods {
+        Method::parse(m).map_err(|e| anyhow!("model '{name}': {e}"))?;
+    }
+    Ok(MlpSpec {
+        name: name.to_string(),
+        dims,
+        dataset: v
+            .get("dataset")
+            .and_then(Value::as_str)
+            .unwrap_or("digits")
+            .to_string(),
+        eval_batch: v
+            .get("eval_batch")
+            .and_then(Value::as_usize)
+            .unwrap_or(default_eval_batch),
+        methods,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_parses() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        assert_eq!(reg.train_batch, 64);
+        assert_eq!(reg.worker_batch, 1);
+        let mlp = reg.specs.get("mlp500").unwrap();
+        assert_eq!(mlp.dims, vec![784, 500, 500, 10]);
+        assert_eq!(mlp.n_layers(), 3);
+        assert_eq!(mlp.num_classes(), 10);
+        assert!(reg.specs.contains_key("lenet300100"));
+        assert!(reg.specs.contains_key("mlp128"));
+        assert_eq!(reg.specs.get("mlptex").unwrap().dataset, "textures");
+    }
+
+    #[test]
+    fn entry_matches_spec_positionally() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        let e = reg.specs.get("lenet300100").unwrap().entry();
+        assert_eq!(e.n_params(), 6);
+        assert_eq!(e.n_qlayers, 3);
+        assert_eq!(e.params[0].name, "fc1_w");
+        assert_eq!(e.params[0].shape, vec![784, 300]);
+        assert_eq!(e.params[5].shape, vec![10]);
+        assert_eq!(e.total_weights(), 784 * 300 + 300 + 300 * 100 + 100 + 100 * 10 + 10);
+        assert!(e.methods().contains(&"meprop_k25".to_string()));
+        assert_eq!(e.input_shape, vec![784]);
+    }
+
+    #[test]
+    fn rejects_bad_registries() {
+        assert!(parse_registry("{}").is_err());
+        assert!(parse_registry(r#"{"version": 2, "models": {}}"#).is_err());
+        assert!(parse_registry(r#"{"version": 1, "models": {}}"#).is_err());
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"dims": [784]}}}"#
+        )
+        .is_err());
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"dims": [8, 4], "methods": ["warp"]}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let reg = parse_registry(
+            r#"{"version": 1, "eval_batch": 128,
+                "models": {"tiny": {"dims": [8, 4]}}}"#,
+        )
+        .unwrap();
+        let t = reg.specs.get("tiny").unwrap();
+        assert_eq!(t.dataset, "digits");
+        assert_eq!(t.eval_batch, 128);
+        assert_eq!(t.methods, vec!["baseline", "dithered"]);
+    }
+}

@@ -1,0 +1,236 @@
+//! The PJRT/XLA backend (feature `xla`): executes the AOT HLO artifacts
+//! `python/compile/aot.py` lowers, through the PJRT CPU client.
+//!
+//! This is the original engine, repackaged behind [`Backend`]:
+//! compilation (HLO text -> parse -> XLA compile) costs tens to
+//! hundreds of milliseconds per artifact, so executables are cached and
+//! the hot loop only ever calls `execute`. Building with this feature
+//! requires vendoring the `xla` binding crate — see DESIGN.md
+//! §Backends.
+
+use super::{Backend, Capabilities, SessionSpec};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::step::{EvalOut, GradOut};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// PJRT runtime: manifest + CPU client + executable cache.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { manifest, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest-relative path.
+    pub fn executable(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(rel_path) {
+            return Ok(exe.clone());
+        }
+        let full = self.manifest.artifact_path(rel_path);
+        let proto = xla::HloModuleProto::from_text_file(&full)
+            .with_context(|| format!("parsing HLO text {}", full.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {rel_path}"))?,
+        );
+        self.cache.borrow_mut().insert(rel_path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_executables(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute an artifact on literal inputs; outputs are the flattened
+    /// tuple elements (aot.py lowers with return_tuple=True).
+    fn run(&self, rel_path: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(rel_path)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {rel_path}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Marshal a batch into (x, y) literals.
+    fn batch_literals(
+        &self,
+        entry: &crate::runtime::artifact::ModelEntry,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let numel: usize = entry.input_shape.iter().product();
+        ensure!(
+            x.len() == batch * numel,
+            "x has {} values, expected {} (batch {batch} x input {numel})",
+            x.len(),
+            batch * numel,
+        );
+        ensure!(y.len() == batch, "y has {} labels, expected {batch}", y.len());
+        let mut xdims = vec![batch as i64];
+        xdims.extend(entry.input_shape.iter().map(|&d| d as i64));
+        let xl = xla::Literal::vec1(x).reshape(&xdims)?;
+        let yl = xla::Literal::vec1(y);
+        Ok((xl, yl))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            platform: self.client.platform_name(),
+            compiled: true,
+            conv: true,
+            methods: [
+                "baseline",
+                "dithered",
+                "detq",
+                "int8",
+                "int8_dithered",
+                "meprop_k<N>",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        }
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) the session's grad + eval executables.
+    fn prepare(&self, spec: &SessionSpec) -> Result<()> {
+        let entry = self.manifest.model(&spec.model)?;
+        let grad_rel = entry.grad(&spec.method, spec.batch)?.path.clone();
+        self.executable(&grad_rel)?;
+        self.executable(&entry.eval_path.clone())?;
+        Ok(())
+    }
+
+    fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.model(model)?;
+        let outs = self.run(&entry.init_path.clone(), &[xla::Literal::scalar(seed)])?;
+        ensure!(
+            outs.len() == entry.n_params(),
+            "init artifact returned {} tensors, manifest lists {}",
+            outs.len(),
+            entry.n_params()
+        );
+        outs.iter()
+            .zip(entry.params.iter())
+            .map(|(lit, info)| literal_to_tensor(lit, &info.shape))
+            .collect()
+    }
+
+    fn grad_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        seed: u32,
+        s: f32,
+    ) -> Result<GradOut> {
+        let entry = self.manifest.model(&spec.model)?;
+        let grad_rel = entry.grad(&spec.method, spec.batch)?.path.clone();
+        let exe = self.executable(&grad_rel)?;
+        let n_p = entry.n_params();
+        let mut inputs = Vec::with_capacity(n_p + 4);
+        for p in params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let (xl, yl) = self.batch_literals(entry, x, y, spec.batch)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        inputs.push(xla::Literal::scalar(seed));
+        inputs.push(xla::Literal::scalar(s));
+
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(
+            outs.len() == n_p + 4,
+            "grad artifact returned {} outputs, expected {}",
+            outs.len(),
+            n_p + 4
+        );
+
+        let mut grads = Vec::with_capacity(n_p);
+        for (lit, info) in outs[..n_p].iter().zip(entry.params.iter()) {
+            grads.push(literal_to_tensor(lit, &info.shape)?);
+        }
+        let loss = outs[n_p].to_vec::<f32>()?[0];
+        let correct = outs[n_p + 1].to_vec::<f32>()?[0];
+        let sparsity = outs[n_p + 2].to_vec::<f32>()?;
+        let max_level = outs[n_p + 3].to_vec::<f32>()?;
+        Ok(GradOut { grads, loss, correct, sparsity, max_level })
+    }
+
+    fn eval_step(
+        &self,
+        spec: &SessionSpec,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<EvalOut> {
+        let entry = self.manifest.model(&spec.model)?;
+        let exe = self.executable(&entry.eval_path.clone())?;
+        let mut inputs = Vec::with_capacity(entry.n_params() + 2);
+        for p in params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let (xl, yl) = self.batch_literals(entry, x, y, entry.eval_batch)?;
+        inputs.push(xl);
+        inputs.push(yl);
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
+        Ok(EvalOut {
+            loss: outs[0].to_vec::<f32>()?[0],
+            correct: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+}
+
+/// Convert an XLA literal to a host tensor, validating the shape.
+pub fn literal_to_tensor(lit: &xla::Literal, expect_shape: &[usize]) -> Result<Tensor> {
+    let data: Vec<f32> = lit.to_vec()?;
+    ensure!(
+        data.len() == expect_shape.iter().product::<usize>(),
+        "literal has {} elements, expected shape {:?}",
+        data.len(),
+        expect_shape
+    );
+    Ok(Tensor::from_vec(expect_shape, data))
+}
+
+/// Convert a host tensor to an XLA literal with its shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // rank-0: vec1 gives rank-1 of size 1; reshape to scalar
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&t.dims_i64())?)
+    }
+}

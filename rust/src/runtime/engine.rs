@@ -1,86 +1,99 @@
-//! PJRT engine: one CPU client + a cache of compiled executables.
+//! Backend-agnostic engine façade.
 //!
-//! Compilation (HLO text -> parse -> XLA compile) costs tens to hundreds
-//! of milliseconds per artifact; the cache makes every artifact a
-//! compile-once, execute-many object, which is the whole point of the
-//! AOT design — the rust hot loop only ever calls `execute`.
+//! `Engine` owns a `Box<dyn Backend>` and the model registry
+//! ([`Manifest`]) it exposes; everything above it — `train`,
+//! `coordinator`, the experiment harnesses — talks to this façade and
+//! never to a concrete executor. Backend selection at `load`:
+//!
+//! 1. feature `xla` + `dir/manifest.json` present -> [`PjrtBackend`]
+//!    (AOT HLO artifacts on the PJRT CPU client),
+//! 2. otherwise -> [`NativeBackend`] (pure-rust CPU executor;
+//!    `dir/models.json` when present, built-in zoo when not).
+//!
+//! So `Engine::load("artifacts")` works on a bare checkout with the
+//! default feature set, and transparently upgrades to compiled
+//! artifacts when they exist and the XLA binding is vendored in.
+//!
+//! [`PjrtBackend`]: super::backend::pjrt::PjrtBackend
+//! [`NativeBackend`]: super::backend::native::NativeBackend
 
 use super::artifact::Manifest;
+use super::backend::{Backend, Capabilities};
 use super::step::TrainingSession;
 use crate::tensor::Tensor;
-use anyhow::{Context, Result};
-use std::cell::RefCell;
-use std::collections::HashMap;
+use anyhow::Result;
 use std::path::Path;
-use std::rc::Rc;
 
-/// Loaded runtime: manifest + PJRT client + executable cache.
+/// Loaded runtime: model registry + the backend that executes it.
 pub struct Engine {
     pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Engine {
-    /// Load the manifest and create the PJRT CPU client.
-    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { manifest, client, cache: RefCell::new(HashMap::new()) })
+    /// Load from a directory (see module docs for backend selection).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load_impl(dir.as_ref())
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch cached) an artifact by manifest-relative path.
-    pub fn executable(&self, rel_path: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(rel_path) {
-            return Ok(exe.clone());
+    fn load_impl(dir: &Path) -> Result<Self> {
+        #[cfg(feature = "xla")]
+        {
+            if dir.join("manifest.json").exists() {
+                let backend = super::backend::pjrt::PjrtBackend::load(dir)?;
+                return Ok(Self::from_backend(Box::new(backend)));
+            }
         }
-        let full = self.manifest.artifact_path(rel_path);
-        let proto = xla::HloModuleProto::from_text_file(&full)
-            .with_context(|| format!("parsing HLO text {}", full.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("XLA compile of {rel_path}"))?,
-        );
-        self.cache.borrow_mut().insert(rel_path.to_string(), exe.clone());
-        Ok(exe)
+        Self::native_fallback(dir)
     }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached_executables(&self) -> usize {
-        self.cache.borrow().len()
+    #[cfg(feature = "native")]
+    fn native_fallback(dir: &Path) -> Result<Self> {
+        let backend = super::backend::native::NativeBackend::load(dir)?;
+        Ok(Self::from_backend(Box::new(backend)))
     }
 
-    /// Execute an artifact on literal inputs; outputs are the flattened
-    /// tuple elements (aot.py lowers with return_tuple=True).
-    pub fn run(&self, rel_path: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(rel_path)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {rel_path}"))?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple()?)
+    #[cfg(not(feature = "native"))]
+    fn native_fallback(dir: &Path) -> Result<Self> {
+        anyhow::bail!(
+            "no backend can serve {}: the `native` feature is disabled and no XLA \
+             manifest.json was found",
+            dir.display()
+        )
     }
 
-    /// Initialize a model's parameters via its init artifact.
+    /// The built-in native model zoo — no files needed.
+    #[cfg(feature = "native")]
+    pub fn native() -> Result<Self> {
+        let backend = super::backend::native::NativeBackend::builtin()?;
+        Ok(Self::from_backend(Box::new(backend)))
+    }
+
+    /// Wrap an already-constructed backend (tests inject custom
+    /// registries this way).
+    pub fn from_backend(backend: Box<dyn Backend>) -> Self {
+        let manifest = backend.manifest().clone();
+        Engine { manifest, backend }
+    }
+
+    /// The executor behind this engine.
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Platform name of the underlying executor.
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Capability introspection (platform, conv support, methods).
+    pub fn capabilities(&self) -> Capabilities {
+        self.backend.capabilities()
+    }
+
+    /// Deterministically initialize a model's parameters.
     pub fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
-        let entry = self.manifest.model(model)?;
-        let outs = self.run(&entry.init_path.clone(), &[xla::Literal::scalar(seed)])?;
-        anyhow::ensure!(
-            outs.len() == entry.n_params(),
-            "init artifact returned {} tensors, manifest lists {}",
-            outs.len(),
-            entry.n_params()
-        );
-        outs.iter()
-            .zip(entry.params.iter())
-            .map(|(lit, info)| literal_to_tensor(lit, &info.shape))
-            .collect()
+        self.backend.init_params(model, seed)
     }
 
     /// Open a typed training session (grad + eval execution) for one
@@ -95,25 +108,32 @@ impl Engine {
     }
 }
 
-/// Convert an XLA literal to a host tensor, validating the shape.
-pub fn literal_to_tensor(lit: &xla::Literal, expect_shape: &[usize]) -> Result<Tensor> {
-    let data: Vec<f32> = lit.to_vec()?;
-    anyhow::ensure!(
-        data.len() == expect_shape.iter().product::<usize>(),
-        "literal has {} elements, expected shape {:?}",
-        data.len(),
-        expect_shape
-    );
-    Ok(Tensor::from_vec(expect_shape, data))
-}
+#[cfg(all(test, feature = "native"))]
+mod tests {
+    use super::*;
 
-/// Convert a host tensor to an XLA literal with its shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    if t.shape().is_empty() {
-        // rank-0: vec1 gives rank-1 of size 1; reshape to scalar
-        Ok(lit.reshape(&[])?)
-    } else {
-        Ok(lit.reshape(&t.dims_i64())?)
+    #[test]
+    fn load_missing_dir_falls_back_to_native() {
+        let e = Engine::load("/definitely/not/artifacts").unwrap();
+        assert_eq!(e.platform(), "native-cpu");
+        assert!(e.manifest.models.contains_key("mlp500"));
+    }
+
+    #[test]
+    fn native_engine_round_trips_manifest() {
+        let e = Engine::native().unwrap();
+        assert_eq!(e.manifest.train_batch, 64);
+        assert_eq!(e.manifest.worker_batch, 1);
+        let entry = e.manifest.model("mlp128").unwrap();
+        assert_eq!(entry.n_params(), 4);
+        assert!(!e.capabilities().conv);
+    }
+
+    #[test]
+    fn training_session_validates_through_backend() {
+        let e = Engine::native().unwrap();
+        assert!(e.training_session("mlp128", "dithered", 8).is_ok());
+        assert!(e.training_session("minivgg", "dithered", 8).is_err());
+        assert!(e.training_session("mlp128", "bogus", 8).is_err());
     }
 }

@@ -1,17 +1,28 @@
-//! Runtime: load + execute the AOT artifacts through PJRT.
+//! Runtime: the backend-agnostic execution layer.
 //!
-//! `python/compile/aot.py` lowers every step function to HLO **text**
-//! (jax >= 0.5 protos are rejected by the pinned xla_extension 0.5.1 —
-//! DESIGN.md §2) and writes `manifest.json`.  This module parses the
-//! manifest ([`artifact`]), compiles artifacts on the PJRT CPU client
-//! with caching ([`engine`]), and exposes typed step invocations
-//! ([`step`]) so the rest of the coordinator never touches `xla::*`
-//! directly.
+//! The coordinator talks to an [`Engine`] façade, which dispatches to a
+//! [`Backend`] (see DESIGN.md §Backend-contract):
+//!
+//! * [`backend::native`] — default: pure-rust CPU MLP executor with
+//!   method-compressed, skip-on-zero backward passes. No Python, no
+//!   artifacts; topologies come from a `models.json` registry with a
+//!   built-in zoo.
+//! * [`backend::pjrt`] (feature `xla`) — the AOT HLO artifacts lowered
+//!   by `python/compile/aot.py`, compiled on the PJRT CPU client with
+//!   caching.
+//!
+//! [`artifact`] parses the registry surface both share
+//! ([`ModelEntry`]); [`step`] exposes typed step invocations so the
+//! rest of the coordinator never touches a backend directly.
 
 pub mod artifact;
+pub mod backend;
 pub mod engine;
 pub mod step;
 
 pub use artifact::{GradArtifact, Manifest, ModelEntry, ParamInfo};
+#[cfg(feature = "native")]
+pub use backend::native::NativeBackend;
+pub use backend::{Backend, Capabilities, SessionSpec};
 pub use engine::Engine;
 pub use step::{EvalOut, GradOut, TrainingSession};

@@ -1,16 +1,20 @@
-//! Typed step invocation: the coordinator-facing API over raw artifacts.
+//! Typed step invocation: the coordinator-facing API over any backend.
 //!
-//! A [`TrainingSession`] pins (model, method, batch) to concrete grad +
-//! eval executables and marshals `Tensor`s / labels to XLA literals and
-//! back, splitting the grad artifact's output tuple into real gradients
-//! and the per-layer statistics the paper reports (sparsity of the
-//! quantized pre-activation gradients, worst-case |level|).
+//! A [`TrainingSession`] pins (model, method, batch) to one validated
+//! [`SessionSpec`], warms the backend once ([`Backend::prepare`]), and
+//! then forwards step calls — enforcing the backend contract on the way
+//! out: gradients positional with `ModelEntry::params`, and the
+//! per-layer statistics the paper reports (sparsity of the quantized
+//! pre-activation gradients, worst-case |level|) both sized to
+//! `n_qlayers`.
+//!
+//! [`Backend::prepare`]: super::backend::Backend::prepare
 
 use super::artifact::ModelEntry;
-use super::engine::{literal_to_tensor, tensor_to_literal, Engine};
+use super::backend::{Backend, SessionSpec};
+use super::engine::Engine;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
-use std::rc::Rc;
 
 /// Output of one gradient step.
 #[derive(Debug, Clone)]
@@ -53,39 +57,41 @@ pub struct EvalOut {
     pub correct: f32,
 }
 
-/// A compiled (model, method, batch) execution context.
+/// A validated (model, method, batch) execution context over one
+/// engine's backend.
 pub struct TrainingSession<'e> {
     engine: &'e Engine,
     pub entry: ModelEntry,
-    pub method: String,
-    pub batch: usize,
-    grad_exe: Rc<xla::PjRtLoadedExecutable>,
-    eval_exe: Rc<xla::PjRtLoadedExecutable>,
+    spec: SessionSpec,
 }
 
 impl<'e> TrainingSession<'e> {
     pub fn new(engine: &'e Engine, model: &str, method: &str, batch: usize) -> Result<Self> {
         let entry = engine.manifest.model(model)?.clone();
-        let grad_rel = entry.grad(method, batch)?.path.clone();
-        let grad_exe = engine.executable(&grad_rel)?;
-        let eval_exe = engine.executable(&entry.eval_path.clone())?;
-        Ok(TrainingSession {
-            engine,
-            entry,
+        let spec = SessionSpec {
+            model: model.to_string(),
             method: method.to_string(),
             batch,
-            grad_exe,
-            eval_exe,
-        })
+        };
+        engine.backend().prepare(&spec)?;
+        Ok(TrainingSession { engine, entry, spec })
+    }
+
+    pub fn method(&self) -> &str {
+        &self.spec.method
+    }
+
+    pub fn batch(&self) -> usize {
+        self.spec.batch
     }
 
     pub fn input_numel(&self) -> usize {
         self.entry.input_shape.iter().product()
     }
 
-    /// Marshal a batch into (x, y) literals.  `x` must hold
-    /// `batch * input_numel` f32s; `y` `batch` labels.
-    fn batch_literals(&self, x: &[f32], y: &[i32], batch: usize) -> Result<(xla::Literal, xla::Literal)> {
+    /// Shared batch validation: `x` must hold `batch * input_numel`
+    /// f32s; `y` `batch` labels.
+    fn check_batch(&self, x: &[f32], y: &[i32], batch: usize) -> Result<()> {
         ensure!(
             x.len() == batch * self.input_numel(),
             "x has {} values, expected {} (batch {} x input {})",
@@ -95,11 +101,7 @@ impl<'e> TrainingSession<'e> {
             self.input_numel()
         );
         ensure!(y.len() == batch, "y has {} labels, expected {batch}", y.len());
-        let mut xdims = vec![batch as i64];
-        xdims.extend(self.entry.input_shape.iter().map(|&d| d as i64));
-        let xl = xla::Literal::vec1(x).reshape(&xdims)?;
-        let yl = xla::Literal::vec1(y);
-        Ok((xl, yl))
+        Ok(())
     }
 
     /// One gradient step: `(params, x, y, seed, s) -> GradOut`.
@@ -113,55 +115,43 @@ impl<'e> TrainingSession<'e> {
     ) -> Result<GradOut> {
         let n_p = self.entry.n_params();
         ensure!(params.len() == n_p, "expected {n_p} params, got {}", params.len());
-        let mut inputs = Vec::with_capacity(n_p + 4);
-        for p in params {
-            inputs.push(tensor_to_literal(p)?);
-        }
-        let (xl, yl) = self.batch_literals(x, y, self.batch)?;
-        inputs.push(xl);
-        inputs.push(yl);
-        inputs.push(xla::Literal::scalar(seed));
-        inputs.push(xla::Literal::scalar(s));
-
-        let result = self.grad_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
+        self.check_batch(x, y, self.spec.batch)?;
+        let out = self
+            .engine
+            .backend()
+            .grad_step(&self.spec, params, x, y, seed, s)?;
         ensure!(
-            outs.len() == n_p + 4,
-            "grad artifact returned {} outputs, expected {}",
-            outs.len(),
-            n_p + 4
+            out.grads.len() == n_p,
+            "backend returned {} gradients, expected {n_p}",
+            out.grads.len()
         );
-
-        let mut grads = Vec::with_capacity(n_p);
-        for (lit, info) in outs[..n_p].iter().zip(self.entry.params.iter()) {
-            grads.push(literal_to_tensor(lit, &info.shape)?);
-        }
-        let loss = outs[n_p].to_vec::<f32>()?[0];
-        let correct = outs[n_p + 1].to_vec::<f32>()?[0];
-        let sparsity = outs[n_p + 2].to_vec::<f32>()?;
-        let max_level = outs[n_p + 3].to_vec::<f32>()?;
-        ensure!(sparsity.len() == self.entry.n_qlayers, "bad sparsity vector length");
-        Ok(GradOut { grads, loss, correct, sparsity, max_level })
+        let n_q = self.entry.n_qlayers;
+        ensure!(
+            out.sparsity.len() == n_q,
+            "backend returned sparsity for {} layers, model '{}' has {n_q} quantized layers",
+            out.sparsity.len(),
+            self.entry.name
+        );
+        ensure!(
+            out.max_level.len() == n_q,
+            "backend returned max_level for {} layers, model '{}' has {n_q} quantized layers",
+            out.max_level.len(),
+            self.entry.name
+        );
+        Ok(out)
     }
 
     /// One eval step at the manifest's eval batch size.
     pub fn eval(&self, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
         let n_p = self.entry.n_params();
-        ensure!(params.len() == n_p);
-        let mut inputs = Vec::with_capacity(n_p + 2);
-        for p in params {
-            inputs.push(tensor_to_literal(p)?);
-        }
-        let (xl, yl) = self.batch_literals(x, y, self.entry.eval_batch)?;
-        inputs.push(xl);
-        inputs.push(yl);
-        let result = self.eval_exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
-        Ok(EvalOut {
-            loss: outs[0].to_vec::<f32>()?[0],
-            correct: outs[1].to_vec::<f32>()?[0],
-        })
+        ensure!(
+            params.len() == n_p,
+            "eval expected {n_p} params for model '{}', got {}",
+            self.entry.name,
+            params.len()
+        );
+        self.check_batch(x, y, self.entry.eval_batch)?;
+        self.engine.backend().eval_step(&self.spec, params, x, y)
     }
 
     /// Evaluate accuracy over a full dataset split, chunking into eval
@@ -221,5 +211,25 @@ mod tests {
         };
         assert_eq!(g.mean_sparsity(), 0.0);
         assert_eq!(g.max_bitwidth(), 0);
+    }
+
+    #[cfg(feature = "native")]
+    #[test]
+    fn session_rejects_wrong_arity() {
+        let engine = Engine::native().unwrap();
+        let sess = engine.training_session("mlp128", "baseline", 2).unwrap();
+        let params = engine.init_params("mlp128", 0).unwrap();
+        // wrong param count
+        let err = sess.grad(&params[..2], &vec![0.0; 2 * 784], &[0, 1], 0, 0.0);
+        assert!(err.unwrap_err().to_string().contains("expected 4 params"));
+        // wrong x length
+        let err = sess.grad(&params, &vec![0.0; 784], &[0, 1], 0, 0.0);
+        assert!(err.is_err());
+        // wrong y length
+        let err = sess.grad(&params, &vec![0.0; 2 * 784], &[0], 0, 0.0);
+        assert!(err.is_err());
+        // eval error message names the model
+        let err = sess.eval(&params[..2], &vec![0.0; 256 * 784], &vec![0; 256]);
+        assert!(err.unwrap_err().to_string().contains("mlp128"));
     }
 }

@@ -1,8 +1,9 @@
 //! Single-node trainer: the paper's Table 1 / Fig. 3 / Fig. 4 loop.
 //!
-//! Drives the AOT grad artifact step-by-step: shuffled batches from the
-//! data substrate, gradient execution on PJRT, SGD-momentum updates in
-//! rust, periodic test-set evaluation, full telemetry into
+//! Drives whichever backend the engine loaded, step by step: shuffled
+//! batches from the data substrate, gradient execution through the
+//! [`crate::runtime::Backend`] dispatch, SGD-momentum updates in rust,
+//! periodic test-set evaluation, full telemetry into
 //! [`crate::metrics::History`].
 
 use crate::data::{BatchIter, Dataset};

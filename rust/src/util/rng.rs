@@ -1,9 +1,11 @@
 //! SplitMix64 PRNG + the distributions the coordinator needs.
 //!
 //! Deterministic, seedable, dependency-free (no `rand` in the offline
-//! vendor set).  Used for dataset synthesis, shuffling, and the
-//! property-testing harness — never for the dither signal itself, which
-//! lives in the L1 kernel.
+//! vendor set).  Used for dataset synthesis, shuffling, the
+//! property-testing harness, and — on the native backend — as the
+//! counter RNG behind the NSD dither signal (`quant::nsd_host`, seeded
+//! per (step, layer)).  Under the XLA backend the dither signal comes
+//! from the L1 kernel's in-kernel hash RNG instead.
 
 /// SplitMix64: tiny, fast, passes BigCrush on its output function.
 #[derive(Clone, Debug)]

@@ -1,4 +1,6 @@
-//! Integration: experiment harnesses at smoke scale + render contracts.
+//! Integration: experiment harnesses at smoke scale + render contracts
+//! (running on whichever backend `Engine::load` selects — the native
+//! executor on a bare checkout).
 
 use ditherprop::experiments::{eq12, fig1, fig2, fig4, table1};
 use ditherprop::util::cli::Args;
@@ -48,6 +50,7 @@ fn eq12_render_includes_all_cells() {
 fn table1_render_averages_and_headline() {
     let mk = |model: &str, method: &str, acc: f32, sp: f32| table1::Cell {
         model: model.into(),
+        dataset: "digits".into(),
         method: method.into(),
         acc,
         sparsity: sp,

@@ -1,26 +1,32 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
-//!
-//! These require `make artifacts` to have run; they exercise the full
-//! rust-side stack against the actual compiled HLO (init / grad / eval),
-//! checking paper invariants end to end.
+//! Integration tests over the runtime with the default (native)
+//! backend: the same paper invariants the AOT artifacts were tested
+//! against, now exercised on a bare checkout with no artifacts at all.
 
 use ditherprop::data;
 use ditherprop::runtime::Engine;
 use ditherprop::train::step_seed;
 
 fn engine() -> Engine {
-    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("artifacts missing — run `make artifacts`")
+    Engine::native().expect("built-in native registry must load")
 }
 
 #[test]
-fn manifest_lists_all_models() {
+fn load_of_missing_dir_serves_native_zoo() {
+    let e = Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/native-zoo")).unwrap();
+    assert_eq!(e.platform(), "native-cpu");
+    assert!(e.manifest.model("mlp500").is_ok());
+}
+
+#[test]
+fn manifest_lists_all_native_models() {
     let e = engine();
-    for m in ["lenet300100", "lenet5", "mlp500", "minivgg"] {
+    for m in ["lenet300100", "mlp500", "mlp128", "mlptex"] {
         let entry = e.manifest.model(m).unwrap();
-        assert!(entry.n_params() >= 6);
+        assert!(entry.n_params() >= 4);
         assert!(entry.total_weights() > 10_000);
+        assert!(entry.methods().contains(&"dithered".to_string()));
     }
+    assert!(e.manifest.model("nope").is_err());
 }
 
 #[test]
@@ -55,6 +61,7 @@ fn grad_step_shapes_losses_and_stats() {
     assert!(out.loss > 1.5 && out.loss < 4.0, "fresh-init CE loss ~ln(10), got {}", out.loss);
     assert!(out.correct >= 0.0 && out.correct <= 64.0);
     assert_eq!(out.sparsity.len(), 3);
+    assert_eq!(out.max_level.len(), 3);
     assert!(out.mean_sparsity() > 0.5, "dithered sparsity too low: {:?}", out.sparsity);
     assert!(out.max_bitwidth() <= 8, "bits {} > 8", out.max_bitwidth());
 }
@@ -71,13 +78,7 @@ fn dithered_s0_matches_baseline_grads() {
     let gb = db.grad(&params, &it.x, &it.y, 3, 0.0).unwrap();
     let gd = dd.grad(&params, &it.x, &it.y, 3, 0.0).unwrap();
     for (a, b) in gb.grads.iter().zip(gd.grads.iter()) {
-        let diff = a
-            .data()
-            .iter()
-            .zip(b.data().iter())
-            .map(|(x, y)| (x - y).abs())
-            .fold(0.0f32, f32::max);
-        assert!(diff < 2e-5, "s=0 dithered != baseline (max diff {diff})");
+        assert_eq!(a.data(), b.data(), "s=0 dithered must equal baseline exactly");
     }
 }
 
@@ -99,7 +100,7 @@ fn dither_seed_changes_grads_baseline_ignores_it() {
 }
 
 #[test]
-fn sparsity_grows_with_s_through_real_artifacts() {
+fn sparsity_grows_with_s() {
     let e = engine();
     let sess = e.training_session("mlp500", "dithered", 64).unwrap();
     let params = e.init_params("mlp500", 3).unwrap();
@@ -113,7 +114,7 @@ fn sparsity_grows_with_s_through_real_artifacts() {
         assert!(sp >= prev - 0.03, "sparsity not monotone at s={s}: {sp} < {prev}");
         prev = sp;
     }
-    assert!(prev > 0.9, "s=8 sparsity only {prev}");
+    assert!(prev > 0.85, "s=8 sparsity only {prev}");
 }
 
 #[test]
@@ -132,18 +133,7 @@ fn eval_counts_correct_predictions() {
 }
 
 #[test]
-fn executable_cache_hits() {
-    let e = engine();
-    let before = e.cached_executables();
-    let _s1 = e.training_session("mlp500", "dithered", 64).unwrap();
-    let mid = e.cached_executables();
-    let _s2 = e.training_session("mlp500", "dithered", 64).unwrap();
-    assert_eq!(e.cached_executables(), mid, "session reopen recompiled");
-    assert!(mid > before);
-}
-
-#[test]
-fn meprop_artifacts_execute_with_row_sparsity() {
+fn meprop_rows_are_sparse() {
     let e = engine();
     let sess = e.training_session("mlp500", "meprop_k25", 64).unwrap();
     let params = e.init_params("mlp500", 5).unwrap();
@@ -156,9 +146,34 @@ fn meprop_artifacts_execute_with_row_sparsity() {
 }
 
 #[test]
+fn int8_methods_produce_full_level_range() {
+    let e = engine();
+    let sess = e.training_session("mlp128", "int8", 32).unwrap();
+    let params = e.init_params("mlp128", 6).unwrap();
+    let ds = data::build("digits", 64, 64, 11);
+    let mut it = data::BatchIter::new(&ds.train, 32, 6);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 1, 0.0).unwrap();
+    assert_eq!(out.max_bitwidth(), 8, "int8 worst-case bits: {:?}", out.max_level);
+}
+
+#[test]
+fn textures_model_runs() {
+    let e = engine();
+    let sess = e.training_session("mlptex", "dithered", 16).unwrap();
+    let params = e.init_params("mlptex", 0).unwrap();
+    let ds = data::build("textures", 64, 64, 12);
+    let mut it = data::BatchIter::new(&ds.train, 16, 7);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 3, 2.0).unwrap();
+    assert_eq!(out.grads.len(), 4);
+    assert!(out.mean_sparsity() > 0.3);
+}
+
+#[test]
 fn step_seed_is_stable_contract() {
-    // rust-side seeds feed the AOT dither; pin the function so runs are
-    // reproducible across refactors
+    // rust-side seeds feed the dither streams; pin the function so runs
+    // are reproducible across refactors
     assert_eq!(step_seed(42, 0), step_seed(42, 0));
     assert_ne!(step_seed(42, 0), step_seed(42, 1));
     assert_ne!(step_seed(42, 0), step_seed(43, 0));

@@ -1,0 +1,53 @@
+//! Integration tests against the PJRT/XLA backend and the real AOT
+//! artifacts.  Compiled only with `--features xla` (which requires the
+//! vendored `xla` binding crate) and require `python3
+//! python/compile/aot.py --out rust/artifacts` to have run.
+#![cfg(feature = "xla")]
+
+use ditherprop::data;
+use ditherprop::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `python3 python/compile/aot.py`")
+}
+
+#[test]
+fn manifest_lists_the_conv_models_too() {
+    let e = engine();
+    assert!(e.capabilities().conv, "artifacts present but conv backend not selected");
+    for m in ["lenet300100", "lenet5", "mlp500", "minivgg"] {
+        let entry = e.manifest.model(m).unwrap();
+        assert!(entry.n_params() >= 6);
+        assert!(entry.total_weights() > 10_000);
+    }
+}
+
+#[test]
+fn grad_step_matches_contract_through_backend_dispatch() {
+    let e = engine();
+    let sess = e.training_session("mlp500", "dithered", 64).unwrap();
+    let params = e.init_params("mlp500", 0).unwrap();
+    let ds = data::build("digits", 256, 64, 5);
+    let mut it = data::BatchIter::new(&ds.train, 64, 1);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 9, 2.0).unwrap();
+    assert_eq!(out.grads.len(), 6);
+    assert_eq!(out.sparsity.len(), 3);
+    assert_eq!(out.max_level.len(), 3);
+    assert!(out.mean_sparsity() > 0.5, "dithered sparsity too low: {:?}", out.sparsity);
+    assert!(out.max_bitwidth() <= 8);
+}
+
+#[test]
+fn conv_model_trains_a_step() {
+    let e = engine();
+    let sess = e.training_session("minivgg", "dithered", 64).unwrap();
+    let params = e.init_params("minivgg", 1).unwrap();
+    let ds = data::build("textures", 128, 64, 6);
+    let mut it = data::BatchIter::new(&ds.train, 64, 2);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 3, 2.0).unwrap();
+    assert_eq!(out.grads.len(), 12);
+    assert!(out.loss.is_finite());
+}

@@ -1,0 +1,177 @@
+//! Native-backend correctness against host references:
+//!
+//! * gradient-check the baseline backward pass against central finite
+//!   differences of the eval loss, on a tiny injected topology;
+//! * property-test that dithered gradients land on the Delta grid
+//!   (recovered from the reported `max_level`) with sparsity >= the
+//!   baseline's, using batch-1 bias gradients (which *are* the layer's
+//!   compressed delta_z row).
+
+use ditherprop::quant::grid_stats;
+use ditherprop::runtime::backend::native::NativeBackend;
+use ditherprop::runtime::{Backend, Engine, SessionSpec};
+use ditherprop::tensor::Tensor;
+use ditherprop::util::prop::{check, Gen};
+use ditherprop::util::rng::Rng;
+use std::path::Path;
+
+const TINY_REGISTRY: &str = r#"{
+  "version": 1,
+  "train_batch": 8,
+  "worker_batch": 1,
+  "eval_batch": 8,
+  "models": {
+    "tiny": {
+      "dims": [8, 6, 4],
+      "dataset": "digits",
+      "eval_batch": 8,
+      "methods": ["baseline", "dithered", "meprop_k3"]
+    }
+  }
+}"#;
+
+fn tiny_backend() -> NativeBackend {
+    NativeBackend::from_json(TINY_REGISTRY, Path::new(".")).unwrap()
+}
+
+fn random_batch(batch: usize, dim: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..batch * dim).map(|_| rng.normal() * 0.7).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn baseline_grads_match_finite_differences() {
+    let backend = tiny_backend();
+    let spec = SessionSpec { model: "tiny".into(), method: "baseline".into(), batch: 8 };
+    let params = backend.init_params("tiny", 3).unwrap();
+    let (x, y) = random_batch(8, 8, 4, 17);
+
+    let analytic = backend.grad_step(&spec, &params, &x, &y, 0, 0.0).unwrap();
+    let loss_at = |params: &[Tensor]| -> f32 {
+        backend.eval_step(&spec, params, &x, &y).unwrap().loss
+    };
+    assert!((analytic.loss - loss_at(&params)).abs() < 1e-6);
+
+    let eps = 2e-3f32;
+    let mut checked = 0usize;
+    let mut outliers = 0usize;
+    let mut dot = 0.0f64;
+    let mut n_a = 0.0f64;
+    let mut n_f = 0.0f64;
+    for pi in 0..params.len() {
+        for ci in 0..params[pi].len() {
+            let mut plus = params.clone();
+            plus[pi].data_mut()[ci] += eps;
+            let mut minus = params.clone();
+            minus[pi].data_mut()[ci] -= eps;
+            let fd = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+            let g = analytic.grads[pi].data()[ci];
+            // a ReLU kink inside the eps window can perturb a couple of
+            // coordinates; everything else must agree tightly
+            if (fd - g).abs() > 5e-3 {
+                outliers += 1;
+            }
+            dot += fd as f64 * g as f64;
+            n_a += (g as f64) * (g as f64);
+            n_f += (fd as f64) * (fd as f64);
+            checked += 1;
+        }
+    }
+    // tiny topology: 8*6+6+6*4+4 = 82 coordinates, all checked
+    assert_eq!(checked, 82);
+    assert!(outliers <= 2, "finite-difference mismatch on {outliers}/82 coordinates");
+    let cosine = dot / (n_a.sqrt() * n_f.sqrt()).max(1e-12);
+    assert!(cosine > 0.995, "gradient direction off: cosine {cosine}");
+}
+
+#[test]
+fn meprop_grads_match_finite_differences_of_nothing_extra() {
+    // meProp zeroes delta_z entries; the surviving computation must
+    // still be a correct chain rule: at k >= row width it IS baseline.
+    let backend = tiny_backend();
+    let spec_base = SessionSpec { model: "tiny".into(), method: "baseline".into(), batch: 4 };
+    let spec_k = SessionSpec { model: "tiny".into(), method: "meprop_k3".into(), batch: 4 };
+    let params = backend.init_params("tiny", 5).unwrap();
+    let (x, y) = random_batch(4, 8, 4, 23);
+    let gb = backend.grad_step(&spec_base, &params, &x, &y, 0, 0.0).unwrap();
+    let gk = backend.grad_step(&spec_k, &params, &x, &y, 0, 0.0).unwrap();
+    // k=3 on widths 6 and 4: strictly sparser or equal bias grads
+    for (b, k) in gb.grads.iter().zip(gk.grads.iter()) {
+        assert_eq!(b.shape(), k.shape());
+    }
+    assert!(gk.mean_sparsity() >= gb.mean_sparsity());
+}
+
+#[test]
+fn dithered_batch1_bias_grads_live_on_the_delta_grid() {
+    // At batch 1 the bias gradient of layer i IS the compressed
+    // delta_z row, so the public GradOut exposes the quantized tensor
+    // directly: recover Delta from max_level and verify the grid.
+    let engine = Engine::native().unwrap();
+    let sess = engine.training_session("mlp128", "dithered", 1).unwrap();
+    let base = engine.training_session("mlp128", "baseline", 1).unwrap();
+    let params = engine.init_params("mlp128", 2).unwrap();
+
+    check("dithered bias grads on-grid, sparsity >= baseline", 25, |g: &mut Gen| {
+        let seed = g.u32();
+        let s = g.f32_in(1.0, 6.0);
+        let (x, y) = random_batch(1, 784, 10, seed as u64 ^ 0xD17);
+        let d = sess.grad(&params, &x, &y, seed, s).unwrap();
+        let b = base.grad(&params, &x, &y, seed, 0.0).unwrap();
+        // bias params are at odd indices: fc1_b = 1, fc2_b = 3
+        for (layer, bias_idx) in [(0usize, 1usize), (1, 3)] {
+            let qrow = d.grads[bias_idx].data();
+            let max_level = d.max_level[layer];
+            let brow = b.grads[bias_idx].data();
+            let base_sparsity = grid_stats_zero_fraction(brow);
+            if max_level == 0.0 {
+                // everything quantized away: trivially on-grid, max sparsity
+                if qrow.iter().any(|&v| v != 0.0) {
+                    return false;
+                }
+                continue;
+            }
+            let max_abs = qrow.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let delta = max_abs / max_level;
+            for &v in qrow {
+                let level = v / delta;
+                if (level - level.round()).abs() > 1e-3 {
+                    return false;
+                }
+            }
+            let st = grid_stats(qrow, delta);
+            // reported stats must match a host recomputation
+            if (st.sparsity - d.sparsity[layer]).abs() > 1e-6 {
+                return false;
+            }
+            if st.sparsity + 1e-6 < base_sparsity {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+fn grid_stats_zero_fraction(values: &[f32]) -> f32 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|&&v| v == 0.0).count() as f32 / values.len() as f32
+}
+
+#[test]
+fn custom_registry_flows_through_engine() {
+    let engine = Engine::from_backend(Box::new(tiny_backend()));
+    assert_eq!(engine.manifest.train_batch, 8);
+    let entry = engine.manifest.model("tiny").unwrap();
+    assert_eq!(entry.total_weights(), 82);
+    let sess = engine.training_session("tiny", "dithered", 8).unwrap();
+    let params = engine.init_params("tiny", 0).unwrap();
+    let (x, y) = random_batch(8, 8, 4, 31);
+    let out = sess.grad(&params, &x, &y, 5, 2.0).unwrap();
+    assert_eq!(out.sparsity.len(), 2);
+    let ev = sess.eval(&params, &x, &y).unwrap();
+    assert!(ev.loss > 0.0);
+}

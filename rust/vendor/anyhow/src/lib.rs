@@ -1,0 +1,212 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this path
+//! dependency implements the exact subset the workspace uses with the
+//! same names and semantics:
+//!
+//! * [`Error`] — a message + a stack of context notes (no backtraces,
+//!   no downcasting).
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any
+//!   `Result` whose error converts into [`Error`].
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — the formatting macros.
+//!
+//! `Display` shows the outermost context (what the operation was);
+//! `Debug` shows the full cause chain, mirroring how the real anyhow
+//! renders errors escaping `main`.
+
+use std::fmt;
+
+/// A dynamic error: root message plus innermost-last context notes.
+pub struct Error {
+    msg: String,
+    /// Context notes, innermost (added first) to outermost (added last).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with a higher-level context note.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The root (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        &self.msg
+    }
+
+    /// Outermost-first chain: context notes, then the root message.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.context
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.context.last() {
+            Some(c) => f.write_str(c),
+            None => f.write_str(&self.msg),
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain: Vec<&str> = self.chain().collect();
+        f.write_str(chain[0])?;
+        if chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Mirrors anyhow: every std error converts into `Error`, which is why
+// `Error` itself must NOT implement `std::error::Error` (coherence).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failing results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context note.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily built context note.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Format an [`Error`] (accepts a format string or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading the missing file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_chain_renders() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "reading the missing file");
+        let dbg = format!("{err:?}");
+        assert!(dbg.starts_with("reading the missing file"));
+        assert!(dbg.contains("Caused by:"));
+    }
+
+    #[test]
+    fn with_context_on_error_results() {
+        let base: Result<()> = Err(anyhow!("root {}", 7));
+        let err = base.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(err.to_string(), "outer 1");
+        assert_eq!(err.root_cause(), "root 7");
+        assert_eq!(err.chain().count(), 2);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(n: usize) -> Result<usize> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 3 {
+                bail!("three is right out");
+            }
+            Ok(n)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert_eq!(check(12).unwrap_err().to_string(), "n too big: 12");
+        assert_eq!(check(3).unwrap_err().to_string(), "three is right out");
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn check(n: usize) -> Result<()> {
+            ensure!(n == 0);
+            Ok(())
+        }
+        assert!(check(1).unwrap_err().to_string().contains("n == 0"));
+    }
+
+    #[test]
+    fn anyhow_accepts_displayable_expressions() {
+        let msg = String::from("plain string error");
+        let err = anyhow!(msg);
+        assert_eq!(err.to_string(), "plain string error");
+    }
+}
