@@ -23,7 +23,8 @@ fn main() -> Result<()> {
     let s = args.f32_or("s", 2.0);
 
     let engine = Engine::load(args.str_or("artifacts", "artifacts"))?;
-    // lenet5 needs the XLA backend; the native zoo substitutes mlp500
+    // lenet5 runs natively since the conv executor landed; keep the
+    // mlp500 fallback for custom registries that omit it
     let default_model =
         if engine.manifest.models.contains_key("lenet5") { "lenet5" } else { "mlp500" };
     let model = args.str_or("model", default_model);

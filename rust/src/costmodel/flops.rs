@@ -68,6 +68,30 @@ pub fn fc_backward_cost(b: usize, d_in: usize, d_out: usize, p_nz: f64) -> Backw
     }
 }
 
+/// Convolution backward cost in im2col form: a conv layer with
+/// `positions = out_h*out_w` output positions, patch length
+/// `r = k*k*c_in` and `c_out` output channels is an affine map over
+/// `b * positions` patch rows, so its two backward GEMMs (Eq. 8:
+/// dpatches = qg . W^T, Eq. 9: dW = patches^T . qg) cost
+/// `2 * b * positions * r * c_out` dense MACs — skipped down to the
+/// measured `delta_z` feature-map density `p_nz`, with NSD overhead on
+/// the `b * positions * c_out` map elements.
+pub fn conv_backward_cost(
+    b: usize,
+    positions: usize,
+    patch_len: usize,
+    c_out: usize,
+    p_nz: f64,
+) -> BackwardCost {
+    let (bf, pp, rr, cc) = (b as f64, positions as f64, patch_len as f64, c_out as f64);
+    let dense = 2.0 * bf * pp * rr * cc;
+    BackwardCost {
+        dense_ops: dense,
+        nsd_ops: NSD_OPS_PER_ELEMENT * bf * pp * cc,
+        sparse_ops: p_nz * dense,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +132,22 @@ mod tests {
         let c = fc_backward_cost(128, 784, 500, 0.05);
         assert_eq!(c.dense_ops, 2.0 * 128.0 * 784.0 * 500.0);
         assert!(c.speedup() > 10.0);
+    }
+
+    #[test]
+    fn conv_cost_counts_both_gemms() {
+        // lenet5 conv2: 10x10 positions, patch 5*5*6 = 150, 16 channels
+        let c = conv_backward_cost(64, 100, 150, 16, 0.08);
+        assert_eq!(c.dense_ops, 2.0 * 64.0 * 100.0 * 150.0 * 16.0);
+        assert_eq!(c.nsd_ops, NSD_OPS_PER_ELEMENT * 64.0 * 100.0 * 16.0);
+        assert!(c.speedup() > 5.0 && c.speedup() < 13.0);
+    }
+
+    #[test]
+    fn conv_cost_reduces_to_fc_at_one_position() {
+        // At positions = 1 and patch_len = d_in a conv is a dense layer.
+        let conv = conv_backward_cost(32, 1, 784, 500, 0.1);
+        let fc = fc_backward_cost(32, 784, 500, 0.1);
+        assert_eq!(conv, fc);
     }
 }

@@ -1,8 +1,9 @@
 //! Computational cost model of the paper's §3.4.
 //!
 //! * [`flops`]    — Eq. 12: op counts of dense vs dithered backward
-//!   GEMMs, the `O(1/m + p_nz)` savings ratio, and per-model backward
-//!   cost accounting from measured sparsities.
+//!   GEMMs, the `O(1/m + p_nz)` savings ratio, and per-layer backward
+//!   cost accounting (dense and im2col'd conv) from measured
+//!   sparsities.
 //! * [`analytic`] — Fig. 2: closed-form P(zero) of the Gaussian (x)
 //!   Uniform convolution as a function of the scale factor s.
 //! * [`scnn`]     — the SCNN-class accelerator speedup/energy lookup the
@@ -13,5 +14,7 @@ pub mod flops;
 pub mod scnn;
 
 pub use analytic::p_zero;
-pub use flops::{backward_gemm_ops, savings_ratio, BackwardCost};
+pub use flops::{
+    backward_gemm_ops, conv_backward_cost, fc_backward_cost, savings_ratio, BackwardCost,
+};
 pub use scnn::{energy_gain, speedup};

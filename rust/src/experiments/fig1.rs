@@ -5,7 +5,10 @@
 //! vectors straight from whichever backend the engine runs: the
 //! baseline batch-1 grad step gives the "before" distribution, the
 //! dithered one the "after" — no reimplementation, the histograms come
-//! from the very tensors the backward GEMMs consume.
+//! from the very tensors the backward GEMMs consume. Conv biases do
+//! NOT have this property (a conv bias gradient is the *position sum*
+//! of its delta_z map, which lands off-grid), so on conv models we
+//! harvest the first fully-connected layer's bias instead.
 
 use crate::data;
 use crate::runtime::Engine;
@@ -35,10 +38,8 @@ pub fn histogram(values: &[f32], bins: usize) -> Histogram {
         counts[b] += 1;
         if v == 0.0 {
             zeros += 1;
-        } else if !distinct.iter().any(|&d| (d - v).abs() < 1e-9) {
-            if distinct.len() < 1024 {
-                distinct.push(v);
-            }
+        } else if distinct.len() < 1024 && !distinct.iter().any(|&d| (d - v).abs() < 1e-9) {
+            distinct.push(v);
         }
     }
     Histogram {
@@ -69,12 +70,14 @@ pub fn collect(artifacts: &str, model: &str, s: f32, n_examples: usize) -> Resul
     let dith = engine.training_session(model, "dithered", 1)?;
     let params = engine.init_params(model, 7)?;
 
-    // first bias parameter index = delta_z of layer 1 at batch 1
+    // First *dense* bias parameter index: at batch 1 that gradient IS
+    // the layer's compressed delta_z row. Conv biases are position
+    // sums of their maps (off-grid), so they are skipped.
     let bias_idx = entry
         .params
         .iter()
-        .position(|p| p.name.ends_with("_b") && !p.name.starts_with("bn"))
-        .ok_or_else(|| anyhow::anyhow!("no bias parameter found"))?;
+        .position(|p| p.name.starts_with("fc") && p.name.ends_with("_b"))
+        .ok_or_else(|| anyhow::anyhow!("no dense (fc*_b) bias parameter found"))?;
 
     let dim: usize = entry.input_shape.iter().product();
     let mut x = vec![0.0f32; dim];

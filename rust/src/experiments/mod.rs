@@ -70,14 +70,14 @@ pub fn artifacts_dir(args: &crate::util::cli::Args) -> String {
 }
 
 /// Every model the loaded registry provides — the backend-aware default
-/// row set for Table 1 (the native backend ships MLPs only; the XLA
-/// backend adds the conv models).
+/// row set for Table 1 (the native backend ships the MLP zoo *and* the
+/// conv rows lenet5/minivgg since the native conv executor landed).
 pub fn all_models(manifest: &crate::runtime::Manifest) -> Vec<String> {
     manifest.models.keys().cloned().collect()
 }
 
 /// Preferred single-model demo target: the paper's conv model when the
-/// backend can run it, else the MLP-500-500 comparator.
+/// registry lists it, else the MLP-500-500 comparator.
 pub fn default_model(manifest: &crate::runtime::Manifest) -> String {
     if manifest.models.contains_key("minivgg") {
         "minivgg".to_string()

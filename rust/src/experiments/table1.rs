@@ -3,10 +3,11 @@
 //!
 //! Paper rows (LeNet5/MNIST ... ResNet18/ImageNet) map onto our scaled
 //! testbed (DESIGN.md §Substitutions): the MLP zoo on synth-digits (+
-//! mlptex on synth-textures) under the native backend, with lenet5 and
-//! minivgg joining when the XLA artifacts are available.  The claim
-//! under test is the *shape*: dithered sparsity >> baseline sparsity at
-//! ~equal accuracy, for both fp32 and int8 training.
+//! mlptex on synth-textures) and the conv rows (lenet5 on digits,
+//! minivgg on textures), all executed by the native backend on a bare
+//! checkout.  The claim under test is the *shape*: dithered sparsity
+//! >> baseline sparsity at ~equal accuracy, for both fp32 and int8
+//! training.
 
 use crate::data;
 use crate::metrics::Table;
@@ -24,7 +25,15 @@ pub struct Cell {
     pub method: String,
     pub acc: f32,
     pub sparsity: f32,
+    /// Mean delta_z sparsity per quantized layer (forward order),
+    /// averaged over the run — the per-layer view behind `sparsity`.
+    pub layer_sparsity: Vec<f32>,
     pub max_bits: u32,
+    /// Mean training loss over the first quarter of steps (smoke tests
+    /// assert convergence from these without re-running the harness).
+    pub loss_start: f32,
+    /// Mean training loss over the last quarter of steps.
+    pub loss_end: f32,
 }
 
 pub const METHODS: [&str; 4] = ["baseline", "dithered", "int8", "int8_dithered"];
@@ -43,27 +52,56 @@ pub fn run(artifacts: &str, models: &[String], scale: Scale, verbose: bool) -> R
         for method in METHODS {
             let mut cfg = TrainConfig::quick(model, method, TABLE_S, scale.steps);
             cfg.verbose = verbose;
-            // conv nets prefer the paper's lower AlexNet lr; MLPs use 0.1
+            // Per-model lr comes from the registry entry (conv models
+            // register the paper's lower conv-net rate); 0.1 is the
+            // MLP default.
             cfg.opt = crate::optim::SgdConfig::paper(
-                if model.contains("vgg") || model.contains("lenet5") { 0.05 } else { 0.1 },
+                entry.lr.unwrap_or(0.1),
                 scale.steps * 2 / 3,
             );
             let res = train(&engine, &ds, &cfg)?;
+            let n = res.history.steps.len();
+            // first/last-quarter windows (whole run when n < 4; empty
+            // slices — and 0.0 means — only in the degenerate n == 0)
+            let quarter = (n / 4).max(1).min(n);
+            let mean_loss = |recs: &[crate::metrics::StepRecord]| -> f32 {
+                recs.iter().map(|r| r.loss).sum::<f32>() / recs.len().max(1) as f32
+            };
+            // mean sparsity per quantized layer over the whole run
+            let n_q = entry.n_qlayers;
+            let mut layer_sparsity = vec![0.0f32; n_q];
+            for rec in &res.history.steps {
+                for (acc, &s) in layer_sparsity.iter_mut().zip(rec.layer_sparsity.iter()) {
+                    *acc += s;
+                }
+            }
+            for s in layer_sparsity.iter_mut() {
+                *s /= n.max(1) as f32;
+            }
             let cell = Cell {
                 model: model.clone(),
                 dataset: entry.dataset.clone(),
                 method: method.to_string(),
                 acc: res.test_acc,
                 sparsity: res.history.mean_sparsity(),
+                layer_sparsity,
                 max_bits: res.history.max_bits(),
+                loss_start: mean_loss(&res.history.steps[..quarter]),
+                loss_end: mean_loss(&res.history.steps[n - quarter..]),
             };
             if verbose {
+                let per_layer: Vec<String> = cell
+                    .layer_sparsity
+                    .iter()
+                    .map(|s| format!("{:.1}", s * 100.0))
+                    .collect();
                 println!(
-                    "  {} / {:<14} acc {:.2}%  sparsity {:.2}%  bits {}",
+                    "  {} / {:<14} acc {:.2}%  sparsity {:.2}% [{}]  bits {}",
                     cell.model,
                     cell.method,
                     cell.acc * 100.0,
                     cell.sparsity * 100.0,
+                    per_layer.join("/"),
                     cell.max_bits
                 );
             }

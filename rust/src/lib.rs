@@ -9,8 +9,9 @@
 //!
 //! * **Runtime** ([`runtime`]) — an [`runtime::Engine`] façade over the
 //!   [`runtime::Backend`] trait:
-//!   - the **native backend** (default): pure-rust CPU MLP
-//!     forward/backward with the paper's compressed backward pass (NSD
+//!   - the **native backend** (default): pure-rust CPU layer-graph
+//!     executor (dense + im2col conv/pool — lenet5 and minivgg run
+//!     natively) with the paper's compressed backward pass (NSD
 //!     dither / meProp top-k / int8) and skip-on-zero sparse backward
 //!     GEMMs — builds and runs with zero external dependencies;
 //!   - the **PJRT backend** (feature `xla`): AOT HLO artifacts authored

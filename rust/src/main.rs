@@ -108,7 +108,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         s: args.f32_or("s", 2.0),
         steps,
         batch: args.usize_or("batch", engine.manifest.train_batch),
-        opt: SgdConfig::paper(args.f32_or("lr", 0.1), steps * 2 / 3),
+        // default lr comes from the registry entry (conv models
+        // register the paper's lower conv-net rate)
+        opt: SgdConfig::paper(args.f32_or("lr", entry.lr.unwrap_or(0.1)), steps * 2 / 3),
         eval_every: args.usize_or("eval-every", (steps / 10).max(1)),
         seed: args.u64_or("seed", 42),
         verbose: true,

@@ -45,6 +45,9 @@ pub struct ModelEntry {
     pub init_path: String,
     pub eval_path: String,
     pub eval_batch: usize,
+    /// Registry-declared base learning rate (conv entries carry the
+    /// paper's lower conv-net rate); `None` = harness default.
+    pub lr: Option<f32>,
     pub grads: Vec<GradArtifact>,
 }
 
@@ -236,6 +239,7 @@ fn parse_model(name: &str, v: &Value) -> Result<ModelEntry> {
             .get("eval_batch")
             .and_then(Value::as_usize)
             .unwrap_or(256),
+        lr: v.get("lr").and_then(Value::as_f64).map(|f| f as f32),
         grads,
     })
 }
@@ -282,6 +286,7 @@ mod tests {
         assert_eq!(e.total_weights(), 392_500);
         assert_eq!(e.grad("dithered", 1).unwrap().path, "g2.hlo.txt");
         assert_eq!(e.methods(), vec!["baseline", "dithered"]);
+        assert_eq!(e.lr, None); // optional, absent in the sample
     }
 
     #[test]

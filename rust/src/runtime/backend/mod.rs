@@ -5,9 +5,10 @@
 //! harness) dispatches through [`Backend`] instead of owning a PJRT
 //! client, so the same training loops run on:
 //!
-//! * [`native`] — the default pure-rust CPU executor: host MLP
-//!   forward/backward with method-compressed backward passes (NSD
-//!   dither, meProp top-k, int8) and skip-on-zero backward GEMMs.
+//! * [`native`] — the default pure-rust CPU executor: host layer-graph
+//!   (dense + im2col conv/pool) forward/backward with
+//!   method-compressed backward passes (NSD dither, meProp top-k,
+//!   int8) and skip-on-zero backward GEMMs.
 //! * [`pjrt`] (feature `xla`) — the AOT HLO artifact executor over the
 //!   PJRT CPU client, unchanged from the original three-layer design.
 //!

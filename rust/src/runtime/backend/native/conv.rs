@@ -1,0 +1,384 @@
+//! Conv/pool kernels for the native executor: im2col patch gathering,
+//! its col2im adjoint, and max pooling with argmax routing.
+//!
+//! Layout contract: activations are NHWC row-major, conv weights HWIO
+//! flattened to a `[k*k*in_ch, out_ch]` GEMM operand. With that layout
+//! a convolution *is* the dense affine kernel over `out_h*out_w`
+//! patch rows per example, so the forward and both compressed backward
+//! GEMMs are the exact same skip-on-zero loops the MLP path runs
+//! ([`super::graph`]) — the SparseProp-style realization of a sparse
+//! backward conv. This module only owns the layout transforms and the
+//! pooling layer.
+
+use super::models::Stage;
+
+/// Shape-resolved conv geometry for one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_ch: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// Build from a planned conv stage (shapes already resolved by
+    /// `ModelSpec::plan`).
+    pub fn of(stage: &Stage, k: usize, stride: usize, pad: usize) -> ConvGeom {
+        ConvGeom {
+            in_h: stage.in_shape[0],
+            in_w: stage.in_shape[1],
+            in_ch: stage.in_shape[2],
+            out_h: stage.out_shape[0],
+            out_w: stage.out_shape[1],
+            out_ch: stage.out_shape[2],
+            k,
+            stride,
+            pad,
+        }
+    }
+
+    /// GEMM reduction length: one gathered patch.
+    pub fn patch_len(&self) -> usize {
+        self.k * self.k * self.in_ch
+    }
+
+    /// Output spatial positions per example.
+    pub fn positions(&self) -> usize {
+        self.out_h * self.out_w
+    }
+
+    pub fn in_numel(&self) -> usize {
+        self.in_h * self.in_w * self.in_ch
+    }
+
+    pub fn out_numel(&self) -> usize {
+        self.positions() * self.out_ch
+    }
+}
+
+/// Gather conv patches for a batch of NHWC images: row `(bi, oy, ox)`
+/// of the result holds that window's `k*k*in_ch` values in `(ky, kx,
+/// c)` order — matching the HWIO weight layout — with out-of-bounds
+/// (padding) positions left at zero.
+pub fn im2col_batch(x: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), batch * g.in_numel());
+    let plen = g.patch_len();
+    let pos = g.positions();
+    let mut out = vec![0.0f32; batch * pos * plen];
+    for bi in 0..batch {
+        let xi = &x[bi * g.in_numel()..(bi + 1) * g.in_numel()];
+        for oy in 0..g.out_h {
+            for ox in 0..g.out_w {
+                let row_off = (bi * pos + oy * g.out_w + ox) * plen;
+                let row = &mut out[row_off..row_off + plen];
+                for ky in 0..g.k {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy >= g.in_h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.k {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if ix < 0 || ix >= g.in_w as isize {
+                            continue;
+                        }
+                        let src = (iy as usize * g.in_w + ix as usize) * g.in_ch;
+                        let dst = (ky * g.k + kx) * g.in_ch;
+                        row[dst..dst + g.in_ch].copy_from_slice(&xi[src..src + g.in_ch]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`im2col_batch`]: scatter-add patch cotangents back onto
+/// the input image (gradients routed through overlapping windows
+/// accumulate; padding positions are dropped). Skips exact zeros — the
+/// patch cotangents inherit the compressed `delta_z` sparsity.
+pub fn col2im_batch(dpatches: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
+    let plen = g.patch_len();
+    let pos = g.positions();
+    debug_assert_eq!(dpatches.len(), batch * pos * plen);
+    let mut dx = vec![0.0f32; batch * g.in_numel()];
+    for bi in 0..batch {
+        let dxi = &mut dx[bi * g.in_numel()..(bi + 1) * g.in_numel()];
+        for oy in 0..g.out_h {
+            for ox in 0..g.out_w {
+                let row_off = (bi * pos + oy * g.out_w + ox) * plen;
+                let row = &dpatches[row_off..row_off + plen];
+                for ky in 0..g.k {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    if iy < 0 || iy >= g.in_h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.k {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        if ix < 0 || ix >= g.in_w as isize {
+                            continue;
+                        }
+                        let dst = (iy as usize * g.in_w + ix as usize) * g.in_ch;
+                        let src = (ky * g.k + kx) * g.in_ch;
+                        for c in 0..g.in_ch {
+                            let v = row[src + c];
+                            if v != 0.0 {
+                                dxi[dst + c] += v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// Pooling geometry for one stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub k: usize,
+    pub stride: usize,
+}
+
+impl PoolGeom {
+    pub fn of(stage: &Stage, k: usize, stride: usize) -> PoolGeom {
+        PoolGeom {
+            h: stage.in_shape[0],
+            w: stage.in_shape[1],
+            c: stage.in_shape[2],
+            out_h: stage.out_shape[0],
+            out_w: stage.out_shape[1],
+            k,
+            stride,
+        }
+    }
+
+    pub fn in_numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn out_numel(&self) -> usize {
+        self.out_h * self.out_w * self.c
+    }
+}
+
+/// Max-pool a batch of NHWC maps. Returns the pooled maps and, per
+/// output element, the within-example input offset of the winning
+/// value (first maximum wins on ties) — the backward routing table.
+pub fn maxpool_forward(x: &[f32], g: &PoolGeom, batch: usize) -> (Vec<f32>, Vec<u32>) {
+    debug_assert_eq!(x.len(), batch * g.in_numel());
+    let (inn, outn) = (g.in_numel(), g.out_numel());
+    let mut z = vec![0.0f32; batch * outn];
+    let mut argmax = vec![0u32; batch * outn];
+    for bi in 0..batch {
+        let xi = &x[bi * inn..(bi + 1) * inn];
+        for oy in 0..g.out_h {
+            for ox in 0..g.out_w {
+                for ch in 0..g.c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
+                    for ky in 0..g.k {
+                        for kx in 0..g.k {
+                            let idx =
+                                ((oy * g.stride + ky) * g.w + ox * g.stride + kx) * g.c + ch;
+                            if xi[idx] > best {
+                                best = xi[idx];
+                                best_idx = idx;
+                            }
+                        }
+                    }
+                    let o = bi * outn + (oy * g.out_w + ox) * g.c + ch;
+                    z[o] = best;
+                    argmax[o] = best_idx as u32;
+                }
+            }
+        }
+    }
+    (z, argmax)
+}
+
+/// Route pooled-output cotangents back to the winning input positions
+/// (overlapping windows accumulate).
+pub fn maxpool_backward(dz: &[f32], argmax: &[u32], g: &PoolGeom, batch: usize) -> Vec<f32> {
+    let (inn, outn) = (g.in_numel(), g.out_numel());
+    debug_assert_eq!(dz.len(), batch * outn);
+    debug_assert_eq!(argmax.len(), batch * outn);
+    let mut dx = vec![0.0f32; batch * inn];
+    for bi in 0..batch {
+        let dxi = &mut dx[bi * inn..(bi + 1) * inn];
+        let go = &dz[bi * outn..(bi + 1) * outn];
+        let am = &argmax[bi * outn..(bi + 1) * outn];
+        for (&idx, &gv) in am.iter().zip(go.iter()) {
+            if gv != 0.0 {
+                dxi[idx as usize] += gv;
+            }
+        }
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn geom(
+        in_h: usize,
+        in_w: usize,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> ConvGeom {
+        ConvGeom {
+            in_h,
+            in_w,
+            in_ch,
+            out_h: (in_h + 2 * pad - k) / stride + 1,
+            out_w: (in_w + 2 * pad - k) / stride + 1,
+            out_ch,
+            k,
+            stride,
+            pad,
+        }
+    }
+
+    #[test]
+    fn im2col_1x1_kernel_is_identity() {
+        let g = geom(3, 2, 2, 4, 1, 1, 0);
+        let x: Vec<f32> = (0..g.in_numel()).map(|v| v as f32).collect();
+        assert_eq!(im2col_batch(&x, &g, 1), x);
+    }
+
+    #[test]
+    fn im2col_2x2_windows_match_manual() {
+        // 3x3 single-channel image, k=2, stride 1, no pad -> 4 windows
+        let g = geom(3, 3, 1, 1, 2, 1, 0);
+        #[rustfmt::skip]
+        let x = vec![
+            0.0, 1.0, 2.0,
+            3.0, 4.0, 5.0,
+            6.0, 7.0, 8.0,
+        ];
+        let p = im2col_batch(&x, &g, 1);
+        #[rustfmt::skip]
+        let expect = vec![
+            0.0, 1.0, 3.0, 4.0,
+            1.0, 2.0, 4.0, 5.0,
+            3.0, 4.0, 6.0, 7.0,
+            4.0, 5.0, 7.0, 8.0,
+        ];
+        assert_eq!(p, expect);
+    }
+
+    #[test]
+    fn im2col_pads_with_zeros() {
+        // 2x2 image, k=3, pad=1 -> output 2x2; the (0,0) window's first
+        // row/column fall in the padding.
+        let g = geom(2, 2, 1, 1, 3, 1, 1);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let p = im2col_batch(&x, &g, 1);
+        assert_eq!(p.len(), 4 * 9);
+        // window at (0,0): rows [pad,pad,pad | pad,1,2 | pad,3,4]
+        assert_eq!(&p[..9], &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 3.0, 4.0]);
+        // window at (1,1): [1,2,pad | 3,4,pad | pad,pad,pad]
+        assert_eq!(&p[27..36], &[1.0, 2.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_the_adjoint_of_im2col() {
+        // <im2col(x), P> == <x, col2im(P)> for random x, P — the
+        // dot-product test that pins every index mapping.
+        check("col2im adjoint", 40, |gen: &mut Gen| {
+            let k = gen.usize_in(1..=3);
+            let pad = gen.usize_in(0..=1);
+            let stride = gen.usize_in(1..=2);
+            let in_ch = gen.usize_in(1..=3);
+            let side = k + gen.usize_in(0..=3);
+            let g = geom(side, side, in_ch, 2, k, stride, pad);
+            let batch = gen.usize_in(1..=2);
+            let mut rng = Rng::new(gen.u32() as u64);
+            let x: Vec<f32> = (0..batch * g.in_numel()).map(|_| rng.normal()).collect();
+            let p: Vec<f32> = (0..batch * g.positions() * g.patch_len())
+                .map(|_| rng.normal())
+                .collect();
+            let cols = im2col_batch(&x, &g, batch);
+            let dx = col2im_batch(&p, &g, batch);
+            let lhs: f64 = cols.iter().zip(p.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let rhs: f64 = x.iter().zip(dx.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs())
+        });
+    }
+
+    #[test]
+    fn maxpool_picks_maxima_and_routes_back() {
+        // 4x4 single-channel, 2x2 pool, stride 2
+        let g = PoolGeom { h: 4, w: 4, c: 1, out_h: 2, out_w: 2, k: 2, stride: 2 };
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0, 0.0, 0.0,
+            3.0, 4.0, 0.0, 5.0,
+            6.0, 0.0, 1.0, 1.0,
+            0.0, 7.0, 1.0, 9.0,
+        ];
+        let (z, am) = maxpool_forward(&x, &g, 1);
+        assert_eq!(z, vec![4.0, 5.0, 7.0, 9.0]);
+        assert_eq!(am, vec![5, 7, 13, 15]);
+        let dx = maxpool_backward(&[1.0, 2.0, 3.0, 4.0], &am, &g, 1);
+        let mut expect = vec![0.0f32; 16];
+        expect[5] = 1.0;
+        expect[7] = 2.0;
+        expect[13] = 3.0;
+        expect[15] = 4.0;
+        assert_eq!(dx, expect);
+    }
+
+    #[test]
+    fn maxpool_first_max_wins_ties() {
+        let g = PoolGeom { h: 2, w: 2, c: 1, out_h: 1, out_w: 1, k: 2, stride: 2 };
+        let (z, am) = maxpool_forward(&[3.0, 3.0, 3.0, 3.0], &g, 1);
+        assert_eq!(z, vec![3.0]);
+        assert_eq!(am, vec![0]);
+    }
+
+    #[test]
+    fn overlapping_pool_accumulates_backward() {
+        // 3x2 input, 2x2 windows at stride 1 -> 2x1 outputs; the middle
+        // row's 5.0 wins both windows, so its gradient accumulates.
+        let g = PoolGeom { h: 3, w: 2, c: 1, out_h: 2, out_w: 1, k: 2, stride: 1 };
+        #[rustfmt::skip]
+        let x = vec![
+            0.0, 0.0,
+            5.0, 0.0,
+            2.0, 0.0,
+        ];
+        let (z, am) = maxpool_forward(&x, &g, 1);
+        assert_eq!(z, vec![5.0, 5.0]);
+        assert_eq!(am, vec![2, 2]);
+        let dx = maxpool_backward(&[1.0, 10.0], &am, &g, 1);
+        assert_eq!(dx, vec![0.0, 0.0, 11.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_channels_pool_independently() {
+        // 2x2x2: channel 0 and 1 interleaved (HWC)
+        let g = PoolGeom { h: 2, w: 2, c: 2, out_h: 1, out_w: 1, k: 2, stride: 2 };
+        let x = vec![1.0, 8.0, 2.0, 7.0, 3.0, 6.0, 4.0, 5.0];
+        let (z, am) = maxpool_forward(&x, &g, 1);
+        assert_eq!(z, vec![4.0, 8.0]);
+        assert_eq!(am, vec![6, 1]);
+    }
+}

@@ -1,0 +1,711 @@
+//! Native layer-graph executor: forward/backward over conv, pool,
+//! flatten and dense stages with the paper's compressed backward pass
+//! (Eqs. 7–9) in pure rust — the generalization of the original
+//! MLP-only executor that brings Table 1's conv rows to a bare
+//! checkout.
+//!
+//! The forward is the ordinary stage walk (dense affine, im2col conv,
+//! max pool; optionally int8 fake-quantized, Banner et al.); the
+//! backward compresses each weighted stage's pre-activation gradient
+//! `delta_z` with the configured method ([`super::methods`]) and then
+//! runs *skip-on-zero* backward GEMMs: rows of the compressed
+//! `delta_z` are CSR-encoded ([`crate::sparse::CsrVec`]) and only
+//! their nonzeros touch the weight and input-gradient accumulators.
+//! Conv layers route through the **same two sparse GEMMs** as dense
+//! layers — an im2col'd convolution is an affine map over
+//! `out_h*out_w` patch rows per example ([`super::conv`]) — which is
+//! the SparseProp-style vectorizable host realization of the savings
+//! Eq. 12 models. Pool and flatten stages carry no parameters and
+//! just route cotangents.
+
+use super::conv::{self, ConvGeom, PoolGeom};
+use super::methods::{self, Method};
+use super::models::{LayerSpec, ModelSpec, Plan};
+use crate::runtime::step::{EvalOut, GradOut};
+use crate::sparse::CsrVec;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Symmetric per-tensor 8-bit fake quantization (layers.py::fq8).
+pub fn fq8(values: &[f32]) -> Vec<f32> {
+    let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return values.to_vec();
+    }
+    let scale = amax / 127.0;
+    values
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) * scale)
+        .collect()
+}
+
+/// z = x @ w + b (x: rows×din, w: din×dout row-major). Skips zero
+/// input entries (ReLU and im2col padding make many), k-i-j loop order
+/// for cache locality. Dense layers call it with rows = batch; conv
+/// layers with rows = batch * out positions over im2col patches.
+pub(crate) fn affine(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    let mut z = vec![0.0f32; rows * dout];
+    for bi in 0..rows {
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        zrow.copy_from_slice(b);
+        let xrow = &x[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[a * dout..(a + 1) * dout];
+            for (zv, &wv) in zrow.iter_mut().zip(wrow.iter()) {
+                *zv += xv * wv;
+            }
+        }
+    }
+    z
+}
+
+/// w (din×dout) -> w^T (dout×din), so the input-gradient GEMM reads
+/// contiguous rows.
+pub(crate) fn transpose(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
+    let mut wt = vec![0.0f32; w.len()];
+    for a in 0..din {
+        for j in 0..dout {
+            wt[j * din + a] = w[a * dout + j];
+        }
+    }
+    wt
+}
+
+/// Eq. 9 skip-on-zero GEMM pair: `dw += x^T . rows`, `db += column
+/// sums of rows`. Shared by dense stages (row = one example) and conv
+/// stages (row = one spatial position of one example, x = its im2col
+/// patch).
+pub(crate) fn sparse_param_gemm(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(xq.len(), rows.len() * din);
+    debug_assert_eq!(dw.len(), din * dout);
+    debug_assert_eq!(db.len(), dout);
+    for (bi, row) in rows.iter().enumerate() {
+        if row.nnz() == 0 {
+            continue;
+        }
+        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            db[j as usize] += v;
+        }
+        let xrow = &xq[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let dst = &mut dw[a * dout..(a + 1) * dout];
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                dst[j as usize] += xv * v;
+            }
+        }
+    }
+}
+
+/// Eq. 8 skip-on-zero GEMM: `g_in = rows . W^T` (wt: dout×din,
+/// pre-transposed). Returns one din-row per input row.
+pub(crate) fn sparse_input_gemm(rows: &[CsrVec], wt: &[f32], din: usize) -> Vec<f32> {
+    let mut gp = vec![0.0f32; rows.len() * din];
+    for (bi, row) in rows.iter().enumerate() {
+        if row.nnz() == 0 {
+            continue;
+        }
+        let dst = &mut gp[bi * din..(bi + 1) * din];
+        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            let wrow = &wt[(j as usize) * din..(j as usize + 1) * din];
+            for (d, &wv) in dst.iter_mut().zip(wrow.iter()) {
+                *d += v * wv;
+            }
+        }
+    }
+    gp
+}
+
+/// Backward residual of one stage.
+enum StageRes {
+    /// Dense: the GEMM input activations (fq8'd when int8), batch×din.
+    Dense { xq: Vec<f32> },
+    /// Conv: im2col patches (fq8'd inputs when int8),
+    /// batch×positions×patch_len, plus the resolved geometry.
+    Conv { patches: Vec<f32>, geom: ConvGeom },
+    /// Pool: within-example argmax offsets, batch×out_numel.
+    Pool { argmax: Vec<u32>, geom: PoolGeom },
+    Flatten,
+}
+
+/// Residuals of one forward pass, as consumed by the backward rules.
+struct Forward {
+    res: Vec<StageRes>,
+    /// Per-stage fq8'd weights when int8 (None = use `params` directly).
+    wq: Vec<Option<Vec<f32>>>,
+    /// ReLU masks (z > 0) for stages with `relu`, empty otherwise.
+    mask: Vec<Vec<bool>>,
+    /// Final logits, batch×classes.
+    logits: Vec<f32>,
+}
+
+fn forward(plan: &Plan, params: &[Tensor], x: &[f32], batch: usize, int8: bool) -> Forward {
+    let n = plan.stages.len();
+    let mut res = Vec::with_capacity(n);
+    let mut wq: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+    let mut mask: Vec<Vec<bool>> = vec![Vec::new(); n];
+    let mut h = x.to_vec();
+    for (si, st) in plan.stages.iter().enumerate() {
+        match st.layer {
+            LayerSpec::Dense { out } => {
+                let din = st.in_shape[0];
+                let p = st.param_idx.unwrap();
+                let w = params[p].data();
+                let b = params[p + 1].data();
+                let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
+                let wl = if int8 { Some(fq8(w)) } else { None };
+                let weff: &[f32] = wl.as_deref().unwrap_or(w);
+                h = affine(&hq, weff, b, batch, din, out);
+                res.push(StageRes::Dense { xq: hq });
+                wq[si] = wl;
+            }
+            LayerSpec::Conv2d { k, stride, pad, .. } => {
+                let geom = ConvGeom::of(st, k, stride, pad);
+                let p = st.param_idx.unwrap();
+                let w = params[p].data();
+                let b = params[p + 1].data();
+                let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
+                let wl = if int8 { Some(fq8(w)) } else { None };
+                let weff: &[f32] = wl.as_deref().unwrap_or(w);
+                let patches = conv::im2col_batch(&hq, &geom, batch);
+                let (rows, din) = (batch * geom.positions(), geom.patch_len());
+                h = affine(&patches, weff, b, rows, din, geom.out_ch);
+                res.push(StageRes::Conv { patches, geom });
+                wq[si] = wl;
+            }
+            LayerSpec::MaxPool2d { k, stride } => {
+                let geom = PoolGeom::of(st, k, stride);
+                let (z, argmax) = conv::maxpool_forward(&h, &geom, batch);
+                h = z;
+                res.push(StageRes::Pool { argmax, geom });
+            }
+            LayerSpec::Flatten => {
+                // NHWC row-major is already flat; only the tracked
+                // shape changes.
+                res.push(StageRes::Flatten);
+            }
+        }
+        if st.relu {
+            mask[si] = h.iter().map(|&v| v > 0.0).collect();
+            for v in h.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    Forward { res, wq, mask, logits: h }
+}
+
+/// Mean softmax cross-entropy + correct count; optionally the logits
+/// cotangent `(softmax - onehot) / batch` (model.py::cross_entropy).
+fn softmax_xent(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+    want_grad: bool,
+) -> Result<(f32, f32, Vec<f32>)> {
+    let batch = y.len();
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f32;
+    let mut dlogits = if want_grad { vec![0.0f32; logits.len()] } else { Vec::new() };
+    let inv_b = 1.0 / batch as f32;
+    for bi in 0..batch {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let label = y[bi];
+        ensure!(
+            label >= 0 && (label as usize) < classes,
+            "label {label} out of range for {classes} classes (example {bi})"
+        );
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - max).exp();
+        }
+        let lse = max + sum.ln();
+        loss += (lse - row[label as usize]) as f64;
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best == label as usize {
+            correct += 1.0;
+        }
+        if want_grad {
+            let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+            for (c, (&v, d)) in row.iter().zip(drow.iter_mut()).enumerate() {
+                let p = (v - lse).exp();
+                *d = (p - if c == label as usize { 1.0 } else { 0.0 }) * inv_b;
+            }
+        }
+    }
+    Ok(((loss / batch as f64) as f32, correct, dlogits))
+}
+
+fn check_inputs(
+    spec: &ModelSpec,
+    plan: &Plan,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+) -> Result<usize> {
+    ensure!(
+        params.len() == plan.n_params(),
+        "model '{}' expects {} params, got {}",
+        spec.name,
+        plan.n_params(),
+        params.len()
+    );
+    for (pi, info) in plan.params.iter().enumerate() {
+        ensure!(
+            params[pi].shape() == &info.shape[..],
+            "param {} has shape {:?}, expected {:?}",
+            info.name,
+            params[pi].shape(),
+            info.shape
+        );
+    }
+    let batch = y.len();
+    ensure!(batch > 0, "empty batch");
+    ensure!(
+        x.len() == batch * spec.input_numel(),
+        "x has {} values, expected {} (batch {batch} x input {})",
+        x.len(),
+        batch * spec.input_numel(),
+        spec.input_numel()
+    );
+    Ok(batch)
+}
+
+/// One gradient step: forward, loss, method-compressed backward with
+/// sparse GEMMs. Gradients are positional with `Plan::params`
+/// (`conv1_w, conv1_b, ..., fc1_w, ...`).
+pub fn grad_step(
+    spec: &ModelSpec,
+    method: Method,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+    seed: u32,
+    s: f32,
+) -> Result<GradOut> {
+    let (out, _) = grad_step_traced(spec, method, params, x, y, seed, s)?;
+    Ok(out)
+}
+
+/// [`grad_step`], additionally returning the compressed `delta_z`
+/// tensor of every quantized layer (forward order). The Δ-grid
+/// property tests and histogram harnesses inspect conv feature-map
+/// gradients through this — a conv bias gradient is the *position sum*
+/// of `delta_z`, not the map itself, so the batch-1 bias-grad trick
+/// that works for dense layers cannot observe conv quantization. The
+/// traces are moved out of the backward pass, not copied.
+pub fn grad_step_traced(
+    spec: &ModelSpec,
+    method: Method,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+    seed: u32,
+    s: f32,
+) -> Result<(GradOut, Vec<Vec<f32>>)> {
+    let plan = spec.plan()?;
+    let batch = check_inputs(spec, &plan, params, x, y)?;
+    let fwd = forward(&plan, params, x, batch, method.int8_forward());
+    let (loss, correct, dlogits) = softmax_xent(&fwd.logits, y, spec.num_classes(), true)?;
+
+    let mut grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+    let mut sparsity = vec![0.0f32; plan.n_qlayers];
+    let mut max_level = vec![0.0f32; plan.n_qlayers];
+    let mut trace: Vec<Vec<f32>> = (0..plan.n_qlayers).map(|_| Vec::new()).collect();
+
+    // g = cotangent of the current stage's output, walked from the top
+    // layer down.
+    let mut g = dlogits;
+    for (si, st) in plan.stages.iter().enumerate().rev() {
+        // The stage's own ReLU comes first in the reverse walk: mask
+        // the incoming cotangent down to pre-activation `delta_z`
+        // before it is compressed.
+        if st.relu {
+            for (gv, &m) in g.iter_mut().zip(fwd.mask[si].iter()) {
+                if !m {
+                    *gv = 0.0;
+                }
+            }
+        }
+        match (&st.layer, &fwd.res[si]) {
+            (LayerSpec::Dense { out }, StageRes::Dense { xq }) => {
+                let (din, dout) = (st.in_shape[0], *out);
+                let q = st.qlayer.unwrap();
+                let (qg, stats) =
+                    methods::compress_grad(method, &g, batch, dout, methods::fold_seed(seed, q), s);
+                sparsity[q] = stats.sparsity;
+                max_level[q] = stats.max_level;
+
+                // CSR-encode each example row of delta_z-tilde once;
+                // both backward GEMMs then skip its zeros entirely.
+                let rows: Vec<CsrVec> = (0..batch)
+                    .map(|bi| CsrVec::encode(&qg[bi * dout..(bi + 1) * dout]))
+                    .collect();
+                trace[q] = qg;
+
+                let p = st.param_idx.unwrap();
+                let mut dw = vec![0.0f32; din * dout];
+                let mut db = vec![0.0f32; dout];
+                sparse_param_gemm(&rows, xq, din, dout, &mut dw, &mut db);
+                if si > 0 {
+                    let weff: &[f32] = fwd.wq[si].as_deref().unwrap_or(params[p].data());
+                    let wt = transpose(weff, din, dout);
+                    g = sparse_input_gemm(&rows, &wt, din);
+                }
+                grads[p] = Tensor::from_vec(&[din, dout], dw);
+                grads[p + 1] = Tensor::from_vec(&[dout], db);
+            }
+            (LayerSpec::Conv2d { .. }, StageRes::Conv { patches, geom }) => {
+                let q = st.qlayer.unwrap();
+                // The delta_z feature maps (batch×positions×out_ch) are
+                // compressed as one tensor with per-example rows, so
+                // meProp's top-k keeps k entries per example map and
+                // NSD's Delta comes from the whole layer — mirroring
+                // the dense path.
+                let (qg, stats) = methods::compress_grad(
+                    method,
+                    &g,
+                    batch,
+                    geom.out_numel(),
+                    methods::fold_seed(seed, q),
+                    s,
+                );
+                sparsity[q] = stats.sparsity;
+                max_level[q] = stats.max_level;
+
+                // CSR per (example, position) row: the backward GEMMs
+                // reduce over out_ch at each spatial position.
+                let oc = geom.out_ch;
+                let rows: Vec<CsrVec> = (0..batch * geom.positions())
+                    .map(|r| CsrVec::encode(&qg[r * oc..(r + 1) * oc]))
+                    .collect();
+                trace[q] = qg;
+
+                let p = st.param_idx.unwrap();
+                let plen = geom.patch_len();
+                let mut dw = vec![0.0f32; plen * oc];
+                let mut db = vec![0.0f32; oc];
+                sparse_param_gemm(&rows, patches, plen, oc, &mut dw, &mut db);
+                if si > 0 {
+                    let weff: &[f32] = fwd.wq[si].as_deref().unwrap_or(params[p].data());
+                    let wt = transpose(weff, plen, oc);
+                    let dpatches = sparse_input_gemm(&rows, &wt, plen);
+                    g = conv::col2im_batch(&dpatches, geom, batch);
+                }
+                grads[p] = Tensor::from_vec(params[p].shape(), dw);
+                grads[p + 1] = Tensor::from_vec(&[oc], db);
+            }
+            (LayerSpec::MaxPool2d { .. }, StageRes::Pool { argmax, geom }) => {
+                if si > 0 {
+                    g = conv::maxpool_backward(&g, argmax, geom, batch);
+                }
+            }
+            (LayerSpec::Flatten, StageRes::Flatten) => {}
+            _ => unreachable!("stage/residual mismatch at stage {si}"),
+        }
+    }
+
+    Ok((GradOut { grads, loss, correct, sparsity, max_level }, trace))
+}
+
+/// One eval step: baseline fp32 forward + loss/correct (matching the
+/// AOT eval artifacts, which always evaluate un-instrumented).
+pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+    let plan = spec.plan()?;
+    let batch = check_inputs(spec, &plan, params, x, y)?;
+    let fwd = forward(&plan, params, x, batch, false);
+    let (loss, correct, _) = softmax_xent(&fwd.logits, y, spec.num_classes(), false)?;
+    Ok(EvalOut { loss, correct })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec::mlp("tiny", &[4, 3, 2], "digits", 4, vec!["baseline".into(), "dithered".into()])
+    }
+
+    /// conv(2, k3, pad 1) -> pool(2) -> flatten -> dense(3) on 6x6x1.
+    fn tiny_conv_spec() -> ModelSpec {
+        ModelSpec {
+            name: "tinyconv".into(),
+            input_shape: vec![6, 6, 1],
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into(), "dithered".into()],
+            lr: None,
+        }
+    }
+
+    fn random_params(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+        let plan = spec.plan().unwrap();
+        let mut rng = Rng::new(seed);
+        plan.params
+            .iter()
+            .map(|info| {
+                let scale = if info.shape.len() == 1 { 0.1 } else { 0.5 };
+                Tensor::from_vec(
+                    &info.shape,
+                    (0..info.numel()).map(|_| rng.normal() * scale).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn affine_matches_manual() {
+        // x: 1x2, w: 2x2, b: 2
+        let z = affine(&[1.0, 2.0], &[10.0, 20.0, 30.0, 40.0], &[1.0, 2.0], 1, 2, 2);
+        // z0 = 1*10 + 2*30 + 1 = 71; z1 = 1*20 + 2*40 + 2 = 102
+        assert_eq!(z, vec![71.0, 102.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let w: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2x3
+        let wt = transpose(&w, 2, 3);
+        assert_eq!(wt, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&wt, 3, 2), w);
+    }
+
+    #[test]
+    fn fq8_is_idempotent_and_range_preserving() {
+        let v = vec![0.5, -1.0, 0.25, 0.0];
+        let q = fq8(&v);
+        assert_eq!(q.iter().cloned().fold(0.0f32, |m, x| m.max(x.abs())), 1.0);
+        let q2 = fq8(&q);
+        for (a, b) in q.iter().zip(q2.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(fq8(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_grad_rows_sum_to_zero() {
+        let logits = vec![0.3, -0.2, 1.1, 0.0, 0.0, 0.0];
+        let (loss, correct, g) = softmax_xent(&logits, &[2, 0], 3, true).unwrap();
+        assert!(loss > 0.0);
+        assert!((0.0..=2.0).contains(&correct));
+        for bi in 0..2 {
+            let sum: f32 = g[bi * 3..(bi + 1) * 3].iter().sum();
+            assert!(sum.abs() < 1e-6, "grad row {bi} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn softmax_xent_rejects_bad_labels() {
+        assert!(softmax_xent(&[0.0, 0.0], &[2], 2, false).is_err());
+        assert!(softmax_xent(&[0.0, 0.0], &[-1], 2, false).is_err());
+    }
+
+    #[test]
+    fn grad_step_shapes_and_baseline_loss_matches_eval() {
+        let spec = tiny_spec();
+        let params = random_params(&spec, 3);
+        let x: Vec<f32> = {
+            let mut rng = Rng::new(7);
+            (0..2 * 4).map(|_| rng.uniform()).collect()
+        };
+        let y = [1, 0];
+        let out = grad_step(&spec, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        assert_eq!(out.grads.len(), 4);
+        assert_eq!(out.grads[0].shape(), &[4, 3]);
+        assert_eq!(out.grads[3].shape(), &[2]);
+        assert_eq!(out.sparsity.len(), 2);
+        assert_eq!(out.max_level.len(), 2);
+        let ev = eval_step(&spec, &params, &x, &y).unwrap();
+        assert!((out.loss - ev.loss).abs() < 1e-6);
+        assert_eq!(out.correct, ev.correct);
+    }
+
+    #[test]
+    fn dithered_s0_equals_baseline_exactly() {
+        let spec = tiny_spec();
+        let params = random_params(&spec, 5);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..4 * 4).map(|_| rng.uniform()).collect();
+        let y = [0, 1, 1, 0];
+        let b = grad_step(&spec, Method::Baseline, &params, &x, &y, 9, 0.0).unwrap();
+        let d = grad_step(&spec, Method::Dithered, &params, &x, &y, 9, 0.0).unwrap();
+        for (gb, gd) in b.grads.iter().zip(d.grads.iter()) {
+            assert_eq!(gb.data(), gd.data());
+        }
+    }
+
+    #[test]
+    fn conv_forward_matches_naive_convolution() {
+        // Direct NHWC convolution reference against the im2col+affine
+        // path, on the tiny conv topology's first stage.
+        let spec = tiny_conv_spec();
+        let plan = spec.plan().unwrap();
+        let st = &plan.stages[0];
+        let LayerSpec::Conv2d { out_ch, k, stride, pad } = st.layer else { unreachable!() };
+        let geom = ConvGeom::of(st, k, stride, pad);
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..geom.in_numel()).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..geom.patch_len() * out_ch).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..out_ch).map(|_| rng.normal()).collect();
+
+        let patches = conv::im2col_batch(&x, &geom, 1);
+        let z = affine(&patches, &w, &b, geom.positions(), geom.patch_len(), out_ch);
+
+        let mut expect = vec![0.0f32; geom.out_numel()];
+        for oy in 0..geom.out_h {
+            for ox in 0..geom.out_w {
+                for oc in 0..out_ch {
+                    let mut acc = b[oc];
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0
+                                || ix < 0
+                                || iy >= geom.in_h as isize
+                                || ix >= geom.in_w as isize
+                            {
+                                continue;
+                            }
+                            let base = (iy as usize * geom.in_w + ix as usize) * geom.in_ch;
+                            for c in 0..geom.in_ch {
+                                let xv = x[base + c];
+                                let wv = w[((ky * k + kx) * geom.in_ch + c) * out_ch + oc];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    expect[(oy * geom.out_w + ox) * out_ch + oc] = acc;
+                }
+            }
+        }
+        for (a, e) in z.iter().zip(expect.iter()) {
+            assert!((a - e).abs() < 1e-4, "conv mismatch: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn conv_grad_step_shapes_and_loss_matches_eval() {
+        let spec = tiny_conv_spec();
+        let params = random_params(&spec, 13);
+        let mut rng = Rng::new(17);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal() * 0.7).collect();
+        let y = [0, 2, 1, 2];
+        let out = grad_step(&spec, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        assert_eq!(out.grads.len(), 4);
+        assert_eq!(out.grads[0].shape(), &[3, 3, 1, 2]); // conv1_w
+        assert_eq!(out.grads[1].shape(), &[2]); // conv1_b
+        assert_eq!(out.grads[2].shape(), &[18, 3]); // fc1_w
+        assert_eq!(out.sparsity.len(), 2); // conv1 + fc1
+        let ev = eval_step(&spec, &params, &x, &y).unwrap();
+        assert!((out.loss - ev.loss).abs() < 1e-6);
+        assert_eq!(out.correct, ev.correct);
+    }
+
+    #[test]
+    fn conv_dithered_s0_equals_baseline_exactly() {
+        let spec = tiny_conv_spec();
+        let params = random_params(&spec, 19);
+        let mut rng = Rng::new(23);
+        let x: Vec<f32> = (0..2 * 36).map(|_| rng.normal()).collect();
+        let y = [1, 0];
+        let b = grad_step(&spec, Method::Baseline, &params, &x, &y, 4, 0.0).unwrap();
+        let d = grad_step(&spec, Method::Dithered, &params, &x, &y, 4, 0.0).unwrap();
+        for (gb, gd) in b.grads.iter().zip(d.grads.iter()) {
+            assert_eq!(gb.data(), gd.data());
+        }
+    }
+
+    #[test]
+    fn traced_delta_z_matches_reported_stats() {
+        let spec = tiny_conv_spec();
+        let params = random_params(&spec, 29);
+        let mut rng = Rng::new(31);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal()).collect();
+        let y = [0, 1, 2, 0];
+        let (out, trace) =
+            grad_step_traced(&spec, Method::Dithered, &params, &x, &y, 8, 2.0).unwrap();
+        assert_eq!(trace.len(), 2);
+        // conv trace: batch 4 x 36 positions x 2 channels
+        assert_eq!(trace[0].len(), 4 * 36 * 2);
+        // dense trace: batch 4 x 3 classes
+        assert_eq!(trace[1].len(), 4 * 3);
+        for (q, t) in trace.iter().enumerate() {
+            let zeros = t.iter().filter(|&&v| v == 0.0).count();
+            let sp = zeros as f32 / t.len() as f32;
+            assert!(
+                (sp - out.sparsity[q]).abs() < 1e-6,
+                "layer {q}: trace sparsity {sp} vs reported {}",
+                out.sparsity[q]
+            );
+        }
+    }
+
+    #[test]
+    fn meprop_keeps_rows_sparse_on_conv_maps() {
+        let spec = ModelSpec {
+            methods: vec!["baseline".into(), "meprop_k5".into()],
+            ..tiny_conv_spec()
+        };
+        let params = random_params(&spec, 37);
+        let mut rng = Rng::new(41);
+        let x: Vec<f32> = (0..3 * 36).map(|_| rng.normal()).collect();
+        let y = [2, 1, 0];
+        let (_, trace) =
+            grad_step_traced(&spec, Method::Meprop(5), &params, &x, &y, 0, 0.0).unwrap();
+        // conv map: each example's 72-value map keeps at most 5 (plus ties)
+        for bi in 0..3 {
+            let nnz = trace[0][bi * 72..(bi + 1) * 72]
+                .iter()
+                .filter(|&&v| v != 0.0)
+                .count();
+            assert!(nnz <= 8, "example {bi} kept {nnz} conv delta_z entries");
+        }
+    }
+
+    #[test]
+    fn bad_param_shapes_rejected() {
+        let spec = tiny_spec();
+        let mut params = random_params(&spec, 1);
+        params[0] = Tensor::zeros(&[4, 4]);
+        let err = grad_step(&spec, Method::Baseline, &params, &[0.0; 4], &[0], 0, 0.0);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("fc1_w"));
+    }
+}

@@ -3,17 +3,24 @@
 //!
 //! SparseProp (Nikdan et al., 2023) showed backward passes sparse in
 //! `delta_z` run efficiently in plain vectorized CPU code; this module
-//! is that realization for the dithered-backprop family. Model
-//! topologies come from a `models.json` registry ([`models`], parsed
-//! with `util::json` exactly like the AOT manifest) with a built-in
-//! default zoo, so `Engine::load` works on a bare checkout.
+//! is that realization for the dithered-backprop family — including
+//! the conv topologies (lenet5, minivgg) that carry Table 1's headline
+//! rows. Model topologies come from a `models.json` registry
+//! ([`models`], parsed with `util::json` exactly like the AOT
+//! manifest) with a built-in default zoo, so `Engine::load` works on a
+//! bare checkout.
 //!
-//! * [`models`]  — MLP topology registry, shared `ModelEntry` surface.
+//! * [`models`]  — layer-graph topology registry, shared `ModelEntry`
+//!   surface (MLP dims shorthand + conv/pool/flatten/dense graphs).
 //! * [`methods`] — `delta_z` compression (NSD / detq / int8 / meProp).
-//! * [`mlp`]     — forward/backward with skip-on-zero backward GEMMs.
+//! * [`graph`]   — the layer-graph executor: forward/backward with
+//!   skip-on-zero backward GEMMs shared by dense and im2col'd conv
+//!   stages.
+//! * [`conv`]    — im2col/col2im and max-pool kernels.
 
+pub mod conv;
+pub mod graph;
 pub mod methods;
-pub mod mlp;
 pub mod models;
 
 use super::{Backend, Capabilities, SessionSpec};
@@ -26,12 +33,12 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 pub use methods::Method;
-pub use models::MlpSpec;
+pub use models::{LayerSpec, ModelSpec, Plan};
 
 /// Pure-rust CPU executor over the native model registry.
 pub struct NativeBackend {
     manifest: Manifest,
-    specs: BTreeMap<String, MlpSpec>,
+    specs: BTreeMap<String, ModelSpec>,
 }
 
 impl NativeBackend {
@@ -61,7 +68,7 @@ impl NativeBackend {
         let reg = models::parse_registry(text)?;
         let mut entries = BTreeMap::new();
         for (name, spec) in &reg.specs {
-            entries.insert(name.clone(), spec.entry());
+            entries.insert(name.clone(), spec.entry()?);
         }
         Ok(NativeBackend {
             manifest: Manifest {
@@ -75,7 +82,9 @@ impl NativeBackend {
         })
     }
 
-    fn spec(&self, model: &str) -> Result<&MlpSpec> {
+    /// The parsed topology behind a registry entry (tests and the
+    /// trace-based harnesses drive `graph::grad_step_traced` with it).
+    pub fn model_spec(&self, model: &str) -> Result<&ModelSpec> {
         self.specs.get(model).ok_or_else(|| {
             anyhow!(
                 "unknown native model '{model}' (available: {:?})",
@@ -94,7 +103,7 @@ impl Backend for NativeBackend {
         Capabilities {
             platform: "native-cpu".to_string(),
             compiled: false,
-            conv: false,
+            conv: true,
             methods: [
                 "baseline",
                 "dithered",
@@ -114,7 +123,7 @@ impl Backend for NativeBackend {
     }
 
     fn prepare(&self, spec: &SessionSpec) -> Result<()> {
-        let model = self.spec(&spec.model)?;
+        let model = self.model_spec(&spec.model)?;
         Method::parse(&spec.method)?;
         // Mirror the XLA backend, which only has artifacts for the
         // methods a model registers: reject unadvertised methods so
@@ -131,19 +140,23 @@ impl Backend for NativeBackend {
     }
 
     /// He init, mirroring the L2 zoo: weights `normal * sqrt(2/fan_in)`
-    /// from a per-layer forked stream, biases zero. Deterministic in
-    /// `seed`.
+    /// from a per-layer forked stream (fan_in = `k*k*in_ch` for conv,
+    /// `din` for dense), biases zero. Deterministic in `seed`.
     fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
-        let spec = self.spec(model)?;
+        let spec = self.model_spec(model)?;
+        let plan = spec.plan()?;
         let mut root = Rng::new(seed as u64);
-        let mut params = Vec::with_capacity(2 * spec.n_layers());
-        for i in 0..spec.n_layers() {
-            let (din, dout) = (spec.dims[i], spec.dims[i + 1]);
-            let mut layer_rng = root.fork(i as u64);
-            let scale = (2.0 / din as f32).sqrt();
-            let w: Vec<f32> = (0..din * dout).map(|_| layer_rng.normal() * scale).collect();
-            params.push(Tensor::from_vec(&[din, dout], w));
-            params.push(Tensor::zeros(&[dout]));
+        let mut params = Vec::with_capacity(plan.n_params());
+        for (li, pair) in plan.params.chunks(2).enumerate() {
+            let (w, b) = (&pair[0], &pair[1]);
+            // fan_in = product of every weight dim but the output one
+            // ([din, dout] dense, [k, k, in_ch, out_ch] conv).
+            let fan_in: usize = w.shape[..w.shape.len() - 1].iter().product();
+            let mut layer_rng = root.fork(li as u64);
+            let scale = (2.0 / fan_in as f32).sqrt();
+            let data: Vec<f32> = (0..w.numel()).map(|_| layer_rng.normal() * scale).collect();
+            params.push(Tensor::from_vec(&w.shape, data));
+            params.push(Tensor::zeros(&b.shape));
         }
         Ok(params)
     }
@@ -157,9 +170,9 @@ impl Backend for NativeBackend {
         seed: u32,
         s: f32,
     ) -> Result<GradOut> {
-        let model = self.spec(&spec.model)?;
+        let model = self.model_spec(&spec.model)?;
         let method = Method::parse(&spec.method)?;
-        mlp::grad_step(model, method, params, x, y, seed, s)
+        graph::grad_step(model, method, params, x, y, seed, s)
     }
 
     fn eval_step(
@@ -169,8 +182,8 @@ impl Backend for NativeBackend {
         x: &[f32],
         y: &[i32],
     ) -> Result<EvalOut> {
-        let model = self.spec(&spec.model)?;
-        mlp::eval_step(model, params, x, y)
+        let model = self.model_spec(&spec.model)?;
+        graph::eval_step(model, params, x, y)
     }
 }
 
@@ -184,8 +197,10 @@ mod tests {
         assert_eq!(b.platform(), "native-cpu");
         assert!(b.manifest().models.contains_key("mlp500"));
         assert!(b.manifest().models.contains_key("lenet300100"));
+        assert!(b.manifest().models.contains_key("lenet5"));
+        assert!(b.manifest().models.contains_key("minivgg"));
         let caps = b.capabilities();
-        assert!(!caps.conv);
+        assert!(caps.conv);
         assert!(caps.methods.iter().any(|m| m == "dithered"));
     }
 
@@ -200,6 +215,9 @@ mod tests {
         let b = NativeBackend::builtin().unwrap();
         let ok = SessionSpec { model: "mlp128".into(), method: "meprop_k10".into(), batch: 8 };
         assert!(b.prepare(&ok).is_ok());
+        let conv_ok =
+            SessionSpec { model: "lenet5".into(), method: "dithered".into(), batch: 8 };
+        assert!(b.prepare(&conv_ok).is_ok());
         let bad_model = SessionSpec { model: "nope".into(), method: "baseline".into(), batch: 8 };
         assert!(b.prepare(&bad_model).is_err());
         let bad_method = SessionSpec { model: "mlp128".into(), method: "warp".into(), batch: 8 };
@@ -232,5 +250,23 @@ mod tests {
         // He scale: std ~ sqrt(2/784) ~ 0.0505
         let std = crate::quant::std_of(p1[0].data());
         assert!((std - (2.0f32 / 784.0).sqrt()).abs() < 0.005, "std {std}");
+    }
+
+    #[test]
+    fn init_params_conv_shapes_and_he_scale() {
+        let b = NativeBackend::builtin().unwrap();
+        let p = b.init_params("lenet5", 3).unwrap();
+        assert_eq!(p.len(), 10);
+        assert_eq!(p[0].shape(), &[5, 5, 1, 6]);
+        assert_eq!(p[1].shape(), &[6]);
+        assert_eq!(p[2].shape(), &[5, 5, 6, 16]);
+        assert_eq!(p[4].shape(), &[400, 120]);
+        assert_eq!(p[9].shape(), &[10]);
+        // conv2 fan_in = 5*5*6 = 150: std ~ sqrt(2/150) ~ 0.115
+        let std = crate::quant::std_of(p[2].data());
+        assert!((std - (2.0f32 / 150.0).sqrt()).abs() < 0.02, "std {std}");
+        // biases zero
+        assert_eq!(p[1].abs_max(), 0.0);
+        assert_eq!(p[3].abs_max(), 0.0);
     }
 }

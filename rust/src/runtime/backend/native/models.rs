@@ -1,65 +1,242 @@
-//! Native model registry: MLP topologies parsed from a `models.json`
-//! registry (mirroring `artifact.rs`'s manifest parsing), plus the
-//! built-in zoo used when no registry file is present.
+//! Native model registry: layer-graph topologies parsed from a
+//! `models.json` registry (mirroring `artifact.rs`'s manifest parsing),
+//! plus the built-in zoo used when no registry file is present.
 //!
-//! Native specs and XLA manifest entries share one
-//! [`ModelEntry`] surface, so `train`, `coordinator`, and the
-//! experiment harnesses never care which backend owns a model.
+//! Two schema forms per model:
+//!
+//! * `"dims": [784, 500, 10]` — MLP shorthand, a dense stack;
+//! * `"input": [28, 28, 1]` + `"layers": [{"type": "conv", ...}, ...]`
+//!   — the general layer graph (conv / pool / flatten / dense) the
+//!   conv executor runs.
+//!
+//! Native specs and XLA manifest entries share one [`ModelEntry`]
+//! surface, so `train`, `coordinator`, and the experiment harnesses
+//! never care which backend owns a model.
 
 use super::methods::Method;
 use crate::runtime::artifact::{GradArtifact, ModelEntry, ParamInfo};
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 
-/// One native model: an MLP topology the host kernels execute.
+/// One layer of a native topology. Image activations are NHWC
+/// (matching the data substrates); conv weights are HWIO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// 2-D convolution; ReLU follows unless it is the last layer.
+    Conv2d { out_ch: usize, k: usize, stride: usize, pad: usize },
+    /// Max pooling, no padding (stride defaults to `k` in the schema).
+    MaxPool2d { k: usize, stride: usize },
+    /// `[h, w, c] -> [h*w*c]` (NHWC row-major is already flat, so this
+    /// only changes the tracked shape).
+    Flatten,
+    /// Fully-connected layer; ReLU follows unless it is the last
+    /// (logits) layer.
+    Dense { out: usize },
+}
+
+/// One native model: a layer-graph topology the host kernels execute.
 #[derive(Debug, Clone)]
-pub struct MlpSpec {
+pub struct ModelSpec {
     pub name: String,
-    /// Layer widths `[input, hidden..., classes]`.
-    pub dims: Vec<usize>,
+    /// `[d]` (flat) or `[h, w, c]` (NHWC image).
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
     /// Which data substrate feeds it ("digits" | "textures").
     pub dataset: String,
     pub eval_batch: usize,
     /// Advertised method strings (what the harnesses sweep over).
     pub methods: Vec<String>,
+    /// Registry-declared base learning rate (the Table 1 hyperparameter
+    /// — conv entries register the paper's lower conv-net rate).
+    /// `None` = harness default.
+    pub lr: Option<f32>,
 }
 
-impl MlpSpec {
-    pub fn n_layers(&self) -> usize {
-        self.dims.len() - 1
+/// One shape-resolved stage of a model's execution [`Plan`].
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub layer: LayerSpec,
+    /// Input shape, `[d]` or `[h, w, c]`.
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// Weight param index (bias at `+1`) for conv/dense stages.
+    pub param_idx: Option<usize>,
+    /// Quantized-layer index (forward order) for conv/dense stages —
+    /// the index into `GradOut::sparsity` / `max_level`.
+    pub qlayer: Option<usize>,
+    /// Whether this stage's output passes through ReLU.
+    pub relu: bool,
+}
+
+/// Shape-resolved execution plan: every stage with input/output shapes,
+/// parameter slots and quantized-layer indices assigned. Built (and
+/// thereby validated) once at registry parse; rebuilding per step is
+/// cheap relative to a single GEMM.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub stages: Vec<Stage>,
+    /// Positional parameter list: `w, b` per conv/dense stage, named
+    /// `conv{i}_w` / `fc{j}_w` in forward order.
+    pub params: Vec<ParamInfo>,
+    pub n_qlayers: usize,
+}
+
+impl Plan {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+}
+
+impl ModelSpec {
+    /// MLP shorthand: `dims = [input, hidden..., classes]` becomes a
+    /// dense stack (the pre-conv registry schema).
+    pub fn mlp(
+        name: &str,
+        dims: &[usize],
+        dataset: &str,
+        eval_batch: usize,
+        methods: Vec<String>,
+    ) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            input_shape: vec![dims[0]],
+            layers: dims[1..].iter().map(|&d| LayerSpec::Dense { out: d }).collect(),
+            dataset: dataset.to_string(),
+            eval_batch,
+            methods,
+            lr: None,
+        }
     }
 
     pub fn input_numel(&self) -> usize {
-        self.dims[0]
+        self.input_shape.iter().product()
     }
 
+    /// Classes = width of the final (dense) layer.
     pub fn num_classes(&self) -> usize {
-        *self.dims.last().unwrap()
+        match self.layers.last() {
+            Some(&LayerSpec::Dense { out }) => out,
+            _ => 0,
+        }
+    }
+
+    /// Resolve shapes, parameter slots and quantized-layer indices;
+    /// errors describe the offending layer.
+    pub fn plan(&self) -> Result<Plan> {
+        ensure!(
+            !self.input_shape.is_empty() && self.input_shape.iter().all(|&d| d > 0),
+            "model '{}': bad input shape {:?}",
+            self.name,
+            self.input_shape
+        );
+        ensure!(
+            self.input_shape.len() == 1 || self.input_shape.len() == 3,
+            "model '{}': input shape {:?} must be [d] or [h, w, c]",
+            self.name,
+            self.input_shape
+        );
+        ensure!(
+            matches!(self.layers.last(), Some(LayerSpec::Dense { .. })),
+            "model '{}' must end in a dense (logits) layer",
+            self.name
+        );
+        let mut stages = Vec::with_capacity(self.layers.len());
+        let mut params = Vec::new();
+        let mut shape = self.input_shape.clone();
+        let mut n_qlayers = 0usize;
+        let (mut n_conv, mut n_fc) = (0usize, 0usize);
+        for (i, &layer) in self.layers.iter().enumerate() {
+            let last = i == self.layers.len() - 1;
+            let err = |msg: String| anyhow!("model '{}', layer {i}: {msg}", self.name);
+            let out_shape = match layer {
+                LayerSpec::Conv2d { out_ch, k, stride, pad } => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("conv needs [h, w, c] input, got {shape:?}")));
+                    }
+                    if out_ch == 0 || k == 0 || stride == 0 {
+                        return Err(err("conv out/k/stride must be >= 1".into()));
+                    }
+                    let (h, w) = (shape[0], shape[1]);
+                    if h + 2 * pad < k || w + 2 * pad < k {
+                        return Err(err(format!(
+                            "kernel {k} exceeds padded input {h}x{w} (pad {pad})"
+                        )));
+                    }
+                    n_conv += 1;
+                    params.push(ParamInfo {
+                        name: format!("conv{n_conv}_w"),
+                        shape: vec![k, k, shape[2], out_ch],
+                    });
+                    params.push(ParamInfo { name: format!("conv{n_conv}_b"), shape: vec![out_ch] });
+                    vec![(h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1, out_ch]
+                }
+                LayerSpec::MaxPool2d { k, stride } => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("pool needs [h, w, c] input, got {shape:?}")));
+                    }
+                    if k == 0 || stride == 0 {
+                        return Err(err("pool k/stride must be >= 1".into()));
+                    }
+                    let (h, w) = (shape[0], shape[1]);
+                    if h < k || w < k {
+                        return Err(err(format!("pool window {k} exceeds input {h}x{w}")));
+                    }
+                    vec![(h - k) / stride + 1, (w - k) / stride + 1, shape[2]]
+                }
+                LayerSpec::Flatten => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("flatten needs [h, w, c] input, got {shape:?}")));
+                    }
+                    vec![shape.iter().product()]
+                }
+                LayerSpec::Dense { out } => {
+                    if shape.len() != 1 {
+                        return Err(err(format!(
+                            "dense needs flat input, got {shape:?} (insert a flatten layer)"
+                        )));
+                    }
+                    if out == 0 {
+                        return Err(err("dense out must be >= 1".into()));
+                    }
+                    n_fc += 1;
+                    params.push(ParamInfo {
+                        name: format!("fc{n_fc}_w"),
+                        shape: vec![shape[0], out],
+                    });
+                    params.push(ParamInfo { name: format!("fc{n_fc}_b"), shape: vec![out] });
+                    vec![out]
+                }
+            };
+            let has_params = matches!(layer, LayerSpec::Conv2d { .. } | LayerSpec::Dense { .. });
+            stages.push(Stage {
+                layer,
+                in_shape: shape.clone(),
+                out_shape: out_shape.clone(),
+                param_idx: has_params.then(|| params.len() - 2),
+                qlayer: has_params.then(|| {
+                    n_qlayers += 1;
+                    n_qlayers - 1
+                }),
+                relu: has_params && !last,
+            });
+            shape = out_shape;
+        }
+        Ok(Plan { stages, params, n_qlayers })
     }
 
     /// The shared registry surface for this model. Parameter order is
-    /// `fc1_w, fc1_b, fc2_w, ...` — positionally identical to the MLP
-    /// entries the AOT manifest lists.
-    pub fn entry(&self) -> ModelEntry {
-        let mut params = Vec::with_capacity(2 * self.n_layers());
-        for i in 0..self.n_layers() {
-            params.push(ParamInfo {
-                name: format!("fc{}_w", i + 1),
-                shape: vec![self.dims[i], self.dims[i + 1]],
-            });
-            params.push(ParamInfo {
-                name: format!("fc{}_b", i + 1),
-                shape: vec![self.dims[i + 1]],
-            });
-        }
-        ModelEntry {
+    /// positional forward order (`conv1_w, conv1_b, ..., fc1_w, ...`) —
+    /// identical to the entries the AOT manifest lists.
+    pub fn entry(&self) -> Result<ModelEntry> {
+        let plan = self.plan()?;
+        Ok(ModelEntry {
             name: self.name.clone(),
             dataset: self.dataset.clone(),
-            input_shape: vec![self.dims[0]],
+            input_shape: self.input_shape.clone(),
             num_classes: self.num_classes(),
-            n_qlayers: self.n_layers(),
-            params,
+            n_qlayers: plan.n_qlayers,
+            params: plan.params,
             // Native models have no artifact files; the advertised
             // methods are surfaced through `grads` so
             // `ModelEntry::methods()` lists them for the harnesses.
@@ -69,12 +246,13 @@ impl MlpSpec {
             init_path: String::new(),
             eval_path: String::new(),
             eval_batch: self.eval_batch,
+            lr: self.lr,
             grads: self
                 .methods
                 .iter()
                 .map(|m| GradArtifact { method: m.clone(), batch: 0, path: "native".into() })
                 .collect(),
-        }
+        })
     }
 }
 
@@ -84,12 +262,13 @@ pub struct Registry {
     pub train_batch: usize,
     pub worker_batch: usize,
     pub eval_batch: usize,
-    pub specs: BTreeMap<String, MlpSpec>,
+    pub specs: BTreeMap<String, ModelSpec>,
 }
 
-/// Built-in registry: the paper's MLP rows scaled to this testbed plus
-/// two small models (fast smoke/test target, textures substrate).
-/// Conv topologies (lenet5, minivgg) need the `xla` backend.
+/// Built-in registry: the paper's MLP rows scaled to this testbed, two
+/// small models (fast smoke/test target, textures substrate), and the
+/// conv rows (lenet5 on digits, minivgg on textures) the native conv
+/// executor brings to a bare checkout.
 pub const BUILTIN_MODELS: &str = r#"{
   "version": 1,
   "train_batch": 64,
@@ -118,6 +297,40 @@ pub const BUILTIN_MODELS: &str = r#"{
       "dims": [768, 256, 10],
       "dataset": "textures",
       "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
+    },
+    "lenet5": {
+      "input": [28, 28, 1],
+      "layers": [
+        {"type": "conv", "out": 6, "k": 5, "pad": 2},
+        {"type": "pool", "k": 2},
+        {"type": "conv", "out": 16, "k": 5},
+        {"type": "pool", "k": 2},
+        {"type": "flatten"},
+        {"type": "dense", "out": 120},
+        {"type": "dense", "out": 84},
+        {"type": "dense", "out": 10}
+      ],
+      "dataset": "digits",
+      "lr": 0.05,
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered",
+                  "meprop_k10", "meprop_k25", "meprop_k50"]
+    },
+    "minivgg": {
+      "input": [16, 16, 3],
+      "layers": [
+        {"type": "conv", "out": 16, "k": 3, "pad": 1},
+        {"type": "conv", "out": 16, "k": 3, "pad": 1},
+        {"type": "pool", "k": 2},
+        {"type": "conv", "out": 32, "k": 3, "pad": 1},
+        {"type": "conv", "out": 32, "k": 3, "pad": 1},
+        {"type": "pool", "k": 2},
+        {"type": "flatten"},
+        {"type": "dense", "out": 128},
+        {"type": "dense", "out": 10}
+      ],
+      "dataset": "textures",
+      "lr": 0.05,
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
     }
   }
 }"#;
@@ -139,7 +352,11 @@ pub fn parse_registry(text: &str) -> Result<Registry> {
         .ok_or_else(|| anyhow!("models.json missing 'models'"))?;
     let mut specs = BTreeMap::new();
     for (name, v) in mobj {
-        specs.insert(name.clone(), parse_model(name, v, eval_batch)?);
+        let spec = parse_model(name, v, eval_batch)?;
+        // Resolve the plan once here so shape errors surface at load
+        // time, not mid-training.
+        spec.plan()?;
+        specs.insert(name.clone(), spec);
     }
     if specs.is_empty() {
         bail!("models.json lists no models");
@@ -152,17 +369,69 @@ pub fn parse_registry(text: &str) -> Result<Registry> {
     })
 }
 
-fn parse_model(name: &str, v: &Value, default_eval_batch: usize) -> Result<MlpSpec> {
-    let dims: Vec<usize> = v
-        .get("dims")
-        .and_then(Value::as_arr)
-        .ok_or_else(|| anyhow!("model '{name}' missing 'dims'"))?
+fn parse_usize_arr(name: &str, key: &str, v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("model '{name}': '{key}' is not an array"))?
         .iter()
-        .map(|d| d.as_usize().ok_or_else(|| anyhow!("model '{name}': bad dim")))
-        .collect::<Result<Vec<_>>>()?;
-    if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
-        bail!("model '{name}': dims {dims:?} must list >= 2 nonzero layer widths");
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("model '{name}': bad '{key}' entry")))
+        .collect()
+}
+
+fn parse_layer(name: &str, v: &Value) -> Result<LayerSpec> {
+    let ty = v
+        .get("type")
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("model '{name}': layer missing 'type'"))?;
+    let num = |k: &str| v.get(k).and_then(Value::as_usize);
+    let req = |k: &str| {
+        num(k).ok_or_else(|| anyhow!("model '{name}': '{ty}' layer missing '{k}'"))
+    };
+    match ty {
+        "conv" => Ok(LayerSpec::Conv2d {
+            out_ch: req("out")?,
+            k: req("k")?,
+            stride: num("stride").unwrap_or(1),
+            pad: num("pad").unwrap_or(0),
+        }),
+        "pool" => {
+            let k = req("k")?;
+            Ok(LayerSpec::MaxPool2d { k, stride: num("stride").unwrap_or(k) })
+        }
+        "flatten" => Ok(LayerSpec::Flatten),
+        "dense" => Ok(LayerSpec::Dense { out: req("out")? }),
+        other => bail!(
+            "model '{name}': unknown layer type '{other}' \
+             (expected conv|pool|flatten|dense)"
+        ),
     }
+}
+
+fn parse_model(name: &str, v: &Value, default_eval_batch: usize) -> Result<ModelSpec> {
+    let (input_shape, layers) = if let Some(dims_v) = v.get("dims") {
+        let dims = parse_usize_arr(name, "dims", dims_v)?;
+        if dims.len() < 2 || dims.iter().any(|&d| d == 0) {
+            bail!("model '{name}': dims {dims:?} must list >= 2 nonzero layer widths");
+        }
+        (
+            vec![dims[0]],
+            dims[1..].iter().map(|&d| LayerSpec::Dense { out: d }).collect(),
+        )
+    } else {
+        let input = parse_usize_arr(
+            name,
+            "input",
+            v.get("input")
+                .ok_or_else(|| anyhow!("model '{name}' needs 'dims' or 'input' + 'layers'"))?,
+        )?;
+        let layers = v
+            .get("layers")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("model '{name}': 'input' requires a 'layers' array"))?
+            .iter()
+            .map(|l| parse_layer(name, l))
+            .collect::<Result<Vec<_>>>()?;
+        (input, layers)
+    };
     let methods: Vec<String> = match v.get("methods").and_then(Value::as_arr) {
         Some(arr) => arr
             .iter()
@@ -177,9 +446,10 @@ fn parse_model(name: &str, v: &Value, default_eval_batch: usize) -> Result<MlpSp
     for m in &methods {
         Method::parse(m).map_err(|e| anyhow!("model '{name}': {e}"))?;
     }
-    Ok(MlpSpec {
+    Ok(ModelSpec {
         name: name.to_string(),
-        dims,
+        input_shape,
+        layers,
         dataset: v
             .get("dataset")
             .and_then(Value::as_str)
@@ -190,6 +460,7 @@ fn parse_model(name: &str, v: &Value, default_eval_batch: usize) -> Result<MlpSp
             .and_then(Value::as_usize)
             .unwrap_or(default_eval_batch),
         methods,
+        lr: v.get("lr").and_then(Value::as_f64).map(|f| f as f32),
     })
 }
 
@@ -203,18 +474,21 @@ mod tests {
         assert_eq!(reg.train_batch, 64);
         assert_eq!(reg.worker_batch, 1);
         let mlp = reg.specs.get("mlp500").unwrap();
-        assert_eq!(mlp.dims, vec![784, 500, 500, 10]);
-        assert_eq!(mlp.n_layers(), 3);
+        assert_eq!(mlp.input_shape, vec![784]);
+        assert_eq!(mlp.layers.len(), 3);
         assert_eq!(mlp.num_classes(), 10);
+        assert_eq!(mlp.lr, None);
         assert!(reg.specs.contains_key("lenet300100"));
         assert!(reg.specs.contains_key("mlp128"));
+        assert!(reg.specs.contains_key("lenet5"));
+        assert!(reg.specs.contains_key("minivgg"));
         assert_eq!(reg.specs.get("mlptex").unwrap().dataset, "textures");
     }
 
     #[test]
     fn entry_matches_spec_positionally() {
         let reg = parse_registry(BUILTIN_MODELS).unwrap();
-        let e = reg.specs.get("lenet300100").unwrap().entry();
+        let e = reg.specs.get("lenet300100").unwrap().entry().unwrap();
         assert_eq!(e.n_params(), 6);
         assert_eq!(e.n_qlayers, 3);
         assert_eq!(e.params[0].name, "fc1_w");
@@ -223,6 +497,47 @@ mod tests {
         assert_eq!(e.total_weights(), 784 * 300 + 300 + 300 * 100 + 100 + 100 * 10 + 10);
         assert!(e.methods().contains(&"meprop_k25".to_string()));
         assert_eq!(e.input_shape, vec![784]);
+        assert_eq!(e.lr, None);
+    }
+
+    #[test]
+    fn lenet5_plan_resolves_classic_shapes() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        let spec = reg.specs.get("lenet5").unwrap();
+        assert_eq!(spec.lr, Some(0.05));
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.n_qlayers, 5); // conv1, conv2, fc1, fc2, fc3
+        assert_eq!(plan.n_params(), 10);
+        assert_eq!(plan.stages[0].out_shape, vec![28, 28, 6]); // pad 2
+        assert_eq!(plan.stages[1].out_shape, vec![14, 14, 6]);
+        assert_eq!(plan.stages[2].out_shape, vec![10, 10, 16]);
+        assert_eq!(plan.stages[3].out_shape, vec![5, 5, 16]);
+        assert_eq!(plan.stages[4].out_shape, vec![400]);
+        assert_eq!(plan.stages[7].out_shape, vec![10]);
+        assert_eq!(plan.params[0].name, "conv1_w");
+        assert_eq!(plan.params[0].shape, vec![5, 5, 1, 6]);
+        assert_eq!(plan.params[2].shape, vec![5, 5, 6, 16]);
+        assert_eq!(plan.params[4].name, "fc1_w");
+        assert_eq!(plan.params[4].shape, vec![400, 120]);
+        // logits layer has no relu; every other conv/dense does
+        assert!(!plan.stages[7].relu);
+        assert!(plan.stages[0].relu && plan.stages[5].relu);
+        assert!(!plan.stages[1].relu && !plan.stages[4].relu);
+        let e = spec.entry().unwrap();
+        assert_eq!(e.lr, Some(0.05));
+        assert_eq!(e.input_shape, vec![28, 28, 1]);
+        assert_eq!(e.num_classes, 10);
+    }
+
+    #[test]
+    fn minivgg_plan_resolves() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        let plan = reg.specs.get("minivgg").unwrap().plan().unwrap();
+        assert_eq!(plan.n_qlayers, 6);
+        assert_eq!(plan.stages[5].out_shape, vec![4, 4, 32]);
+        assert_eq!(plan.stages[6].out_shape, vec![512]);
+        assert_eq!(plan.params[8].name, "fc1_w");
+        assert_eq!(plan.params[8].shape, vec![512, 128]);
     }
 
     #[test]
@@ -238,6 +553,38 @@ mod tests {
             r#"{"version": 1, "models": {"m": {"dims": [8, 4], "methods": ["warp"]}}}"#
         )
         .is_err());
+        // layer-graph schema errors
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 1]}}}"#
+        )
+        .is_err());
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 1],
+                "layers": [{"type": "warp"}]}}}"#
+        )
+        .is_err());
+        // conv after flatten: shape error caught at parse time
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 1],
+                "layers": [{"type": "flatten"},
+                           {"type": "conv", "out": 2, "k": 3},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
+        // must end in a dense layer
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 1],
+                "layers": [{"type": "conv", "out": 2, "k": 3}]}}}"#
+        )
+        .is_err());
+        // kernel larger than padded input
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [2, 2, 1],
+                "layers": [{"type": "conv", "out": 2, "k": 5},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -251,5 +598,41 @@ mod tests {
         assert_eq!(t.dataset, "digits");
         assert_eq!(t.eval_batch, 128);
         assert_eq!(t.methods, vec!["baseline", "dithered"]);
+        assert_eq!(t.lr, None);
+    }
+
+    #[test]
+    fn layer_defaults_applied() {
+        let reg = parse_registry(
+            r#"{"version": 1, "models": {"c": {
+                "input": [6, 6, 2], "lr": 0.07,
+                "layers": [{"type": "conv", "out": 3, "k": 3},
+                           {"type": "pool", "k": 2},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 5}]}}}"#,
+        )
+        .unwrap();
+        let c = reg.specs.get("c").unwrap();
+        assert_eq!(c.lr, Some(0.07));
+        assert_eq!(
+            c.layers[0],
+            LayerSpec::Conv2d { out_ch: 3, k: 3, stride: 1, pad: 0 }
+        );
+        assert_eq!(c.layers[1], LayerSpec::MaxPool2d { k: 2, stride: 2 });
+        let plan = c.plan().unwrap();
+        assert_eq!(plan.stages[0].out_shape, vec![4, 4, 3]);
+        assert_eq!(plan.stages[1].out_shape, vec![2, 2, 3]);
+        assert_eq!(plan.stages[2].out_shape, vec![12]);
+    }
+
+    #[test]
+    fn mlp_shorthand_matches_explicit_dense_stack() {
+        let spec = ModelSpec::mlp("m", &[8, 6, 4], "digits", 32, vec!["baseline".into()]);
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.n_qlayers, 2);
+        assert_eq!(plan.params[0].name, "fc1_w");
+        assert_eq!(plan.params[0].shape, vec![8, 6]);
+        assert_eq!(plan.params[3].shape, vec![4]);
+        assert_eq!(spec.num_classes(), 4);
     }
 }

@@ -126,14 +126,16 @@ mod tests {
         assert_eq!(e.manifest.worker_batch, 1);
         let entry = e.manifest.model("mlp128").unwrap();
         assert_eq!(entry.n_params(), 4);
-        assert!(!e.capabilities().conv);
+        assert!(e.capabilities().conv);
     }
 
     #[test]
     fn training_session_validates_through_backend() {
         let e = Engine::native().unwrap();
         assert!(e.training_session("mlp128", "dithered", 8).is_ok());
-        assert!(e.training_session("minivgg", "dithered", 8).is_err());
+        // conv models execute natively since the conv executor landed
+        assert!(e.training_session("minivgg", "dithered", 8).is_ok());
+        assert!(e.training_session("nonesuch", "dithered", 8).is_err());
         assert!(e.training_session("mlp128", "bogus", 8).is_err());
     }
 }

@@ -3,10 +3,11 @@
 //! The coordinator talks to an [`Engine`] façade, which dispatches to a
 //! [`Backend`] (see DESIGN.md §Backend-contract):
 //!
-//! * [`backend::native`] — default: pure-rust CPU MLP executor with
-//!   method-compressed, skip-on-zero backward passes. No Python, no
-//!   artifacts; topologies come from a `models.json` registry with a
-//!   built-in zoo.
+//! * [`backend::native`] — default: pure-rust CPU layer-graph executor
+//!   (dense + im2col conv/pool) with method-compressed, skip-on-zero
+//!   backward passes. No Python, no artifacts; topologies come from a
+//!   `models.json` registry with a built-in zoo that includes the conv
+//!   rows (lenet5, minivgg).
 //! * [`backend::pjrt`] (feature `xla`) — the AOT HLO artifacts lowered
 //!   by `python/compile/aot.py`, compiled on the PJRT CPU client with
 //!   caching.

@@ -2,7 +2,7 @@
 //! (running on whichever backend `Engine::load` selects — the native
 //! executor on a bare checkout).
 
-use ditherprop::experiments::{eq12, fig1, fig2, fig4, table1};
+use ditherprop::experiments::{eq12, fig1, fig2, fig4, table1, Scale};
 use ditherprop::util::cli::Args;
 
 fn artifacts() -> String {
@@ -47,6 +47,43 @@ fn eq12_render_includes_all_cells() {
 }
 
 #[test]
+fn table1_lenet5_conv_row_smoke() {
+    // The conv rows of Table 1 run natively now: a few-step lenet5 run
+    // on synth digits must learn (loss decreases) and the dithered
+    // backward must report substantial delta_z sparsity.
+    let scale = Scale { steps: 16, rounds: 1, n_train: 512, n_test: 256, reps: 1 };
+    let cells =
+        table1::run(&artifacts(), &["lenet5".to_string()], scale, false).unwrap();
+    assert_eq!(cells.len(), 4); // baseline, dithered, int8, int8_dithered
+    for c in &cells {
+        assert_eq!(c.dataset, "digits");
+        assert!(
+            c.loss_end < c.loss_start,
+            "{}: loss did not decrease ({} -> {})",
+            c.method,
+            c.loss_start,
+            c.loss_end
+        );
+    }
+    let dith = cells.iter().find(|c| c.method == "dithered").unwrap();
+    let base = cells.iter().find(|c| c.method == "baseline").unwrap();
+    assert!(
+        dith.sparsity > 0.5,
+        "dithered backward sparsity only {:.3}",
+        dith.sparsity
+    );
+    assert!(dith.sparsity > base.sparsity, "dithered must beat baseline sparsity");
+    // per-layer sparsity covers all 5 weighted lenet5 layers (conv1,
+    // conv2, fc1, fc2, fc3) and every layer got quantized
+    assert_eq!(dith.layer_sparsity.len(), 5);
+    assert!(
+        dith.layer_sparsity.iter().all(|&s| s > 0.0),
+        "per-layer sparsity has zeros: {:?}",
+        dith.layer_sparsity
+    );
+}
+
+#[test]
 fn table1_render_averages_and_headline() {
     let mk = |model: &str, method: &str, acc: f32, sp: f32| table1::Cell {
         model: model.into(),
@@ -54,7 +91,10 @@ fn table1_render_averages_and_headline() {
         method: method.into(),
         acc,
         sparsity: sp,
+        layer_sparsity: vec![sp, sp],
         max_bits: 6,
+        loss_start: 2.3,
+        loss_end: 0.4,
     };
     let mut cells = Vec::new();
     for m in ["a", "b"] {

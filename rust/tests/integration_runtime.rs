@@ -20,13 +20,34 @@ fn load_of_missing_dir_serves_native_zoo() {
 #[test]
 fn manifest_lists_all_native_models() {
     let e = engine();
-    for m in ["lenet300100", "mlp500", "mlp128", "mlptex"] {
+    for m in ["lenet300100", "mlp500", "mlp128", "mlptex", "lenet5", "minivgg"] {
         let entry = e.manifest.model(m).unwrap();
         assert!(entry.n_params() >= 4);
         assert!(entry.total_weights() > 10_000);
         assert!(entry.methods().contains(&"dithered".to_string()));
     }
     assert!(e.manifest.model("nope").is_err());
+}
+
+#[test]
+fn conv_model_runs_on_textures() {
+    // minivgg end to end: two conv blocks on 16x16x3 NHWC inputs,
+    // dithered backward with per-layer stats for all 6 weighted layers.
+    let e = engine();
+    let sess = e.training_session("minivgg", "dithered", 4).unwrap();
+    let params = e.init_params("minivgg", 0).unwrap();
+    assert_eq!(params.len(), 12);
+    assert_eq!(params[0].shape(), &[3, 3, 3, 16]); // conv1_w, HWIO
+    let ds = data::build("textures", 16, 16, 13);
+    let mut it = data::BatchIter::new(&ds.train, 4, 8);
+    it.next_batch(&ds.train);
+    let out = sess.grad(&params, &it.x, &it.y, 3, 2.0).unwrap();
+    assert_eq!(out.grads.len(), 12);
+    assert_eq!(out.sparsity.len(), 6);
+    assert!(out.loss > 1.5 && out.loss < 4.0, "fresh-init CE loss ~ln(10), got {}", out.loss);
+    assert!(out.mean_sparsity() > 0.3, "dithered conv sparsity {:?}", out.sparsity);
+    // every weight gradient received signal
+    assert!(out.grads.iter().step_by(2).all(|g| g.abs_max() > 0.0));
 }
 
 #[test]
