@@ -41,6 +41,8 @@ fn main() -> Result<()> {
         },
         seed: 42,
         verbose: true,
+        data: None,
+        round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
     };
     let res = run_distributed(&ds, &cfg)?;
 
@@ -53,6 +55,11 @@ fn main() -> Result<()> {
     println!(
         "communication: upstream {} B sparse vs {} B dense = x{:.1} savings; downstream {} B",
         res.comm.up_bytes, res.comm.up_bytes_dense, res.comm.up_savings(), res.comm.down_bytes
+    );
+    println!(
+        "measured on the wire (framed, handshake included): {} B up = x{:.1} vs dense",
+        res.comm.wire_up_bytes,
+        res.comm.measured_up_savings()
     );
     println!(
         "per-node compute ratio (Eq. 12, m = largest layer): {:.3}",

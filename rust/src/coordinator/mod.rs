@@ -1,25 +1,30 @@
 //! Distributed training coordinator: synchronous SGD with a parameter
-//! server (paper §3.6 / §4.3).
+//! server (paper §3.6 / §4.3) over the [`crate::net`] transport layer.
 //!
-//! Topology: one server (this thread) + N worker nodes (OS threads, one
-//! per node, each owning its *own* engine — backend instance + batch-1
-//! grad session — mirroring the paper's one-runtime-per-node
-//! deployment).  Each round:
+//! Topology: one server + N worker nodes, each worker owning its *own*
+//! engine — backend instance + batch-1 grad session — mirroring the
+//! paper's one-runtime-per-node deployment.  Workers attach over a
+//! [`Transport`](crate::net::Transport): OS threads on channel
+//! transports ([`run_distributed`]) or separate processes on TCP
+//! ([`serve_tcp`] + the `dist-server`/`dist-worker` CLI).  Each round:
 //!
-//!   1. server broadcasts the parameter vector to all nodes,
+//!   1. server broadcasts the parameter vector to all live nodes,
 //!   2. every node runs one forward + dithered backward pass on its own
 //!      next example (batch 1, per-node dither seed),
 //!   3. nodes sparse-encode their weight gradients ([`comm`]) and send
-//!      them up; the server decodes, averages, and applies SGD.
+//!      them up — the encoded form crosses the process boundary as-is;
+//!      the server decodes, averages in node order, and applies SGD.
 //!
 //! Because NSD noise is unbiased with bounded variance, the averaging
 //! cancels it ~ 1/N — so `s` can grow with N (stronger quantization,
 //! cheaper per-node compute) at constant final accuracy.  That scaling
-//! law is exactly what Fig. 5 / Fig. 6 measure.
+//! law is exactly what Fig. 5 / Fig. 6 measure — now with *measured*
+//! on-the-wire bytes next to the analytic codec accounting.
 
 pub mod comm;
 pub mod server;
 pub mod worker;
 
 pub use comm::{CommStats, EncodedGrads};
-pub use server::{DistConfig, DistResult, run_distributed};
+pub use server::{run_distributed, serve, serve_tcp, DistConfig, DistResult};
+pub use worker::worker_loop;

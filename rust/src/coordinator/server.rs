@@ -1,23 +1,38 @@
-//! Parameter server + synchronous-SGD round orchestration.
+//! Parameter server + synchronous-SGD round orchestration over any
+//! [`Transport`] set.
 //!
 //! The server owns the canonical parameters and the optimizer; each
-//! round it broadcasts parameters, gathers every node's sparse-encoded
-//! batch-1 gradient, averages them (where the 1/N dither-noise
-//! cancellation happens), and applies one SGD step.  The run ends with
-//! a test-split evaluation on the server's own engine.  Backend-agnostic
-//! end to end: the same orchestration runs on the native executor or on
-//! AOT artifacts, since server and workers only touch `Engine`.
+//! round it broadcasts parameters to every live worker, gathers their
+//! sparse-encoded batch-1 gradients, averages them (where the 1/N
+//! dither-noise cancellation happens), and applies one SGD step.
+//!
+//! Deployment modes share one [`serve`] loop:
+//! * [`run_distributed`] — today's single-process mode: spawns one OS
+//!   thread per node, wired up with channel transports (which still
+//!   move real serialized frames, so byte accounting is measured).
+//! * [`serve_tcp`] — real OS processes: accepts `cfg.nodes` TCP
+//!   connections from `dist-worker` processes and runs the same loop.
+//!
+//! Failure semantics: a worker that neither acks (`Heartbeat`) nor
+//! uploads within `cfg.round_timeout` is dropped as a straggler — its
+//! link is retired, the averaging denominator shrinks, and the round
+//! completes with the survivors.  The run only fails when *no* worker
+//! is left.  Gradients are accumulated in node order (not arrival
+//! order), so a run's result is a deterministic function of (seeds,
+//! config) regardless of transport or scheduling — the property the
+//! channel-vs-TCP parity test pins down.
 
 use super::comm::CommStats;
-use super::worker::{worker_main, FromWorker, ToWorker, WorkerCfg};
+use super::worker::worker_loop;
 use crate::data::Dataset;
 use crate::metrics::{History, StepRecord};
+use crate::net::{ChannelTransport, Msg, Transport, Welcome, PROTO_VERSION};
 use crate::optim::{Sgd, SgdConfig};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::net::TcpListener;
+use std::time::Duration;
 
 /// Distributed run configuration (paper §4.3 setup).
 #[derive(Debug, Clone)]
@@ -32,6 +47,19 @@ pub struct DistConfig {
     pub opt: SgdConfig,
     pub seed: u64,
     pub verbose: bool,
+    /// Dataset recipe shipped to remote workers in the Welcome so they
+    /// can regenerate their shard locally.  `None` is fine for
+    /// single-process runs (workers get their shard directly).
+    pub data: Option<crate::data::DataSpec>,
+    /// Per-round worker deadline: time allowed for the round ack, and
+    /// again for the gradient upload after the ack.  Workers that miss
+    /// it are dropped as stragglers.
+    pub round_timeout: Duration,
+}
+
+impl DistConfig {
+    /// The default straggler deadline.
+    pub const DEFAULT_ROUND_TIMEOUT: Duration = Duration::from_secs(30);
 }
 
 /// Outcome of a distributed run.
@@ -44,76 +72,264 @@ pub struct DistResult {
     pub mean_sparsity: f32,
     /// Worst-case bitwidth over nodes and rounds (Fig. 6b).
     pub max_bits: u32,
+    /// Workers still connected at the end (< `nodes` if stragglers
+    /// were dropped).
+    pub live_workers: usize,
 }
 
-/// Run synchronous distributed SGD with `cfg.nodes` worker threads.
+/// Run synchronous distributed SGD with `cfg.nodes` in-process worker
+/// threads over channel transports.
 pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
+    let mut links: Vec<Option<Box<dyn Transport>>> = Vec::with_capacity(cfg.nodes);
+    let mut handles = Vec::with_capacity(cfg.nodes);
+    for node in 0..cfg.nodes {
+        let (server_side, worker_side) = ChannelTransport::pair(&format!("w{node}"));
+        let shard = data.train.shard(node, cfg.nodes);
+        let dir = cfg.artifacts_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), &dir, Some(shard))
+        }));
+        links.push(Some(Box::new(server_side) as Box<dyn Transport>));
+    }
+
+    let res = serve(links, data, cfg);
+
+    // Join workers.  A failed serve() reports its own error (workers
+    // die of closed channels as a side effect).  A clean serve() with
+    // all workers still live must see clean workers; but if serve()
+    // already dropped stragglers, their threads die of a retired link —
+    // that's the tolerated-drop semantics, not a run failure.
+    let mut worker_err = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => worker_err = Some(e),
+            Err(_) => worker_err = Some(anyhow::anyhow!("worker thread panicked")),
+        }
+    }
+    match (res, worker_err) {
+        (Ok(r), Some(e)) if r.live_workers == cfg.nodes => {
+            Err(e.context("worker failed during an otherwise clean run"))
+        }
+        (Ok(r), _) => Ok(r),
+        (Err(e), _) => Err(e),
+    }
+}
+
+/// Accept `cfg.nodes` TCP workers on `listener` and run the same
+/// round loop.  `data` is the server's own copy (final evaluation);
+/// remote workers regenerate their shards from `cfg.data`.
+pub fn serve_tcp(listener: &TcpListener, data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
+    anyhow::ensure!(
+        cfg.data.is_some(),
+        "TCP serving requires cfg.data (workers regenerate their shard from the spec)"
+    );
+    let links = crate::net::tcp::accept_workers(listener, cfg.nodes, cfg.round_timeout)?
+        .into_iter()
+        .map(Some)
+        .collect();
+    serve(links, data, cfg)
+}
+
+/// The transport-agnostic server loop: handshake, rounds, shutdown,
+/// final eval.  `links.len()` must equal `cfg.nodes`.
+pub fn serve(
+    mut links: Vec<Option<Box<dyn Transport>>>,
+    data: &Dataset,
+    cfg: &DistConfig,
+) -> Result<DistResult> {
+    anyhow::ensure!(
+        links.len() == cfg.nodes,
+        "got {} transports for {} nodes",
+        links.len(),
+        cfg.nodes
+    );
     let engine = Engine::load(&cfg.artifacts_dir).context("server loading artifacts")?;
     let entry = engine.manifest.model(&cfg.model)?.clone();
     let mut params = engine.init_params(&cfg.model, cfg.seed as u32)?;
     let mut opt = Sgd::new(cfg.opt, &params);
     let param_bytes: usize = params.iter().map(|p| 4 * p.len()).sum();
 
-    // Spawn workers, each with a contiguous shard of the training split.
-    let (up_tx, up_rx) = mpsc::channel::<FromWorker>();
-    let mut to_workers = Vec::with_capacity(cfg.nodes);
-    let mut handles = Vec::with_capacity(cfg.nodes);
-    for node in 0..cfg.nodes {
-        let (tx, rx) = mpsc::channel::<ToWorker>();
-        let wcfg = WorkerCfg {
-            node,
-            artifacts_dir: cfg.artifacts_dir.clone(),
+    let mut comm = CommStats::default();
+    // Retire a link, folding its measured byte counters into comm.
+    fn retire(slot: &mut Option<Box<dyn Transport>>, comm: &mut CommStats) {
+        if let Some(link) = slot.take() {
+            comm.absorb_link(link.bytes_sent(), link.bytes_received());
+        }
+    }
+
+    // 1. Hello/Welcome handshake: admit each worker, assign node ids
+    //    and the dither-seed base.
+    for (node, slot) in links.iter_mut().enumerate() {
+        let link = slot.as_mut().expect("links start populated");
+        // on failure, keep the underlying cause so the operator can
+        // tell version skew from timeouts from protocol bugs
+        let refusal: Option<String> = match link.recv_deadline(cfg.round_timeout) {
+            Ok(Some(Msg::Hello { proto, caps })) => {
+                if proto == PROTO_VERSION {
+                    if cfg.verbose {
+                        println!("[dist] worker {node} joined from {} ({caps})", link.peer());
+                    }
+                    None
+                } else {
+                    let reason =
+                        format!("protocol v{proto} not supported (server is v{PROTO_VERSION})");
+                    let _ = link.send(&Msg::Shutdown { reason: reason.clone() });
+                    Some(reason)
+                }
+            }
+            Ok(Some(other)) => Some(format!("sent tag {} instead of Hello", other.tag())),
+            Ok(None) => Some(format!("sent nothing within {:?}", cfg.round_timeout)),
+            Err(e) => Some(format!("handshake recv failed: {e}")),
+        };
+        if let Some(why) = refusal {
+            anyhow::bail!("worker {node} failed the handshake: {why}");
+        }
+        link.send(&Msg::Welcome(Welcome {
+            node: node as u32,
+            nodes: cfg.nodes as u32,
+            rounds: cfg.rounds as u32,
+            seed: cfg.seed,
+            s: cfg.s,
             model: cfg.model.clone(),
             method: cfg.method.clone(),
-            s: cfg.s,
-            shard: data.train.shard(node, cfg.nodes),
-            seed: cfg.seed,
-        };
-        let up = up_tx.clone();
-        handles.push(std::thread::spawn(move || worker_main(wcfg, rx, up)));
-        to_workers.push(tx);
+            data: cfg.data.clone(),
+        }))
+        .with_context(|| format!("welcoming worker {node}"))?;
     }
-    drop(up_tx);
 
     let mut history = History::default();
-    let mut comm = CommStats::default();
-    let inv_n = 1.0 / cfg.nodes as f32;
 
     for round in 0..cfg.rounds {
-        // 1. broadcast
-        let shared = Arc::new(params.clone());
-        for tx in &to_workers {
-            tx.send(ToWorker::Round { round, params: shared.clone() })
-                .map_err(|_| anyhow::anyhow!("worker died before round {round}"))?;
-            comm.record_down(param_bytes);
+        // 2. broadcast parameters to every live worker (one snapshot,
+        //    serialized per link — no per-worker deep copies)
+        let broadcast = Msg::Params {
+            round: round as u32,
+            tensors: params.iter().map(|p| p.data().to_vec()).collect(),
+        };
+        for (node, slot) in links.iter_mut().enumerate() {
+            if slot.is_none() {
+                continue;
+            }
+            let sent = slot.as_mut().unwrap().send(&broadcast);
+            match sent {
+                Ok(()) => comm.record_down(param_bytes),
+                Err(e) => {
+                    if cfg.verbose {
+                        println!("[dist] dropping worker {node} (send failed: {e})");
+                    }
+                    retire(slot, &mut comm);
+                }
+            }
         }
 
-        // 2. gather + average (decode sparse gradients server-side)
+        // 3. gather into node-indexed slots; heartbeats reset the
+        //    deadline (alive-but-computing), silence drops the worker
+        let mut gathered: Vec<Option<super::comm::EncodedGrads>> = Vec::new();
+        gathered.resize_with(cfg.nodes, || None);
+        for (node, slot) in links.iter_mut().enumerate() {
+            if slot.is_none() {
+                continue;
+            }
+            // a well-behaved worker sends exactly one ack per round, so
+            // one deadline reset is all a heartbeat can buy — a peer
+            // spamming heartbeats without uploading cannot wedge the
+            // gather loop forever
+            let mut acks = 0u32;
+            loop {
+                // reborrow per attempt so the straggler arms below can
+                // retire the slot without fighting the borrow checker
+                let outcome = slot.as_mut().unwrap().recv_deadline(cfg.round_timeout);
+                match outcome {
+                    Ok(Some(Msg::Heartbeat { round: r, .. }))
+                        if r as usize == round && acks == 0 =>
+                    {
+                        acks += 1;
+                        continue; // ack: fresh deadline for the compute
+                    }
+                    Ok(Some(Msg::Grads { round: r, grads, .. })) if r as usize == round => {
+                        // shape-check before averaging: a malformed
+                        // upload must cost the worker, not the server
+                        let well_formed = grads.tensors.len() == entry.params.len()
+                            && grads
+                                .tensors
+                                .iter()
+                                .zip(entry.params.iter())
+                                .all(|(e, p)| e.len() == p.numel());
+                        if well_formed {
+                            comm.record_up(&grads, param_bytes);
+                            gathered[node] = Some(grads);
+                        } else {
+                            if cfg.verbose {
+                                println!(
+                                    "[dist] dropping worker {node} (malformed gradient shapes)"
+                                );
+                            }
+                            retire(slot, &mut comm);
+                        }
+                        break;
+                    }
+                    Ok(Some(other)) => {
+                        if cfg.verbose {
+                            println!(
+                                "[dist] dropping worker {node} (protocol violation: \
+                                 tag {} in round {round})",
+                                other.tag()
+                            );
+                        }
+                        retire(slot, &mut comm);
+                        break;
+                    }
+                    Ok(None) => {
+                        if cfg.verbose {
+                            println!(
+                                "[dist] dropping straggler {node} (no upload within {:?})",
+                                cfg.round_timeout
+                            );
+                        }
+                        retire(slot, &mut comm);
+                        break;
+                    }
+                    Err(e) => {
+                        if cfg.verbose {
+                            println!("[dist] dropping worker {node} (recv failed: {e})");
+                        }
+                        retire(slot, &mut comm);
+                        break;
+                    }
+                }
+            }
+        }
+
+        let live = gathered.iter().flatten().count();
+        anyhow::ensure!(
+            live > 0,
+            "round {round}: every worker is gone (started with {})",
+            cfg.nodes
+        );
+        let inv_n = 1.0 / live as f32;
+
+        // 4. average in node order (deterministic) and update
         let mut avg: Vec<Tensor> =
             entry.params.iter().map(|p| Tensor::zeros(&p.shape)).collect();
         let (mut loss, mut correct) = (0.0f32, 0.0f32);
         let mut sparsity_acc = 0.0f32;
         let mut max_bits = 0u32;
-        for _ in 0..cfg.nodes {
-            let msg = up_rx.recv().context("gather: all workers disconnected")?;
-            debug_assert_eq!(msg.round, round);
-            comm.record_up(&msg.grads, param_bytes);
-            for (acc, (enc, info)) in avg
-                .iter_mut()
-                .zip(msg.grads.tensors.iter().zip(entry.params.iter()))
+        for msg in gathered.iter().flatten() {
+            for (acc, (enc, info)) in
+                avg.iter_mut().zip(msg.tensors.iter().zip(entry.params.iter()))
             {
                 acc.axpy(inv_n, &enc.decode(&info.shape));
             }
-            loss += msg.grads.loss * inv_n;
-            correct += msg.grads.correct;
-            let ms = if msg.grads.sparsity.is_empty() {
+            loss += msg.loss * inv_n;
+            correct += msg.correct;
+            let ms = if msg.sparsity.is_empty() {
                 0.0
             } else {
-                msg.grads.sparsity.iter().sum::<f32>() / msg.grads.sparsity.len() as f32
+                msg.sparsity.iter().sum::<f32>() / msg.sparsity.len() as f32
             };
             sparsity_acc += ms * inv_n;
             let bits = msg
-                .grads
                 .max_level
                 .iter()
                 .map(|&l| crate::util::math::bitwidth_for_level(l))
@@ -123,30 +339,31 @@ pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
         }
         comm.rounds += 1;
 
-        // 3. update
         opt.apply(&mut params, &avg);
         history.push(StepRecord {
             step: round,
             loss,
-            acc: correct / cfg.nodes as f32,
+            acc: correct / live as f32,
             sparsity: sparsity_acc,
             bits: max_bits,
             layer_sparsity: vec![],
         });
         if cfg.verbose && (round + 1) % 100 == 0 {
             println!(
-                "[dist {}x{}] round {}: loss {:.4} sparsity {:.3} bits {}",
-                cfg.nodes, cfg.method, round + 1, loss, sparsity_acc, max_bits
+                "[dist {}x{}] round {}: loss {:.4} sparsity {:.3} bits {} live {}/{}",
+                cfg.nodes, cfg.method, round + 1, loss, sparsity_acc, max_bits, live, cfg.nodes
             );
         }
     }
 
-    // Shut down workers.
-    for tx in &to_workers {
-        let _ = tx.send(ToWorker::Shutdown);
-    }
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+    // 5. graceful shutdown + absorb the remaining byte counters
+    let mut live_workers = 0;
+    for slot in links.iter_mut() {
+        if let Some(link) = slot.as_mut() {
+            let _ = link.send(&Msg::Shutdown { reason: "run complete".into() });
+            live_workers += 1;
+        }
+        retire(slot, &mut comm);
     }
 
     // Final evaluation on the server engine.
@@ -159,28 +376,50 @@ pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
 
     let mean_sparsity = history.mean_sparsity();
     let max_bits = history.max_bits();
-    Ok(DistResult { params, history, comm, test_acc, mean_sparsity, max_bits })
+    Ok(DistResult { params, history, comm, test_acc, mean_sparsity, max_bits, live_workers })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::SgdConfig;
 
-    #[test]
-    fn dist_config_is_cloneable_and_debuggable() {
-        let c = DistConfig {
+    fn cfg(nodes: usize, rounds: usize) -> DistConfig {
+        DistConfig {
             artifacts_dir: "artifacts".into(),
             model: "mlp500".into(),
             method: "dithered".into(),
             s: 2.0,
-            nodes: 4,
-            rounds: 10,
+            nodes,
+            rounds,
             opt: SgdConfig::plain(0.1),
             seed: 1,
             verbose: false,
-        };
+            data: None,
+            round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+        }
+    }
+
+    #[test]
+    fn dist_config_is_cloneable_and_debuggable() {
+        let c = cfg(4, 10);
         let d = c.clone();
-        assert_eq!(format!("{:?}", c).is_empty(), false);
+        assert!(!format!("{:?}", c).is_empty());
         assert_eq!(d.nodes, 4);
+        assert_eq!(d.round_timeout, Duration::from_secs(30));
+    }
+
+    #[test]
+    fn serve_rejects_wrong_transport_count() {
+        let err = serve(vec![], &crate::data::build("digits", 8, 8, 1), &cfg(2, 1)).unwrap_err();
+        assert!(err.to_string().contains("0 transports for 2 nodes"), "{err}");
+    }
+
+    #[test]
+    fn serve_tcp_requires_data_spec() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let ds = crate::data::build("digits", 8, 8, 1);
+        let err = serve_tcp(&listener, &ds, &cfg(1, 1)).unwrap_err();
+        assert!(err.to_string().contains("requires cfg.data"), "{err}");
     }
 }

@@ -1,84 +1,138 @@
-//! Worker node: one OS thread owning its own engine (its own backend
-//! instance — a private executor cache under XLA, a private native
-//! executor otherwise).
+//! Worker node: one protocol loop over a [`Transport`], owning its own
+//! engine (a private backend instance — exactly what a real deployment
+//! runs per host).
 //!
-//! Receives parameter broadcasts, runs one batch-1 forward + dithered
-//! backward pass per round on its private data shard, sparse-encodes the
-//! gradients and sends them to the server.  Seeds are derived from
-//! (node id, round) so no two nodes ever share dither noise — the
-//! independence the 1/N averaging argument needs.
+//! The same [`worker_loop`] body serves both deployment modes: spawned
+//! on an OS thread over a channel transport (single-process
+//! `run_distributed`), or inside a separate `dist-worker` process over
+//! TCP.  Flow: send `Hello`, receive `Welcome` (node id + dither-seed
+//! assignment + job description), then per round: receive `Params`, ack
+//! with `Heartbeat`, run one batch-1 forward + dithered backward pass on
+//! the private shard, sparse-encode the gradients and upload them —
+//! until `Shutdown`.
+//!
+//! Dither seeds derive from (node id, round), so no two nodes ever
+//! share dither noise — the independence the 1/N averaging argument
+//! needs.  Remote workers regenerate their data shard from the
+//! [`DataSpec`] in the Welcome (procedural datasets are seeds, not
+//! files); in-process workers receive their shard directly.
+//!
+//! [`DataSpec`]: crate::data::DataSpec
 
 use super::comm::EncodedGrads;
 use crate::data::Split;
+use crate::net::{Msg, Transport, Welcome, PROTO_VERSION};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use anyhow::{bail, ensure, Context, Result};
+use std::time::Duration;
 
-/// Server -> worker message.
-pub enum ToWorker {
-    /// New round: fresh parameters (shared, read-only).
-    Round { round: usize, params: Arc<Vec<Tensor>> },
-    Shutdown,
-}
+/// How long a worker waits for the server between messages before
+/// declaring it dead (generous: covers the server-side eval pause).
+pub const SERVER_SILENCE_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Worker -> server message.
-pub struct FromWorker {
-    pub node: usize,
-    pub round: usize,
-    pub grads: EncodedGrads,
-}
-
-/// Per-node static configuration.
-pub struct WorkerCfg {
-    pub node: usize,
-    pub artifacts_dir: String,
-    pub model: String,
-    pub method: String,
-    pub s: f32,
-    pub shard: Split,
-    pub seed: u64,
-}
-
-/// Worker main loop; runs until `Shutdown` (or a dropped channel).
-pub fn worker_main(
-    cfg: WorkerCfg,
-    rx: Receiver<ToWorker>,
-    tx: Sender<FromWorker>,
+/// Join a run over `link` and work rounds until `Shutdown`.
+///
+/// `local_shard` short-circuits dataset regeneration for in-process
+/// workers; remote workers pass `None` and build their shard from the
+/// Welcome's [`DataSpec`](crate::data::DataSpec).
+pub fn worker_loop(
+    mut link: Box<dyn Transport>,
+    artifacts_dir: &str,
+    local_shard: Option<Split>,
 ) -> Result<()> {
-    // Each node owns its own engine — its own backend instance —
-    // exactly as a real deployment would.
-    let engine = Engine::load(&cfg.artifacts_dir)
-        .with_context(|| format!("worker {} loading artifacts", cfg.node))?;
-    let session = engine.training_session(&cfg.model, &cfg.method, 1)?;
+    // Capabilities handshake: announce the protocol we speak and the
+    // backend we run; the server assigns our identity.
+    let engine = Engine::load(artifacts_dir).context("worker loading artifacts")?;
+    link.send(&Msg::Hello {
+        proto: PROTO_VERSION,
+        caps: engine.capabilities().summary(),
+    })?;
+    let admission = link
+        .recv_deadline(SERVER_SILENCE_TIMEOUT)?
+        .ok_or_else(|| anyhow::anyhow!("server went silent during handshake"))?;
+    let wc: Welcome = match admission {
+        Msg::Welcome(wc) => wc,
+        Msg::Shutdown { reason } => bail!("server refused admission: {reason}"),
+        other => bail!("expected Welcome, got tag {}", other.tag()),
+    };
+
+    let session = engine.training_session(&wc.model, &wc.method, 1)?;
+    let entry = session.entry.clone();
+    let shard = match local_shard {
+        Some(s) => s,
+        None => {
+            let spec = wc.data.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("Welcome carried no dataset spec and no local shard exists")
+            })?;
+            spec.build().train.shard(wc.node as usize, wc.nodes as usize)
+        }
+    };
+    ensure!(!shard.is_empty(), "worker {} got an empty data shard", wc.node);
+
     let dim = session.input_numel();
-    let mut rng = Rng::new(cfg.seed ^ (cfg.node as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let mut rng = Rng::new(wc.seed ^ (wc.node as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let mut x = vec![0.0f32; dim];
 
-    while let Ok(msg) = rx.recv() {
+    loop {
+        let msg = match link.recv_deadline(SERVER_SILENCE_TIMEOUT)? {
+            Some(m) => m,
+            None => bail!(
+                "server {} silent for {:?}, giving up",
+                link.peer(),
+                SERVER_SILENCE_TIMEOUT
+            ),
+        };
         match msg {
-            ToWorker::Shutdown => break,
-            ToWorker::Round { round, params } => {
-                // Draw this node's next example.
-                let idx = rng.below(cfg.shard.len());
-                cfg.shard.example(idx, &mut x);
-                let y = [cfg.shard.labels[idx]];
+            Msg::Shutdown { .. } => break,
+            Msg::Params { round, tensors } => {
+                // Ack the round before computing: the server treats the
+                // heartbeat as "alive, working" and grants the full
+                // compute deadline on top of it.
+                link.send(&Msg::Heartbeat { node: wc.node, round })?;
 
-                let seed = node_round_seed(cfg.node, round, cfg.seed);
-                let out = session.grad(&params, &x, &y, seed, cfg.s)?;
-                let msg = EncodedGrads::encode(
+                ensure!(
+                    tensors.len() == entry.n_params(),
+                    "round {round}: got {} param tensors, model '{}' has {}",
+                    tensors.len(),
+                    entry.name,
+                    entry.n_params()
+                );
+                let params: Vec<Tensor> = tensors
+                    .into_iter()
+                    .zip(entry.params.iter())
+                    .map(|(v, info)| {
+                        ensure!(
+                            v.len() == info.shape.iter().product::<usize>(),
+                            "param '{}' length {} mismatches shape {:?}",
+                            info.name,
+                            v.len(),
+                            info.shape
+                        );
+                        Ok(Tensor::from_vec(&info.shape, v))
+                    })
+                    .collect::<Result<_>>()?;
+
+                // Draw this node's next example.
+                let idx = rng.below(shard.len());
+                shard.example(idx, &mut x);
+                let y = [shard.labels[idx]];
+
+                let seed = node_round_seed(wc.node as usize, round as usize, wc.seed);
+                let out = session.grad(&params, &x, &y, seed, wc.s)?;
+                let grads = EncodedGrads::encode(
                     &out.grads,
                     out.loss,
                     out.correct,
                     out.sparsity,
                     out.max_level,
                 );
-                if tx.send(FromWorker { node: cfg.node, round, grads: msg }).is_err() {
+                if link.send(&Msg::Grads { node: wc.node, round, grads }).is_err() {
                     break; // server gone
                 }
             }
+            other => bail!("unexpected message tag {} mid-run", other.tag()),
         }
     }
     Ok(())
@@ -97,6 +151,7 @@ pub fn node_round_seed(node: usize, round: usize, base: u64) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::ChannelTransport;
 
     #[test]
     fn seeds_unique_across_nodes_and_rounds() {
@@ -109,5 +164,33 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn worker_rejects_non_welcome_handshake() {
+        let (mut server_side, worker_side) = ChannelTransport::pair("w");
+        let h = std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), "/definitely/not/artifacts", None)
+        });
+        // worker says Hello first
+        match server_side.recv().unwrap() {
+            Msg::Hello { proto, .. } => assert_eq!(proto, PROTO_VERSION),
+            other => panic!("expected Hello, got tag {}", other.tag()),
+        }
+        server_side.send(&Msg::Heartbeat { node: 0, round: 0 }).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("expected Welcome"), "{err}");
+    }
+
+    #[test]
+    fn worker_exits_with_reason_on_admission_refusal() {
+        let (mut server_side, worker_side) = ChannelTransport::pair("w");
+        let h = std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), "/definitely/not/artifacts", None)
+        });
+        let _ = server_side.recv().unwrap(); // Hello
+        server_side.send(&Msg::Shutdown { reason: "version mismatch".into() }).unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
     }
 }

@@ -27,3 +27,28 @@ pub fn build(kind: &str, n_train: usize, n_test: usize, seed: u64) -> Dataset {
         other => panic!("unknown dataset kind '{other}' (expected digits|textures)"),
     }
 }
+
+/// A dataset *recipe*: everything needed to regenerate an identical
+/// procedural dataset on another host.  This is what the distributed
+/// handshake ships to remote workers — examples never cross the wire,
+/// only the (kind, sizes, seed) tuple, and determinism of [`build`]
+/// guarantees every process derives byte-identical splits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSpec {
+    /// Dataset kind: `digits` or `textures`.
+    pub kind: String,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub seed: u64,
+}
+
+impl DataSpec {
+    pub fn new(kind: &str, n_train: usize, n_test: usize, seed: u64) -> Self {
+        DataSpec { kind: kind.to_string(), n_train, n_test, seed }
+    }
+
+    /// Materialize the dataset this spec describes.
+    pub fn build(&self) -> Dataset {
+        build(&self.kind, self.n_train, self.n_test, self.seed)
+    }
+}

@@ -24,8 +24,16 @@ pub struct DistPoint {
     pub acc: f32,
     pub sparsity: f32,
     pub max_bits: u32,
-    /// Upstream communication compression factor (dense / sparse bytes).
+    /// Upstream compression factor from the analytic codec byte count
+    /// (dense / sparse payload bytes).
     pub comm_savings: f64,
+    /// Upstream compression factor against bytes *measured on the
+    /// transport* — framing, handshake and heartbeats included.  The
+    /// channel transport moves real serialized frames, so this is the
+    /// number a TCP deployment of the same run would report.
+    pub comm_savings_measured: f64,
+    /// Measured upstream wire bytes per round (all nodes).
+    pub wire_up_per_round: f64,
     /// Eq. 12 per-node compute ratio at the measured density.
     pub compute_ratio: f64,
 }
@@ -72,6 +80,8 @@ pub fn run(
             },
             seed: 42,
             verbose,
+            data: None,
+            round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
         };
         let res = run_distributed(&ds, &cfg)?;
         // weight rows m for Eq. 12: use the largest layer's output dim
@@ -83,12 +93,23 @@ pub fn run(
             sparsity: res.mean_sparsity,
             max_bits: res.max_bits,
             comm_savings: res.comm.up_savings(),
+            comm_savings_measured: res.comm.measured_up_savings(),
+            wire_up_per_round: res.comm.wire_up_per_round(),
             compute_ratio: crate::costmodel::savings_ratio(m, 1.0 - res.mean_sparsity as f64),
         };
         if verbose {
             println!(
-                "  N={:<3} s={:<4} acc {:.4} sparsity {:.3} bits {} comm x{:.1} compute ratio {:.3}",
-                p.nodes, p.s, p.acc, p.sparsity, p.max_bits, p.comm_savings, p.compute_ratio
+                "  N={:<3} s={:<4} acc {:.4} sparsity {:.3} bits {} comm x{:.1} \
+                 (measured x{:.1}, {:.0} wire B/round) compute ratio {:.3}",
+                p.nodes,
+                p.s,
+                p.acc,
+                p.sparsity,
+                p.max_bits,
+                p.comm_savings,
+                p.comm_savings_measured,
+                p.wire_up_per_round,
+                p.compute_ratio
             );
         }
         points.push(p);
@@ -99,7 +120,7 @@ pub fn run(
 pub fn render(points: &[DistPoint]) -> String {
     let mut t = Table::new(&[
         "nodes", "s", "acc% (Fig 5)", "sparsity% (Fig 6a)", "max bits (Fig 6b)",
-        "comm savings", "Eq12 compute ratio",
+        "comm savings", "measured (wire)", "wire B/round", "Eq12 compute ratio",
     ]);
     for p in points {
         t.row(&[
@@ -109,6 +130,8 @@ pub fn render(points: &[DistPoint]) -> String {
             format!("{:.2}", p.sparsity * 100.0),
             format!("{}", p.max_bits),
             format!("x{:.1}", p.comm_savings),
+            format!("x{:.1}", p.comm_savings_measured),
+            format!("{:.0}", p.wire_up_per_round),
             format!("{:.3}", p.compute_ratio),
         ]);
     }

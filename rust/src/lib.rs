@@ -23,6 +23,12 @@
 //!   server of the paper's §3.6/§4.3 ([`coordinator`]), sparse gradient
 //!   codecs ([`sparse`]), the computational cost model of §3.4
 //!   ([`costmodel`]), and every table/figure harness ([`experiments`]).
+//! * **Transport** ([`net`]) — the framed wire protocol under the
+//!   coordinator: a [`net::Transport`] trait with an in-process channel
+//!   implementation (single-process runs) and a `std::net` TCP
+//!   implementation (`dist-server` / `dist-worker` CLI subcommands), so
+//!   the same round loop runs thread-local or as real OS processes with
+//!   measured on-the-wire byte accounting in both modes.
 //!
 //! ## Quickstart
 //!
@@ -40,6 +46,7 @@ pub mod costmodel;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod net;
 pub mod optim;
 pub mod quant;
 pub mod runtime;

@@ -5,6 +5,8 @@
 //! ditherprop info
 //! ditherprop train --model mlp500 --method dithered --s 2 --steps 500
 //! ditherprop distributed --model mlp500 --nodes 8 --rounds 300
+//! ditherprop dist-server --model mlp500 --nodes 2 --bind 127.0.0.1:7461
+//! ditherprop dist-worker --connect 127.0.0.1:7461
 //! ditherprop table1 [--quick] [--models mlp500,lenet5]
 //! ditherprop fig1|fig2|fig3|fig4|fig56|eq12 [--quick]
 //! ```
@@ -34,8 +36,16 @@ COMMANDS
   train         single-node training
                   --model M --method {baseline|dithered|int8|int8_dithered|meprop_kN}
                   --s S --steps N --batch B --lr LR --eval-every K --seed SEED
-  distributed   synchronous-SGD parameter server (paper §4.3)
+  distributed   synchronous-SGD parameter server (paper §4.3),
+                  single process, worker threads over channel transports
                   --model M --nodes N --rounds R --s S --method ...
+  dist-server   same loop over real TCP: bind, accept N dist-workers,
+                  train, report analytic + measured wire bytes
+                  --bind HOST:PORT (default 127.0.0.1:7461) --model M
+                  --nodes N --rounds R --s S --method ... --timeout SECS
+  dist-worker   one worker process: connect to a dist-server and work
+                  rounds until shutdown
+                  --connect HOST:PORT [--artifacts DIR]
   table1        Table 1: acc% + sparsity% across models x methods
   fig1          Fig. 1: delta_z histograms before/after NSD
   fig2          Fig. 2: P(zero) vs scale factor s
@@ -58,6 +68,8 @@ fn main() -> Result<()> {
         "info" => info(&args),
         "train" => cmd_train(&args),
         "distributed" => cmd_distributed(&args),
+        "dist-server" => cmd_dist_server(&args),
+        "dist-worker" => cmd_dist_worker(&args),
         "table1" => cmd_table1(&args),
         "fig1" => cmd_fig1(&args),
         "fig2" => cmd_fig2(&args),
@@ -129,14 +141,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_distributed(args: &Args) -> Result<()> {
+/// Shared config assembly for `distributed` / `dist-server`: dataset
+/// spec from the model's registry entry + scale flags, DistConfig from
+/// the remaining flags.
+fn dist_setup(args: &Args) -> Result<(ditherprop::data::Dataset, DistConfig)> {
     let artifacts = artifacts_dir(args);
     let engine = Engine::load(&artifacts)?;
     let model = args.str_or("model", "mlp500");
     let entry = engine.manifest.model(&model)?.clone();
     drop(engine);
     let scale = Scale::from_args(args);
-    let ds = data::build(&entry.dataset, scale.n_train, scale.n_test, 7);
+    let spec = ditherprop::data::DataSpec::new(
+        &entry.dataset,
+        scale.n_train,
+        scale.n_test,
+        args.u64_or("data-seed", 7),
+    );
+    let ds = spec.build();
     let nodes = args.usize_or("nodes", 4);
     let cfg = DistConfig {
         artifacts_dir: artifacts,
@@ -152,19 +173,61 @@ fn cmd_distributed(args: &Args) -> Result<()> {
         },
         seed: args.u64_or("seed", 42),
         verbose: true,
+        data: Some(spec),
+        round_timeout: std::time::Duration::from_secs(args.u64_or("timeout", 30)),
     };
-    let res = run_distributed(&ds, &cfg)?;
+    Ok((ds, cfg))
+}
+
+fn print_dist_summary(res: &ditherprop::coordinator::DistResult) {
     println!(
-        "final: acc {:.4} | per-node sparsity {:.4} | bits {} | upstream comm x{:.1} \
-         ({} rounds, {} up-bytes vs {} dense)",
-        res.test_acc,
-        res.mean_sparsity,
-        res.max_bits,
-        res.comm.up_savings(),
-        res.comm.rounds,
-        res.comm.up_bytes,
-        res.comm.up_bytes_dense
+        "final: acc {:.4} | per-node sparsity {:.4} | bits {} | {} rounds | {} workers live at end",
+        res.test_acc, res.mean_sparsity, res.max_bits, res.comm.rounds, res.live_workers,
     );
+    println!(
+        "upstream comm: analytic x{:.1} ({} encoded vs {} dense B) | measured x{:.1} \
+         ({} wire B, {:.0} B/round incl. framing+handshake)",
+        res.comm.up_savings(),
+        res.comm.up_bytes,
+        res.comm.up_bytes_dense,
+        res.comm.measured_up_savings(),
+        res.comm.wire_up_bytes,
+        res.comm.wire_up_per_round(),
+    );
+}
+
+fn cmd_distributed(args: &Args) -> Result<()> {
+    let (ds, cfg) = dist_setup(args)?;
+    let res = run_distributed(&ds, &cfg)?;
+    print_dist_summary(&res);
+    Ok(())
+}
+
+fn cmd_dist_server(args: &Args) -> Result<()> {
+    let (ds, cfg) = dist_setup(args)?;
+    let bind = args.str_or("bind", "127.0.0.1:7461");
+    let listener = std::net::TcpListener::bind(&bind)
+        .map_err(|e| anyhow::anyhow!("binding {bind}: {e}"))?;
+    println!(
+        "[dist-server] listening on {} — waiting for {} dist-worker(s)",
+        listener.local_addr()?,
+        cfg.nodes
+    );
+    let res = ditherprop::coordinator::serve_tcp(&listener, &ds, &cfg)?;
+    print_dist_summary(&res);
+    Ok(())
+}
+
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let addr = args.require("connect")?;
+    let artifacts = artifacts_dir(args);
+    let link = ditherprop::net::TcpTransport::connect_retry(
+        addr,
+        std::time::Duration::from_secs(args.u64_or("connect-timeout", 15)),
+    )?;
+    println!("[dist-worker] connected to {addr}");
+    ditherprop::coordinator::worker_loop(Box::new(link), &artifacts, None)?;
+    println!("[dist-worker] run complete, shutting down");
     Ok(())
 }
 

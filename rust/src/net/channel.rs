@@ -1,0 +1,126 @@
+//! In-process transport: serialized frames over `mpsc` channels.
+//!
+//! The thread-local twin of the TCP transport.  It does NOT shortcut
+//! serialization — every message is framed to bytes and parsed back on
+//! the far side, so (a) the codec is exercised on every single-process
+//! run, and (b) `bytes_sent`/`bytes_received` equal what the same run
+//! would put on a real socket.  That's what makes the channel-vs-TCP
+//! deterministic-parity test meaningful.
+
+use super::frame::{encode_frame, parse_frame};
+use super::proto::Msg;
+use super::Transport;
+use anyhow::{anyhow, Context, Result};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// One endpoint of an in-process frame pipe.
+pub struct ChannelTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    sent: u64,
+    rcvd: u64,
+    peer: String,
+}
+
+impl ChannelTransport {
+    /// Build a connected pair (a, b): frames sent on one arrive at the
+    /// other.  `label` names the link in logs (e.g. "w0").
+    pub fn pair(label: &str) -> (ChannelTransport, ChannelTransport) {
+        let (a_tx, b_rx) = channel();
+        let (b_tx, a_rx) = channel();
+        let a = ChannelTransport {
+            tx: a_tx,
+            rx: a_rx,
+            sent: 0,
+            rcvd: 0,
+            peer: format!("chan:{label}"),
+        };
+        let b = ChannelTransport {
+            tx: b_tx,
+            rx: b_rx,
+            sent: 0,
+            rcvd: 0,
+            peer: format!("chan:{label}^"),
+        };
+        (a, b)
+    }
+
+    fn parse(&mut self, frame: Vec<u8>) -> Result<Msg> {
+        self.rcvd += frame.len() as u64;
+        let (tag, payload) = parse_frame(&frame)?;
+        Msg::decode(tag, payload)
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let frame = encode_frame(msg.tag(), &msg.encode_payload());
+        self.sent += frame.len() as u64;
+        self.tx
+            .send(frame)
+            .map_err(|_| anyhow!("peer {} closed the channel", self.peer))
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("peer {} disconnected", self.peer))?;
+        self.parse(frame)
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(frame) => self.parse(frame).map(Some),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("peer {} disconnected", self.peer)).context("channel recv")
+            }
+        }
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.rcvd
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_exchanges_messages_and_counts_bytes() {
+        let (mut a, mut b) = ChannelTransport::pair("t");
+        let msg = Msg::Heartbeat { node: 1, round: 2 };
+        a.send(&msg).unwrap();
+        assert_eq!(b.recv().unwrap(), msg);
+        assert!(a.bytes_sent() > 0);
+        assert_eq!(a.bytes_sent(), b.bytes_received());
+        assert_eq!(b.bytes_sent(), 0);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_delivers() {
+        let (mut a, mut b) = ChannelTransport::pair("t");
+        assert!(b.recv_deadline(Duration::from_millis(10)).unwrap().is_none());
+        a.send(&Msg::Shutdown { reason: "x".into() }).unwrap();
+        assert!(b.recv_deadline(Duration::from_millis(100)).unwrap().is_some());
+    }
+
+    #[test]
+    fn dropped_peer_is_an_error() {
+        let (mut a, b) = ChannelTransport::pair("t");
+        drop(b);
+        assert!(a.send(&Msg::Heartbeat { node: 0, round: 0 }).is_err());
+        assert!(a.recv().is_err());
+    }
+}

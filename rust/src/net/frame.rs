@@ -1,0 +1,355 @@
+//! Length-prefixed binary framing + little-endian wire cursors.
+//!
+//! Every message on a transport travels as one frame:
+//!
+//! ```text
+//! +------+------+---------+-----+----------+-----------------+
+//! | 0xDB | 0xB0 | version | tag | len: u32 | payload (len B) |
+//! +------+------+---------+-----+----------+-----------------+
+//!   magic (2B)     1B       1B    LE          tag-specific
+//! ```
+//!
+//! The 8-byte header carries a protocol version so the format can
+//! evolve; a reader that sees an unknown version (or a bad magic) fails
+//! loudly instead of desynchronising.  Payload serialization is
+//! hand-rolled little-endian via [`Wr`]/[`Rd`] — the repo invariant is
+//! zero registry dependencies, so there is no serde here and never will
+//! be.  Every `Rd` accessor is bounds-checked and returns `Result`: a
+//! malformed frame from a misbehaving peer must surface as an error,
+//! not a panic in the server.
+
+use anyhow::{bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: two bytes no ASCII protocol starts with.
+pub const MAGIC: [u8; 2] = [0xDB, 0xB0];
+/// Wire-format version; bump when the header or any payload changes
+/// incompatibly.
+pub const WIRE_VERSION: u8 = 1;
+/// Header size in bytes (magic + version + tag + u32 length).
+pub const HEADER_LEN: usize = 8;
+/// Refuse frames larger than this (corrupt length prefix guard).
+pub const MAX_FRAME: usize = 1 << 28; // 256 MiB
+
+/// Serialize a frame (header + payload) into a fresh buffer.
+pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Parse a full frame buffer back into (tag, payload).
+pub fn parse_frame(frame: &[u8]) -> Result<(u8, &[u8])> {
+    ensure!(frame.len() >= HEADER_LEN, "frame shorter than header: {} bytes", frame.len());
+    let (tag, len) = parse_header(frame[..HEADER_LEN].try_into().unwrap())?;
+    ensure!(
+        frame.len() == HEADER_LEN + len,
+        "frame length mismatch: header says {len}, got {} payload bytes",
+        frame.len() - HEADER_LEN
+    );
+    Ok((tag, &frame[HEADER_LEN..]))
+}
+
+/// Validate a header and extract (tag, payload length).
+pub fn parse_header(h: [u8; HEADER_LEN]) -> Result<(u8, usize)> {
+    ensure!(h[0] == MAGIC[0] && h[1] == MAGIC[1], "bad frame magic {:02x}{:02x}", h[0], h[1]);
+    ensure!(
+        h[2] == WIRE_VERSION,
+        "wire version mismatch: peer speaks v{}, this build speaks v{WIRE_VERSION}",
+        h[2]
+    );
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
+    Ok((h[3], len))
+}
+
+/// Write one frame to a byte sink; returns total bytes written.
+pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<usize> {
+    ensure!(payload.len() <= MAX_FRAME, "payload of {} bytes exceeds MAX_FRAME", payload.len());
+    let mut header = [0u8; HEADER_LEN];
+    header[..2].copy_from_slice(&MAGIC);
+    header[2] = WIRE_VERSION;
+    header[3] = tag;
+    header[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(HEADER_LEN + payload.len())
+}
+
+/// Read one frame from a byte source (blocking until complete).
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header)?;
+    let (tag, len) = parse_header(header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+/// Little-endian payload writer.
+#[derive(Default)]
+pub struct Wr {
+    buf: Vec<u8>,
+}
+
+impl Wr {
+    pub fn new() -> Self {
+        Wr { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Wr { buf: Vec::with_capacity(n) }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix (caller wrote the count already).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// UTF-8 string: u32 byte length + bytes.
+    pub fn str(&mut self, v: &str) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    /// f32 slice: u32 element count + raw LE values.
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// u32 slice: u32 element count + raw LE values.
+    pub fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian payload reader.
+pub struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated payload: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Counted length with a sanity cap against the remaining payload,
+    /// so a corrupt count errors instead of attempting a huge alloc.
+    fn counted(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            "count {n} x {elem_bytes}B overruns remaining {} payload bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.counted(1)?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.counted(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.counted(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the payload was fully consumed (catches codec drift
+    /// between writer and reader).
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("payload has {} trailing bytes after decode", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = encode_frame(7, b"hello");
+        let (tag, payload) = parse_frame(&f).unwrap();
+        assert_eq!(tag, 7);
+        assert_eq!(payload, b"hello");
+    }
+
+    #[test]
+    fn frame_roundtrip_property() {
+        check("frame encode/parse == identity", 200, |g: &mut Gen| {
+            let tag = (g.u32() % 256) as u8;
+            let payload: Vec<u8> =
+                (0..g.usize_in(0..=512)).map(|_| (g.u32() & 0xFF) as u8).collect();
+            let f = encode_frame(tag, &payload);
+            let (t, p) = parse_frame(&f).unwrap();
+            t == tag && p == payload.as_slice()
+        });
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, 3, &[1, 2, 3]).unwrap();
+        assert_eq!(n, buf.len());
+        let (tag, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!((tag, payload.as_slice()), (3, &[1u8, 2, 3][..]));
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut f = encode_frame(1, b"x");
+        f[0] = 0x00;
+        assert!(parse_frame(&f).unwrap_err().to_string().contains("magic"));
+        let mut f = encode_frame(1, b"x");
+        f[2] = 99;
+        assert!(parse_frame(&f).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut f = encode_frame(1, b"x");
+        f[4..8].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(parse_frame(&f).is_err());
+    }
+
+    #[test]
+    fn cursor_roundtrip_all_types() {
+        let mut w = Wr::new();
+        w.u8(9);
+        w.u16(512);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.f32(-2.5);
+        w.str("dither");
+        w.f32s(&[1.0, 0.0, -3.5]);
+        w.u32s(&[3, 1, 4]);
+        let buf = w.into_vec();
+        let mut r = Rd::new(&buf);
+        assert_eq!(r.u8().unwrap(), 9);
+        assert_eq!(r.u16().unwrap(), 512);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -2.5);
+        assert_eq!(r.str().unwrap(), "dither");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 0.0, -3.5]);
+        assert_eq!(r.u32s().unwrap(), vec![3, 1, 4]);
+        r.done().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut r = Rd::new(&[1, 2]);
+        assert!(r.u32().is_err());
+        // corrupt count: u32 count says 1000 elements but payload ends
+        let mut w = Wr::new();
+        w.u32(1000);
+        let buf = w.into_vec();
+        assert!(Rd::new(&buf).f32s().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = Wr::new();
+        w.u32(1);
+        w.u8(0);
+        let buf = w.into_vec();
+        let mut r = Rd::new(&buf);
+        r.u32().unwrap();
+        assert!(r.done().is_err());
+    }
+}

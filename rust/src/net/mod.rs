@@ -1,0 +1,62 @@
+//! Transport subsystem: the coordinator's process boundary.
+//!
+//! The distributed coordinator (§3.6/§4.3) speaks one message protocol
+//! ([`proto::Msg`]) over a [`Transport`] — the abstraction that lets the
+//! *same* `run_distributed` round loop run thread-local (the
+//! [`channel::ChannelTransport`], today's single-process mode) or as
+//! real OS processes over TCP ([`tcp::TcpTransport`], the `dist-server`
+//! / `dist-worker` CLI subcommands).  Both implementations move the
+//! identical serialized frames ([`frame`]), so byte accounting is
+//! *measured*, not simulated, in every mode — the channel transport
+//! counts the same frames the socket would carry.
+//!
+//! Layering:
+//!
+//! ```text
+//! coordinator::{server,worker}     round loop, handshake, stragglers
+//!          |
+//!        Transport                 send/recv Msg + byte counters
+//!        /       \
+//!  ChannelTransport  TcpTransport  frames over mpsc / std::net
+//!          \       /
+//!           frame                  8B header + LE payload (versioned)
+//! ```
+
+pub mod channel;
+pub mod frame;
+pub mod proto;
+pub mod tcp;
+
+pub use channel::ChannelTransport;
+pub use proto::{Msg, Welcome, PROTO_VERSION};
+pub use tcp::TcpTransport;
+
+use anyhow::Result;
+use std::time::Duration;
+
+/// A bidirectional, ordered, reliable message link to one peer.
+///
+/// Implementations serialize every message through the frame codec so
+/// `bytes_sent`/`bytes_received` report true on-the-wire volume
+/// (headers included) regardless of the medium.
+pub trait Transport: Send {
+    /// Serialize and send one message (blocking).
+    fn send(&mut self, msg: &Msg) -> Result<()>;
+
+    /// Receive the next message, blocking indefinitely.
+    fn recv(&mut self) -> Result<Msg>;
+
+    /// Receive with a deadline: `Ok(None)` if no message *started*
+    /// arriving within `timeout`.  A message that starts but stalls
+    /// mid-frame is an error (the stream can't be resynchronized).
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Option<Msg>>;
+
+    /// Total frame bytes sent to the peer (headers included).
+    fn bytes_sent(&self) -> u64;
+
+    /// Total frame bytes received from the peer (headers included).
+    fn bytes_received(&self) -> u64;
+
+    /// Human-readable peer name for logs ("127.0.0.1:53118", "chan:w0").
+    fn peer(&self) -> String;
+}

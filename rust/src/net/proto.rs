@@ -1,0 +1,441 @@
+//! Versioned message protocol for the distributed coordinator.
+//!
+//! One [`Msg`] per frame; the frame tag identifies the variant and the
+//! payload layout below is hand-rolled little-endian ([`super::frame`]).
+//! The flow (DESIGN.md §Transport):
+//!
+//! ```text
+//! worker                          server
+//!   | -- Hello{proto,caps} ------->|   capabilities handshake
+//!   |<------- Welcome{node,seed,…} |   node id + dither-seed assignment
+//!   |<------- Params{round,…} -----|   round barrier (broadcast)
+//!   | -- Heartbeat{node,round} --->|   compute-ack (resets deadline)
+//!   | -- Grads{node,round,…} ----->|   sparse upload (codecs, no densify)
+//!   |          … rounds …          |
+//!   |<------- Shutdown{reason} ----|   graceful shutdown
+//! ```
+//!
+//! Gradients cross the process boundary in their [`Encoded`]
+//! dense/CSR/bitmap form — the server decodes straight into its
+//! averaging accumulator, so the sparse representation survives
+//! end-to-end (meProp's lesson: never densify at a boundary).
+
+use super::frame::{Rd, Wr};
+use crate::coordinator::comm::{Encoded, EncodedGrads};
+use crate::data::DataSpec;
+use crate::sparse::{bitmap::BitmapVec, csr::CsrVec};
+use anyhow::{bail, ensure, Result};
+
+/// Protocol version exchanged in the Hello/Welcome handshake (distinct
+/// from the frame [`WIRE_VERSION`]: the frame header can stay stable
+/// while message semantics evolve).
+///
+/// [`WIRE_VERSION`]: super::frame::WIRE_VERSION
+pub const PROTO_VERSION: u16 = 1;
+
+/// Frame tags, one per message variant.  Never reuse a retired tag.
+pub mod tag {
+    pub const HELLO: u8 = 1;
+    pub const WELCOME: u8 = 2;
+    pub const PARAMS: u8 = 3;
+    pub const GRADS: u8 = 4;
+    pub const HEARTBEAT: u8 = 5;
+    pub const SHUTDOWN: u8 = 6;
+}
+
+/// Everything a worker needs to join a run: its identity, the dither
+/// seed base, and the job description.  Sent by the server in response
+/// to a valid Hello.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Welcome {
+    /// This worker's node id in [0, nodes).
+    pub node: u32,
+    /// Total node count (determines the data shard split).
+    pub nodes: u32,
+    /// Round count for the whole run.
+    pub rounds: u32,
+    /// Base seed; per-(node, round) dither seeds derive from it.
+    pub seed: u64,
+    /// Dither scale s.
+    pub s: f32,
+    pub model: String,
+    pub method: String,
+    /// Dataset recipe for remote workers (they regenerate the
+    /// procedural dataset locally; examples never cross the wire).
+    /// `None` when the worker already holds a local shard.
+    pub data: Option<DataSpec>,
+}
+
+/// A coordinator protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker -> server: capability handshake.
+    Hello {
+        proto: u16,
+        /// Capability summary (backend platform), logged server-side.
+        caps: String,
+    },
+    /// Server -> worker: admission + assignment.
+    Welcome(Welcome),
+    /// Server -> worker: round barrier with fresh parameters (dense,
+    /// flattened per tensor; shapes come from the model registry both
+    /// sides share).
+    Params { round: u32, tensors: Vec<Vec<f32>> },
+    /// Worker -> server: sparse-encoded gradient upload.
+    Grads { node: u32, round: u32, grads: EncodedGrads },
+    /// Worker -> server: round ack / compute keepalive.
+    Heartbeat { node: u32, round: u32 },
+    /// Either direction: terminate gracefully.
+    Shutdown { reason: String },
+}
+
+impl Msg {
+    pub fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => tag::HELLO,
+            Msg::Welcome(_) => tag::WELCOME,
+            Msg::Params { .. } => tag::PARAMS,
+            Msg::Grads { .. } => tag::GRADS,
+            Msg::Heartbeat { .. } => tag::HEARTBEAT,
+            Msg::Shutdown { .. } => tag::SHUTDOWN,
+        }
+    }
+
+    /// Serialize the payload (frame header is the transport's job).
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut w = Wr::new();
+        match self {
+            Msg::Hello { proto, caps } => {
+                w.u16(*proto);
+                w.str(caps);
+            }
+            Msg::Welcome(wc) => {
+                w.u32(wc.node);
+                w.u32(wc.nodes);
+                w.u32(wc.rounds);
+                w.u64(wc.seed);
+                w.f32(wc.s);
+                w.str(&wc.model);
+                w.str(&wc.method);
+                match &wc.data {
+                    None => w.u8(0),
+                    Some(d) => {
+                        w.u8(1);
+                        w.str(&d.kind);
+                        w.u32(d.n_train as u32);
+                        w.u32(d.n_test as u32);
+                        w.u64(d.seed);
+                    }
+                }
+            }
+            Msg::Params { round, tensors } => {
+                w.u32(*round);
+                w.u32(tensors.len() as u32);
+                for t in tensors {
+                    w.f32s(t);
+                }
+            }
+            Msg::Grads { node, round, grads } => {
+                w.u32(*node);
+                w.u32(*round);
+                write_encoded_grads(&mut w, grads);
+            }
+            Msg::Heartbeat { node, round } => {
+                w.u32(*node);
+                w.u32(*round);
+            }
+            Msg::Shutdown { reason } => {
+                w.str(reason);
+            }
+        }
+        w.into_vec()
+    }
+
+    /// Decode a (tag, payload) pair produced by `encode_payload`.
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<Msg> {
+        let mut r = Rd::new(payload);
+        let msg = match tag {
+            tag::HELLO => Msg::Hello { proto: r.u16()?, caps: r.str()? },
+            tag::WELCOME => {
+                let node = r.u32()?;
+                let nodes = r.u32()?;
+                let rounds = r.u32()?;
+                let seed = r.u64()?;
+                let s = r.f32()?;
+                let model = r.str()?;
+                let method = r.str()?;
+                let data = match r.u8()? {
+                    0 => None,
+                    1 => Some(DataSpec {
+                        kind: r.str()?,
+                        n_train: r.u32()? as usize,
+                        n_test: r.u32()? as usize,
+                        seed: r.u64()?,
+                    }),
+                    k => bail!("bad DataSpec presence byte {k}"),
+                };
+                Msg::Welcome(Welcome { node, nodes, rounds, seed, s, model, method, data })
+            }
+            tag::PARAMS => {
+                let round = r.u32()?;
+                let n = r.u32()? as usize;
+                ensure!(n <= 4096, "implausible tensor count {n} in params message");
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(r.f32s()?);
+                }
+                Msg::Params { round, tensors }
+            }
+            tag::GRADS => Msg::Grads {
+                node: r.u32()?,
+                round: r.u32()?,
+                grads: read_encoded_grads(&mut r)?,
+            },
+            tag::HEARTBEAT => Msg::Heartbeat { node: r.u32()?, round: r.u32()? },
+            tag::SHUTDOWN => Msg::Shutdown { reason: r.str()? },
+            other => bail!("unknown message tag {other} (peer speaks a newer protocol?)"),
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+/// Encoded-tensor kind discriminants on the wire.
+mod enc_kind {
+    pub const DENSE: u8 = 0;
+    pub const CSR: u8 = 1;
+    pub const BITMAP: u8 = 2;
+}
+
+/// Serialize one [`Encoded`] tensor without densifying: CSR ships
+/// indices + values, bitmap ships the mask + values, dense ships raw
+/// f32s — exactly the byte layout the analytic `encoded_bytes`
+/// formulas count (plus one kind byte).
+pub fn write_encoded(w: &mut Wr, e: &Encoded) {
+    match e {
+        Encoded::Dense(v) => {
+            w.u8(enc_kind::DENSE);
+            w.f32s(v);
+        }
+        Encoded::Csr(c) => {
+            w.u8(enc_kind::CSR);
+            w.u32(c.len as u32);
+            w.u32s(&c.indices);
+            w.f32s(&c.values);
+        }
+        Encoded::Bitmap(b) => {
+            w.u8(enc_kind::BITMAP);
+            w.u32(b.len as u32);
+            w.bytes(&b.mask);
+            w.f32s(&b.values);
+        }
+    }
+}
+
+pub fn read_encoded(r: &mut Rd) -> Result<Encoded> {
+    match r.u8()? {
+        enc_kind::DENSE => Ok(Encoded::Dense(r.f32s()?)),
+        enc_kind::CSR => {
+            let len = r.u32()? as usize;
+            let indices = r.u32s()?;
+            let values = r.f32s()?;
+            ensure!(
+                indices.len() == values.len(),
+                "CSR index/value count mismatch: {} vs {}",
+                indices.len(),
+                values.len()
+            );
+            ensure!(
+                indices.iter().all(|&i| (i as usize) < len),
+                "CSR index out of bounds (len {len})"
+            );
+            Ok(Encoded::Csr(CsrVec { len, indices, values }))
+        }
+        enc_kind::BITMAP => {
+            let len = r.u32()? as usize;
+            let mask = r.bytes(len.div_ceil(8))?.to_vec();
+            let values = r.f32s()?;
+            let bits = mask.iter().map(|b| b.count_ones() as usize).sum::<usize>();
+            ensure!(
+                bits == values.len(),
+                "bitmap popcount {bits} disagrees with {} values",
+                values.len()
+            );
+            Ok(Encoded::Bitmap(BitmapVec { len, mask, values }))
+        }
+        k => bail!("unknown Encoded kind {k}"),
+    }
+}
+
+pub fn write_encoded_grads(w: &mut Wr, g: &EncodedGrads) {
+    w.u32(g.tensors.len() as u32);
+    for t in &g.tensors {
+        write_encoded(w, t);
+    }
+    w.f32(g.loss);
+    w.f32(g.correct);
+    w.f32s(&g.sparsity);
+    w.f32s(&g.max_level);
+}
+
+pub fn read_encoded_grads(r: &mut Rd) -> Result<EncodedGrads> {
+    let n = r.u32()? as usize;
+    ensure!(n <= 4096, "implausible tensor count {n} in gradient message");
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        tensors.push(read_encoded(r)?);
+    }
+    Ok(EncodedGrads {
+        tensors,
+        loss: r.f32()?,
+        correct: r.f32()?,
+        sparsity: r.f32s()?,
+        max_level: r.f32s()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::{encode_frame, parse_frame};
+    use crate::tensor::Tensor;
+    use crate::util::prop::{check, Gen};
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        // through the full frame layer, as a transport would send it
+        let frame = encode_frame(msg.tag(), &msg.encode_payload());
+        let (tag, payload) = parse_frame(&frame).unwrap();
+        Msg::decode(tag, payload).unwrap()
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        let grads = EncodedGrads {
+            tensors: vec![
+                Encoded::Dense(vec![1.0, -2.0]),
+                Encoded::Csr(CsrVec::encode(&[0.0, 3.0, 0.0])),
+                Encoded::Bitmap(BitmapVec::encode(&[0.0, 0.5, 0.5, 0.0, 1.0])),
+            ],
+            loss: 0.25,
+            correct: 1.0,
+            sparsity: vec![0.9, 0.8],
+            max_level: vec![3.0, 1.0],
+        };
+        let msgs = [
+            Msg::Hello { proto: PROTO_VERSION, caps: "native-cpu".into() },
+            Msg::Welcome(Welcome {
+                node: 1,
+                nodes: 4,
+                rounds: 100,
+                seed: 42,
+                s: 3.0,
+                model: "mlp128".into(),
+                method: "dithered".into(),
+                data: Some(DataSpec::new("digits", 512, 256, 7)),
+            }),
+            Msg::Welcome(Welcome {
+                node: 0,
+                nodes: 1,
+                rounds: 1,
+                seed: 0,
+                s: 0.0,
+                model: "m".into(),
+                method: "baseline".into(),
+                data: None,
+            }),
+            Msg::Params { round: 3, tensors: vec![vec![1.0, 2.0], vec![], vec![-0.5]] },
+            Msg::Grads { node: 2, round: 3, grads },
+            Msg::Heartbeat { node: 2, round: 3 },
+            Msg::Shutdown { reason: "run complete".into() },
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg, "roundtrip failed for tag {}", msg.tag());
+        }
+    }
+
+    #[test]
+    fn encoded_variants_frame_roundtrip_property() {
+        // satellite: every Encoded variant encode -> frame -> parse ->
+        // decode equals identity, over random densities
+        check("Encoded frame roundtrip == identity", 300, |g: &mut Gen| {
+            let density = g.f32_in(0.0, 1.0);
+            let dense = g.sparse_f32(0..=512, density);
+            let t = Tensor::from_vec(&[dense.len()], dense.clone());
+            for e in [
+                Encoded::best(&t),
+                Encoded::Dense(dense.clone()),
+                Encoded::Csr(CsrVec::encode(&dense)),
+                Encoded::Bitmap(BitmapVec::encode(&dense)),
+            ] {
+                let mut w = Wr::new();
+                write_encoded(&mut w, &e);
+                let frame = encode_frame(tag::GRADS, &w.into_vec());
+                let (_, payload) = parse_frame(&frame).unwrap();
+                let mut r = Rd::new(payload);
+                let back = read_encoded(&mut r).unwrap();
+                if r.done().is_err() || back.decode(&[dense.len()]).data() != dense.as_slice() {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn encoded_grads_roundtrip_property() {
+        check("EncodedGrads frame roundtrip == identity", 150, |g: &mut Gen| {
+            let n_tensors = g.usize_in(0..=4);
+            let grads: Vec<Tensor> = (0..n_tensors)
+                .map(|_| {
+                    let d = g.f32_in(0.0, 1.0);
+                    let v = g.sparse_f32(1..=128, d);
+                    Tensor::from_vec(&[v.len()], v)
+                })
+                .collect();
+            let msg = EncodedGrads::encode(
+                &grads,
+                g.f32_in(0.0, 4.0),
+                1.0,
+                vec![g.f32_in(0.0, 1.0)],
+                vec![g.f32_in(0.0, 16.0)],
+            );
+            let mut w = Wr::new();
+            write_encoded_grads(&mut w, &msg);
+            let buf = w.into_vec();
+            let mut r = Rd::new(&buf);
+            let back = read_encoded_grads(&mut r).unwrap();
+            r.done().unwrap();
+            back.loss == msg.loss
+                && back.correct == msg.correct
+                && back.sparsity == msg.sparsity
+                && back.max_level == msg.max_level
+                && back
+                    .tensors
+                    .iter()
+                    .zip(grads.iter())
+                    .all(|(e, t)| e.decode(&[t.len()]).data() == t.data())
+        });
+    }
+
+    #[test]
+    fn corrupt_payloads_error_cleanly() {
+        // CSR with out-of-bounds index
+        let mut w = Wr::new();
+        w.u8(1); // csr
+        w.u32(4); // len
+        w.u32s(&[9]); // index 9 out of bounds
+        w.f32s(&[1.0]);
+        let buf = w.into_vec();
+        assert!(read_encoded(&mut Rd::new(&buf)).is_err());
+        // bitmap popcount mismatch
+        let mut w = Wr::new();
+        w.u8(2); // bitmap
+        w.u32(8);
+        w.bytes(&[0b0000_0011]);
+        w.f32s(&[1.0]); // mask says 2 values, only 1 shipped
+        let buf = w.into_vec();
+        assert!(read_encoded(&mut Rd::new(&buf)).is_err());
+        // unknown message tag
+        assert!(Msg::decode(200, &[]).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! TCP transport: frames over `std::net::TcpStream`.
+//!
+//! Pure `std` (the zero-registry-deps invariant): blocking sockets with
+//! `TCP_NODELAY` (frames are latency-sensitive round barriers, not
+//! throughput streams) and read timeouts implemented via
+//! `set_read_timeout` + an `Instant` total-deadline loop, so a peer
+//! that trickles bytes can't stall the server past its deadline.
+//!
+//! Timeout semantics ([`Transport::recv_deadline`]): a deadline that
+//! expires before any header byte arrives is a clean `Ok(None)` — the
+//! caller decides (straggler drop).  A deadline that expires *mid-frame*
+//! is an error: a byte stream abandoned mid-frame cannot be
+//! resynchronized, so the link is declared dead.
+
+use super::frame::{parse_header, write_frame, HEADER_LEN};
+use super::proto::Msg;
+use super::Transport;
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// One framed TCP link to a peer.
+pub struct TcpTransport {
+    stream: TcpStream,
+    peer: String,
+    sent: u64,
+    rcvd: u64,
+}
+
+/// Upper bound on one blocking `send` — a hung-but-alive peer whose
+/// socket buffer filled up must error (and get retired by the server)
+/// instead of blocking the round loop forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(60);
+
+impl TcpTransport {
+    /// Connect to a listening server.
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Display) -> Result<Self> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connecting to {addr}"))?;
+        Self::from_stream(stream)
+    }
+
+    /// Connect, retrying until `total` elapses — lets a `dist-worker`
+    /// start before its server finishes binding.
+    pub fn connect_retry(addr: &str, total: Duration) -> Result<Self> {
+        let started = Instant::now();
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Self::from_stream(stream),
+                Err(_) if started.elapsed() < total => {
+                    // refused: server not up yet
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("connecting to {addr} (gave up after {:?})", total)
+                    })
+                }
+            }
+        }
+    }
+
+    /// Wrap an accepted stream.
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+        stream
+            .set_write_timeout(Some(WRITE_TIMEOUT))
+            .context("setting socket write timeout")?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "tcp:unknown".into());
+        Ok(TcpTransport { stream, peer, sent: 0, rcvd: 0 })
+    }
+
+    /// Fill `buf` completely, honoring a total deadline.  Returns
+    /// `Ok(false)` iff the deadline expired with *zero* bytes read and
+    /// `allow_empty_timeout` is set; a mid-buffer expiry is an error.
+    fn read_exact_deadline(
+        &mut self,
+        buf: &mut [u8],
+        deadline: Option<Instant>,
+        allow_empty_timeout: bool,
+    ) -> Result<bool> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            let per_read = match deadline {
+                None => None,
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        if filled == 0 && allow_empty_timeout {
+                            return Ok(false);
+                        }
+                        bail!(
+                            "peer {} stalled mid-frame ({filled}/{} bytes)",
+                            self.peer,
+                            buf.len()
+                        );
+                    }
+                    Some(left)
+                }
+            };
+            self.stream
+                .set_read_timeout(per_read)
+                .context("setting socket read timeout")?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => bail!("peer {} closed the connection", self.peer),
+                Ok(n) => {
+                    filled += n;
+                    self.rcvd += n as u64;
+                }
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut
+                        || e.kind() == ErrorKind::Interrupted =>
+                {
+                    // loop re-checks the deadline
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("reading from peer {}", self.peer))
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    fn recv_impl(&mut self, timeout: Option<Duration>) -> Result<Option<Msg>> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut header = [0u8; HEADER_LEN];
+        if !self.read_exact_deadline(&mut header, deadline, true)? {
+            return Ok(None);
+        }
+        let (tag, len) = parse_header(header)?;
+        let mut payload = vec![0u8; len];
+        // the header arrived: the rest must follow under the same
+        // deadline or the stream is broken
+        self.read_exact_deadline(&mut payload, deadline, false)?;
+        Msg::decode(tag, &payload).map(Some)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        let payload = msg.encode_payload();
+        let n = write_frame(&mut self.stream, msg.tag(), &payload)
+            .with_context(|| format!("sending to peer {}", self.peer))?;
+        self.sent += n as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Msg> {
+        self.recv_impl(None)?
+            .ok_or_else(|| anyhow::anyhow!("recv returned without a message"))
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        self.recv_impl(Some(timeout))
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.rcvd
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+/// Accept exactly `n` worker connections from a listener, with a total
+/// deadline so a missing worker fails the launch fast instead of
+/// hanging the server forever.
+pub fn accept_workers(
+    listener: &TcpListener,
+    n: usize,
+    timeout: Duration,
+) -> Result<Vec<Box<dyn Transport>>> {
+    listener
+        .set_nonblocking(true)
+        .context("setting listener nonblocking")?;
+    let deadline = Instant::now() + timeout;
+    let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(n);
+    while links.len() < n {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                stream.set_nonblocking(false).context("restoring blocking mode")?;
+                links.push(Box::new(TcpTransport::from_stream(stream)?));
+                let _ = addr;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "only {}/{n} workers connected within {:?}",
+                        links.len(),
+                        timeout
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback_pair() -> (TcpTransport, TcpTransport) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || TcpTransport::connect(addr).unwrap());
+        let (stream, _) = listener.accept().unwrap();
+        let server_side = TcpTransport::from_stream(stream).unwrap();
+        (server_side, client.join().unwrap())
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_byte_counters() {
+        let (mut s, mut c) = loopback_pair();
+        let msg = Msg::Params { round: 1, tensors: vec![vec![1.0, 2.0, 3.0]] };
+        c.send(&msg).unwrap();
+        assert_eq!(s.recv().unwrap(), msg);
+        assert_eq!(c.bytes_sent(), s.bytes_received());
+        assert!(c.bytes_sent() > HEADER_LEN as u64);
+    }
+
+    #[test]
+    fn recv_deadline_returns_none_when_silent() {
+        let (mut s, _c) = loopback_pair();
+        let got = s.recv_deadline(Duration::from_millis(50)).unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn closed_peer_is_an_error() {
+        let (mut s, c) = loopback_pair();
+        drop(c);
+        assert!(s.recv().is_err());
+    }
+
+    #[test]
+    fn accept_workers_times_out_when_short() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = accept_workers(&listener, 1, Duration::from_millis(80)).unwrap_err();
+        assert!(err.to_string().contains("0/1 workers"));
+    }
+}

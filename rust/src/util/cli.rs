@@ -70,6 +70,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// A flag that must be present (subcommands with no sane default,
+    /// e.g. `dist-worker --connect HOST:PORT`).
+    pub fn require(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch) || self.flags.contains_key(switch)
     }
@@ -115,6 +122,14 @@ mod tests {
         let a = parse("--quick --model mlp500");
         assert!(a.has("quick"));
         assert_eq!(a.get("model"), Some("mlp500"));
+    }
+
+    #[test]
+    fn require_present_and_missing() {
+        let a = parse("--connect 127.0.0.1:7461");
+        assert_eq!(a.require("connect").unwrap(), "127.0.0.1:7461");
+        let err = a.require("bind").unwrap_err();
+        assert!(err.to_string().contains("--bind"));
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Integration: the distributed coordinator over real TCP sockets.
+//!
+//! Three claims pinned here:
+//!  1. a server + 2 worker *processes-worth* of protocol over
+//!     127.0.0.1 ephemeral ports trains end to end (loss decreases)
+//!     and moves fewer measured bytes than dense gradients would,
+//!  2. a channel-transport run and a TCP-loopback run with the same
+//!     seeds produce bit-identical parameter vectors (the transport is
+//!     semantically invisible),
+//!  3. a worker that goes silent is dropped as a straggler and the run
+//!     completes with the survivors.
+
+use ditherprop::coordinator::{run_distributed, serve, serve_tcp, worker_loop, DistConfig};
+use ditherprop::data::DataSpec;
+use ditherprop::net::{ChannelTransport, Msg, TcpTransport, Transport};
+use ditherprop::optim::{LrSchedule, SgdConfig};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// A directory that never hosts AOT artifacts, so every engine load
+/// serves the built-in native zoo.
+fn artifacts() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/native-zoo").to_string()
+}
+
+fn cfg(nodes: usize, rounds: usize, spec: &DataSpec) -> DistConfig {
+    DistConfig {
+        artifacts_dir: artifacts(),
+        model: "mlp128".into(),
+        method: "dithered".into(),
+        s: 3.0,
+        nodes,
+        rounds,
+        opt: SgdConfig { lr: LrSchedule::constant(0.02), momentum: 0.9, weight_decay: 5e-4 },
+        seed: 9,
+        verbose: false,
+        data: Some(spec.clone()),
+        round_timeout: Duration::from_secs(20),
+    }
+}
+
+/// Spawn `n` worker threads that connect to `addr` over real TCP and
+/// regenerate their shards from the Welcome's DataSpec — exactly what
+/// `dist-worker` processes do, minus the fork/exec.
+fn spawn_tcp_workers(
+    addr: std::net::SocketAddr,
+    n: usize,
+) -> Vec<std::thread::JoinHandle<anyhow::Result<()>>> {
+    (0..n)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let link = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))?;
+                worker_loop(Box::new(link), &artifacts(), None)
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn tcp_loopback_two_workers_learn_and_compress() {
+    let spec = DataSpec::new("digits", 512, 512, 6);
+    let ds = spec.build();
+    let cfg = cfg(2, 60, &spec);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_tcp_workers(addr, 2);
+    let res = serve_tcp(&listener, &ds, &cfg).unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+
+    assert_eq!(res.comm.rounds, 60);
+    assert_eq!(res.live_workers, 2);
+    // learning: early-round loss above late-round loss
+    let first = res.history.steps[..15].iter().map(|r| r.loss).sum::<f32>() / 15.0;
+    let last = res.history.steps[45..].iter().map(|r| r.loss).sum::<f32>() / 15.0;
+    assert!(last < first, "TCP loss not decreasing: {first} -> {last}");
+    assert!(res.mean_sparsity > 0.5, "sparsity {}", res.mean_sparsity);
+    // measured wire bytes (framing, handshake and heartbeats included)
+    // must beat shipping dense f32 gradients
+    assert!(res.comm.wire_up_bytes > 0, "byte counters never absorbed");
+    assert!(
+        res.comm.wire_up_bytes < res.comm.up_bytes_dense as u64,
+        "measured {} wire bytes >= {} dense bytes",
+        res.comm.wire_up_bytes,
+        res.comm.up_bytes_dense
+    );
+    assert!(
+        res.comm.measured_up_savings() > 1.5,
+        "measured savings only x{:.2}",
+        res.comm.measured_up_savings()
+    );
+}
+
+#[test]
+fn channel_and_tcp_runs_are_bit_identical() {
+    let spec = DataSpec::new("digits", 384, 256, 11);
+    let ds = spec.build();
+    let cfg = cfg(2, 25, &spec);
+
+    // channel-transport run (single process, worker threads)
+    let chan = run_distributed(&ds, &cfg).unwrap();
+
+    // TCP-loopback run, same seeds/config
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let workers = spawn_tcp_workers(addr, 2);
+    let tcp = serve_tcp(&listener, &ds, &cfg).unwrap();
+    for w in workers {
+        w.join().unwrap().unwrap();
+    }
+
+    assert_eq!(
+        chan.params, tcp.params,
+        "channel vs TCP parameter vectors diverged after {} rounds",
+        cfg.rounds
+    );
+    assert_eq!(chan.test_acc, tcp.test_acc);
+    assert_eq!(chan.comm.up_bytes, tcp.comm.up_bytes, "analytic codec bytes must match");
+    // per-round losses identical too (same examples, same dither)
+    for (a, b) in chan.history.steps.iter().zip(tcp.history.steps.iter()) {
+        assert_eq!(a.loss, b.loss, "loss diverged at round {}", a.step);
+    }
+}
+
+#[test]
+fn heartbeat_spammer_is_dropped_not_waited_on() {
+    // A peer that keeps acking but never uploads must not be able to
+    // wedge the gather loop by resetting its deadline forever: the
+    // second heartbeat in one round is a protocol violation and drops
+    // the worker immediately (no timeout wait — keep round_timeout
+    // large to prove the drop is cap-driven, not deadline-driven).
+    let spec = DataSpec::new("digits", 256, 256, 5);
+    let ds = spec.build();
+    let mut cfg = cfg(2, 5, &spec);
+    cfg.round_timeout = Duration::from_secs(30);
+
+    let (real_server_side, real_worker_side) = ChannelTransport::pair("real");
+    let shard = ds.train.shard(0, 2);
+    let real = std::thread::spawn(move || {
+        worker_loop(Box::new(real_worker_side), &artifacts(), Some(shard))
+    });
+
+    let (spam_server_side, mut spam_link) = ChannelTransport::pair("spam");
+    let spam = std::thread::spawn(move || {
+        spam_link
+            .send(&Msg::Hello { proto: ditherprop::net::PROTO_VERSION, caps: "spam".into() })
+            .unwrap();
+        let node = match spam_link.recv().unwrap() {
+            Msg::Welcome(w) => w.node,
+            other => panic!("expected Welcome, got tag {}", other.tag()),
+        };
+        loop {
+            match spam_link.recv() {
+                Ok(Msg::Params { round, .. }) => {
+                    for _ in 0..5 {
+                        if spam_link.send(&Msg::Heartbeat { node, round }).is_err() {
+                            return; // dropped by the server, as expected
+                        }
+                    }
+                }
+                Ok(_) => {}
+                Err(_) => return,
+            }
+        }
+    });
+
+    let links = vec![
+        Some(Box::new(real_server_side) as Box<dyn Transport>),
+        Some(Box::new(spam_server_side) as Box<dyn Transport>),
+    ];
+    let started = std::time::Instant::now();
+    let res = serve(links, &ds, &cfg).unwrap();
+    real.join().unwrap().unwrap();
+    spam.join().unwrap();
+
+    assert_eq!(res.comm.rounds, 5);
+    assert_eq!(res.live_workers, 1, "spammer must be dropped");
+    assert!(
+        started.elapsed() < cfg.round_timeout,
+        "drop took a full deadline — the heartbeat cap did not fire"
+    );
+}
+
+#[test]
+fn silent_worker_is_dropped_as_straggler() {
+    let spec = DataSpec::new("digits", 256, 256, 5);
+    let ds = spec.build();
+    let mut cfg = cfg(2, 8, &spec);
+    cfg.round_timeout = Duration::from_millis(400);
+
+    // worker 0: real; worker 1: handshakes, then goes silent forever
+    let (real_server_side, real_worker_side) = ChannelTransport::pair("real");
+    let shard = ds.train.shard(0, 2);
+    let real = std::thread::spawn(move || {
+        worker_loop(Box::new(real_worker_side), &artifacts(), Some(shard))
+    });
+
+    let (mute_server_side, mut mute_worker_side) = ChannelTransport::pair("mute");
+    let mute = std::thread::spawn(move || {
+        mute_worker_side
+            .send(&Msg::Hello { proto: ditherprop::net::PROTO_VERSION, caps: "mute".into() })
+            .unwrap();
+        // swallow the Welcome + params, never answer, outlive the run
+        while mute_worker_side.recv().is_ok() {}
+    });
+
+    let links = vec![
+        Some(Box::new(real_server_side) as Box<dyn Transport>),
+        Some(Box::new(mute_server_side) as Box<dyn Transport>),
+    ];
+    let res = serve(links, &ds, &cfg).unwrap();
+    real.join().unwrap().unwrap();
+    mute.join().unwrap();
+
+    assert_eq!(res.comm.rounds, 8, "run must complete despite the straggler");
+    assert_eq!(res.live_workers, 1, "straggler must be dropped");
+    // the mute link's handshake bytes still show up in the accounting
+    assert!(res.comm.wire_up_bytes > 0);
+}

@@ -84,6 +84,8 @@ fn distributed_two_nodes_learns_and_compresses() {
         opt: SgdConfig { lr: LrSchedule::constant(0.02), momentum: 0.9, weight_decay: 5e-4 },
         seed: 9,
         verbose: false,
+        data: None,
+        round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
     };
     let res = run_distributed(&ds, &cfg).unwrap();
     assert!(res.mean_sparsity > 0.7, "sparsity {}", res.mean_sparsity);
@@ -109,6 +111,8 @@ fn distributed_runs_every_method() {
             opt: SgdConfig { lr: LrSchedule::constant(0.02), momentum: 0.9, weight_decay: 5e-4 },
             seed: 13,
             verbose: false,
+            data: None,
+            round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
         };
         let res = run_distributed(&ds, &cfg)
             .unwrap_or_else(|e| panic!("distributed {method} failed: {e:?}"));
@@ -136,6 +140,8 @@ fn distributed_noise_averaging_more_nodes_not_worse() {
             opt: SgdConfig { lr: LrSchedule::constant(0.05), momentum: 0.9, weight_decay: 5e-4 },
             seed: 11,
             verbose: false,
+            data: None,
+            round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
         };
         run_distributed(&ds, &cfg).unwrap()
     };
