@@ -1,12 +1,13 @@
 //! Bench: regenerate the Eq. 12 savings analysis — theoretical
 //! `1/m + p_nz` ratio vs measured op counts of a skip-on-zero product.
 //!
-//! `cargo bench --bench eq12_savings`
+//! `cargo bench --bench eq12_savings [-- --json eq12.json]`
 
+use ditherprop::bench_util::{num, JsonReport};
 use ditherprop::experiments::eq12;
 use ditherprop::util::cli::Args;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let rows = eq12::run(
         &[1, 4, 16, 64, 256, 1024],
@@ -15,5 +16,23 @@ fn main() {
     );
     println!("=== Eq. 12 (reproduction) ===");
     print!("{}", eq12::render(&rows));
-    println!("\npaper reference: savings -> p_nz as m >> 1; at the paper's 92% sparsity the backward GEMMs cost ~8% of dense.");
+    println!(
+        "\npaper reference: savings -> p_nz as m >> 1; at the paper's 92% sparsity \
+         the backward GEMMs cost ~8% of dense."
+    );
+
+    let mut rep = JsonReport::new("eq12_savings");
+    for r in &rows {
+        rep.row(&[
+            ("m", num(r.m as f64)),
+            ("p_nz", num(r.p_nz)),
+            ("theory", num(r.theory)),
+            ("measured", num(r.measured)),
+        ]);
+    }
+    let json_path = args.str_or("json", "none");
+    if rep.write(&json_path)? {
+        println!("wrote {} rows to {json_path}", rep.n_rows());
+    }
+    Ok(())
 }

@@ -1,28 +1,90 @@
-//! Bench: L3 hot-path microbenchmarks (§Perf) — grad-step execution,
-//! literal marshalling, optimizer update, sparse codecs, server
-//! aggregation.  The numbers here drive the EXPERIMENTS.md §Perf log.
+//! Bench: L3 hot-path microbenchmarks (§Perf) — grad-step execution
+//! (pre-PR scalar-serial kernels vs blocked+threaded), a kernel-level
+//! sparse-GEMM suite at swept sparsity levels vs the `costmodel` Eq. 12
+//! prediction, optimizer update, sparse codecs, server aggregation.
+//! The numbers here drive the EXPERIMENTS.md §Perf log and the
+//! `BENCH_kernels.json` perf trajectory.
 //!
-//! `cargo bench --bench runtime_hotpath [-- --iters 30]`
+//! ```text
+//! cargo bench --bench runtime_hotpath -- [--iters 30] [--threads N] \
+//!     [--json ../BENCH_kernels.json]   # no --json (or "none") = no file
+//! ```
 
-use ditherprop::bench_util::{bench_fn, report_header};
+use ditherprop::bench_util::{bench_fn, num, report_header, text, BenchResult, JsonReport};
 use ditherprop::coordinator::comm::EncodedGrads;
+use ditherprop::costmodel::flops::{conv_backward_cost, fc_backward_cost, gflops, BackwardCost};
 use ditherprop::data;
+use ditherprop::kernels::{self, ENV_KERNELS, ENV_THREADS};
 use ditherprop::optim::{Sgd, SgdConfig};
+use ditherprop::runtime::backend::native::conv::ConvGeom;
+use ditherprop::runtime::backend::native::{LayerSpec, NativeBackend, Plan};
 use ditherprop::runtime::Engine;
 use ditherprop::sparse::{BitmapVec, CsrVec};
 use ditherprop::tensor::Tensor;
 use ditherprop::util::cli::Args;
 use ditherprop::util::rng::Rng;
 
+/// Eq. 12 backward cost of a whole model at the measured per-layer
+/// `delta_z` densities: the fc/conv GEMM-pair terms summed over every
+/// quantized layer.
+fn model_backward_cost(plan: &Plan, batch: usize, sparsity: &[f32]) -> BackwardCost {
+    let (mut dense, mut nsd, mut sparse) = (0.0, 0.0, 0.0);
+    for st in &plan.stages {
+        let Some(q) = st.qlayer else { continue };
+        let p_nz = (1.0 - sparsity[q] as f64).clamp(0.0, 1.0);
+        let c = match st.layer {
+            LayerSpec::Dense { out } => fc_backward_cost(batch, st.in_shape[0], out, p_nz),
+            LayerSpec::Conv2d { k, stride, pad, .. } => {
+                let g = ConvGeom::of(st, k, stride, pad);
+                conv_backward_cost(batch, g.positions(), g.patch_len(), g.out_ch, p_nz)
+            }
+            _ => continue,
+        };
+        dense += c.dense_ops;
+        nsd += c.nsd_ops;
+        sparse += c.sparse_ops;
+    }
+    BackwardCost { dense_ops: dense, nsd_ops: nsd, sparse_ops: sparse }
+}
+
+/// Random CSR rows (the compressed `delta_z`) at a target density.
+fn random_csr_rows(n_rows: usize, cols: usize, p_nz: f32, rng: &mut Rng) -> Vec<CsrVec> {
+    (0..n_rows)
+        .map(|_| {
+            let dense: Vec<f32> = (0..cols)
+                .map(|_| if rng.uniform() < p_nz { rng.normal() } else { 0.0 })
+                .collect();
+            CsrVec::encode(&dense)
+        })
+        .collect()
+}
+
+fn random_dense(n: usize, density: f32, rng: &mut Rng) -> Vec<f32> {
+    (0..n)
+        .map(|_| if rng.uniform() < density { rng.normal() } else { 0.0 })
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let iters = args.usize_or("iters", 30);
     let artifacts = args.str_or("artifacts", "artifacts");
+    let threads = args.usize_or("threads", kernels::num_threads());
+    // opt-in (like eq12_savings): the tracked trajectory lives at the
+    // repo root, so pass --json ../BENCH_kernels.json from rust/
+    let json_path = args.str_or("json", "none");
+
+    let mut rep = JsonReport::new("runtime_hotpath");
+    rep.meta("iters", num(iters as f64));
+    rep.meta("threads", num(threads as f64));
+
+    println!("kernel threads: {threads} (override with --threads or DITHERPROP_THREADS)");
     println!("{}", report_header());
 
-    // --- end-to-end grad step (the dominating cost) -------------------
+    // --- end-to-end grad step: pre-PR scalar-serial kernels vs the
+    //     blocked + threaded kernels, with the Eq. 12 cross-check -----
     let engine = Engine::load(&artifacts)?;
-    let mut results = Vec::new();
+    let native = NativeBackend::load(&artifacts)?;
     for (model, batch) in [("mlp500", 64), ("mlp500", 1), ("lenet5", 64), ("minivgg", 64)] {
         // every row runs natively now; the guard only trips on custom
         // registries that omit a model
@@ -30,24 +92,199 @@ fn main() -> anyhow::Result<()> {
             println!("(skipping {model}: not in this backend's registry)");
             continue;
         }
+        let plan = native.model_spec(model)?.plan()?;
+        // per-method (median_s with new kernels, Eq.12 cost at the
+        // method's measured delta_z density)
+        let mut method_rows: Vec<(&str, f64, BackwardCost)> = Vec::new();
         for method in ["baseline", "dithered"] {
             let session = engine.training_session(model, method, batch)?;
             let params = engine.init_params(model, 0)?;
             let ds = data::build(&session.entry.dataset.clone(), batch.max(64), 64, 3);
             let mut it = data::BatchIter::new(&ds.train, batch, 1);
             it.next_batch(&ds.train);
-            let mut seed = 0u32;
-            let r = bench_fn(
-                &format!("grad {model}/{method} b{batch}"),
-                3,
-                iters,
-                || {
-                    seed = seed.wrapping_add(1);
-                    session.grad(&params, &it.x, &it.y, seed, 2.0).unwrap();
-                },
+            // measured per-layer density feeds the Eq. 12 prediction
+            let stats = session.grad(&params, &it.x, &it.y, 1, 2.0)?;
+            let cost = model_backward_cost(&plan, batch, &stats.sparsity);
+
+            let mut run = |label: &str, variant: &str, nthreads: usize| -> BenchResult {
+                // EnvGuard restores the operator's launch-time knobs
+                // after each timed region
+                let _k = kernels::EnvGuard::set(ENV_KERNELS, variant);
+                let _t = kernels::EnvGuard::set(ENV_THREADS, &nthreads.to_string());
+                let mut seed = 0u32;
+                let r = bench_fn(
+                    &format!("grad {model}/{method} b{batch} {label}"),
+                    2,
+                    iters,
+                    || {
+                        seed = seed.wrapping_add(1);
+                        session.grad(&params, &it.x, &it.y, seed, 2.0).unwrap();
+                    },
+                );
+                println!("{}", r.report());
+                r
+            };
+            let r_ref = run("scalar-serial", "ref", 1);
+            let r_new = run(&format!("blocked t{threads}"), "auto", threads);
+            let kernel_speedup = r_ref.median_s() / r_new.median_s().max(1e-12);
+            println!("    blocked+threaded vs pre-PR scalar serial: {kernel_speedup:.2}x");
+
+            for (r, variant, nt) in
+                [(&r_ref, "scalar-serial", 1), (&r_new, "blocked+threaded", threads)]
+            {
+                rep.result_row(
+                    r,
+                    &[
+                        ("suite", text("grad")),
+                        ("model", text(model)),
+                        ("method", text(method)),
+                        ("batch", num(batch as f64)),
+                        ("variant", text(variant)),
+                        ("threads", num(nt as f64)),
+                        ("mean_sparsity", num(stats.mean_sparsity() as f64)),
+                        ("speedup_vs_scalar", num(kernel_speedup)),
+                    ],
+                );
+            }
+            method_rows.push((method, r_new.median_s(), cost));
+        }
+        // measured dithered-vs-baseline speedup against the Eq. 12
+        // prediction at the measured density (the full step also runs
+        // the un-modelled forward pass, so measured < predicted — the
+        // ratio is the honest gap the cost model leaves open).
+        if let (Some(base), Some(dith)) = (
+            method_rows.iter().find(|r| r.0 == "baseline"),
+            method_rows.iter().find(|r| r.0 == "dithered"),
+        ) {
+            let measured = base.1 / dith.1.max(1e-12);
+            let predicted = dith.2.speedup();
+            println!(
+                "    {model} b{batch}: dithered vs baseline measured {measured:.2}x, \
+                 Eq.12 predicts {predicted:.2}x (ratio {:.2})",
+                measured / predicted
             );
-            println!("{}", r.report());
-            results.push(r);
+            rep.row(&[
+                ("suite", text("eq12")),
+                ("model", text(model)),
+                ("batch", num(batch as f64)),
+                ("measured_speedup", num(measured)),
+                ("eq12_speedup", num(predicted)),
+                ("ratio", num(measured / predicted)),
+            ]);
+        }
+    }
+
+    // --- kernel-level suite: per-GEMM GFLOP/s at swept sparsity,
+    //     serial reference vs blocked vs threaded -----------------------
+    struct KShape {
+        name: &'static str,
+        rows: usize,
+        din: usize,
+        dout: usize,
+        x_density: f32,
+    }
+    // an mlp500-like dense layer and lenet5's conv2 in im2col form
+    let shapes = [
+        KShape { name: "fc 64x784x500", rows: 64, din: 784, dout: 500, x_density: 0.75 },
+        KShape { name: "conv-im2col 6400x150x16", rows: 6400, din: 150, dout: 16, x_density: 0.6 },
+    ];
+    let kiters = (iters / 2).max(2);
+    for sh in &shapes {
+        for &p_nz in &[1.0f32, 0.5, 0.25, 0.08, 0.02] {
+            let mut rng = Rng::new(((p_nz * 1000.0) as u64) ^ ((sh.rows as u64) << 16));
+            let csr = random_csr_rows(sh.rows, sh.dout, p_nz, &mut rng);
+            let nnz: usize = csr.iter().map(CsrVec::nnz).sum();
+            // the spawn-threshold clamp, so rows report the worker count
+            // that actually ran rather than the one requested
+            let lane_ops = nnz * sh.din / kernels::LANES;
+            let eff_param = kernels::planned_threads(threads, lane_ops, sh.dout);
+            let eff_input = kernels::planned_threads(threads, lane_ops, sh.rows);
+            let x = random_dense(sh.rows * sh.din, sh.x_density, &mut rng);
+            let wt = random_dense(sh.dout * sh.din, 1.0, &mut rng);
+            let pair = fc_backward_cost(sh.rows, sh.din, sh.dout, p_nz as f64);
+
+            // Eq. 9 param GEMM (dw + db), including the transpose the
+            // executor performs for the blocked variants
+            let mut dw = vec![0.0f32; sh.din * sh.dout];
+            let mut dwt = vec![0.0f32; sh.dout * sh.din];
+            let mut db = vec![0.0f32; sh.dout];
+            let param_flops = (2 * nnz * sh.din + nnz) as f64;
+            let mut param_variants: Vec<(&str, usize, BenchResult)> = Vec::new();
+            let r = bench_fn(&format!("param {} p{p_nz} ref", sh.name), 1, kiters, || {
+                dw.fill(0.0);
+                db.fill(0.0);
+                kernels::sparse_param_gemm_ref(&csr, &x, sh.din, sh.dout, &mut dw, &mut db);
+            });
+            param_variants.push(("ref", 1, r));
+            let r = bench_fn(&format!("param {} p{p_nz} blocked", sh.name), 1, kiters, || {
+                dwt.fill(0.0);
+                db.fill(0.0);
+                kernels::sparse_param_gemm_blocked(&csr, &x, sh.din, sh.dout, &mut dwt, &mut db);
+                kernels::transpose_into(&dwt, sh.dout, sh.din, &mut dw);
+            });
+            param_variants.push(("blocked", 1, r));
+            let r = bench_fn(&format!("param {} p{p_nz} threads{threads}", sh.name), 1, kiters, || {
+                dwt.fill(0.0);
+                db.fill(0.0);
+                kernels::sparse_param_gemm_threaded(
+                    &csr, &x, sh.din, sh.dout, &mut dwt, &mut db, threads,
+                );
+                kernels::transpose_into(&dwt, sh.dout, sh.din, &mut dw);
+            });
+            param_variants.push(("threaded", eff_param, r));
+
+            // Eq. 8 input GEMM
+            let mut gp = vec![0.0f32; sh.rows * sh.din];
+            let input_flops = (2 * nnz * sh.din) as f64;
+            let mut input_variants: Vec<(&str, usize, BenchResult)> = Vec::new();
+            let r = bench_fn(&format!("input {} p{p_nz} ref", sh.name), 1, kiters, || {
+                std::hint::black_box(kernels::sparse_input_gemm_ref(&csr, &wt, sh.din));
+            });
+            input_variants.push(("ref", 1, r));
+            let r = bench_fn(&format!("input {} p{p_nz} blocked", sh.name), 1, kiters, || {
+                kernels::sparse_input_gemm_blocked_into(&csr, &wt, sh.din, &mut gp);
+            });
+            input_variants.push(("blocked", 1, r));
+            let r = bench_fn(&format!("input {} p{p_nz} threads{threads}", sh.name), 1, kiters, || {
+                kernels::sparse_input_gemm_threaded_into(&csr, &wt, sh.din, &mut gp, threads);
+            });
+            input_variants.push(("threaded", eff_input, r));
+
+            for (op, flops, variants) in [
+                ("param_gemm", param_flops, &param_variants),
+                ("input_gemm", input_flops, &input_variants),
+            ] {
+                let ref_median = variants[0].2.median_s();
+                for (variant, nt, r) in variants.iter() {
+                    let med = r.median_s();
+                    let gf = gflops(flops, med);
+                    let speedup = ref_median / med.max(1e-12);
+                    println!(
+                        "{}  {gf:>7.2} GF/s  {speedup:>5.2}x vs ref  (Eq.12 pair: {:.2}x)",
+                        r.report(),
+                        pair.speedup()
+                    );
+                    rep.result_row(
+                        r,
+                        &[
+                            ("suite", text("kernel")),
+                            ("op", text(op)),
+                            ("shape", text(sh.name)),
+                            ("rows", num(sh.rows as f64)),
+                            ("din", num(sh.din as f64)),
+                            ("dout", num(sh.dout as f64)),
+                            ("p_nz", num(p_nz as f64)),
+                            ("nnz", num(nnz as f64)),
+                            ("variant", text(variant)),
+                            ("threads", num(*nt as f64)),
+                            ("threads_requested", num(threads as f64)),
+                            ("gflops", num(gf)),
+                            ("speedup_vs_ref", num(speedup)),
+                            ("eq12_speedup", num(pair.speedup())),
+                        ],
+                    );
+                }
+            }
         }
     }
 
@@ -63,6 +300,7 @@ fn main() -> anyhow::Result<()> {
         opt.apply(&mut params, &grads);
     });
     println!("{}", r.report());
+    rep.result_row(&r, &[("suite", text("optim"))]);
 
     // --- sparse codecs -------------------------------------------------
     let mut rng = Rng::new(7);
@@ -73,16 +311,19 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(CsrVec::encode(&sparse_vec));
     });
     println!("{}", r.report());
+    rep.result_row(&r, &[("suite", text("codec"))]);
     let enc = CsrVec::encode(&sparse_vec);
     let mut out = vec![0.0f32; sparse_vec.len()];
     let r = bench_fn("csr axpy-decode 648k @5%", 2, iters.max(50), || {
         enc.axpy_into(0.25, &mut out);
     });
     println!("{}", r.report());
+    rep.result_row(&r, &[("suite", text("codec"))]);
     let r = bench_fn("bitmap encode 648k @5%", 2, iters.max(50), || {
         std::hint::black_box(BitmapVec::encode(&sparse_vec));
     });
     println!("{}", r.report());
+    rep.result_row(&r, &[("suite", text("codec"))]);
 
     // --- server aggregation (decode + average of N node messages) ------
     let tensors: Vec<Tensor> = params0
@@ -98,14 +339,19 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let msg = EncodedGrads::encode(&tensors, 0.0, 0.0, vec![0.95; 3], vec![3.0; 3]);
-    let shapes: Vec<Vec<usize>> = params0.iter().map(|p| p.shape().to_vec()).collect();
+    let shapes_: Vec<Vec<usize>> = params0.iter().map(|p| p.shape().to_vec()).collect();
     let r = bench_fn("server decode+avg 1 node msg (648k)", 2, iters.max(50), || {
-        let mut acc: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-        for (a, (e, s)) in acc.iter_mut().zip(msg.tensors.iter().zip(shapes.iter())) {
+        let mut acc: Vec<Tensor> = shapes_.iter().map(|s| Tensor::zeros(s)).collect();
+        for (a, (e, s)) in acc.iter_mut().zip(msg.tensors.iter().zip(shapes_.iter())) {
             a.axpy(0.25, &e.decode(s));
         }
         std::hint::black_box(acc);
     });
     println!("{}", r.report());
+    rep.result_row(&r, &[("suite", text("server"))]);
+
+    if rep.write(&json_path)? {
+        println!("\nwrote {} rows to {json_path}", rep.n_rows());
+    }
     Ok(())
 }

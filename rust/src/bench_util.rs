@@ -3,9 +3,14 @@
 //! `cargo bench` runs each `[[bench]]` target with `harness = false`;
 //! targets use [`bench_fn`] for microbenchmarks (warmup + N timed
 //! iterations, median/mean/min reporting) and plain stopwatch timing for
-//! the end-to-end experiment harnesses.
+//! the end-to-end experiment harnesses. [`JsonReport`] is the `--json
+//! <path>` emitter: benches accumulate typed rows next to their human
+//! output and persist one machine-readable document per run, so the
+//! perf trajectory (`BENCH_*.json`) can be diffed across commits.
 
+use crate::util::json::Value;
 use crate::util::math::{mean, median, std_dev};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Result of a microbenchmark.
@@ -82,6 +87,87 @@ pub fn report_header() -> String {
     )
 }
 
+/// `Value::Num` shorthand for report rows.
+pub fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+/// `Value::Str` shorthand for report rows.
+pub fn text(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+/// Machine-readable benchmark report: a flat list of row objects plus
+/// run-level metadata, serialized as
+/// `{"schema":"ditherprop-bench-v1","bench":...,"meta":{...},"rows":[...]}`
+/// with the in-tree JSON writer (`util::json`), so downstream tooling
+/// can parse it with the same parser the manifest uses.
+#[derive(Debug, Clone)]
+pub struct JsonReport {
+    bench: String,
+    meta: BTreeMap<String, Value>,
+    rows: Vec<Value>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.to_string(), meta: BTreeMap::new(), rows: Vec::new() }
+    }
+
+    /// Set a run-level metadata field (threads, iters, host hints...).
+    pub fn meta(&mut self, key: &str, v: Value) -> &mut Self {
+        self.meta.insert(key.to_string(), v);
+        self
+    }
+
+    /// Append one row object.
+    pub fn row(&mut self, fields: &[(&str, Value)]) {
+        let mut obj = BTreeMap::new();
+        for (k, v) in fields {
+            obj.insert(k.to_string(), v.clone());
+        }
+        self.rows.push(Value::Obj(obj));
+    }
+
+    /// Append a [`BenchResult`] as a row (`name`, `iters`, `median_s`,
+    /// `mean_s`, `min_s`) merged with `extra` fields.
+    pub fn result_row(&mut self, r: &BenchResult, extra: &[(&str, Value)]) {
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("name", text(&r.name)),
+            ("iters", num(r.iters as f64)),
+            ("median_s", num(r.median_s())),
+            ("mean_s", num(r.mean_s())),
+            ("min_s", num(r.min_s())),
+        ];
+        fields.extend(extra.iter().cloned());
+        self.row(&fields);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Serialize the whole report.
+    pub fn to_json(&self) -> String {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema".to_string(), text("ditherprop-bench-v1"));
+        doc.insert("bench".to_string(), text(&self.bench));
+        doc.insert("meta".to_string(), Value::Obj(self.meta.clone()));
+        doc.insert("rows".to_string(), Value::Arr(self.rows.clone()));
+        Value::Obj(doc).to_json()
+    }
+
+    /// Write to `path` unless it is empty or `"none"`. Returns whether
+    /// a file was written.
+    pub fn write(&self, path: &str) -> std::io::Result<bool> {
+        if path.is_empty() || path == "none" {
+            return Ok(false);
+        }
+        std::fs::write(path, self.to_json() + "\n")?;
+        Ok(true)
+    }
+}
+
 /// Simple stopwatch for end-to-end experiment timing.
 pub struct Stopwatch(Instant);
 
@@ -122,6 +208,38 @@ mod tests {
         assert_eq!(fmt_time(0.0025), "2.500ms");
         assert_eq!(fmt_time(2.5e-6), "2.500us");
         assert_eq!(fmt_time(5e-9), "5.0ns");
+    }
+
+    #[test]
+    fn json_report_roundtrips_through_the_parser() {
+        let mut rep = JsonReport::new("unit");
+        rep.meta("threads", num(4.0));
+        rep.row(&[("suite", text("kernel")), ("p_nz", num(0.08))]);
+        let r = bench_fn("spin", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        rep.result_row(&r, &[("suite", text("grad"))]);
+        assert_eq!(rep.n_rows(), 2);
+
+        let doc = crate::util::json::parse(&rep.to_json()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("ditherprop-bench-v1"));
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(
+            doc.get("meta").unwrap().get("threads").unwrap().as_f64(),
+            Some(4.0)
+        );
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("p_nz").unwrap().as_f64(), Some(0.08));
+        assert_eq!(rows[1].get("name").unwrap().as_str(), Some("spin"));
+        assert!(rows[1].get("median_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn json_report_write_respects_none() {
+        let rep = JsonReport::new("unit");
+        assert!(!rep.write("none").unwrap());
+        assert!(!rep.write("").unwrap());
     }
 
     #[test]

@@ -55,6 +55,16 @@ pub fn savings_ratio(m: usize, p_nz: f64) -> f64 {
     1.0 / m as f64 + p_nz
 }
 
+/// Measured throughput: `ops` useful floating-point operations executed
+/// in `secs` wall-clock seconds, in GFLOP/s (0 for degenerate inputs —
+/// a benchmark that measured nothing should report nothing, not inf).
+pub fn gflops(ops: f64, secs: f64) -> f64 {
+    if secs <= 0.0 || ops <= 0.0 {
+        return 0.0;
+    }
+    ops / secs / 1e9
+}
+
 /// Fully-connected layer backward cost for a (batch b, in d_in, out
 /// d_out) layer at measured gradient density `p_nz`:
 /// Eq. 8 (dx = qg . W^T) + Eq. 9 (dW = x^T . qg).
@@ -125,6 +135,14 @@ mod tests {
     fn full_sparsity_cost_is_overhead_only() {
         let c = backward_gemm_ops(256, 64, 64, 0.0);
         assert_eq!(c.dithered_ops(), NSD_OPS_PER_ELEMENT * 64.0 * 64.0);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        assert_eq!(gflops(2e9, 1.0), 2.0);
+        assert_eq!(gflops(1e9, 0.0), 0.0);
+        assert_eq!(gflops(0.0, 1.0), 0.0);
+        assert!((gflops(3e9, 2.0) - 1.5).abs() < 1e-12);
     }
 
     #[test]

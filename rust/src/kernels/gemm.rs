@@ -1,0 +1,621 @@
+//! The backward-pass GEMM kernels: scalar reference oracles, blocked
+//! SIMD-friendly variants, and scoped-thread batch-parallel drivers.
+//!
+//! Three operations (shared by dense rows and im2col conv patch rows,
+//! see `runtime::backend::native::graph`):
+//!
+//! * forward affine   `z = x . W + b`            (skip-on-zero over x)
+//! * Eq. 9 param GEMM `dW += x^T . G`, `db += colsum(G)`  (G sparse CSR)
+//! * Eq. 8 input GEMM `gx = G . W^T`                      (G sparse CSR)
+//!
+//! **Blocking scheme.** The scalar reference kernels walk the CSR
+//! nonzeros of the compressed `delta_z` and scatter into the
+//! accumulators — correct, but every inner operation is a dependent
+//! scalar load-add-store. The blocked kernels restructure each loop so
+//! the innermost dimension is a *contiguous, fixed-width* run the
+//! compiler can autovectorize on stable rust (no `std::simd`):
+//!
+//! * the param GEMM accumulates into the **transposed** gradient
+//!   `dWt (dout x din)`, so every CSR nonzero `(j, v)` becomes one
+//!   dense axpy `dWt[j, :] += v * x[bi, :]` over unrolled
+//!   `[f32; LANES]` lanes — no scattered writes at all;
+//! * the input GEMM keeps a `[f32; LANES]` register accumulator per
+//!   column block of the output row, streaming the CSR nonzeros through
+//!   contiguous `W^T` row slices;
+//! * the forward affine keeps the same register-block accumulator over
+//!   `dout` while still skipping zero activations.
+//!
+//! **Bit-identical by construction.** For every output element, every
+//! variant (reference / blocked / threaded, any thread count) performs
+//! the same f32 additions in the same order: reductions always run over
+//! batch rows in ascending `bi` and CSR nonzeros in ascending `j`.
+//! The blocked kernels add exact-zero terms the reference skips
+//! (`x + 0.0` is exact and IEEE-754 round-to-nearest never produces
+//! `-0.0` from accumulation into a `+0.0`-initialized buffer), and the
+//! threaded drivers partition the *output* (batch rows for the input
+//! GEMM and forward, `dout` columns for the param GEMM), so no
+//! reduction ever crosses a thread boundary and no merge reassociates
+//! a sum. The equivalence tests in `tests/native_backend.rs` assert
+//! this to the bit across a (din, dout, batch, sparsity, nthreads)
+//! grid.
+
+use super::threads::chunk_ranges;
+use crate::sparse::CsrVec;
+use std::ops::Range;
+
+/// Fixed autovectorization width: 8 f32 lanes (one AVX2 register; two
+/// NEON registers). Unrolled blocks use `[f32; LANES]` accumulators.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------
+// scalar reference oracles (the pre-blocking kernels, kept verbatim)
+// ---------------------------------------------------------------------
+
+/// Reference `z = x @ w + b` (x: rows x din, w: din x dout row-major).
+/// Skips zero input entries (ReLU and im2col padding make many),
+/// k-i-j loop order for cache locality.
+pub fn affine_ref(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    let mut z = vec![0.0f32; rows * dout];
+    for bi in 0..rows {
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        zrow.copy_from_slice(b);
+        let xrow = &x[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[a * dout..(a + 1) * dout];
+            for (zv, &wv) in zrow.iter_mut().zip(wrow.iter()) {
+                *zv += xv * wv;
+            }
+        }
+    }
+    z
+}
+
+/// Reference Eq. 9 skip-on-zero GEMM pair: `dw += x^T . rows`, `db +=
+/// column sums of rows` (dw in din x dout layout).
+pub fn sparse_param_gemm_ref(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(xq.len(), rows.len() * din);
+    debug_assert_eq!(dw.len(), din * dout);
+    debug_assert_eq!(db.len(), dout);
+    for (bi, row) in rows.iter().enumerate() {
+        if row.nnz() == 0 {
+            continue;
+        }
+        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            db[j as usize] += v;
+        }
+        let xrow = &xq[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let dst = &mut dw[a * dout..(a + 1) * dout];
+            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+                dst[j as usize] += xv * v;
+            }
+        }
+    }
+}
+
+/// Reference Eq. 8 skip-on-zero GEMM: `g_in = rows . W^T` (wt: dout x
+/// din, pre-transposed). Returns one din-row per input row.
+pub fn sparse_input_gemm_ref(rows: &[CsrVec], wt: &[f32], din: usize) -> Vec<f32> {
+    let mut gp = vec![0.0f32; rows.len() * din];
+    for (bi, row) in rows.iter().enumerate() {
+        if row.nnz() == 0 {
+            continue;
+        }
+        let dst = &mut gp[bi * din..(bi + 1) * din];
+        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            let wrow = &wt[(j as usize) * din..(j as usize + 1) * din];
+            for (d, &wv) in dst.iter_mut().zip(wrow.iter()) {
+                *d += v * wv;
+            }
+        }
+    }
+    gp
+}
+
+// ---------------------------------------------------------------------
+// shared lane primitives
+// ---------------------------------------------------------------------
+
+/// `dst += alpha * x` over unrolled `[f32; LANES]` lanes + scalar tail.
+/// `chunks_exact` hands the optimizer fixed-width runs it turns into
+/// packed mul/add; additions stay element-independent, so lane order
+/// never reassociates a reduction.
+#[inline]
+fn axpy_lanes(alpha: f32, x: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(x.len(), dst.len());
+    let mut xc = x.chunks_exact(LANES);
+    let mut dc = dst.chunks_exact_mut(LANES);
+    for (xs, ds) in (&mut xc).zip(&mut dc) {
+        for (d, &xv) in ds.iter_mut().zip(xs.iter()) {
+            *d += alpha * xv;
+        }
+    }
+    for (d, &xv) in dc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
+        *d += alpha * xv;
+    }
+}
+
+// ---------------------------------------------------------------------
+// blocked kernels
+// ---------------------------------------------------------------------
+
+/// Blocked forward affine into a caller buffer (`z` fully overwritten).
+/// Register-blocks `dout` in `[f32; LANES]` accumulators so each output
+/// block is computed start-to-finish without touching memory, while
+/// keeping the reference kernel's skip-on-zero over x and its
+/// ascending-`a` reduction order.
+pub fn affine_blocked_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    z: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(b.len(), dout);
+    debug_assert_eq!(z.len(), rows * dout);
+    for bi in 0..rows {
+        let xrow = &x[bi * din..(bi + 1) * din];
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        let mut c = 0;
+        while c + LANES <= dout {
+            let mut acc = [0.0f32; LANES];
+            acc.copy_from_slice(&b[c..c + LANES]);
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wr = &w[a * dout + c..a * dout + c + LANES];
+                for (av, &wv) in acc.iter_mut().zip(wr.iter()) {
+                    *av += xv * wv;
+                }
+            }
+            zrow[c..c + LANES].copy_from_slice(&acc);
+            c += LANES;
+        }
+        for cc in c..dout {
+            let mut acc = b[cc];
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                acc += xv * w[a * dout + cc];
+            }
+            zrow[cc] = acc;
+        }
+    }
+}
+
+/// Blocked Eq. 9 param GEMM over a `cols` range of output columns:
+/// accumulates the **transposed** weight gradient rows
+/// `dwt_cols[j - cols.start, :] += v * x[bi, :]` (dwt_cols:
+/// `cols.len() x din`) and `db_cols[j - cols.start] += v`. Every CSR
+/// nonzero becomes one contiguous lane-unrolled axpy; the sorted CSR
+/// indices are range-clipped with two binary searches per row.
+///
+/// Column-range partitioning is what makes the threaded driver
+/// bit-identical: each `(j, a)` accumulator is owned by exactly one
+/// range, and within a range the reduction runs over batch rows in the
+/// same ascending order as the serial kernel.
+pub fn sparse_param_gemm_cols(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    cols: Range<usize>,
+    dwt_cols: &mut [f32],
+    db_cols: &mut [f32],
+) {
+    debug_assert_eq!(xq.len(), rows.len() * din);
+    debug_assert_eq!(dwt_cols.len(), cols.len() * din);
+    debug_assert_eq!(db_cols.len(), cols.len());
+    for (bi, row) in rows.iter().enumerate() {
+        if row.nnz() == 0 {
+            continue;
+        }
+        let lo = row.indices.partition_point(|&j| (j as usize) < cols.start);
+        let hi = row.indices.partition_point(|&j| (j as usize) < cols.end);
+        if lo == hi {
+            continue;
+        }
+        let xrow = &xq[bi * din..(bi + 1) * din];
+        for (&j, &v) in row.indices[lo..hi].iter().zip(row.values[lo..hi].iter()) {
+            let jj = j as usize - cols.start;
+            db_cols[jj] += v;
+            axpy_lanes(v, xrow, &mut dwt_cols[jj * din..(jj + 1) * din]);
+        }
+    }
+}
+
+/// Blocked Eq. 9 param GEMM: accumulates the full transposed gradient
+/// `dwt (dout x din)` and `db`. Transpose with [`transpose_into`] to
+/// recover the reference `dw (din x dout)` layout bit-exactly.
+pub fn sparse_param_gemm_blocked(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    dout: usize,
+    dwt: &mut [f32],
+    db: &mut [f32],
+) {
+    sparse_param_gemm_cols(rows, xq, din, 0..dout, dwt, db);
+}
+
+/// Blocked Eq. 8 input GEMM into a caller buffer (`gp` fully
+/// overwritten, one din-row per CSR row): per `[f32; LANES]` column
+/// block, a register accumulator streams the row's nonzeros through
+/// contiguous `W^T` slices — ascending-`j` order, same as the
+/// reference.
+pub fn sparse_input_gemm_blocked_into(rows: &[CsrVec], wt: &[f32], din: usize, gp: &mut [f32]) {
+    debug_assert_eq!(gp.len(), rows.len() * din);
+    for (bi, row) in rows.iter().enumerate() {
+        let dst = &mut gp[bi * din..(bi + 1) * din];
+        if row.nnz() == 0 {
+            dst.fill(0.0);
+            continue;
+        }
+        let (idx, val) = (&row.indices[..], &row.values[..]);
+        let mut c = 0;
+        while c + LANES <= din {
+            let mut acc = [0.0f32; LANES];
+            for (&j, &v) in idx.iter().zip(val.iter()) {
+                let base = j as usize * din + c;
+                let wr = &wt[base..base + LANES];
+                for (av, &wv) in acc.iter_mut().zip(wr.iter()) {
+                    *av += v * wv;
+                }
+            }
+            dst[c..c + LANES].copy_from_slice(&acc);
+            c += LANES;
+        }
+        for cc in c..din {
+            let mut acc = 0.0f32;
+            for (&j, &v) in idx.iter().zip(val.iter()) {
+                acc += v * wt[j as usize * din + cc];
+            }
+            dst[cc] = acc;
+        }
+    }
+}
+
+/// w (rows x cols) -> w^T (cols x rows). Pure data movement — exact.
+pub fn transpose_into(w: &[f32], rows: usize, cols: usize, wt: &mut [f32]) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(wt.len(), rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            wt[c * rows + r] = w[r * cols + c];
+        }
+    }
+}
+
+/// Allocating [`transpose_into`] (kept for the oracle tests).
+pub fn transpose(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut wt = vec![0.0f32; w.len()];
+    transpose_into(w, rows, cols, &mut wt);
+    wt
+}
+
+// ---------------------------------------------------------------------
+// scoped-thread drivers (disjoint-output partitioning)
+// ---------------------------------------------------------------------
+
+/// Don't spawn below this many lane-ops per candidate worker — scoped
+/// spawn + join costs ~10us, which tiny layers would feel. Purely a
+/// dispatch heuristic; results are bit-identical either way.
+const MIN_OPS_PER_THREAD: usize = 16 * 1024;
+
+fn effective_threads(nthreads: usize, total_ops: usize) -> usize {
+    if nthreads <= 1 {
+        return 1;
+    }
+    nthreads.min((total_ops / MIN_OPS_PER_THREAD).max(1))
+}
+
+/// The worker count the threaded drivers actually use for a job with
+/// `total_lane_ops` estimated lane operations and at most
+/// `max_partitions` partitionable output units (batch rows for the
+/// input GEMM / forward, `dout` columns for the param GEMM). This is
+/// the spawn-threshold clamp made visible, so benches can report the
+/// configuration that really ran instead of the one requested.
+pub fn planned_threads(nthreads: usize, total_lane_ops: usize, max_partitions: usize) -> usize {
+    effective_threads(nthreads, total_lane_ops).min(max_partitions.max(1))
+}
+
+/// Threaded forward affine: batch rows partitioned across scoped
+/// threads; each worker owns a disjoint `z` row range.
+#[allow(clippy::too_many_arguments)]
+pub fn affine_threaded_into(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    z: &mut [f32],
+    nthreads: usize,
+) {
+    let nt = planned_threads(nthreads, rows * din * dout / LANES, rows);
+    if nt <= 1 {
+        return affine_blocked_into(x, w, b, rows, din, dout, z);
+    }
+    let ranges = chunk_ranges(rows, nt);
+    std::thread::scope(|s| {
+        let mut rest = z;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * dout);
+            rest = tail;
+            let xc = &x[r.start * din..r.end * din];
+            let nrows = r.len();
+            handles.push(s.spawn(move || {
+                affine_blocked_into(xc, w, b, nrows, din, dout, chunk);
+            }));
+        }
+        for h in handles {
+            h.join().expect("affine worker panicked");
+        }
+    });
+}
+
+/// Threaded Eq. 9 param GEMM: `dout` columns partitioned across scoped
+/// threads; each worker owns a disjoint `dwt` row range + `db` slice,
+/// so no reduction crosses a thread and no merge pass exists.
+pub fn sparse_param_gemm_threaded(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    dout: usize,
+    dwt: &mut [f32],
+    db: &mut [f32],
+    nthreads: usize,
+) {
+    let nnz: usize = rows.iter().map(CsrVec::nnz).sum();
+    let nt = planned_threads(nthreads, nnz * din / LANES, dout);
+    if nt <= 1 {
+        return sparse_param_gemm_blocked(rows, xq, din, dout, dwt, db);
+    }
+    let ranges = chunk_ranges(dout, nt);
+    std::thread::scope(|s| {
+        let mut dwt_rest = dwt;
+        let mut db_rest = db;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (dwt_chunk, dwt_tail) =
+                std::mem::take(&mut dwt_rest).split_at_mut(r.len() * din);
+            let (db_chunk, db_tail) = std::mem::take(&mut db_rest).split_at_mut(r.len());
+            dwt_rest = dwt_tail;
+            db_rest = db_tail;
+            let r = r.clone();
+            handles.push(s.spawn(move || {
+                sparse_param_gemm_cols(rows, xq, din, r, dwt_chunk, db_chunk);
+            }));
+        }
+        for h in handles {
+            h.join().expect("param-gemm worker panicked");
+        }
+    });
+}
+
+/// Threaded Eq. 8 input GEMM: CSR rows (batch rows for dense layers,
+/// im2col patch rows for conv) partitioned across scoped threads; each
+/// worker owns a disjoint `gp` row range.
+pub fn sparse_input_gemm_threaded_into(
+    rows: &[CsrVec],
+    wt: &[f32],
+    din: usize,
+    gp: &mut [f32],
+    nthreads: usize,
+) {
+    let nnz: usize = rows.iter().map(CsrVec::nnz).sum();
+    let nt = planned_threads(nthreads, nnz * din / LANES, rows.len());
+    if nt <= 1 {
+        return sparse_input_gemm_blocked_into(rows, wt, din, gp);
+    }
+    let ranges = chunk_ranges(rows.len(), nt);
+    std::thread::scope(|s| {
+        let mut rest = gp;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * din);
+            rest = tail;
+            let rc = &rows[r.start..r.end];
+            handles.push(s.spawn(move || {
+                sparse_input_gemm_blocked_into(rc, wt, din, chunk);
+            }));
+        }
+        for h in handles {
+            h.join().expect("input-gemm worker panicked");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sparse_rows(n_rows: usize, cols: usize, density: f32, seed: u64) -> (Vec<CsrVec>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> = (0..n_rows * cols)
+            .map(|_| if rng.uniform() < density { rng.normal() } else { 0.0 })
+            .collect();
+        let rows = (0..n_rows)
+            .map(|r| CsrVec::encode(&dense[r * cols..(r + 1) * cols]))
+            .collect();
+        (rows, dense)
+    }
+
+    fn dense_vec(n: usize, density: f32, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| if rng.uniform() < density { rng.normal() } else { 0.0 })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn affine_blocked_and_threaded_match_reference_bitwise() {
+        // the last case clears MIN_OPS_PER_THREAD so threads really spawn
+        for (rows, din, dout) in
+            [(1usize, 3usize, 5usize), (4, 17, 8), (9, 32, 19), (16, 64, 33), (64, 128, 64)]
+        {
+            let x = dense_vec(rows * din, 0.6, 11 + rows as u64);
+            let w = dense_vec(din * dout, 1.0, 13 + dout as u64);
+            let b = dense_vec(dout, 1.0, 17);
+            let zr = affine_ref(&x, &w, &b, rows, din, dout);
+            let mut zb = vec![0.0f32; rows * dout];
+            affine_blocked_into(&x, &w, &b, rows, din, dout, &mut zb);
+            assert_bits_eq(&zr, &zb, "affine blocked");
+            for nt in [2usize, 3, 5] {
+                let mut zt = vec![7.0f32; rows * dout]; // stale garbage must be overwritten
+                affine_threaded_into(&x, &w, &b, rows, din, dout, &mut zt, nt);
+                assert_bits_eq(&zr, &zt, "affine threaded");
+            }
+        }
+    }
+
+    #[test]
+    fn param_gemm_blocked_and_threaded_match_reference_bitwise() {
+        // the last case clears MIN_OPS_PER_THREAD so threads really spawn
+        for (n_rows, din, dout, density) in [
+            (1usize, 5usize, 3usize, 1.0f32),
+            (8, 19, 12, 0.3),
+            (32, 40, 24, 0.08),
+            (6, 64, 7, 0.5),
+            (128, 128, 64, 0.5),
+        ] {
+            let (rows, _) = sparse_rows(n_rows, dout, density, 23 + n_rows as u64);
+            let x = dense_vec(n_rows * din, 0.7, 29 + din as u64);
+            let mut dw_ref = vec![0.0f32; din * dout];
+            let mut db_ref = vec![0.0f32; dout];
+            sparse_param_gemm_ref(&rows, &x, din, dout, &mut dw_ref, &mut db_ref);
+
+            let mut dwt = vec![0.0f32; dout * din];
+            let mut db = vec![0.0f32; dout];
+            sparse_param_gemm_blocked(&rows, &x, din, dout, &mut dwt, &mut db);
+            let mut dw = vec![0.0f32; din * dout];
+            transpose_into(&dwt, dout, din, &mut dw);
+            assert_bits_eq(&dw_ref, &dw, "param blocked dw");
+            assert_bits_eq(&db_ref, &db, "param blocked db");
+
+            for nt in [2usize, 3, 4, 8] {
+                let mut dwt_t = vec![0.0f32; dout * din];
+                let mut db_t = vec![0.0f32; dout];
+                sparse_param_gemm_threaded(&rows, &x, din, dout, &mut dwt_t, &mut db_t, nt);
+                assert_bits_eq(&dwt, &dwt_t, "param threaded dwt");
+                assert_bits_eq(&db, &db_t, "param threaded db");
+            }
+        }
+    }
+
+    #[test]
+    fn input_gemm_blocked_and_threaded_match_reference_bitwise() {
+        // the last case clears MIN_OPS_PER_THREAD so threads really spawn
+        for (n_rows, din, dout, density) in [
+            (1usize, 7usize, 4usize, 1.0f32),
+            (8, 16, 12, 0.4),
+            (21, 33, 9, 0.1),
+            (5, 80, 40, 0.02),
+            (128, 128, 64, 0.5),
+        ] {
+            let (rows, _) = sparse_rows(n_rows, dout, density, 31 + n_rows as u64);
+            let wt = dense_vec(dout * din, 1.0, 37 + din as u64);
+            let gr = sparse_input_gemm_ref(&rows, &wt, din);
+            let mut gb = vec![9.0f32; n_rows * din]; // stale garbage must be overwritten
+            sparse_input_gemm_blocked_into(&rows, &wt, din, &mut gb);
+            assert_bits_eq(&gr, &gb, "input blocked");
+            for nt in [2usize, 3, 6] {
+                let mut gt = vec![9.0f32; n_rows * din];
+                sparse_input_gemm_threaded_into(&rows, &wt, din, &mut gt, nt);
+                assert_bits_eq(&gr, &gt, "input threaded");
+            }
+        }
+    }
+
+    #[test]
+    fn param_gemm_cols_covers_partial_ranges() {
+        let (rows, _) = sparse_rows(4, 10, 0.6, 41);
+        let x = dense_vec(4 * 6, 0.8, 43);
+        let mut dwt_full = vec![0.0f32; 10 * 6];
+        let mut db_full = vec![0.0f32; 10];
+        sparse_param_gemm_blocked(&rows, &x, 6, 10, &mut dwt_full, &mut db_full);
+        // stitched from arbitrary uneven ranges
+        let mut dwt = vec![0.0f32; 10 * 6];
+        let mut db = vec![0.0f32; 10];
+        for r in [0..3usize, 3..4, 4..10] {
+            sparse_param_gemm_cols(
+                &rows,
+                &x,
+                6,
+                r.clone(),
+                &mut dwt[r.start * 6..r.end * 6],
+                &mut db[r.start..r.end],
+            );
+        }
+        assert_bits_eq(&dwt_full, &dwt, "stitched dwt");
+        assert_bits_eq(&db_full, &db, "stitched db");
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let w: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2x3
+        let wt = transpose(&w, 2, 3);
+        assert_eq!(wt, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&wt, 3, 2), w);
+    }
+
+    #[test]
+    fn axpy_lanes_handles_tails() {
+        for n in [0usize, 1, 7, 8, 9, 16, 23] {
+            let x = dense_vec(n, 1.0, n as u64 + 51);
+            let mut a = vec![1.0f32; n];
+            let mut b = vec![1.0f32; n];
+            axpy_lanes(0.5, &x, &mut a);
+            for (d, &xv) in b.iter_mut().zip(x.iter()) {
+                *d += 0.5 * xv;
+            }
+            assert_bits_eq(&a, &b, "axpy tail");
+        }
+    }
+
+    #[test]
+    fn empty_rows_zero_the_output() {
+        let rows = vec![CsrVec::encode(&[0.0; 6]); 3];
+        let wt = dense_vec(6 * 4, 1.0, 61);
+        let mut gp = vec![5.0f32; 3 * 4];
+        sparse_input_gemm_blocked_into(&rows, &wt, 4, &mut gp);
+        assert!(gp.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,45 @@
+//! Blocked, batch-parallel CPU kernels for the sparse backward pass —
+//! the hot path of the whole repo.
+//!
+//! The paper's claim is that NSD-induced sparsity (~92% of `delta_z`
+//! zeros on average) turns the backward GEMMs into cheap sparse
+//! products (Eq. 12); SparseProp (Nikdan et al., 2023) showed that a
+//! cache-blocked, vectorized CSR backward kernel realizes that win in
+//! plain CPU code. This module is that realization for the native
+//! executor, in three tiers per operation:
+//!
+//! * **reference** — the original scalar skip-on-zero loops, kept as
+//!   the bit-exact oracle ([`gemm::sparse_param_gemm_ref`] etc.);
+//! * **blocked** — SIMD-friendly restructurings whose inner loops are
+//!   fixed-width `[f32; 8]` lanes the stable-rust compiler
+//!   autovectorizes (no `std::simd`, no intrinsics);
+//! * **threaded** — scoped-thread (`std::thread::scope`, zero
+//!   dependencies) drivers that partition *outputs* disjointly (batch
+//!   rows / im2col patch rows for Eq. 8 and the forward, `dout`
+//!   columns for Eq. 9), so every reduction stays on one thread in
+//!   serial order and results are bit-identical for every thread
+//!   count — no merge pass, no reassociation.
+//!
+//! Dispatch is controlled by two env knobs read per step (see
+//! [`threads`]): `DITHERPROP_THREADS` (worker count) and
+//! `DITHERPROP_KERNELS` (`ref`/`blocked`/`auto`) — the latter lets
+//! benches time the pre-blocking scalar kernels against the new ones
+//! in one binary. [`scratch`] hoists the per-step buffers (the `W^T`
+//! transpose, `gp` rows, im2col patches, the transposed `dW`
+//! accumulator) into a per-thread arena so steady-state steps never
+//! allocate for them.
+
+pub mod gemm;
+pub mod scratch;
+pub mod threads;
+
+pub use gemm::{
+    affine_blocked_into, affine_ref, affine_threaded_into, planned_threads,
+    sparse_input_gemm_blocked_into, sparse_input_gemm_ref, sparse_input_gemm_threaded_into,
+    sparse_param_gemm_blocked, sparse_param_gemm_cols, sparse_param_gemm_ref,
+    sparse_param_gemm_threaded, transpose, transpose_into, LANES,
+};
+pub use scratch::Scratch;
+pub use threads::{
+    chunk_ranges, num_threads, variant, EnvGuard, Variant, ENV_KERNELS, ENV_THREADS,
+};

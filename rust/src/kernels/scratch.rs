@@ -1,0 +1,189 @@
+//! Reusable buffer arena for the backward hot path.
+//!
+//! Every `grad_step` used to reallocate the same family of large
+//! buffers — the `W^T` transpose, the input-gradient `gp` rows, the
+//! im2col patch matrices, the transposed weight-gradient accumulator —
+//! once per layer per step. The arena keeps those allocations alive
+//! across steps: [`Scratch::grab`] hands out a zeroed, right-sized
+//! owned `Vec<f32>` (recycling capacity from previously returned
+//! buffers), and [`Scratch::put_back`] returns it when the stage is
+//! done. Because the executor releases buffers in reverse stage order
+//! (the backward walk) and reacquires them in forward order, the LIFO
+//! pool converges after one step: every grab is then a `memset` into
+//! existing capacity (or a length adjustment, for
+//! [`Scratch::grab_overwritten`]), never an allocation. Buffers the
+//! executor releases without ever having grabbed them (pool-forward
+//! outputs, reference-variant results) are adopted up to a fixed pool
+//! cap and dropped beyond it, so the arena's footprint is bounded over
+//! arbitrarily long runs.
+//!
+//! One arena lives per executor thread ([`with_thread_local`]) — a
+//! training session steps on one thread, so this is "per session"
+//! without threading mutable state through the `Backend` trait's
+//! `&self` surface; concurrent sessions (distributed workers) each get
+//! their own arena for free.
+
+use std::cell::RefCell;
+
+/// Upper bound on pooled buffers. A deep model holds only a handful of
+/// live buffers per stage, so steady-state reuse needs far fewer than
+/// this; the cap exists because some released buffers were never
+/// grabbed from the arena (maxpool forward outputs, reference-variant
+/// kernel results, the step's final cotangent) and would otherwise
+/// accumulate at the bottom of the LIFO forever.
+const MAX_POOLED: usize = 64;
+
+/// LIFO pool of reusable f32 buffers.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+    grabs: u64,
+    allocs: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer of exactly `len` zeros, reusing pooled capacity
+    /// when possible. Use for accumulators and scatter targets (dwt,
+    /// im2col patches, col2im) that rely on a zeroed start.
+    pub fn grab(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.take(len);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Take a buffer of exactly `len` with **arbitrary (stale)
+    /// contents** — callers must overwrite every element. Skips the
+    /// memset [`grab`] pays, for outputs the blocked kernels fully
+    /// write (forward z, W^T, input-GEMM gp).
+    pub fn grab_overwritten(&mut self, len: usize) -> Vec<f32> {
+        let mut buf = self.take(len);
+        // resize only touches the grown tail (or shrinks); the existing
+        // prefix keeps its stale values, which is the point
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    fn take(&mut self, len: usize) -> Vec<f32> {
+        self.grabs += 1;
+        let buf = self.pool.pop().unwrap_or_default();
+        if buf.capacity() < len {
+            self.allocs += 1;
+        }
+        buf
+    }
+
+    /// Return a buffer to the pool (empty buffers are dropped, and the
+    /// pool is capped so steps that inject fresh never-grabbed vecs —
+    /// maxpool outputs, reference-variant results — cannot grow it
+    /// without bound over a long training run).
+    pub fn put_back(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.pool.len() < MAX_POOLED {
+            self.pool.push(buf);
+        }
+    }
+
+    /// Buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// (total grabs, grabs that had to allocate) — lets tests assert the
+    /// arena actually stops allocating after warmup.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.grabs, self.allocs)
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's arena. Not reentrant (the executor enters
+/// once per step).
+pub fn with_thread_local<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    TLS.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grab_is_zeroed_and_right_sized() {
+        let mut s = Scratch::new();
+        let mut b = s.grab(8);
+        assert_eq!(b, vec![0.0; 8]);
+        b.iter_mut().for_each(|v| *v = 3.0);
+        s.put_back(b);
+        // smaller grab reuses the same capacity, still zeroed
+        let b2 = s.grab(4);
+        assert_eq!(b2, vec![0.0; 4]);
+        assert!(b2.capacity() >= 8);
+    }
+
+    #[test]
+    fn pool_stops_allocating_once_warm() {
+        let mut s = Scratch::new();
+        // warmup step: three buffers of different sizes, forward order
+        let sizes = [100usize, 400, 60];
+        let mut held: Vec<Vec<f32>> = sizes.iter().map(|&n| s.grab(n)).collect();
+        // backward order release
+        while let Some(b) = held.pop() {
+            s.put_back(b);
+        }
+        let (_, allocs_warm) = s.stats();
+        // steady-state steps must not allocate
+        for _ in 0..3 {
+            let mut held: Vec<Vec<f32>> = sizes.iter().map(|&n| s.grab(n)).collect();
+            while let Some(b) = held.pop() {
+                s.put_back(b);
+            }
+        }
+        let (grabs, allocs) = s.stats();
+        assert_eq!(allocs, allocs_warm, "steady-state grabs reallocated");
+        assert_eq!(grabs, 4 * sizes.len() as u64);
+        assert_eq!(s.pooled(), sizes.len());
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut s = Scratch::new();
+        // simulate a long run that injects a fresh never-grabbed buffer
+        // per step (maxpool outputs / reference-variant results)
+        for _ in 0..10 * MAX_POOLED {
+            s.put_back(vec![0.0; 4]);
+        }
+        assert_eq!(s.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn grab_overwritten_reuses_without_zeroing() {
+        let mut s = Scratch::new();
+        let mut b = s.grab(8);
+        b.iter_mut().for_each(|v| *v = 3.0);
+        s.put_back(b);
+        // same capacity comes back; the prefix may hold stale values
+        let b2 = s.grab_overwritten(4);
+        assert_eq!(b2.len(), 4);
+        assert!(b2.capacity() >= 8);
+        // growing beyond the stale prefix still yields the right length
+        s.put_back(b2);
+        let b3 = s.grab_overwritten(12);
+        assert_eq!(b3.len(), 12);
+    }
+
+    #[test]
+    fn thread_local_arena_is_per_thread() {
+        with_thread_local(|s| {
+            s.put_back(vec![0.0; 16]);
+        });
+        let other = std::thread::spawn(|| with_thread_local(|s| s.pooled())).join().unwrap();
+        assert_eq!(other, 0);
+        with_thread_local(|s| assert!(s.pooled() >= 1));
+    }
+}

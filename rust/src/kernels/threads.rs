@@ -1,0 +1,186 @@
+//! Thread-count resolution and deterministic work partitioning for the
+//! batch-parallel kernels.
+//!
+//! There is deliberately no persistent thread pool: the kernels spawn
+//! scoped threads (`std::thread::scope`) per call, which keeps the
+//! crate registry-free (no rayon) and keeps every borrow checked — the
+//! partitions hand each worker a *disjoint* `&mut` slice of the output,
+//! so no locks, no atomics, and no merge step are needed (see
+//! [`super::gemm`] for why that also makes results bit-identical across
+//! thread counts).
+//!
+//! The knobs, both read per step (not cached, so tests and benches can
+//! flip them at runtime):
+//!
+//! * `DITHERPROP_THREADS` — worker count; unset/0 means
+//!   `available_parallelism`, 1 forces serial.
+//! * `DITHERPROP_KERNELS` — `ref` (pre-blocking scalar oracle),
+//!   `blocked` (serial blocked), or `auto` (blocked + threads, the
+//!   default). The `ref` setting exists so benches can measure the
+//!   scalar baseline and tests can oracle-check without recompiling.
+
+use std::ops::Range;
+
+/// Env var selecting the worker-thread count.
+pub const ENV_THREADS: &str = "DITHERPROP_THREADS";
+/// Env var selecting the kernel variant (`ref` | `blocked` | `auto`).
+pub const ENV_KERNELS: &str = "DITHERPROP_KERNELS";
+
+/// Which kernel implementation the executor dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Scalar skip-on-zero reference loops (the pre-blocking kernels).
+    Reference,
+    /// Blocked 8-lane kernels, single-threaded.
+    Blocked,
+    /// Blocked kernels with scoped-thread batch/column partitioning.
+    Threaded(usize),
+}
+
+impl Variant {
+    /// Worker count this variant runs with.
+    pub fn threads(self) -> usize {
+        match self {
+            Variant::Threaded(n) => n.max(1),
+            _ => 1,
+        }
+    }
+}
+
+/// Resolve the worker-thread count: `DITHERPROP_THREADS` when set to a
+/// positive integer, else the machine's available parallelism.
+pub fn num_threads() -> usize {
+    match std::env::var(ENV_THREADS) {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => default_threads(),
+        },
+        Err(_) => default_threads(),
+    }
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve the kernel variant from `DITHERPROP_KERNELS` +
+/// `DITHERPROP_THREADS` (unknown values fall back to `auto`).
+pub fn variant() -> Variant {
+    match std::env::var(ENV_KERNELS).as_deref() {
+        Ok("ref") | Ok("reference") | Ok("scalar") => Variant::Reference,
+        Ok("blocked") | Ok("serial") => Variant::Blocked,
+        _ => {
+            let n = num_threads();
+            if n <= 1 {
+                Variant::Blocked
+            } else {
+                Variant::Threaded(n)
+            }
+        }
+    }
+}
+
+/// RAII override of one env knob: sets `key=value` on construction and
+/// restores the previous state — set or unset — when dropped, so tests
+/// and benches that pin `DITHERPROP_*` can't leak the override past
+/// their scope even on panic, and never clobber a value the harness
+/// was launched with (e.g. CI's `DITHERPROP_THREADS=4` leg).
+pub struct EnvGuard {
+    key: &'static str,
+    prev: Option<String>,
+}
+
+impl EnvGuard {
+    pub fn set(key: &'static str, value: &str) -> EnvGuard {
+        let prev = std::env::var(key).ok();
+        std::env::set_var(key, value);
+        EnvGuard { key, prev }
+    }
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var(self.key, v),
+            None => std::env::remove_var(self.key),
+        }
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous, near-equal, non-empty
+/// ranges. The split depends only on `(n, parts)`, so a given index
+/// always lands in the same range for a given partition request — but
+/// kernels must NOT rely on the split for numerical reproducibility;
+/// that comes from output-disjoint partitioning (each output element is
+/// computed start-to-finish by exactly one worker, in the same
+/// reduction order as the serial kernel).
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly_without_overlap() {
+        for n in [0usize, 1, 2, 7, 8, 63, 64, 1000] {
+            for parts in [1usize, 2, 3, 4, 7, 16] {
+                let ranges = chunk_ranges(n, parts);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev_end, "gap/overlap at n={n} parts={parts}");
+                    assert!(!r.is_empty());
+                    covered += r.len();
+                    prev_end = r.end;
+                }
+                assert_eq!(covered, n, "n={n} parts={parts}");
+                assert!(ranges.len() <= parts);
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_are_balanced() {
+        let ranges = chunk_ranges(10, 4);
+        let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+        assert!(variant().threads() >= 1);
+    }
+
+    #[test]
+    fn env_guard_restores_on_drop() {
+        // a key nothing else reads, so parallel tests can't race on it
+        const KEY: &str = "DITHERPROP_ENV_GUARD_UNIT_TEST";
+        std::env::remove_var(KEY);
+        {
+            let _g = EnvGuard::set(KEY, "inner");
+            assert_eq!(std::env::var(KEY).as_deref(), Ok("inner"));
+            {
+                let _g2 = EnvGuard::set(KEY, "nested");
+                assert_eq!(std::env::var(KEY).as_deref(), Ok("nested"));
+            }
+            assert_eq!(std::env::var(KEY).as_deref(), Ok("inner"));
+        }
+        assert!(std::env::var(KEY).is_err());
+    }
+}

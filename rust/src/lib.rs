@@ -23,6 +23,11 @@
 //!   server of the paper's §3.6/§4.3 ([`coordinator`]), sparse gradient
 //!   codecs ([`sparse`]), the computational cost model of §3.4
 //!   ([`costmodel`]), and every table/figure harness ([`experiments`]).
+//! * **Kernels** ([`kernels`]) — the blocked, SIMD-friendly sparse
+//!   backward GEMMs under the native executor, with scoped-thread
+//!   batch parallelism (`DITHERPROP_THREADS`), a scalar reference
+//!   oracle (`DITHERPROP_KERNELS=ref`), and a per-thread scratch
+//!   arena; all variants are bit-identical by construction.
 //! * **Transport** ([`net`]) — the framed wire protocol under the
 //!   coordinator: a [`net::Transport`] trait with an in-process channel
 //!   implementation (single-process runs) and a `std::net` TCP
@@ -45,6 +50,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod metrics;
 pub mod net;
 pub mod optim;

@@ -67,10 +67,19 @@ impl ConvGeom {
 /// c)` order — matching the HWIO weight layout — with out-of-bounds
 /// (padding) positions left at zero.
 pub fn im2col_batch(x: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * g.positions() * g.patch_len()];
+    im2col_into(x, g, batch, &mut out);
+    out
+}
+
+/// [`im2col_batch`] into a caller buffer (must be zeroed — padding
+/// positions are left untouched). Lets the executor reuse one patch
+/// buffer per conv stage across steps instead of reallocating.
+pub fn im2col_into(x: &[f32], g: &ConvGeom, batch: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), batch * g.in_numel());
     let plen = g.patch_len();
     let pos = g.positions();
-    let mut out = vec![0.0f32; batch * pos * plen];
+    debug_assert_eq!(out.len(), batch * pos * plen);
     for bi in 0..batch {
         let xi = &x[bi * g.in_numel()..(bi + 1) * g.in_numel()];
         for oy in 0..g.out_h {
@@ -95,7 +104,6 @@ pub fn im2col_batch(x: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Adjoint of [`im2col_batch`]: scatter-add patch cotangents back onto
@@ -103,10 +111,18 @@ pub fn im2col_batch(x: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
 /// accumulate; padding positions are dropped). Skips exact zeros — the
 /// patch cotangents inherit the compressed `delta_z` sparsity.
 pub fn col2im_batch(dpatches: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; batch * g.in_numel()];
+    col2im_into(dpatches, g, batch, &mut dx);
+    dx
+}
+
+/// [`col2im_batch`] into a caller buffer (must be zeroed — the scatter
+/// accumulates). Same arena-reuse rationale as [`im2col_into`].
+pub fn col2im_into(dpatches: &[f32], g: &ConvGeom, batch: usize, dx: &mut [f32]) {
     let plen = g.patch_len();
     let pos = g.positions();
     debug_assert_eq!(dpatches.len(), batch * pos * plen);
-    let mut dx = vec![0.0f32; batch * g.in_numel()];
+    debug_assert_eq!(dx.len(), batch * g.in_numel());
     for bi in 0..batch {
         let dxi = &mut dx[bi * g.in_numel()..(bi + 1) * g.in_numel()];
         for oy in 0..g.out_h {
@@ -136,7 +152,6 @@ pub fn col2im_batch(dpatches: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
             }
         }
     }
-    dx
 }
 
 /// Pooling geometry for one stage.

@@ -8,19 +8,27 @@
 //! max pool; optionally int8 fake-quantized, Banner et al.); the
 //! backward compresses each weighted stage's pre-activation gradient
 //! `delta_z` with the configured method ([`super::methods`]) and then
-//! runs *skip-on-zero* backward GEMMs: rows of the compressed
-//! `delta_z` are CSR-encoded ([`crate::sparse::CsrVec`]) and only
-//! their nonzeros touch the weight and input-gradient accumulators.
-//! Conv layers route through the **same two sparse GEMMs** as dense
-//! layers — an im2col'd convolution is an affine map over
-//! `out_h*out_w` patch rows per example ([`super::conv`]) — which is
-//! the SparseProp-style vectorizable host realization of the savings
-//! Eq. 12 models. Pool and flatten stages carry no parameters and
-//! just route cotangents.
+//! runs sparse backward GEMMs: rows of the compressed `delta_z` are
+//! CSR-encoded ([`crate::sparse::CsrVec`]) and only their nonzeros
+//! touch the weight and input-gradient accumulators. Conv layers route
+//! through the **same two sparse GEMMs** as dense layers — an im2col'd
+//! convolution is an affine map over `out_h*out_w` patch rows per
+//! example ([`super::conv`]).
+//!
+//! The GEMMs themselves live in [`crate::kernels`]: blocked
+//! SIMD-friendly loops with scoped-thread batch parallelism
+//! (`DITHERPROP_THREADS`), dispatched per step by
+//! [`crate::kernels::variant`] — `DITHERPROP_KERNELS=ref` falls back to
+//! the scalar skip-on-zero reference loops, which every variant matches
+//! bit-for-bit. Large per-step buffers (W^T, `gp` rows, im2col patches,
+//! the transposed dW accumulator) come from the per-thread scratch
+//! arena ([`crate::kernels::scratch`]), so steady-state steps do not
+//! reallocate them.
 
 use super::conv::{self, ConvGeom, PoolGeom};
 use super::methods::{self, Method};
 use super::models::{LayerSpec, ModelSpec, Plan};
+use crate::kernels::{self, scratch, Scratch, Variant};
 use crate::runtime::step::{EvalOut, GradOut};
 use crate::sparse::CsrVec;
 use crate::tensor::Tensor;
@@ -39,102 +47,100 @@ pub fn fq8(values: &[f32]) -> Vec<f32> {
         .collect()
 }
 
-/// z = x @ w + b (x: rows×din, w: din×dout row-major). Skips zero
-/// input entries (ReLU and im2col padding make many), k-i-j loop order
-/// for cache locality. Dense layers call it with rows = batch; conv
-/// layers with rows = batch * out positions over im2col patches.
-pub(crate) fn affine(
+/// Per-step execution context: the dispatched kernel variant + the
+/// thread-local buffer arena.
+struct Exec<'a> {
+    var: Variant,
+    sc: &'a mut Scratch,
+}
+
+/// z = x @ w + b through the configured kernel variant. Dense layers
+/// call it with rows = batch; conv layers with rows = batch * out
+/// positions over im2col patches. The returned buffer comes from the
+/// arena (callers recycle it when the value dies).
+fn affine(
     x: &[f32],
     w: &[f32],
     b: &[f32],
     rows: usize,
     din: usize,
     dout: usize,
+    ex: &mut Exec,
 ) -> Vec<f32> {
-    debug_assert_eq!(x.len(), rows * din);
-    debug_assert_eq!(w.len(), din * dout);
-    debug_assert_eq!(b.len(), dout);
-    let mut z = vec![0.0f32; rows * dout];
-    for bi in 0..rows {
-        let zrow = &mut z[bi * dout..(bi + 1) * dout];
-        zrow.copy_from_slice(b);
-        let xrow = &x[bi * din..(bi + 1) * din];
-        for (a, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[a * dout..(a + 1) * dout];
-            for (zv, &wv) in zrow.iter_mut().zip(wrow.iter()) {
-                *zv += xv * wv;
-            }
+    match ex.var {
+        Variant::Reference => kernels::affine_ref(x, w, b, rows, din, dout),
+        Variant::Blocked => {
+            // the blocked kernel writes every element: skip the memset
+            let mut z = ex.sc.grab_overwritten(rows * dout);
+            kernels::affine_blocked_into(x, w, b, rows, din, dout, &mut z);
+            z
+        }
+        Variant::Threaded(n) => {
+            let mut z = ex.sc.grab_overwritten(rows * dout);
+            kernels::affine_threaded_into(x, w, b, rows, din, dout, &mut z, n);
+            z
         }
     }
-    z
 }
 
-/// w (din×dout) -> w^T (dout×din), so the input-gradient GEMM reads
-/// contiguous rows.
-pub(crate) fn transpose(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
-    let mut wt = vec![0.0f32; w.len()];
-    for a in 0..din {
-        for j in 0..dout {
-            wt[j * din + a] = w[a * dout + j];
-        }
-    }
-    wt
-}
-
-/// Eq. 9 skip-on-zero GEMM pair: `dw += x^T . rows`, `db += column
-/// sums of rows`. Shared by dense stages (row = one example) and conv
-/// stages (row = one spatial position of one example, x = its im2col
-/// patch).
-pub(crate) fn sparse_param_gemm(
+/// Eq. 9 pair through the configured variant: `dw += x^T . rows`
+/// (din x dout), `db += column sums of rows`. The blocked/threaded
+/// kernels accumulate the transposed gradient in an arena buffer and
+/// transpose back — bit-identical to the reference (fixed reduction
+/// order; see `kernels::gemm`).
+fn param_gemm(
     rows: &[CsrVec],
     xq: &[f32],
     din: usize,
     dout: usize,
     dw: &mut [f32],
     db: &mut [f32],
+    ex: &mut Exec,
 ) {
-    debug_assert_eq!(xq.len(), rows.len() * din);
-    debug_assert_eq!(dw.len(), din * dout);
-    debug_assert_eq!(db.len(), dout);
-    for (bi, row) in rows.iter().enumerate() {
-        if row.nnz() == 0 {
-            continue;
-        }
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
-            db[j as usize] += v;
-        }
-        let xrow = &xq[bi * din..(bi + 1) * din];
-        for (a, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
+    match ex.var {
+        Variant::Reference => kernels::sparse_param_gemm_ref(rows, xq, din, dout, dw, db),
+        _ => {
+            let mut dwt = ex.sc.grab(dout * din);
+            match ex.var {
+                Variant::Threaded(n) => {
+                    kernels::sparse_param_gemm_threaded(rows, xq, din, dout, &mut dwt, db, n)
+                }
+                _ => kernels::sparse_param_gemm_blocked(rows, xq, din, dout, &mut dwt, db),
             }
-            let dst = &mut dw[a * dout..(a + 1) * dout];
-            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
-                dst[j as usize] += xv * v;
-            }
+            kernels::transpose_into(&dwt, dout, din, dw);
+            ex.sc.put_back(dwt);
         }
     }
 }
 
-/// Eq. 8 skip-on-zero GEMM: `g_in = rows . W^T` (wt: dout×din,
-/// pre-transposed). Returns one din-row per input row.
-pub(crate) fn sparse_input_gemm(rows: &[CsrVec], wt: &[f32], din: usize) -> Vec<f32> {
-    let mut gp = vec![0.0f32; rows.len() * din];
-    for (bi, row) in rows.iter().enumerate() {
-        if row.nnz() == 0 {
-            continue;
+/// Eq. 8 through the configured variant: `g_in = rows . W^T`, with the
+/// W^T transpose staged in an arena buffer. Returns one din-row per
+/// input row (arena-backed for the blocked/threaded variants).
+fn input_gemm(
+    rows: &[CsrVec],
+    w: &[f32],
+    din: usize,
+    dout: usize,
+    ex: &mut Exec,
+) -> Vec<f32> {
+    // transpose and the blocked/threaded GEMMs write every element of
+    // their outputs, so both buffers skip the zeroing memset
+    let mut wt = ex.sc.grab_overwritten(din * dout);
+    kernels::transpose_into(w, din, dout, &mut wt);
+    let gp = match ex.var {
+        Variant::Reference => kernels::sparse_input_gemm_ref(rows, &wt, din),
+        Variant::Blocked => {
+            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            kernels::sparse_input_gemm_blocked_into(rows, &wt, din, &mut gp);
+            gp
         }
-        let dst = &mut gp[bi * din..(bi + 1) * din];
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
-            let wrow = &wt[(j as usize) * din..(j as usize + 1) * din];
-            for (d, &wv) in dst.iter_mut().zip(wrow.iter()) {
-                *d += v * wv;
-            }
+        Variant::Threaded(n) => {
+            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            kernels::sparse_input_gemm_threaded_into(rows, &wt, din, &mut gp, n);
+            gp
         }
-    }
+    };
+    ex.sc.put_back(wt);
     gp
 }
 
@@ -161,12 +167,22 @@ struct Forward {
     logits: Vec<f32>,
 }
 
-fn forward(plan: &Plan, params: &[Tensor], x: &[f32], batch: usize, int8: bool) -> Forward {
+fn forward(
+    plan: &Plan,
+    params: &[Tensor],
+    x: &[f32],
+    batch: usize,
+    int8: bool,
+    ex: &mut Exec,
+) -> Forward {
     let n = plan.stages.len();
     let mut res = Vec::with_capacity(n);
     let mut wq: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
     let mut mask: Vec<Vec<bool>> = vec![Vec::new(); n];
-    let mut h = x.to_vec();
+    // the input copy comes from the arena too, so the stage-0 residual
+    // it becomes is a recycled buffer rather than a fresh allocation
+    let mut h = ex.sc.grab_overwritten(x.len());
+    h.copy_from_slice(x);
     for (si, st) in plan.stages.iter().enumerate() {
         match st.layer {
             LayerSpec::Dense { out } => {
@@ -177,7 +193,8 @@ fn forward(plan: &Plan, params: &[Tensor], x: &[f32], batch: usize, int8: bool) 
                 let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
                 let wl = if int8 { Some(fq8(w)) } else { None };
                 let weff: &[f32] = wl.as_deref().unwrap_or(w);
-                h = affine(&hq, weff, b, batch, din, out);
+                let z = affine(&hq, weff, b, batch, din, out, ex);
+                ex.sc.put_back(std::mem::replace(&mut h, z));
                 res.push(StageRes::Dense { xq: hq });
                 wq[si] = wl;
             }
@@ -189,16 +206,19 @@ fn forward(plan: &Plan, params: &[Tensor], x: &[f32], batch: usize, int8: bool) 
                 let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
                 let wl = if int8 { Some(fq8(w)) } else { None };
                 let weff: &[f32] = wl.as_deref().unwrap_or(w);
-                let patches = conv::im2col_batch(&hq, &geom, batch);
                 let (rows, din) = (batch * geom.positions(), geom.patch_len());
-                h = affine(&patches, weff, b, rows, din, geom.out_ch);
+                let mut patches = ex.sc.grab(rows * din);
+                conv::im2col_into(&hq, &geom, batch, &mut patches);
+                ex.sc.put_back(hq);
+                let z = affine(&patches, weff, b, rows, din, geom.out_ch, ex);
+                ex.sc.put_back(std::mem::replace(&mut h, z));
                 res.push(StageRes::Conv { patches, geom });
                 wq[si] = wl;
             }
             LayerSpec::MaxPool2d { k, stride } => {
                 let geom = PoolGeom::of(st, k, stride);
                 let (z, argmax) = conv::maxpool_forward(&h, &geom, batch);
-                h = z;
+                ex.sc.put_back(std::mem::replace(&mut h, z));
                 res.push(StageRes::Pool { argmax, geom });
             }
             LayerSpec::Flatten => {
@@ -217,6 +237,18 @@ fn forward(plan: &Plan, params: &[Tensor], x: &[f32], batch: usize, int8: bool) 
         }
     }
     Forward { res, wq, mask, logits: h }
+}
+
+/// Return a forward pass's recyclable buffers to the arena.
+fn recycle(fwd: Forward, sc: &mut Scratch) {
+    for r in fwd.res {
+        match r {
+            StageRes::Dense { xq } => sc.put_back(xq),
+            StageRes::Conv { patches, .. } => sc.put_back(patches),
+            _ => {}
+        }
+    }
+    sc.put_back(fwd.logits);
 }
 
 /// Mean softmax cross-entropy + correct count; optionally the logits
@@ -333,10 +365,30 @@ pub fn grad_step_traced(
     seed: u32,
     s: f32,
 ) -> Result<(GradOut, Vec<Vec<f32>>)> {
+    let var = kernels::variant();
+    scratch::with_thread_local(|sc| {
+        let mut ex = Exec { var, sc };
+        grad_step_impl(spec, method, params, x, y, seed, s, &mut ex)
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn grad_step_impl(
+    spec: &ModelSpec,
+    method: Method,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+    seed: u32,
+    s: f32,
+    ex: &mut Exec,
+) -> Result<(GradOut, Vec<Vec<f32>>)> {
     let plan = spec.plan()?;
     let batch = check_inputs(spec, &plan, params, x, y)?;
-    let fwd = forward(&plan, params, x, batch, method.int8_forward());
+    let fwd = forward(&plan, params, x, batch, method.int8_forward(), ex);
     let (loss, correct, dlogits) = softmax_xent(&fwd.logits, y, spec.num_classes(), true)?;
+    let Forward { mut res, wq, mask, logits } = fwd;
+    ex.sc.put_back(logits);
 
     let mut grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
     let mut sparsity = vec![0.0f32; plan.n_qlayers];
@@ -351,14 +403,15 @@ pub fn grad_step_traced(
         // the incoming cotangent down to pre-activation `delta_z`
         // before it is compressed.
         if st.relu {
-            for (gv, &m) in g.iter_mut().zip(fwd.mask[si].iter()) {
+            for (gv, &m) in g.iter_mut().zip(mask[si].iter()) {
                 if !m {
                     *gv = 0.0;
                 }
             }
         }
-        match (&st.layer, &fwd.res[si]) {
+        match (&st.layer, &mut res[si]) {
             (LayerSpec::Dense { out }, StageRes::Dense { xq }) => {
+                let xq = std::mem::take(xq);
                 let (din, dout) = (st.in_shape[0], *out);
                 let q = st.qlayer.unwrap();
                 let (qg, stats) =
@@ -376,16 +429,19 @@ pub fn grad_step_traced(
                 let p = st.param_idx.unwrap();
                 let mut dw = vec![0.0f32; din * dout];
                 let mut db = vec![0.0f32; dout];
-                sparse_param_gemm(&rows, xq, din, dout, &mut dw, &mut db);
+                param_gemm(&rows, &xq, din, dout, &mut dw, &mut db, ex);
                 if si > 0 {
-                    let weff: &[f32] = fwd.wq[si].as_deref().unwrap_or(params[p].data());
-                    let wt = transpose(weff, din, dout);
-                    g = sparse_input_gemm(&rows, &wt, din);
+                    let weff: &[f32] = wq[si].as_deref().unwrap_or(params[p].data());
+                    let gp = input_gemm(&rows, weff, din, dout, ex);
+                    ex.sc.put_back(std::mem::replace(&mut g, gp));
                 }
+                ex.sc.put_back(xq);
                 grads[p] = Tensor::from_vec(&[din, dout], dw);
                 grads[p + 1] = Tensor::from_vec(&[dout], db);
             }
             (LayerSpec::Conv2d { .. }, StageRes::Conv { patches, geom }) => {
+                let geom = *geom;
+                let patches = std::mem::take(patches);
                 let q = st.qlayer.unwrap();
                 // The delta_z feature maps (batch×positions×out_ch) are
                 // compressed as one tensor with per-example rows, so
@@ -415,25 +471,30 @@ pub fn grad_step_traced(
                 let plen = geom.patch_len();
                 let mut dw = vec![0.0f32; plen * oc];
                 let mut db = vec![0.0f32; oc];
-                sparse_param_gemm(&rows, patches, plen, oc, &mut dw, &mut db);
+                param_gemm(&rows, &patches, plen, oc, &mut dw, &mut db, ex);
                 if si > 0 {
-                    let weff: &[f32] = fwd.wq[si].as_deref().unwrap_or(params[p].data());
-                    let wt = transpose(weff, plen, oc);
-                    let dpatches = sparse_input_gemm(&rows, &wt, plen);
-                    g = conv::col2im_batch(&dpatches, geom, batch);
+                    let weff: &[f32] = wq[si].as_deref().unwrap_or(params[p].data());
+                    let dpatches = input_gemm(&rows, weff, plen, oc, ex);
+                    let mut gnew = ex.sc.grab(batch * geom.in_numel());
+                    conv::col2im_into(&dpatches, &geom, batch, &mut gnew);
+                    ex.sc.put_back(dpatches);
+                    ex.sc.put_back(std::mem::replace(&mut g, gnew));
                 }
+                ex.sc.put_back(patches);
                 grads[p] = Tensor::from_vec(params[p].shape(), dw);
                 grads[p + 1] = Tensor::from_vec(&[oc], db);
             }
             (LayerSpec::MaxPool2d { .. }, StageRes::Pool { argmax, geom }) => {
                 if si > 0 {
-                    g = conv::maxpool_backward(&g, argmax, geom, batch);
+                    let gnew = conv::maxpool_backward(&g, argmax, geom, batch);
+                    ex.sc.put_back(std::mem::replace(&mut g, gnew));
                 }
             }
             (LayerSpec::Flatten, StageRes::Flatten) => {}
             _ => unreachable!("stage/residual mismatch at stage {si}"),
         }
     }
+    ex.sc.put_back(g);
 
     Ok((GradOut { grads, loss, correct, sparsity, max_level }, trace))
 }
@@ -443,14 +504,20 @@ pub fn grad_step_traced(
 pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
     let plan = spec.plan()?;
     let batch = check_inputs(spec, &plan, params, x, y)?;
-    let fwd = forward(&plan, params, x, batch, false);
-    let (loss, correct, _) = softmax_xent(&fwd.logits, y, spec.num_classes(), false)?;
-    Ok(EvalOut { loss, correct })
+    let var = kernels::variant();
+    scratch::with_thread_local(|sc| {
+        let mut ex = Exec { var, sc };
+        let fwd = forward(&plan, params, x, batch, false, &mut ex);
+        let (loss, correct, _) = softmax_xent(&fwd.logits, y, spec.num_classes(), false)?;
+        recycle(fwd, ex.sc);
+        Ok(EvalOut { loss, correct })
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::affine_ref;
     use crate::util::rng::Rng;
 
     fn tiny_spec() -> ModelSpec {
@@ -493,17 +560,9 @@ mod tests {
     #[test]
     fn affine_matches_manual() {
         // x: 1x2, w: 2x2, b: 2
-        let z = affine(&[1.0, 2.0], &[10.0, 20.0, 30.0, 40.0], &[1.0, 2.0], 1, 2, 2);
+        let z = affine_ref(&[1.0, 2.0], &[10.0, 20.0, 30.0, 40.0], &[1.0, 2.0], 1, 2, 2);
         // z0 = 1*10 + 2*30 + 1 = 71; z1 = 1*20 + 2*40 + 2 = 102
         assert_eq!(z, vec![71.0, 102.0]);
-    }
-
-    #[test]
-    fn transpose_roundtrip() {
-        let w: Vec<f32> = (0..6).map(|v| v as f32).collect(); // 2x3
-        let wt = transpose(&w, 2, 3);
-        assert_eq!(wt, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
-        assert_eq!(transpose(&wt, 3, 2), w);
     }
 
     #[test]
@@ -585,7 +644,7 @@ mod tests {
         let b: Vec<f32> = (0..out_ch).map(|_| rng.normal()).collect();
 
         let patches = conv::im2col_batch(&x, &geom, 1);
-        let z = affine(&patches, &w, &b, geom.positions(), geom.patch_len(), out_ch);
+        let z = affine_ref(&patches, &w, &b, geom.positions(), geom.patch_len(), out_ch);
 
         let mut expect = vec![0.0f32; geom.out_numel()];
         for oy in 0..geom.out_h {
@@ -707,5 +766,41 @@ mod tests {
         let err = grad_step(&spec, Method::Baseline, &params, &[0.0; 4], &[0], 0, 0.0);
         assert!(err.is_err());
         assert!(err.unwrap_err().to_string().contains("fc1_w"));
+    }
+
+    #[test]
+    fn kernel_variants_agree_on_a_full_grad_step() {
+        // End-to-end: ref / blocked / threaded grad steps must be
+        // bit-identical (the kernel-level guarantee composed through
+        // im2col, pooling, compression and the loss).
+        //
+        // Env mutation is safe alongside parallel sibling tests: std's
+        // env accessors synchronize against each other, this is the
+        // only env-mutating test in this binary, and all variants are
+        // bit-identical, so a concurrent test observing a flipped knob
+        // computes the same numbers either way.
+        let spec = tiny_conv_spec();
+        let params = random_params(&spec, 43);
+        let mut rng = Rng::new(47);
+        let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();
+        let y = [0, 1, 2, 0, 1, 2];
+        let run = |var: &str, threads: &str| {
+            // EnvGuard restores the launch-time knobs (e.g. the CI
+            // DITHERPROP_THREADS=4 leg) when each run ends, panic-safe
+            let _k = crate::kernels::EnvGuard::set(crate::kernels::ENV_KERNELS, var);
+            let _t = crate::kernels::EnvGuard::set(crate::kernels::ENV_THREADS, threads);
+            grad_step(&spec, Method::Dithered, &params, &x, &y, 5, 2.0).unwrap()
+        };
+        let r = run("ref", "1");
+        let b = run("blocked", "1");
+        let t = run("auto", "3");
+        for (pi, (gr, gb)) in r.grads.iter().zip(b.grads.iter()).enumerate() {
+            assert_eq!(gr.data(), gb.data(), "blocked grad {pi} diverged from ref");
+        }
+        for (pi, (gr, gt)) in r.grads.iter().zip(t.grads.iter()).enumerate() {
+            assert_eq!(gr.data(), gt.data(), "threaded grad {pi} diverged from ref");
+        }
+        assert_eq!(r.loss, b.loss);
+        assert_eq!(r.loss, t.loss);
     }
 }

@@ -14,8 +14,10 @@
 //!   surface (MLP dims shorthand + conv/pool/flatten/dense graphs).
 //! * [`methods`] — `delta_z` compression (NSD / detq / int8 / meProp).
 //! * [`graph`]   — the layer-graph executor: forward/backward with
-//!   skip-on-zero backward GEMMs shared by dense and im2col'd conv
-//!   stages.
+//!   sparse backward GEMMs shared by dense and im2col'd conv stages,
+//!   dispatched through the blocked/threaded kernels in
+//!   [`crate::kernels`] (env knobs `DITHERPROP_THREADS`,
+//!   `DITHERPROP_KERNELS`; all variants bit-identical).
 //! * [`conv`]    — im2col/col2im and max-pool kernels.
 
 pub mod conv;

@@ -10,11 +10,20 @@
 //!   via batch-1 bias gradients for dense layers (which *are* the
 //!   layer's compressed delta_z row) and via the executor's delta_z
 //!   trace for conv feature maps (whose bias gradients are position
-//!   sums, not the maps themselves).
+//!   sums, not the maps themselves);
+//! * property-test the blocked and threaded GEMM kernels against the
+//!   scalar reference oracle across a randomized
+//!   (din, dout, batch, sparsity, nthreads) grid, to the bit;
+//! * regression-test that a full lenet5 dithered training run is
+//!   bit-identical across `DITHERPROP_THREADS` settings.
 
+use ditherprop::data;
+use ditherprop::kernels;
+use ditherprop::optim::{Sgd, SgdConfig};
 use ditherprop::quant::grid_stats;
 use ditherprop::runtime::backend::native::{graph, Method, NativeBackend};
 use ditherprop::runtime::{Backend, Engine, SessionSpec};
+use ditherprop::sparse::CsrVec;
 use ditherprop::tensor::Tensor;
 use ditherprop::util::prop::{check, Gen};
 use ditherprop::util::rng::Rng;
@@ -286,6 +295,130 @@ fn zero_fraction(values: &[f32]) -> f32 {
         return 0.0;
     }
     values.iter().filter(|&&v| v == 0.0).count() as f32 / values.len() as f32
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn blocked_and_threaded_kernels_match_scalar_reference_bitwise() {
+    // The kernel contract (kernels::gemm): every variant performs the
+    // same f32 additions in the same order, so equality is exact — not
+    // within-epsilon — across a randomized grid of layer shapes,
+    // delta_z sparsity levels and thread counts.
+    check("kernel equivalence (din,dout,batch,sparsity,nthreads) grid", 60, |g: &mut Gen| {
+        // upper bounds chosen so the largest cases clear the kernels'
+        // spawn threshold and exercise real scoped threads
+        let din = g.usize_in(1..=128);
+        let dout = g.usize_in(1..=64);
+        let batch = g.usize_in(1..=48);
+        let density = g.f32_in(0.0, 1.0);
+        let nthreads = g.usize_in(1..=6);
+        let mut rng = Rng::new(g.u32() as u64);
+        let rows: Vec<CsrVec> = (0..batch)
+            .map(|_| {
+                let dense: Vec<f32> = (0..dout)
+                    .map(|_| if rng.uniform() < density { rng.normal() } else { 0.0 })
+                    .collect();
+                CsrVec::encode(&dense)
+            })
+            .collect();
+        let x: Vec<f32> = (0..batch * din)
+            .map(|_| if rng.uniform() < 0.7 { rng.normal() } else { 0.0 })
+            .collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..dout).map(|_| rng.normal() * 0.1).collect();
+
+        // Eq. 9 param GEMM pair
+        let mut dw_ref = vec![0.0f32; din * dout];
+        let mut db_ref = vec![0.0f32; dout];
+        kernels::sparse_param_gemm_ref(&rows, &x, din, dout, &mut dw_ref, &mut db_ref);
+        let mut dwt = vec![0.0f32; dout * din];
+        let mut db_blk = vec![0.0f32; dout];
+        kernels::sparse_param_gemm_blocked(&rows, &x, din, dout, &mut dwt, &mut db_blk);
+        let mut dw_blk = vec![0.0f32; din * dout];
+        kernels::transpose_into(&dwt, dout, din, &mut dw_blk);
+        let mut dwt_thr = vec![0.0f32; dout * din];
+        let mut db_thr = vec![0.0f32; dout];
+        kernels::sparse_param_gemm_threaded(
+            &rows,
+            &x,
+            din,
+            dout,
+            &mut dwt_thr,
+            &mut db_thr,
+            nthreads,
+        );
+        let mut dw_thr = vec![0.0f32; din * dout];
+        kernels::transpose_into(&dwt_thr, dout, din, &mut dw_thr);
+
+        // Eq. 8 input GEMM
+        let wt = kernels::transpose(&w, din, dout);
+        let gp_ref = kernels::sparse_input_gemm_ref(&rows, &wt, din);
+        let mut gp_blk = vec![3.0f32; batch * din]; // stale data must be overwritten
+        kernels::sparse_input_gemm_blocked_into(&rows, &wt, din, &mut gp_blk);
+        let mut gp_thr = vec![3.0f32; batch * din];
+        kernels::sparse_input_gemm_threaded_into(&rows, &wt, din, &mut gp_thr, nthreads);
+
+        // forward affine
+        let z_ref = kernels::affine_ref(&x, &w, &b, batch, din, dout);
+        let mut z_blk = vec![3.0f32; batch * dout];
+        kernels::affine_blocked_into(&x, &w, &b, batch, din, dout, &mut z_blk);
+        let mut z_thr = vec![3.0f32; batch * dout];
+        kernels::affine_threaded_into(&x, &w, &b, batch, din, dout, &mut z_thr, nthreads);
+
+        bits_eq(&dw_ref, &dw_blk)
+            && bits_eq(&dw_ref, &dw_thr)
+            && bits_eq(&db_ref, &db_blk)
+            && bits_eq(&db_ref, &db_thr)
+            && bits_eq(&gp_ref, &gp_blk)
+            && bits_eq(&gp_ref, &gp_thr)
+            && bits_eq(&z_ref, &z_blk)
+            && bits_eq(&z_ref, &z_thr)
+    });
+}
+
+#[test]
+fn lenet5_dithered_training_is_bit_identical_across_thread_counts() {
+    // The determinism regression the threaded executor must hold: a
+    // full lenet5 dithered run (3 SGD steps) with DITHERPROP_THREADS=1
+    // vs =4 produces identical parameters, to the bit.
+    //
+    // Mutating DITHERPROP_THREADS while sibling tests run is safe here:
+    // std's env accessors synchronize against each other, this is the
+    // only env-mutating test in this binary, and every kernel variant
+    // is bit-identical — a concurrent test observing a flipped knob
+    // computes the same numbers either way.
+    // Pin the variant to `auto` so the threaded driver really runs even
+    // under the `DITHERPROP_KERNELS=ref` oracle test leg (which would
+    // otherwise make both runs execute the identical scalar kernel);
+    // EnvGuard restores the launch-time knobs when the test ends.
+    let _kernels = kernels::EnvGuard::set(kernels::ENV_KERNELS, "auto");
+    let run = |threads: &str| -> Vec<Tensor> {
+        let _t = kernels::EnvGuard::set(kernels::ENV_THREADS, threads);
+        let engine = Engine::native().unwrap();
+        let sess = engine.training_session("lenet5", "dithered", 32).unwrap();
+        let mut params = engine.init_params("lenet5", 7).unwrap();
+        let ds = data::build(&sess.entry.dataset.clone(), 64, 16, 5);
+        let mut it = data::BatchIter::new(&ds.train, 32, 2);
+        let mut opt = Sgd::new(SgdConfig::paper(0.05, 100), &params);
+        for step in 0..3u32 {
+            it.next_batch(&ds.train);
+            let out = sess.grad(&params, &it.x, &it.y, step + 1, 2.0).unwrap();
+            opt.apply(&mut params, &out.grads);
+        }
+        params
+    };
+    let p1 = run("1");
+    let p4 = run("4");
+    assert_eq!(p1.len(), p4.len());
+    for (pi, (a, b)) in p1.iter().zip(p4.iter()).enumerate() {
+        assert!(
+            bits_eq(a.data(), b.data()),
+            "param {pi} diverged between DITHERPROP_THREADS=1 and =4"
+        );
+    }
 }
 
 #[test]
