@@ -12,40 +12,19 @@
 
 use ditherprop::bench_util::{bench_fn, num, report_header, text, BenchResult, JsonReport};
 use ditherprop::coordinator::comm::EncodedGrads;
-use ditherprop::costmodel::flops::{conv_backward_cost, fc_backward_cost, gflops, BackwardCost};
+use ditherprop::costmodel::flops::{fc_backward_cost, gflops, BackwardCost};
 use ditherprop::data;
 use ditherprop::kernels::{self, ENV_KERNELS, ENV_THREADS};
 use ditherprop::optim::{Sgd, SgdConfig};
-use ditherprop::runtime::backend::native::conv::ConvGeom;
-use ditherprop::runtime::backend::native::{LayerSpec, NativeBackend, Plan};
+// Eq. 12 whole-model backward cost now lives next to the ops it prices
+// (every LayerOp exposes `flops_cost`; the aggregator walks the plan)
+use ditherprop::runtime::backend::native::ops::model_backward_cost;
+use ditherprop::runtime::backend::native::NativeBackend;
 use ditherprop::runtime::Engine;
 use ditherprop::sparse::{BitmapVec, CsrVec};
 use ditherprop::tensor::Tensor;
 use ditherprop::util::cli::Args;
 use ditherprop::util::rng::Rng;
-
-/// Eq. 12 backward cost of a whole model at the measured per-layer
-/// `delta_z` densities: the fc/conv GEMM-pair terms summed over every
-/// quantized layer.
-fn model_backward_cost(plan: &Plan, batch: usize, sparsity: &[f32]) -> BackwardCost {
-    let (mut dense, mut nsd, mut sparse) = (0.0, 0.0, 0.0);
-    for st in &plan.stages {
-        let Some(q) = st.qlayer else { continue };
-        let p_nz = (1.0 - sparsity[q] as f64).clamp(0.0, 1.0);
-        let c = match st.layer {
-            LayerSpec::Dense { out } => fc_backward_cost(batch, st.in_shape[0], out, p_nz),
-            LayerSpec::Conv2d { k, stride, pad, .. } => {
-                let g = ConvGeom::of(st, k, stride, pad);
-                conv_backward_cost(batch, g.positions(), g.patch_len(), g.out_ch, p_nz)
-            }
-            _ => continue,
-        };
-        dense += c.dense_ops;
-        nsd += c.nsd_ops;
-        sparse += c.sparse_ops;
-    }
-    BackwardCost { dense_ops: dense, nsd_ops: nsd, sparse_ops: sparse }
-}
 
 /// Random CSR rows (the compressed `delta_z`) at a target density.
 fn random_csr_rows(n_rows: usize, cols: usize, p_nz: f32, rng: &mut Rng) -> Vec<CsrVec> {

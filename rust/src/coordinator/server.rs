@@ -147,7 +147,9 @@ pub fn serve(
     let engine = Engine::load(&cfg.artifacts_dir).context("server loading artifacts")?;
     let entry = engine.manifest.model(&cfg.model)?.clone();
     let mut params = engine.init_params(&cfg.model, cfg.seed as u32)?;
-    let mut opt = Sgd::new(cfg.opt, &params);
+    // BN running-stat slots: averaged across workers like every other
+    // slot, then assigned (not SGD-stepped) by the optimizer
+    let mut opt = Sgd::new(cfg.opt, &params).with_stat_slots(&entry.params);
     let param_bytes: usize = params.iter().map(|p| 4 * p.len()).sum();
 
     let mut comm = CommStats::default();
@@ -159,23 +161,38 @@ pub fn serve(
     }
 
     // 1. Hello/Welcome handshake: admit each worker, assign node ids
-    //    and the dither-seed base.
+    //    and the dither-seed base. Version skew and missing layer
+    //    capabilities are refused HERE, with a reason, instead of
+    //    surfacing as a mid-round executor error on the worker.
     for (node, slot) in links.iter_mut().enumerate() {
         let link = slot.as_mut().expect("links start populated");
         // on failure, keep the underlying cause so the operator can
-        // tell version skew from timeouts from protocol bugs
+        // tell version skew from capability gaps from timeouts
         let refusal: Option<String> = match link.recv_deadline(cfg.round_timeout) {
-            Ok(Some(Msg::Hello { proto, caps })) => {
-                if proto == PROTO_VERSION {
-                    if cfg.verbose {
-                        println!("[dist] worker {node} joined from {} ({caps})", link.peer());
-                    }
-                    None
-                } else {
+            Ok(Some(Msg::Hello { proto, platform, features })) => {
+                if proto != PROTO_VERSION {
                     let reason =
                         format!("protocol v{proto} not supported (server is v{PROTO_VERSION})");
                     let _ = link.send(&Msg::Shutdown { reason: reason.clone() });
                     Some(reason)
+                } else if let Some(missing) =
+                    entry.requires.iter().find(|&r| !features.contains(r))
+                {
+                    let reason = format!(
+                        "model '{}' requires the '{missing}' layer capability, which \
+                         worker backend '{platform}' (features: {features:?}) lacks",
+                        entry.name
+                    );
+                    let _ = link.send(&Msg::Shutdown { reason: reason.clone() });
+                    Some(reason)
+                } else {
+                    if cfg.verbose {
+                        println!(
+                            "[dist] worker {node} joined from {} ({platform}, features {features:?})",
+                            link.peer()
+                        );
+                    }
+                    None
                 }
             }
             Ok(Some(other)) => Some(format!("sent tag {} instead of Hello", other.tag())),

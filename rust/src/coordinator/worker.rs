@@ -42,12 +42,16 @@ pub fn worker_loop(
     artifacts_dir: &str,
     local_shard: Option<Split>,
 ) -> Result<()> {
-    // Capabilities handshake: announce the protocol we speak and the
-    // backend we run; the server assigns our identity.
+    // Capabilities handshake: announce the protocol we speak, the
+    // backend we run and the layer features it can execute; the server
+    // refuses us here if the job's model needs more, and otherwise
+    // assigns our identity.
     let engine = Engine::load(artifacts_dir).context("worker loading artifacts")?;
+    let caps = engine.capabilities();
     link.send(&Msg::Hello {
         proto: PROTO_VERSION,
-        caps: engine.capabilities().summary(),
+        platform: caps.platform.clone(),
+        features: caps.feature_tags(),
     })?;
     let admission = link
         .recv_deadline(SERVER_SILENCE_TIMEOUT)?

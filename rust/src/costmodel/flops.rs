@@ -102,6 +102,31 @@ pub fn conv_backward_cost(
     }
 }
 
+/// BatchNorm backward cost over `b * numel` activation elements at
+/// incoming-delta density `p_nz`: the dgamma/dbeta reductions (2 MACs
+/// per element) scale with the delta's nonzeros, while the dx
+/// recombination (`gamma*istd*(g - mean - xhat*corr)`, ~4 ops per
+/// element) is dense regardless. In practice the delta reaching a BN
+/// is already dense — a quantized conv's input GEMM mixes every CSR
+/// nonzero into every output — so `ops::model_backward_cost` bills BN
+/// at `p_nz = 1`. No NSD term: BN is not a quantized layer.
+pub fn bn_backward_cost(b: usize, numel: usize, p_nz: f64) -> BackwardCost {
+    let n = (b * numel) as f64;
+    BackwardCost {
+        dense_ops: 8.0 * n,
+        nsd_ops: 0.0,
+        sparse_ops: (4.0 + 4.0 * p_nz) * n,
+    }
+}
+
+/// Residual add-junction backward cost over `b * numel` elements: one
+/// copy of the delta for the skip branch and one add at the save
+/// junction — 2 data ops per element, sparsity-independent.
+pub fn residual_backward_cost(b: usize, numel: usize) -> BackwardCost {
+    let n = (b * numel) as f64;
+    BackwardCost { dense_ops: 2.0 * n, nsd_ops: 0.0, sparse_ops: 2.0 * n }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +184,26 @@ mod tests {
         assert_eq!(c.dense_ops, 2.0 * 64.0 * 100.0 * 150.0 * 16.0);
         assert_eq!(c.nsd_ops, NSD_OPS_PER_ELEMENT * 64.0 * 100.0 * 16.0);
         assert!(c.speedup() > 5.0 && c.speedup() < 13.0);
+    }
+
+    #[test]
+    fn bn_cost_interpolates_with_density() {
+        let dense = bn_backward_cost(8, 100, 1.0);
+        let sparse = bn_backward_cost(8, 100, 0.0);
+        assert_eq!(dense.dense_ops, 8.0 * 800.0);
+        // fully dense delta: dithered == dense accounting (no NSD term)
+        assert_eq!(dense.dithered_ops(), dense.dense_ops);
+        // fully sparse delta: only the dense dx recombination remains
+        assert_eq!(sparse.dithered_ops(), 4.0 * 800.0);
+        assert!(sparse.speedup() > dense.speedup());
+    }
+
+    #[test]
+    fn residual_cost_is_sparsity_free_data_movement() {
+        let c = residual_backward_cost(4, 36);
+        assert_eq!(c.dense_ops, 2.0 * 144.0);
+        assert_eq!(c.dithered_ops(), c.dense_ops);
+        assert_eq!(c.nsd_ops, 0.0);
     }
 
     #[test]

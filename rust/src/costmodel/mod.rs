@@ -15,6 +15,7 @@ pub mod scnn;
 
 pub use analytic::p_zero;
 pub use flops::{
-    backward_gemm_ops, conv_backward_cost, fc_backward_cost, savings_ratio, BackwardCost,
+    backward_gemm_ops, bn_backward_cost, conv_backward_cost, fc_backward_cost,
+    residual_backward_cost, savings_ratio, BackwardCost,
 };
 pub use scnn::{energy_gain, speedup};

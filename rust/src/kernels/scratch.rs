@@ -68,6 +68,15 @@ impl Scratch {
         buf
     }
 
+    /// Copy `src` into a right-sized arena buffer (every element
+    /// overwritten — the skip junctions, flatten backward and the
+    /// executor's input staging all duplicate activations this way).
+    pub fn dup(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut buf = self.grab_overwritten(src.len());
+        buf.copy_from_slice(src);
+        buf
+    }
+
     fn take(&mut self, len: usize) -> Vec<f32> {
         self.grabs += 1;
         let buf = self.pool.pop().unwrap_or_default();
@@ -175,6 +184,15 @@ mod tests {
         s.put_back(b2);
         let b3 = s.grab_overwritten(12);
         assert_eq!(b3.len(), 12);
+    }
+
+    #[test]
+    fn dup_copies_into_recycled_capacity() {
+        let mut s = Scratch::new();
+        s.put_back(vec![9.0f32; 16]);
+        let d = s.dup(&[1.0, 2.0, 3.0]);
+        assert_eq!(d, vec![1.0, 2.0, 3.0]);
+        assert!(d.capacity() >= 16, "dup must reuse pooled capacity");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!
 //! ```text
 //! worker                          server
-//!   | -- Hello{proto,caps} ------->|   capabilities handshake
+//!   | -- Hello{proto,platform,features} ->|   capabilities handshake
 //!   |<------- Welcome{node,seed,…} |   node id + dither-seed assignment
 //!   |<------- Params{round,…} -----|   round barrier (broadcast)
 //!   | -- Heartbeat{node,round} --->|   compute-ack (resets deadline)
@@ -30,8 +30,13 @@ use anyhow::{bail, ensure, Result};
 /// from the frame [`WIRE_VERSION`]: the frame header can stay stable
 /// while message semantics evolve).
 ///
+/// v2: Hello carries structured capabilities (platform + per-layer
+/// feature tags) instead of a free-form summary string, so the server
+/// can refuse a worker that cannot execute the job's model *at the
+/// handshake* instead of failing mid-round.
+///
 /// [`WIRE_VERSION`]: super::frame::WIRE_VERSION
-pub const PROTO_VERSION: u16 = 1;
+pub const PROTO_VERSION: u16 = 2;
 
 /// Frame tags, one per message variant.  Never reuse a retired tag.
 pub mod tag {
@@ -72,8 +77,13 @@ pub enum Msg {
     /// Worker -> server: capability handshake.
     Hello {
         proto: u16,
-        /// Capability summary (backend platform), logged server-side.
-        caps: String,
+        /// Backend platform name ("native-cpu", ...), logged server-side.
+        platform: String,
+        /// Per-layer feature tags the worker's backend can execute
+        /// (`Capabilities::feature_tags`: "conv", "batchnorm",
+        /// "residual"). The server refuses workers missing a tag the
+        /// job's model requires.
+        features: Vec<String>,
     },
     /// Server -> worker: admission + assignment.
     Welcome(Welcome),
@@ -105,9 +115,17 @@ impl Msg {
     pub fn encode_payload(&self) -> Vec<u8> {
         let mut w = Wr::new();
         match self {
-            Msg::Hello { proto, caps } => {
+            Msg::Hello { proto, platform, features } => {
+                // layout is versioned by the proto field itself (see
+                // decode): v1 carried only a capability-summary string
                 w.u16(*proto);
-                w.str(caps);
+                w.str(platform);
+                if *proto >= 2 {
+                    w.u16(features.len() as u16);
+                    for f in features {
+                        w.str(f);
+                    }
+                }
             }
             Msg::Welcome(wc) => {
                 w.u32(wc.node);
@@ -155,7 +173,25 @@ impl Msg {
     pub fn decode(tag: u8, payload: &[u8]) -> Result<Msg> {
         let mut r = Rd::new(payload);
         let msg = match tag {
-            tag::HELLO => Msg::Hello { proto: r.u16()?, caps: r.str()? },
+            tag::HELLO => {
+                // Branch on the version BEFORE reading the rest: a v1
+                // Hello (`proto + caps-summary string`) must still
+                // decode, or the server could never reach its
+                // `proto != PROTO_VERSION` check and send the reasoned
+                // version-skew Shutdown — the peer would just see a
+                // codec error and hang out its timeout.
+                let proto = r.u16()?;
+                if proto < 2 {
+                    let caps = r.str()?;
+                    Msg::Hello { proto, platform: caps, features: Vec::new() }
+                } else {
+                    let platform = r.str()?;
+                    let n = r.u16()? as usize;
+                    ensure!(n <= 64, "implausible feature-tag count {n} in hello");
+                    let features = (0..n).map(|_| r.str()).collect::<Result<Vec<_>>>()?;
+                    Msg::Hello { proto, platform, features }
+                }
+            }
             tag::WELCOME => {
                 let node = r.u32()?;
                 let nodes = r.u32()?;
@@ -322,7 +358,12 @@ mod tests {
             max_level: vec![3.0, 1.0],
         };
         let msgs = [
-            Msg::Hello { proto: PROTO_VERSION, caps: "native-cpu".into() },
+            Msg::Hello {
+                proto: PROTO_VERSION,
+                platform: "native-cpu".into(),
+                features: vec!["conv".into(), "batchnorm".into(), "residual".into()],
+            },
+            Msg::Hello { proto: PROTO_VERSION, platform: "bare".into(), features: vec![] },
             Msg::Welcome(Welcome {
                 node: 1,
                 nodes: 4,
@@ -415,6 +456,24 @@ mod tests {
                     .zip(grads.iter())
                     .all(|(e, t)| e.decode(&[t.len()]).data() == t.data())
         });
+    }
+
+    #[test]
+    fn legacy_v1_hello_still_decodes_for_the_version_refusal() {
+        // encode a v1-layout Hello by hand: u16 proto + caps string
+        let mut w = Wr::new();
+        w.u16(1);
+        w.str("native-cpu (interpreted, conv yes)");
+        let frame = encode_frame(tag::HELLO, &w.into_vec());
+        let (tag, payload) = parse_frame(&frame).unwrap();
+        match Msg::decode(tag, payload).unwrap() {
+            Msg::Hello { proto, platform, features } => {
+                assert_eq!(proto, 1);
+                assert!(platform.contains("native-cpu"));
+                assert!(features.is_empty());
+            }
+            other => panic!("expected Hello, got tag {}", other.tag()),
+        }
     }
 
     #[test]

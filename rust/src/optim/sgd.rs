@@ -1,7 +1,14 @@
 //! SGD with momentum, weight decay, and a step-decay learning-rate
 //! schedule (paper §4: momentum 0.9, wd 5e-4, lr 0.05/0.1 with 0.1x
 //! decay every N epochs).
+//!
+//! Non-trainable slots (BN running statistics, `ParamKind::Stat*`):
+//! per the Backend contract their grad slots carry the tensor's
+//! *updated value*, so the optimizer assigns them verbatim — no lr, no
+//! momentum, and crucially no weight decay eroding a running variance.
+//! Mark them with [`Sgd::with_stat_slots`].
 
+use crate::runtime::artifact::ParamInfo;
 use crate::tensor::Tensor;
 
 /// Step-decay learning rate: `base * gamma^(step / every)`.
@@ -54,25 +61,46 @@ pub struct Sgd {
     pub cfg: SgdConfig,
     velocity: Vec<Tensor>,
     pub step: usize,
+    /// Slots whose grad carries a replacement value (assigned verbatim)
+    /// instead of a gradient. Empty = every slot is trainable.
+    stat: Vec<bool>,
 }
 
 impl Sgd {
     pub fn new(cfg: SgdConfig, params: &[Tensor]) -> Self {
         let velocity = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-        Sgd { cfg, velocity, step: 0 }
+        Sgd { cfg, velocity, step: 0, stat: Vec::new() }
+    }
+
+    /// Mark the non-trainable (running-statistic) slots from the
+    /// model's positional param list. Call once right after [`new`];
+    /// models without stat params can skip it.
+    ///
+    /// [`new`]: Sgd::new
+    pub fn with_stat_slots(mut self, infos: &[ParamInfo]) -> Self {
+        assert_eq!(infos.len(), self.velocity.len(), "param info list mismatches params");
+        self.stat = infos.iter().map(|i| !i.kind.trainable()).collect();
+        self
     }
 
     /// Apply one update in place:
-    /// `v = mu*v + (g + wd*p); p -= lr * v`  (PyTorch-style momentum).
+    /// `v = mu*v + (g + wd*p); p -= lr * v`  (PyTorch-style momentum)
+    /// for trainable slots; stat slots are assigned from the grad slot.
     pub fn apply(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.velocity.len());
         let lr = self.cfg.lr.at(self.step);
         let mu = self.cfg.momentum;
         let wd = self.cfg.weight_decay;
-        for ((p, g), v) in params.iter_mut().zip(grads.iter()).zip(self.velocity.iter_mut()) {
+        for (pi, ((p, g), v)) in
+            params.iter_mut().zip(grads.iter()).zip(self.velocity.iter_mut()).enumerate()
+        {
             let pd = p.data_mut();
             let gd = g.data();
+            if self.stat.get(pi).copied().unwrap_or(false) {
+                pd.copy_from_slice(gd);
+                continue;
+            }
             let vd = v.data_mut();
             for i in 0..pd.len() {
                 let grad = gd[i] + wd * pd[i];
@@ -130,6 +158,26 @@ mod tests {
         let mut opt = Sgd::new(cfg, &params);
         opt.apply(&mut params, &[t(&[0.0])]);
         assert!((params[0].data()[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stat_slots_are_assigned_not_stepped() {
+        use crate::runtime::artifact::{ParamInfo, ParamKind};
+        let infos = vec![
+            ParamInfo { name: "w".into(), shape: vec![1], kind: ParamKind::Weight },
+            ParamInfo { name: "bn_m".into(), shape: vec![1], kind: ParamKind::StatMean },
+        ];
+        let mut params = vec![t(&[1.0]), t(&[0.0])];
+        let cfg = SgdConfig { lr: LrSchedule::constant(0.1), momentum: 0.9, weight_decay: 0.5 };
+        let mut opt = Sgd::new(cfg, &params).with_stat_slots(&infos);
+        // stat grad slot carries the NEW running mean (0.7); the weight
+        // sees a normal gradient
+        opt.apply(&mut params, &[t(&[2.0]), t(&[0.7])]);
+        assert_eq!(params[1].data()[0], 0.7, "stat slot must be assigned verbatim");
+        assert!((params[0].data()[0] - (1.0 - 0.1 * 2.5)).abs() < 1e-6);
+        // second step: no momentum/decay bleed into the stat slot
+        opt.apply(&mut params, &[t(&[0.0]), t(&[0.6])]);
+        assert_eq!(params[1].data()[0], 0.6);
     }
 
     #[test]

@@ -11,11 +11,39 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+/// What a parameter tensor *is* — drives initialization and, for the
+/// running statistics, the update rule (see the Backend contract in
+/// `backend/mod.rs`: stat slots of a `GradOut` carry the tensor's
+/// *updated value*, not a gradient, and the optimizer assigns instead
+/// of stepping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// He-initialized weight tensor (fan_in = every dim but the last).
+    Weight,
+    /// Zero-initialized trainable vector (conv/dense biases, BN beta).
+    Bias,
+    /// One-initialized trainable vector (BN gamma).
+    Scale,
+    /// Non-trainable running mean (BN eval statistic), zero-initialized.
+    StatMean,
+    /// Non-trainable running variance (BN eval statistic), one-initialized.
+    StatVar,
+}
+
+impl ParamKind {
+    /// Whether SGD steps this slot (false = the grad slot carries the
+    /// new value and the optimizer assigns it verbatim).
+    pub fn trainable(self) -> bool {
+        !matches!(self, ParamKind::StatMean | ParamKind::StatVar)
+    }
+}
+
 /// One parameter tensor: name + shape, positional order matters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParamInfo {
     pub name: String,
     pub shape: Vec<usize>,
+    pub kind: ParamKind,
 }
 
 impl ParamInfo {
@@ -49,6 +77,13 @@ pub struct ModelEntry {
     /// paper's lower conv-net rate); `None` = harness default.
     pub lr: Option<f32>,
     pub grads: Vec<GradArtifact>,
+    /// Executor feature tags this model needs ("conv", "batchnorm",
+    /// "residual") — matched against a worker's advertised
+    /// `Capabilities` in the dist-server handshake so a mismatched
+    /// worker is refused up front instead of failing mid-round. Native
+    /// registry entries fill this from the plan; manifest (XLA)
+    /// entries leave it empty (artifact lookup does the gating there).
+    pub requires: Vec<String>,
 }
 
 impl ModelEntry {
@@ -171,13 +206,18 @@ fn parse_model(name: &str, v: &Value) -> Result<ModelEntry> {
         .ok_or_else(|| anyhow!(ctx("params")))?
         .iter()
         .map(|p| {
+            let shape = parse_shape(p.req("shape").map_err(|e| anyhow!(e))?)?;
+            // the AOT manifest predates ParamKind: its zoo is weight/bias
+            // pairs, distinguishable by rank
+            let kind = if shape.len() > 1 { ParamKind::Weight } else { ParamKind::Bias };
             Ok(ParamInfo {
                 name: p
                     .get("name")
                     .and_then(Value::as_str)
                     .ok_or_else(|| anyhow!("param missing name"))?
                     .to_string(),
-                shape: parse_shape(p.req("shape").map_err(|e| anyhow!(e))?)?,
+                shape,
+                kind,
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -241,6 +281,7 @@ fn parse_model(name: &str, v: &Value) -> Result<ModelEntry> {
             .unwrap_or(256),
         lr: v.get("lr").and_then(Value::as_f64).map(|f| f as f32),
         grads,
+        requires: Vec::new(),
     })
 }
 
@@ -287,6 +328,11 @@ mod tests {
         assert_eq!(e.grad("dithered", 1).unwrap().path, "g2.hlo.txt");
         assert_eq!(e.methods(), vec!["baseline", "dithered"]);
         assert_eq!(e.lr, None); // optional, absent in the sample
+        // manifest params carry rank-inferred kinds; no feature tags
+        assert_eq!(e.params[0].kind, ParamKind::Weight);
+        assert_eq!(e.params[1].kind, ParamKind::Bias);
+        assert!(e.params[0].kind.trainable() && e.params[1].kind.trainable());
+        assert!(e.requires.is_empty());
     }
 
     #[test]

@@ -39,15 +39,23 @@ pub mod native;
 pub mod pjrt;
 
 /// Capability / platform introspection, so callers can pick models and
-/// methods a backend actually supports instead of failing mid-run.
+/// methods a backend actually supports instead of failing mid-run. The
+/// per-layer flags share a vocabulary with `ModelEntry::requires`, and
+/// the dist-server handshake matches a worker's advertised tags against
+/// the job's model so a mismatched worker is refused up front.
 #[derive(Debug, Clone)]
 pub struct Capabilities {
     /// Platform name ("native-cpu", "cpu" for PJRT, ...).
     pub platform: String,
     /// Whether step functions are AOT-compiled (vs interpreted host loops).
     pub compiled: bool,
-    /// Whether convolutional topologies (lenet5, minivgg) are executable.
+    /// Whether convolutional topologies (lenet5, minivgg, ...) are
+    /// executable.
     pub conv: bool,
+    /// Whether BatchNorm stages (vgg8bn, resnet8) are executable.
+    pub batchnorm: bool,
+    /// Whether residual/skip blocks (resnet8) are executable.
+    pub residual: bool,
     /// Backward-compression method families the backend implements.
     pub methods: Vec<String>,
 }
@@ -56,12 +64,32 @@ impl Capabilities {
     /// Human-readable one-liner for `ditherprop info`.
     pub fn summary(&self) -> String {
         format!(
-            "{} ({}, conv {}) methods: {}",
+            "{} ({}, layers {}) methods: {}",
             self.platform,
             if self.compiled { "compiled" } else { "interpreted" },
-            if self.conv { "yes" } else { "no" },
+            if self.feature_tags().is_empty() {
+                "dense".to_string()
+            } else {
+                format!("dense+{}", self.feature_tags().join("+"))
+            },
             self.methods.join("|"),
         )
+    }
+
+    /// The per-layer feature tags this backend advertises — the
+    /// vocabulary of `ModelEntry::requires` and the wire handshake.
+    pub fn feature_tags(&self) -> Vec<String> {
+        let mut tags = Vec::new();
+        if self.conv {
+            tags.push("conv".to_string());
+        }
+        if self.batchnorm {
+            tags.push("batchnorm".to_string());
+        }
+        if self.residual {
+            tags.push("residual".to_string());
+        }
+        tags
     }
 }
 
@@ -133,12 +161,18 @@ mod tests {
             platform: "native-cpu".into(),
             compiled: false,
             conv: false,
+            batchnorm: false,
+            residual: false,
             methods: vec!["baseline".into(), "dithered".into()],
         };
         let s = c.summary();
         assert!(s.contains("native-cpu"));
         assert!(s.contains("baseline|dithered"));
         assert!(s.contains("interpreted"));
+        assert!(c.feature_tags().is_empty());
+        let full = Capabilities { conv: true, batchnorm: true, residual: true, ..c };
+        assert_eq!(full.feature_tags(), vec!["conv", "batchnorm", "residual"]);
+        assert!(full.summary().contains("conv+batchnorm+residual"));
     }
 
     #[test]

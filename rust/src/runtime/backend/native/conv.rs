@@ -77,33 +77,70 @@ pub fn im2col_batch(x: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
 /// buffer per conv stage across steps instead of reallocating.
 pub fn im2col_into(x: &[f32], g: &ConvGeom, batch: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), batch * g.in_numel());
+    debug_assert_eq!(out.len(), batch * g.positions() * g.patch_len());
+    im2col_rows(x, g, 0..batch * g.positions(), out);
+}
+
+/// Gather one contiguous range of global patch rows (`row = bi *
+/// positions + oy * out_w + ox`) into `out_rows` (`rows.len() *
+/// patch_len`, zeroed). The unit the threaded driver partitions: each
+/// output row is written start-to-finish by exactly one caller.
+fn im2col_rows(x: &[f32], g: &ConvGeom, rows: std::ops::Range<usize>, out_rows: &mut [f32]) {
     let plen = g.patch_len();
     let pos = g.positions();
-    debug_assert_eq!(out.len(), batch * pos * plen);
-    for bi in 0..batch {
+    debug_assert_eq!(out_rows.len(), rows.len() * plen);
+    for (ri, r) in rows.enumerate() {
+        let (bi, p) = (r / pos, r % pos);
+        let (oy, ox) = (p / g.out_w, p % g.out_w);
         let xi = &x[bi * g.in_numel()..(bi + 1) * g.in_numel()];
-        for oy in 0..g.out_h {
-            for ox in 0..g.out_w {
-                let row_off = (bi * pos + oy * g.out_w + ox) * plen;
-                let row = &mut out[row_off..row_off + plen];
-                for ky in 0..g.k {
-                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
-                    if iy < 0 || iy >= g.in_h as isize {
-                        continue;
-                    }
-                    for kx in 0..g.k {
-                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                        if ix < 0 || ix >= g.in_w as isize {
-                            continue;
-                        }
-                        let src = (iy as usize * g.in_w + ix as usize) * g.in_ch;
-                        let dst = (ky * g.k + kx) * g.in_ch;
-                        row[dst..dst + g.in_ch].copy_from_slice(&xi[src..src + g.in_ch]);
-                    }
+        let row = &mut out_rows[ri * plen..(ri + 1) * plen];
+        for ky in 0..g.k {
+            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+            if iy < 0 || iy >= g.in_h as isize {
+                continue;
+            }
+            for kx in 0..g.k {
+                let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                if ix < 0 || ix >= g.in_w as isize {
+                    continue;
                 }
+                let src = (iy as usize * g.in_w + ix as usize) * g.in_ch;
+                let dst = (ky * g.k + kx) * g.in_ch;
+                row[dst..dst + g.in_ch].copy_from_slice(&xi[src..src + g.in_ch]);
             }
         }
     }
+}
+
+/// [`im2col_into`] with the patch rows partitioned across scoped
+/// threads. Pure data movement over disjoint output rows, so any
+/// thread count is trivially bit-identical to serial; the spawn
+/// threshold ([`kernels::planned_threads`]) keeps tiny layers serial.
+///
+/// [`kernels::planned_threads`]: crate::kernels::planned_threads
+pub fn im2col_threaded_into(x: &[f32], g: &ConvGeom, batch: usize, out: &mut [f32], nthreads: usize) {
+    let rows = batch * g.positions();
+    let plen = g.patch_len();
+    let nt = crate::kernels::planned_threads(nthreads, rows * plen / crate::kernels::LANES, rows);
+    if nt <= 1 {
+        return im2col_into(x, g, batch, out);
+    }
+    debug_assert_eq!(x.len(), batch * g.in_numel());
+    debug_assert_eq!(out.len(), rows * plen);
+    let ranges = crate::kernels::chunk_ranges(rows, nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * plen);
+            rest = tail;
+            let r = r.clone();
+            handles.push(s.spawn(move || im2col_rows(x, g, r, chunk)));
+        }
+        for h in handles {
+            h.join().expect("im2col worker panicked");
+        }
+    });
 }
 
 /// Adjoint of [`im2col_batch`]: scatter-add patch cotangents back onto
@@ -119,12 +156,27 @@ pub fn col2im_batch(dpatches: &[f32], g: &ConvGeom, batch: usize) -> Vec<f32> {
 /// [`col2im_batch`] into a caller buffer (must be zeroed — the scatter
 /// accumulates). Same arena-reuse rationale as [`im2col_into`].
 pub fn col2im_into(dpatches: &[f32], g: &ConvGeom, batch: usize, dx: &mut [f32]) {
+    debug_assert_eq!(dpatches.len(), batch * g.positions() * g.patch_len());
+    debug_assert_eq!(dx.len(), batch * g.in_numel());
+    col2im_examples(dpatches, g, 0..batch, dx);
+}
+
+/// Scatter-add the patch cotangents of a contiguous example range into
+/// `dx_chunk` (`examples.len() * in_numel`, zeroed). Each example's
+/// image is owned by exactly one caller and its overlapping-window
+/// accumulation runs in the serial scatter order, so partitioning by
+/// example keeps the threaded driver bit-identical.
+fn col2im_examples(
+    dpatches: &[f32],
+    g: &ConvGeom,
+    examples: std::ops::Range<usize>,
+    dx_chunk: &mut [f32],
+) {
     let plen = g.patch_len();
     let pos = g.positions();
-    debug_assert_eq!(dpatches.len(), batch * pos * plen);
-    debug_assert_eq!(dx.len(), batch * g.in_numel());
-    for bi in 0..batch {
-        let dxi = &mut dx[bi * g.in_numel()..(bi + 1) * g.in_numel()];
+    debug_assert_eq!(dx_chunk.len(), examples.len() * g.in_numel());
+    for (ei, bi) in examples.enumerate() {
+        let dxi = &mut dx_chunk[ei * g.in_numel()..(ei + 1) * g.in_numel()];
         for oy in 0..g.out_h {
             for ox in 0..g.out_w {
                 let row_off = (bi * pos + oy * g.out_w + ox) * plen;
@@ -152,6 +204,41 @@ pub fn col2im_into(dpatches: &[f32], g: &ConvGeom, batch: usize, dx: &mut [f32])
             }
         }
     }
+}
+
+/// [`col2im_into`] with the batch examples partitioned across scoped
+/// threads: each worker scatter-adds into a disjoint per-example `dx`
+/// slice, preserving the serial accumulation order inside every image
+/// (bit-identical for any thread count). Batch-1 backward stays serial.
+pub fn col2im_threaded_into(
+    dpatches: &[f32],
+    g: &ConvGeom,
+    batch: usize,
+    dx: &mut [f32],
+    nthreads: usize,
+) {
+    let per_example = g.positions() * g.patch_len();
+    let nt =
+        crate::kernels::planned_threads(nthreads, batch * per_example / crate::kernels::LANES, batch);
+    if nt <= 1 {
+        return col2im_into(dpatches, g, batch, dx);
+    }
+    debug_assert_eq!(dpatches.len(), batch * per_example);
+    debug_assert_eq!(dx.len(), batch * g.in_numel());
+    let ranges = crate::kernels::chunk_ranges(batch, nt);
+    std::thread::scope(|s| {
+        let mut rest = dx;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * g.in_numel());
+            rest = tail;
+            let r = r.clone();
+            handles.push(s.spawn(move || col2im_examples(dpatches, g, r, chunk)));
+        }
+        for h in handles {
+            h.join().expect("col2im worker panicked");
+        }
+    });
 }
 
 /// Pooling geometry for one stage.
@@ -335,6 +422,40 @@ mod tests {
             let lhs: f64 = cols.iter().zip(p.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
             let rhs: f64 = x.iter().zip(dx.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
             (lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs())
+        });
+    }
+
+    #[test]
+    fn threaded_layout_transforms_match_serial_bitwise() {
+        // im2col partitions patch rows, col2im partitions examples;
+        // both are data movement over disjoint outputs, so equality is
+        // exact for every thread count — including batches smaller than
+        // the thread count and shapes under the spawn threshold.
+        check("im2col/col2im threaded == serial", 30, |gen: &mut Gen| {
+            let k = gen.usize_in(1..=3);
+            let pad = gen.usize_in(0..=1);
+            let stride = gen.usize_in(1..=2);
+            let in_ch = gen.usize_in(1..=3);
+            let side = k + gen.usize_in(0..=5);
+            let g = geom(side, side, in_ch, 2, k, stride, pad);
+            let batch = gen.usize_in(1..=5);
+            let nthreads = gen.usize_in(2..=6);
+            let mut rng = Rng::new(gen.u32() as u64);
+            let x: Vec<f32> = (0..batch * g.in_numel()).map(|_| rng.normal()).collect();
+            let p: Vec<f32> = (0..batch * g.positions() * g.patch_len())
+                .map(|_| if rng.uniform() < 0.5 { rng.normal() } else { 0.0 })
+                .collect();
+
+            let cols = im2col_batch(&x, &g, batch);
+            let mut cols_t = vec![0.0f32; cols.len()];
+            im2col_threaded_into(&x, &g, batch, &mut cols_t, nthreads);
+
+            let dx = col2im_batch(&p, &g, batch);
+            let mut dx_t = vec![0.0f32; dx.len()];
+            col2im_threaded_into(&p, &g, batch, &mut dx_t, nthreads);
+
+            cols.iter().zip(cols_t.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+                && dx.iter().zip(dx_t.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
         });
     }
 

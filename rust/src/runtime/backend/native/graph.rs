@@ -1,255 +1,37 @@
-//! Native layer-graph executor: forward/backward over conv, pool,
-//! flatten and dense stages with the paper's compressed backward pass
-//! (Eqs. 7–9) in pure rust — the generalization of the original
-//! MLP-only executor that brings Table 1's conv rows to a bare
-//! checkout.
+//! Native layer-graph executor: a plan-driven loop over the composable
+//! per-layer ops in [`super::ops`], with the paper's compressed
+//! backward pass (Eqs. 7–9) in pure rust.
 //!
-//! The forward is the ordinary stage walk (dense affine, im2col conv,
-//! max pool; optionally int8 fake-quantized, Banner et al.); the
-//! backward compresses each weighted stage's pre-activation gradient
-//! `delta_z` with the configured method ([`super::methods`]) and then
-//! runs sparse backward GEMMs: rows of the compressed `delta_z` are
-//! CSR-encoded ([`crate::sparse::CsrVec`]) and only their nonzeros
-//! touch the weight and input-gradient accumulators. Conv layers route
-//! through the **same two sparse GEMMs** as dense layers — an im2col'd
-//! convolution is an affine map over `out_h*out_w` patch rows per
-//! example ([`super::conv`]).
+//! This module owns exactly three things; *all* per-layer math lives
+//! behind the [`super::ops::LayerOp`] trait:
 //!
-//! The GEMMs themselves live in [`crate::kernels`]: blocked
-//! SIMD-friendly loops with scoped-thread batch parallelism
-//! (`DITHERPROP_THREADS`), dispatched per step by
-//! [`crate::kernels::variant`] — `DITHERPROP_KERNELS=ref` falls back to
-//! the scalar skip-on-zero reference loops, which every variant matches
-//! bit-for-bit. Large per-step buffers (W^T, `gp` rows, im2col patches,
-//! the transposed dW accumulator) come from the per-thread scratch
-//! arena ([`crate::kernels::scratch`]), so steady-state steps do not
-//! reallocate them.
+//! * **activation storage** — the running activation buffer, the ReLU
+//!   masks (an executor-level attribute of every stage, applied
+//!   uniformly), and the softmax cross-entropy head;
+//! * **the dithered-compression call sites** — each quantized (conv /
+//!   dense) stage's incoming cotangent is masked down to the
+//!   pre-activation `delta_z` and compressed with the configured
+//!   method ([`super::methods`]) *before* the op's sparse backward
+//!   GEMMs see it, and the per-layer sparsity / max-level statistics
+//!   are recorded here;
+//! * **the trace API** — [`grad_step_traced`] hands the compressed
+//!   `delta_z` of every quantized layer to the property tests and
+//!   histogram harnesses.
+//!
+//! The ops themselves dispatch through the blocked/threaded kernels in
+//! [`crate::kernels`] (`DITHERPROP_THREADS`, `DITHERPROP_KERNELS`; all
+//! variants bit-identical) and draw their large per-step buffers from
+//! the per-thread scratch arena ([`crate::kernels::scratch`]).
 
-use super::conv::{self, ConvGeom, PoolGeom};
 use super::methods::{self, Method};
-use super::models::{LayerSpec, ModelSpec, Plan};
-use crate::kernels::{self, scratch, Scratch, Variant};
+use super::models::{ModelSpec, Plan};
+use super::ops::{self, Exec, LayerOp, SkipSlots, StepCtx};
+use crate::kernels::{self, scratch};
 use crate::runtime::step::{EvalOut, GradOut};
-use crate::sparse::CsrVec;
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 
-/// Symmetric per-tensor 8-bit fake quantization (layers.py::fq8).
-pub fn fq8(values: &[f32]) -> Vec<f32> {
-    let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    if amax == 0.0 {
-        return values.to_vec();
-    }
-    let scale = amax / 127.0;
-    values
-        .iter()
-        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) * scale)
-        .collect()
-}
-
-/// Per-step execution context: the dispatched kernel variant + the
-/// thread-local buffer arena.
-struct Exec<'a> {
-    var: Variant,
-    sc: &'a mut Scratch,
-}
-
-/// z = x @ w + b through the configured kernel variant. Dense layers
-/// call it with rows = batch; conv layers with rows = batch * out
-/// positions over im2col patches. The returned buffer comes from the
-/// arena (callers recycle it when the value dies).
-fn affine(
-    x: &[f32],
-    w: &[f32],
-    b: &[f32],
-    rows: usize,
-    din: usize,
-    dout: usize,
-    ex: &mut Exec,
-) -> Vec<f32> {
-    match ex.var {
-        Variant::Reference => kernels::affine_ref(x, w, b, rows, din, dout),
-        Variant::Blocked => {
-            // the blocked kernel writes every element: skip the memset
-            let mut z = ex.sc.grab_overwritten(rows * dout);
-            kernels::affine_blocked_into(x, w, b, rows, din, dout, &mut z);
-            z
-        }
-        Variant::Threaded(n) => {
-            let mut z = ex.sc.grab_overwritten(rows * dout);
-            kernels::affine_threaded_into(x, w, b, rows, din, dout, &mut z, n);
-            z
-        }
-    }
-}
-
-/// Eq. 9 pair through the configured variant: `dw += x^T . rows`
-/// (din x dout), `db += column sums of rows`. The blocked/threaded
-/// kernels accumulate the transposed gradient in an arena buffer and
-/// transpose back — bit-identical to the reference (fixed reduction
-/// order; see `kernels::gemm`).
-fn param_gemm(
-    rows: &[CsrVec],
-    xq: &[f32],
-    din: usize,
-    dout: usize,
-    dw: &mut [f32],
-    db: &mut [f32],
-    ex: &mut Exec,
-) {
-    match ex.var {
-        Variant::Reference => kernels::sparse_param_gemm_ref(rows, xq, din, dout, dw, db),
-        _ => {
-            let mut dwt = ex.sc.grab(dout * din);
-            match ex.var {
-                Variant::Threaded(n) => {
-                    kernels::sparse_param_gemm_threaded(rows, xq, din, dout, &mut dwt, db, n)
-                }
-                _ => kernels::sparse_param_gemm_blocked(rows, xq, din, dout, &mut dwt, db),
-            }
-            kernels::transpose_into(&dwt, dout, din, dw);
-            ex.sc.put_back(dwt);
-        }
-    }
-}
-
-/// Eq. 8 through the configured variant: `g_in = rows . W^T`, with the
-/// W^T transpose staged in an arena buffer. Returns one din-row per
-/// input row (arena-backed for the blocked/threaded variants).
-fn input_gemm(
-    rows: &[CsrVec],
-    w: &[f32],
-    din: usize,
-    dout: usize,
-    ex: &mut Exec,
-) -> Vec<f32> {
-    // transpose and the blocked/threaded GEMMs write every element of
-    // their outputs, so both buffers skip the zeroing memset
-    let mut wt = ex.sc.grab_overwritten(din * dout);
-    kernels::transpose_into(w, din, dout, &mut wt);
-    let gp = match ex.var {
-        Variant::Reference => kernels::sparse_input_gemm_ref(rows, &wt, din),
-        Variant::Blocked => {
-            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
-            kernels::sparse_input_gemm_blocked_into(rows, &wt, din, &mut gp);
-            gp
-        }
-        Variant::Threaded(n) => {
-            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
-            kernels::sparse_input_gemm_threaded_into(rows, &wt, din, &mut gp, n);
-            gp
-        }
-    };
-    ex.sc.put_back(wt);
-    gp
-}
-
-/// Backward residual of one stage.
-enum StageRes {
-    /// Dense: the GEMM input activations (fq8'd when int8), batch×din.
-    Dense { xq: Vec<f32> },
-    /// Conv: im2col patches (fq8'd inputs when int8),
-    /// batch×positions×patch_len, plus the resolved geometry.
-    Conv { patches: Vec<f32>, geom: ConvGeom },
-    /// Pool: within-example argmax offsets, batch×out_numel.
-    Pool { argmax: Vec<u32>, geom: PoolGeom },
-    Flatten,
-}
-
-/// Residuals of one forward pass, as consumed by the backward rules.
-struct Forward {
-    res: Vec<StageRes>,
-    /// Per-stage fq8'd weights when int8 (None = use `params` directly).
-    wq: Vec<Option<Vec<f32>>>,
-    /// ReLU masks (z > 0) for stages with `relu`, empty otherwise.
-    mask: Vec<Vec<bool>>,
-    /// Final logits, batch×classes.
-    logits: Vec<f32>,
-}
-
-fn forward(
-    plan: &Plan,
-    params: &[Tensor],
-    x: &[f32],
-    batch: usize,
-    int8: bool,
-    ex: &mut Exec,
-) -> Forward {
-    let n = plan.stages.len();
-    let mut res = Vec::with_capacity(n);
-    let mut wq: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
-    let mut mask: Vec<Vec<bool>> = vec![Vec::new(); n];
-    // the input copy comes from the arena too, so the stage-0 residual
-    // it becomes is a recycled buffer rather than a fresh allocation
-    let mut h = ex.sc.grab_overwritten(x.len());
-    h.copy_from_slice(x);
-    for (si, st) in plan.stages.iter().enumerate() {
-        match st.layer {
-            LayerSpec::Dense { out } => {
-                let din = st.in_shape[0];
-                let p = st.param_idx.unwrap();
-                let w = params[p].data();
-                let b = params[p + 1].data();
-                let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
-                let wl = if int8 { Some(fq8(w)) } else { None };
-                let weff: &[f32] = wl.as_deref().unwrap_or(w);
-                let z = affine(&hq, weff, b, batch, din, out, ex);
-                ex.sc.put_back(std::mem::replace(&mut h, z));
-                res.push(StageRes::Dense { xq: hq });
-                wq[si] = wl;
-            }
-            LayerSpec::Conv2d { k, stride, pad, .. } => {
-                let geom = ConvGeom::of(st, k, stride, pad);
-                let p = st.param_idx.unwrap();
-                let w = params[p].data();
-                let b = params[p + 1].data();
-                let hq = if int8 { fq8(&h) } else { std::mem::take(&mut h) };
-                let wl = if int8 { Some(fq8(w)) } else { None };
-                let weff: &[f32] = wl.as_deref().unwrap_or(w);
-                let (rows, din) = (batch * geom.positions(), geom.patch_len());
-                let mut patches = ex.sc.grab(rows * din);
-                conv::im2col_into(&hq, &geom, batch, &mut patches);
-                ex.sc.put_back(hq);
-                let z = affine(&patches, weff, b, rows, din, geom.out_ch, ex);
-                ex.sc.put_back(std::mem::replace(&mut h, z));
-                res.push(StageRes::Conv { patches, geom });
-                wq[si] = wl;
-            }
-            LayerSpec::MaxPool2d { k, stride } => {
-                let geom = PoolGeom::of(st, k, stride);
-                let (z, argmax) = conv::maxpool_forward(&h, &geom, batch);
-                ex.sc.put_back(std::mem::replace(&mut h, z));
-                res.push(StageRes::Pool { argmax, geom });
-            }
-            LayerSpec::Flatten => {
-                // NHWC row-major is already flat; only the tracked
-                // shape changes.
-                res.push(StageRes::Flatten);
-            }
-        }
-        if st.relu {
-            mask[si] = h.iter().map(|&v| v > 0.0).collect();
-            for v in h.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
-    }
-    Forward { res, wq, mask, logits: h }
-}
-
-/// Return a forward pass's recyclable buffers to the arena.
-fn recycle(fwd: Forward, sc: &mut Scratch) {
-    for r in fwd.res {
-        match r {
-            StageRes::Dense { xq } => sc.put_back(xq),
-            StageRes::Conv { patches, .. } => sc.put_back(patches),
-            _ => {}
-        }
-    }
-    sc.put_back(fwd.logits);
-}
+pub use super::ops::fq8;
 
 /// Mean softmax cross-entropy + correct count; optionally the logits
 /// cotangent `(softmax - onehot) / batch` (model.py::cross_entropy).
@@ -333,9 +115,36 @@ fn check_inputs(
     Ok(batch)
 }
 
+/// Forward walk: run every op, stash the ReLU masks, return the logits.
+/// The input copy comes from the arena too, so the stage-0 residual it
+/// becomes is a recycled buffer rather than a fresh allocation.
+fn forward_walk(
+    plan: &Plan,
+    ops: &mut [Box<dyn LayerOp>],
+    x: &[f32],
+    ctx: &StepCtx,
+    ex: &mut Exec,
+) -> (Vec<f32>, Vec<Vec<bool>>) {
+    let mut masks: Vec<Vec<bool>> = vec![Vec::new(); plan.stages.len()];
+    let mut h = ex.sc.dup(x);
+    for (si, (st, op)) in plan.stages.iter().zip(ops.iter_mut()).enumerate() {
+        h = op.forward(h, ctx, ex);
+        if st.relu {
+            masks[si] = h.iter().map(|&v| v > 0.0).collect();
+            for v in h.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+    (h, masks)
+}
+
 /// One gradient step: forward, loss, method-compressed backward with
 /// sparse GEMMs. Gradients are positional with `Plan::params`
-/// (`conv1_w, conv1_b, ..., fc1_w, ...`).
+/// (`conv1_w, conv1_b, ..., bn1_g, ..., fc1_w, ...`); BN stat slots
+/// carry the updated running statistics (Backend contract).
 pub fn grad_step(
     spec: &ModelSpec,
     method: Method,
@@ -367,156 +176,112 @@ pub fn grad_step_traced(
 ) -> Result<(GradOut, Vec<Vec<f32>>)> {
     let var = kernels::variant();
     scratch::with_thread_local(|sc| {
-        let mut ex = Exec { var, sc };
-        grad_step_impl(spec, method, params, x, y, seed, s, &mut ex)
+        let plan = spec.plan()?;
+        let batch = check_inputs(spec, &plan, params, x, y)?;
+        let mut ex = Exec { var, sc, skips: SkipSlots::new(plan.n_skip_slots) };
+        let ctx = StepCtx { batch, params, train: true, int8: method.int8_forward() };
+        let mut ops = ops::build(&plan);
+
+        let (logits, masks) = forward_walk(&plan, &mut ops, x, &ctx, &mut ex);
+        let (loss, correct, dlogits) = softmax_xent(&logits, y, spec.num_classes(), true)?;
+        ex.sc.put_back(logits);
+
+        let mut grads: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let mut sparsity = vec![0.0f32; plan.n_qlayers];
+        let mut max_level = vec![0.0f32; plan.n_qlayers];
+        let mut trace: Vec<Vec<f32>> = (0..plan.n_qlayers).map(|_| Vec::new()).collect();
+
+        // g = cotangent of the current stage's output, walked from the
+        // top stage down.
+        let mut g = dlogits;
+        for (si, (st, op)) in plan.stages.iter().zip(ops.iter_mut()).enumerate().rev() {
+            // The stage's own ReLU comes first in the reverse walk:
+            // mask the incoming cotangent down to pre-activation
+            // `delta_z` before anything sees it.
+            if st.relu {
+                for (gv, &m) in g.iter_mut().zip(masks[si].iter()) {
+                    if !m {
+                        *gv = 0.0;
+                    }
+                }
+            }
+            // The compression call site: quantized stages get their
+            // cotangent replaced by the method-compressed delta_z-tilde
+            // before the op's sparse backward runs.
+            if let Some(q) = st.qlayer {
+                let cols = g.len() / batch;
+                let (qg, stats) =
+                    methods::compress_grad(method, &g, batch, cols, methods::fold_seed(seed, q), s);
+                sparsity[q] = stats.sparsity;
+                max_level[q] = stats.max_level;
+                ex.sc.put_back(std::mem::replace(&mut g, qg));
+            }
+            let gin = op.backward(&g, &ctx, &mut grads, si > 0, &mut ex);
+            match st.qlayer {
+                // the compressed tensor moves into the trace, not copied
+                Some(q) => trace[q] = std::mem::take(&mut g),
+                None => ex.sc.put_back(std::mem::take(&mut g)),
+            }
+            match gin {
+                Some(gnew) => g = gnew,
+                None => break, // stage 0: nothing below
+            }
+        }
+        ex.sc.put_back(g);
+        ex.skips.drain_into(ex.sc);
+
+        Ok((GradOut { grads, loss, correct, sparsity, max_level }, trace))
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn grad_step_impl(
+/// Shared forward-only pass: loss + correct count with every residual
+/// buffer recycled. `train` selects BN batched vs running statistics.
+fn forward_loss(
     spec: &ModelSpec,
-    method: Method,
     params: &[Tensor],
     x: &[f32],
     y: &[i32],
-    seed: u32,
-    s: f32,
-    ex: &mut Exec,
-) -> Result<(GradOut, Vec<Vec<f32>>)> {
-    let plan = spec.plan()?;
-    let batch = check_inputs(spec, &plan, params, x, y)?;
-    let fwd = forward(&plan, params, x, batch, method.int8_forward(), ex);
-    let (loss, correct, dlogits) = softmax_xent(&fwd.logits, y, spec.num_classes(), true)?;
-    let Forward { mut res, wq, mask, logits } = fwd;
-    ex.sc.put_back(logits);
-
-    let mut grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
-    let mut sparsity = vec![0.0f32; plan.n_qlayers];
-    let mut max_level = vec![0.0f32; plan.n_qlayers];
-    let mut trace: Vec<Vec<f32>> = (0..plan.n_qlayers).map(|_| Vec::new()).collect();
-
-    // g = cotangent of the current stage's output, walked from the top
-    // layer down.
-    let mut g = dlogits;
-    for (si, st) in plan.stages.iter().enumerate().rev() {
-        // The stage's own ReLU comes first in the reverse walk: mask
-        // the incoming cotangent down to pre-activation `delta_z`
-        // before it is compressed.
-        if st.relu {
-            for (gv, &m) in g.iter_mut().zip(mask[si].iter()) {
-                if !m {
-                    *gv = 0.0;
-                }
-            }
-        }
-        match (&st.layer, &mut res[si]) {
-            (LayerSpec::Dense { out }, StageRes::Dense { xq }) => {
-                let xq = std::mem::take(xq);
-                let (din, dout) = (st.in_shape[0], *out);
-                let q = st.qlayer.unwrap();
-                let (qg, stats) =
-                    methods::compress_grad(method, &g, batch, dout, methods::fold_seed(seed, q), s);
-                sparsity[q] = stats.sparsity;
-                max_level[q] = stats.max_level;
-
-                // CSR-encode each example row of delta_z-tilde once;
-                // both backward GEMMs then skip its zeros entirely.
-                let rows: Vec<CsrVec> = (0..batch)
-                    .map(|bi| CsrVec::encode(&qg[bi * dout..(bi + 1) * dout]))
-                    .collect();
-                trace[q] = qg;
-
-                let p = st.param_idx.unwrap();
-                let mut dw = vec![0.0f32; din * dout];
-                let mut db = vec![0.0f32; dout];
-                param_gemm(&rows, &xq, din, dout, &mut dw, &mut db, ex);
-                if si > 0 {
-                    let weff: &[f32] = wq[si].as_deref().unwrap_or(params[p].data());
-                    let gp = input_gemm(&rows, weff, din, dout, ex);
-                    ex.sc.put_back(std::mem::replace(&mut g, gp));
-                }
-                ex.sc.put_back(xq);
-                grads[p] = Tensor::from_vec(&[din, dout], dw);
-                grads[p + 1] = Tensor::from_vec(&[dout], db);
-            }
-            (LayerSpec::Conv2d { .. }, StageRes::Conv { patches, geom }) => {
-                let geom = *geom;
-                let patches = std::mem::take(patches);
-                let q = st.qlayer.unwrap();
-                // The delta_z feature maps (batch×positions×out_ch) are
-                // compressed as one tensor with per-example rows, so
-                // meProp's top-k keeps k entries per example map and
-                // NSD's Delta comes from the whole layer — mirroring
-                // the dense path.
-                let (qg, stats) = methods::compress_grad(
-                    method,
-                    &g,
-                    batch,
-                    geom.out_numel(),
-                    methods::fold_seed(seed, q),
-                    s,
-                );
-                sparsity[q] = stats.sparsity;
-                max_level[q] = stats.max_level;
-
-                // CSR per (example, position) row: the backward GEMMs
-                // reduce over out_ch at each spatial position.
-                let oc = geom.out_ch;
-                let rows: Vec<CsrVec> = (0..batch * geom.positions())
-                    .map(|r| CsrVec::encode(&qg[r * oc..(r + 1) * oc]))
-                    .collect();
-                trace[q] = qg;
-
-                let p = st.param_idx.unwrap();
-                let plen = geom.patch_len();
-                let mut dw = vec![0.0f32; plen * oc];
-                let mut db = vec![0.0f32; oc];
-                param_gemm(&rows, &patches, plen, oc, &mut dw, &mut db, ex);
-                if si > 0 {
-                    let weff: &[f32] = wq[si].as_deref().unwrap_or(params[p].data());
-                    let dpatches = input_gemm(&rows, weff, plen, oc, ex);
-                    let mut gnew = ex.sc.grab(batch * geom.in_numel());
-                    conv::col2im_into(&dpatches, &geom, batch, &mut gnew);
-                    ex.sc.put_back(dpatches);
-                    ex.sc.put_back(std::mem::replace(&mut g, gnew));
-                }
-                ex.sc.put_back(patches);
-                grads[p] = Tensor::from_vec(params[p].shape(), dw);
-                grads[p + 1] = Tensor::from_vec(&[oc], db);
-            }
-            (LayerSpec::MaxPool2d { .. }, StageRes::Pool { argmax, geom }) => {
-                if si > 0 {
-                    let gnew = conv::maxpool_backward(&g, argmax, geom, batch);
-                    ex.sc.put_back(std::mem::replace(&mut g, gnew));
-                }
-            }
-            (LayerSpec::Flatten, StageRes::Flatten) => {}
-            _ => unreachable!("stage/residual mismatch at stage {si}"),
-        }
-    }
-    ex.sc.put_back(g);
-
-    Ok((GradOut { grads, loss, correct, sparsity, max_level }, trace))
-}
-
-/// One eval step: baseline fp32 forward + loss/correct (matching the
-/// AOT eval artifacts, which always evaluate un-instrumented).
-pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+    train: bool,
+) -> Result<EvalOut> {
     let plan = spec.plan()?;
     let batch = check_inputs(spec, &plan, params, x, y)?;
     let var = kernels::variant();
     scratch::with_thread_local(|sc| {
-        let mut ex = Exec { var, sc };
-        let fwd = forward(&plan, params, x, batch, false, &mut ex);
-        let (loss, correct, _) = softmax_xent(&fwd.logits, y, spec.num_classes(), false)?;
-        recycle(fwd, ex.sc);
+        let mut ex = Exec { var, sc, skips: SkipSlots::new(plan.n_skip_slots) };
+        let ctx = StepCtx { batch, params, train, int8: false };
+        let mut ops = ops::build(&plan);
+        let (logits, _masks) = forward_walk(&plan, &mut ops, x, &ctx, &mut ex);
+        let (loss, correct, _) = softmax_xent(&logits, y, spec.num_classes(), false)?;
+        ex.sc.put_back(logits);
+        for op in ops.iter_mut() {
+            op.recycle(ex.sc);
+        }
+        ex.skips.drain_into(ex.sc);
         Ok(EvalOut { loss, correct })
     })
+}
+
+/// One eval step: baseline fp32 forward + loss/correct (matching the
+/// AOT eval artifacts, which always evaluate un-instrumented — BN uses
+/// its stored running statistics, never the eval batch's).
+pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
+    forward_loss(spec, params, x, y, false)
+}
+
+/// Train-mode loss of one batch — the loss `grad_step` differentiates
+/// (BN batched statistics, no compression). This is the function the
+/// finite-difference checks must difference for BN models: the eval
+/// loss normalizes with *running* statistics and is therefore a
+/// different function of the parameters than the training objective.
+pub fn train_loss(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<f32> {
+    Ok(forward_loss(spec, params, x, y, true)?.loss)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::models::LayerSpec;
     use crate::kernels::affine_ref;
     use crate::util::rng::Rng;
 
@@ -542,17 +307,56 @@ mod tests {
         }
     }
 
+    /// conv(2, k3, p1) -> bn -> residual[conv(2, k3, p1) -> bn] ->
+    /// pool(2) -> flatten -> dense(3) on 6x6x1: every op kind at once.
+    fn tiny_resnet_spec() -> ModelSpec {
+        ModelSpec {
+            name: "tinyres".into(),
+            input_shape: vec![6, 6, 1],
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BatchNorm,
+                LayerSpec::Residual {
+                    layers: vec![
+                        LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                        LayerSpec::BatchNorm,
+                    ],
+                },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into(), "dithered".into()],
+            lr: None,
+        }
+    }
+
     fn random_params(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+        use crate::runtime::artifact::ParamKind;
         let plan = spec.plan().unwrap();
         let mut rng = Rng::new(seed);
         plan.params
             .iter()
-            .map(|info| {
-                let scale = if info.shape.len() == 1 { 0.1 } else { 0.5 };
-                Tensor::from_vec(
+            .map(|info| match info.kind {
+                ParamKind::Weight | ParamKind::Bias => {
+                    let scale = if info.shape.len() == 1 { 0.1 } else { 0.5 };
+                    Tensor::from_vec(
+                        &info.shape,
+                        (0..info.numel()).map(|_| rng.normal() * scale).collect(),
+                    )
+                }
+                // gamma / running var near 1, running mean 0 — keep the
+                // normalized activations sane for random-param tests
+                ParamKind::Scale => Tensor::from_vec(
                     &info.shape,
-                    (0..info.numel()).map(|_| rng.normal() * scale).collect(),
-                )
+                    (0..info.numel()).map(|_| 1.0 + rng.normal() * 0.1).collect(),
+                ),
+                ParamKind::StatMean => Tensor::zeros(&info.shape),
+                ParamKind::StatVar => {
+                    Tensor::from_vec(&info.shape, vec![1.0; info.numel()])
+                }
             })
             .collect()
     }
@@ -563,18 +367,6 @@ mod tests {
         let z = affine_ref(&[1.0, 2.0], &[10.0, 20.0, 30.0, 40.0], &[1.0, 2.0], 1, 2, 2);
         // z0 = 1*10 + 2*30 + 1 = 71; z1 = 1*20 + 2*40 + 2 = 102
         assert_eq!(z, vec![71.0, 102.0]);
-    }
-
-    #[test]
-    fn fq8_is_idempotent_and_range_preserving() {
-        let v = vec![0.5, -1.0, 0.25, 0.0];
-        let q = fq8(&v);
-        assert_eq!(q.iter().cloned().fold(0.0f32, |m, x| m.max(x.abs())), 1.0);
-        let q2 = fq8(&q);
-        for (a, b) in q.iter().zip(q2.iter()) {
-            assert!((a - b).abs() < 1e-6);
-        }
-        assert_eq!(fq8(&[0.0, 0.0]), vec![0.0, 0.0]);
     }
 
     #[test]
@@ -633,10 +425,12 @@ mod tests {
     fn conv_forward_matches_naive_convolution() {
         // Direct NHWC convolution reference against the im2col+affine
         // path, on the tiny conv topology's first stage.
+        use super::super::conv::{self, ConvGeom};
+        use super::super::models::OpKind;
         let spec = tiny_conv_spec();
         let plan = spec.plan().unwrap();
         let st = &plan.stages[0];
-        let LayerSpec::Conv2d { out_ch, k, stride, pad } = st.layer else { unreachable!() };
+        let OpKind::Conv2d { out_ch, k, stride, pad } = st.op else { unreachable!() };
         let geom = ConvGeom::of(st, k, stride, pad);
         let mut rng = Rng::new(21);
         let x: Vec<f32> = (0..geom.in_numel()).map(|_| rng.normal()).collect();
@@ -712,6 +506,111 @@ mod tests {
     }
 
     #[test]
+    fn bn_residual_grad_step_shapes_and_train_loss() {
+        // The full op set in one graph: shapes positional with the
+        // plan, stat slots carrying updated running stats, and the
+        // train-mode loss matching grad_step's reported loss.
+        let spec = tiny_resnet_spec();
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.n_skip_slots, 1);
+        let params = random_params(&spec, 41);
+        let mut rng = Rng::new(43);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal()).collect();
+        let y = [0, 1, 2, 0];
+        let out = grad_step(&spec, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        assert_eq!(out.grads.len(), plan.n_params());
+        // conv1 w/b, bn1 g/b/m/v, conv2 w/b, bn2 g/b/m/v, fc1 w/b
+        assert_eq!(out.grads.len(), 14);
+        assert_eq!(out.sparsity.len(), 3); // conv1, conv2, fc1
+        // a freshly-updated running mean must differ from its 0 init
+        // (the batch means are nonzero w.p. 1) and running var from 1
+        assert!(out.grads[4].abs_max() > 0.0, "bn1 running-mean update is zero");
+        let tl = train_loss(&spec, &params, &x, &y).unwrap();
+        assert!((out.loss - tl).abs() < 1e-6);
+        // eval runs the running-stat path; with the near-identity stats
+        // of random_params it must still produce a finite sane loss
+        let ev = eval_step(&spec, &params, &x, &y).unwrap();
+        assert!(ev.loss.is_finite());
+    }
+
+    #[test]
+    fn bn_forward_normalizes_batch_statistics() {
+        // A single BN stage network is impossible (must end dense), so
+        // probe through tinyres: after conv1+bn1 the traced delta and
+        // shapes are exercised elsewhere; here check normalization
+        // directly through the op on a standalone buffer.
+        use super::super::ops::{build_op, Exec, SkipSlots, StepCtx};
+        let spec = tiny_resnet_spec();
+        let plan = spec.plan().unwrap();
+        let bn_stage = plan
+            .stages
+            .iter()
+            .find(|st| matches!(st.op, super::super::models::OpKind::BatchNorm))
+            .unwrap();
+        let params = random_params(&spec, 51);
+        let mut rng = Rng::new(53);
+        let c = 2usize;
+        let rows = 4 * 36; // batch 4 x 6x6 spatial
+        let h: Vec<f32> = (0..rows * c).map(|_| 3.0 + rng.normal() * 2.0).collect();
+        scratch::with_thread_local(|sc| {
+            let mut ex =
+                Exec { var: kernels::variant(), sc, skips: SkipSlots::new(0) };
+            let ctx = StepCtx { batch: 4, params: &params, train: true, int8: false };
+            let mut op = build_op(bn_stage);
+            let y = op.forward(h, &ctx, &mut ex);
+            // y = gamma * xhat + beta with xhat ~ N(0,1) per channel:
+            // per-channel mean(y) ~ beta, std(y) ~ |gamma|
+            let p = bn_stage.param_idx.unwrap();
+            for j in 0..c {
+                let vals: Vec<f32> = (0..rows).map(|r| y[r * c + j]).collect();
+                let mean = vals.iter().sum::<f32>() / rows as f32;
+                let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                    / rows as f32;
+                let beta = params[p + 1].data()[j];
+                let gamma = params[p].data()[j];
+                assert!((mean - beta).abs() < 1e-4, "channel {j}: mean {mean} vs beta {beta}");
+                assert!(
+                    (var.sqrt() - gamma.abs()).abs() < 1e-2,
+                    "channel {j}: std {} vs |gamma| {}",
+                    var.sqrt(),
+                    gamma.abs()
+                );
+            }
+            op.recycle(ex.sc);
+        });
+    }
+
+    #[test]
+    fn residual_identity_body_doubles_activation_gradient() {
+        // With y = body(x) + x, the input gradient must carry both
+        // branches: compare tinyres against the same topology without
+        // the residual wrapper — the shared prefix params see different
+        // gradients, proving the skip path contributes.
+        let spec = tiny_resnet_spec();
+        let plain = ModelSpec {
+            name: "tinyplain".into(),
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BatchNorm,
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::BatchNorm,
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            ..spec.clone()
+        };
+        let params = random_params(&spec, 61);
+        let mut rng = Rng::new(67);
+        let x: Vec<f32> = (0..2 * 36).map(|_| rng.normal()).collect();
+        let y = [2, 0];
+        let res = grad_step(&spec, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        let pln = grad_step(&plain, Method::Baseline, &params, &x, &y, 0, 0.0).unwrap();
+        // conv1_w grads must differ (the skip adds an extra path)
+        assert_ne!(res.grads[0].data(), pln.grads[0].data());
+    }
+
+    #[test]
     fn traced_delta_z_matches_reported_stats() {
         let spec = tiny_conv_spec();
         let params = random_params(&spec, 29);
@@ -772,14 +671,15 @@ mod tests {
     fn kernel_variants_agree_on_a_full_grad_step() {
         // End-to-end: ref / blocked / threaded grad steps must be
         // bit-identical (the kernel-level guarantee composed through
-        // im2col, pooling, compression and the loss).
+        // im2col, pooling, BN reductions, the skip junctions,
+        // compression and the loss).
         //
         // Env mutation is safe alongside parallel sibling tests: std's
         // env accessors synchronize against each other, this is the
         // only env-mutating test in this binary, and all variants are
         // bit-identical, so a concurrent test observing a flipped knob
         // computes the same numbers either way.
-        let spec = tiny_conv_spec();
+        let spec = tiny_resnet_spec();
         let params = random_params(&spec, 43);
         let mut rng = Rng::new(47);
         let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();

@@ -11,19 +11,24 @@
 //! bare checkout.
 //!
 //! * [`models`]  — layer-graph topology registry, shared `ModelEntry`
-//!   surface (MLP dims shorthand + conv/pool/flatten/dense graphs).
+//!   surface (MLP dims shorthand + conv/pool/flatten/dense/batchnorm/
+//!   residual graphs, the latter lowered to skip junctions).
 //! * [`methods`] — `delta_z` compression (NSD / detq / int8 / meProp).
-//! * [`graph`]   — the layer-graph executor: forward/backward with
-//!   sparse backward GEMMs shared by dense and im2col'd conv stages,
-//!   dispatched through the blocked/threaded kernels in
-//!   [`crate::kernels`] (env knobs `DITHERPROP_THREADS`,
-//!   `DITHERPROP_KERNELS`; all variants bit-identical).
-//! * [`conv`]    — im2col/col2im and max-pool kernels.
+//! * [`ops`]     — the composable per-layer ops behind the `LayerOp`
+//!   trait: one self-contained op per layer type, each doing its math
+//!   through the blocked/threaded kernels in [`crate::kernels`] (env
+//!   knobs `DITHERPROP_THREADS`, `DITHERPROP_KERNELS`; all variants
+//!   bit-identical).
+//! * [`graph`]   — the plan-driven executor loop: activation storage,
+//!   the dithered-compression call sites, the trace API.
+//! * [`conv`]    — im2col/col2im (serial + row-partitioned threaded)
+//!   and max-pool kernels.
 
 pub mod conv;
 pub mod graph;
 pub mod methods;
 pub mod models;
+pub mod ops;
 
 use super::{Backend, Capabilities, SessionSpec};
 use crate::runtime::artifact::Manifest;
@@ -35,7 +40,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 pub use methods::Method;
-pub use models::{LayerSpec, ModelSpec, Plan};
+pub use models::{LayerSpec, ModelSpec, OpKind, Plan};
 
 /// Pure-rust CPU executor over the native model registry.
 pub struct NativeBackend {
@@ -106,6 +111,8 @@ impl Backend for NativeBackend {
             platform: "native-cpu".to_string(),
             compiled: false,
             conv: true,
+            batchnorm: true,
+            residual: true,
             methods: [
                 "baseline",
                 "dithered",
@@ -141,25 +148,41 @@ impl Backend for NativeBackend {
         Ok(())
     }
 
-    /// He init, mirroring the L2 zoo: weights `normal * sqrt(2/fan_in)`
-    /// from a per-layer forked stream (fan_in = `k*k*in_ch` for conv,
-    /// `din` for dense), biases zero. Deterministic in `seed`.
+    /// Kind-driven init, deterministic in `seed`: weights He
+    /// (`normal * sqrt(2/fan_in)` from a per-weight-tensor forked
+    /// stream; fan_in = `k*k*in_ch` for conv, `din` for dense), biases
+    /// and BN running means zero, BN gammas and running vars one. For
+    /// BN-free models this reproduces the pre-BN init bit-for-bit (the
+    /// fork index is the weight-tensor ordinal).
     fn init_params(&self, model: &str, seed: u32) -> Result<Vec<Tensor>> {
+        use crate::runtime::artifact::ParamKind;
         let spec = self.model_spec(model)?;
         let plan = spec.plan()?;
         let mut root = Rng::new(seed as u64);
-        let mut params = Vec::with_capacity(plan.n_params());
-        for (li, pair) in plan.params.chunks(2).enumerate() {
-            let (w, b) = (&pair[0], &pair[1]);
-            // fan_in = product of every weight dim but the output one
-            // ([din, dout] dense, [k, k, in_ch, out_ch] conv).
-            let fan_in: usize = w.shape[..w.shape.len() - 1].iter().product();
-            let mut layer_rng = root.fork(li as u64);
-            let scale = (2.0 / fan_in as f32).sqrt();
-            let data: Vec<f32> = (0..w.numel()).map(|_| layer_rng.normal() * scale).collect();
-            params.push(Tensor::from_vec(&w.shape, data));
-            params.push(Tensor::zeros(&b.shape));
-        }
+        let mut n_weights = 0u64;
+        let params = plan
+            .params
+            .iter()
+            .map(|info| match info.kind {
+                ParamKind::Weight => {
+                    // fan_in = product of every weight dim but the
+                    // output one ([din, dout] dense, [k, k, in_ch,
+                    // out_ch] conv).
+                    let fan_in: usize = info.shape[..info.shape.len() - 1].iter().product();
+                    let mut layer_rng = root.fork(n_weights);
+                    n_weights += 1;
+                    let scale = (2.0 / fan_in as f32).sqrt();
+                    Tensor::from_vec(
+                        &info.shape,
+                        (0..info.numel()).map(|_| layer_rng.normal() * scale).collect(),
+                    )
+                }
+                ParamKind::Bias | ParamKind::StatMean => Tensor::zeros(&info.shape),
+                ParamKind::Scale | ParamKind::StatVar => {
+                    Tensor::from_vec(&info.shape, vec![1.0; info.numel()])
+                }
+            })
+            .collect();
         Ok(params)
     }
 
@@ -201,9 +224,19 @@ mod tests {
         assert!(b.manifest().models.contains_key("lenet300100"));
         assert!(b.manifest().models.contains_key("lenet5"));
         assert!(b.manifest().models.contains_key("minivgg"));
+        assert!(b.manifest().models.contains_key("vgg8bn"));
+        assert!(b.manifest().models.contains_key("resnet8"));
         let caps = b.capabilities();
-        assert!(caps.conv);
+        assert!(caps.conv && caps.batchnorm && caps.residual);
+        assert_eq!(caps.feature_tags(), vec!["conv", "batchnorm", "residual"]);
         assert!(caps.methods.iter().any(|m| m == "dithered"));
+        // the with-BN / residual rows advertise their requirements
+        assert_eq!(b.manifest().models["vgg8bn"].requires, vec!["conv", "batchnorm"]);
+        assert_eq!(
+            b.manifest().models["resnet8"].requires,
+            vec!["conv", "batchnorm", "residual"]
+        );
+        assert!(b.manifest().models["mlp500"].requires.is_empty());
     }
 
     #[test]
@@ -270,5 +303,24 @@ mod tests {
         // biases zero
         assert_eq!(p[1].abs_max(), 0.0);
         assert_eq!(p[3].abs_max(), 0.0);
+    }
+
+    #[test]
+    fn init_params_bn_kinds() {
+        // resnet8 param layout: conv1 w/b, bn1 g/b/m/v, ...
+        let b = NativeBackend::builtin().unwrap();
+        let p = b.init_params("resnet8", 5).unwrap();
+        assert_eq!(p.len(), 38);
+        assert_eq!(p[0].shape(), &[3, 3, 1, 8]); // conv1_w
+        assert_eq!(p[2].shape(), &[8]); // bn1_g
+        assert!(p[2].data().iter().all(|&v| v == 1.0), "gamma inits to one");
+        assert_eq!(p[3].abs_max(), 0.0, "beta inits to zero");
+        assert_eq!(p[4].abs_max(), 0.0, "running mean inits to zero");
+        assert!(p[5].data().iter().all(|&v| v == 1.0), "running var inits to one");
+        // determinism across calls
+        let p2 = b.init_params("resnet8", 5).unwrap();
+        for (a, b2) in p.iter().zip(p2.iter()) {
+            assert_eq!(a.data(), b2.data());
+        }
     }
 }

@@ -14,16 +14,18 @@
 //! never care which backend owns a model.
 
 use super::methods::Method;
-use crate::runtime::artifact::{GradArtifact, ModelEntry, ParamInfo};
+use crate::runtime::artifact::{GradArtifact, ModelEntry, ParamInfo, ParamKind};
 use crate::util::json::{self, Value};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
 
-/// One layer of a native topology. Image activations are NHWC
-/// (matching the data substrates); conv weights are HWIO.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// One layer of a native topology (the `models.json` parse surface).
+/// Image activations are NHWC (matching the data substrates); conv
+/// weights are HWIO.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LayerSpec {
-    /// 2-D convolution; ReLU follows unless it is the last layer.
+    /// 2-D convolution; ReLU follows unless a BatchNorm does, or it is
+    /// the last layer of a residual body / the network.
     Conv2d { out_ch: usize, k: usize, stride: usize, pad: usize },
     /// Max pooling, no padding (stride defaults to `k` in the schema).
     MaxPool2d { k: usize, stride: usize },
@@ -33,6 +35,34 @@ pub enum LayerSpec {
     /// Fully-connected layer; ReLU follows unless it is the last
     /// (logits) layer.
     Dense { out: usize },
+    /// Batch normalization over the trailing (channel) dimension:
+    /// 2-D BN on `[h, w, c]` activations, 1-D BN on flat `[d]` ones.
+    /// Takes over the preceding conv/dense layer's ReLU.
+    BatchNorm,
+    /// Residual block: `y = relu(body(x) + x)` with an identity skip,
+    /// so the body must preserve the activation shape. Lowered in the
+    /// plan to a skip-save junction, the body's stages, and a skip-add
+    /// junction (where the backward delta splits).
+    Residual { layers: Vec<LayerSpec> },
+}
+
+/// One lowered executor operation — the flat, `Copy` form the plan's
+/// stage list carries after `Residual` blocks are expanded into
+/// explicit skip junctions. Every variant maps 1:1 onto a `LayerOp`
+/// implementation in `super::ops`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Conv2d { out_ch: usize, k: usize, stride: usize, pad: usize },
+    MaxPool2d { k: usize, stride: usize },
+    Flatten,
+    Dense { out: usize },
+    BatchNorm,
+    /// Residual entry: stash the activation in skip slot `slot` on the
+    /// way up; add the stashed skip cotangent on the way down.
+    SkipSave { slot: usize },
+    /// Residual exit: add the stashed activation (identity skip) on the
+    /// way up; duplicate the cotangent into the slot on the way down.
+    SkipAdd { slot: usize },
 }
 
 /// One native model: a layer-graph topology the host kernels execute.
@@ -56,11 +86,13 @@ pub struct ModelSpec {
 /// One shape-resolved stage of a model's execution [`Plan`].
 #[derive(Debug, Clone)]
 pub struct Stage {
-    pub layer: LayerSpec,
+    /// The lowered executor op this stage runs.
+    pub op: OpKind,
     /// Input shape, `[d]` or `[h, w, c]`.
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
-    /// Weight param index (bias at `+1`) for conv/dense stages.
+    /// First param index for parameterized stages: `w, b` for
+    /// conv/dense, `g, b, m, v` for batchnorm.
     pub param_idx: Option<usize>,
     /// Quantized-layer index (forward order) for conv/dense stages —
     /// the index into `GradOut::sparsity` / `max_level`.
@@ -70,21 +102,213 @@ pub struct Stage {
 }
 
 /// Shape-resolved execution plan: every stage with input/output shapes,
-/// parameter slots and quantized-layer indices assigned. Built (and
-/// thereby validated) once at registry parse; rebuilding per step is
-/// cheap relative to a single GEMM.
+/// parameter slots and quantized-layer indices assigned, residual
+/// blocks lowered to skip junctions. Built (and thereby validated) once
+/// at registry parse; rebuilding per step is cheap relative to a single
+/// GEMM.
 #[derive(Debug, Clone)]
 pub struct Plan {
     pub stages: Vec<Stage>,
-    /// Positional parameter list: `w, b` per conv/dense stage, named
-    /// `conv{i}_w` / `fc{j}_w` in forward order.
+    /// Positional parameter list: `w, b` per conv/dense stage
+    /// (`conv{i}_w` / `fc{j}_w`), `g, b, m, v` per batchnorm stage
+    /// (`bn{k}_g` ...), in forward order.
     pub params: Vec<ParamInfo>,
     pub n_qlayers: usize,
+    /// Skip-slot count (one per lowered residual block).
+    pub n_skip_slots: usize,
 }
 
 impl Plan {
     pub fn n_params(&self) -> usize {
         self.params.len()
+    }
+
+    /// Executor feature tags this plan needs (the handshake /
+    /// `Capabilities` vocabulary: "conv", "batchnorm", "residual").
+    pub fn required_features(&self) -> Vec<String> {
+        let mut tags = Vec::new();
+        let mut add = |t: &str| {
+            if !tags.iter().any(|x| x == t) {
+                tags.push(t.to_string());
+            }
+        };
+        for st in &self.stages {
+            match st.op {
+                OpKind::Conv2d { .. } | OpKind::MaxPool2d { .. } => add("conv"),
+                OpKind::BatchNorm => add("batchnorm"),
+                OpKind::SkipSave { .. } | OpKind::SkipAdd { .. } => add("residual"),
+                _ => {}
+            }
+        }
+        tags
+    }
+}
+
+/// Accumulator for the recursive `LayerSpec` -> `Stage` lowering:
+/// stages and params in forward order, naming counters, skip slots.
+#[derive(Default)]
+struct Lowerer {
+    stages: Vec<Stage>,
+    params: Vec<ParamInfo>,
+    n_qlayers: usize,
+    n_conv: usize,
+    n_fc: usize,
+    n_bn: usize,
+    n_slots: usize,
+}
+
+impl Lowerer {
+    /// Lower `layers` starting from activation shape `shape`; returns
+    /// the output shape. `path` prefixes layer indices in errors so a
+    /// bad layer inside a residual body is addressable ("2.1").
+    fn lower(
+        &mut self,
+        model: &str,
+        layers: &[LayerSpec],
+        mut shape: Vec<usize>,
+        path: &str,
+    ) -> Result<Vec<usize>> {
+        for (i, layer) in layers.iter().enumerate() {
+            let at = if path.is_empty() { format!("{i}") } else { format!("{path}.{i}") };
+            let err = |msg: String| anyhow!("model '{model}', layer {at}: {msg}");
+            let (op, out_shape) = match *layer {
+                LayerSpec::Conv2d { out_ch, k, stride, pad } => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("conv needs [h, w, c] input, got {shape:?}")));
+                    }
+                    if out_ch == 0 || k == 0 || stride == 0 {
+                        return Err(err("conv out/k/stride must be >= 1".into()));
+                    }
+                    let (h, w) = (shape[0], shape[1]);
+                    if h + 2 * pad < k || w + 2 * pad < k {
+                        return Err(err(format!(
+                            "kernel {k} exceeds padded input {h}x{w} (pad {pad})"
+                        )));
+                    }
+                    self.n_conv += 1;
+                    self.params.push(ParamInfo {
+                        name: format!("conv{}_w", self.n_conv),
+                        shape: vec![k, k, shape[2], out_ch],
+                        kind: ParamKind::Weight,
+                    });
+                    self.params.push(ParamInfo {
+                        name: format!("conv{}_b", self.n_conv),
+                        shape: vec![out_ch],
+                        kind: ParamKind::Bias,
+                    });
+                    (
+                        OpKind::Conv2d { out_ch, k, stride, pad },
+                        vec![
+                            (h + 2 * pad - k) / stride + 1,
+                            (w + 2 * pad - k) / stride + 1,
+                            out_ch,
+                        ],
+                    )
+                }
+                LayerSpec::MaxPool2d { k, stride } => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("pool needs [h, w, c] input, got {shape:?}")));
+                    }
+                    if k == 0 || stride == 0 {
+                        return Err(err("pool k/stride must be >= 1".into()));
+                    }
+                    let (h, w) = (shape[0], shape[1]);
+                    if h < k || w < k {
+                        return Err(err(format!("pool window {k} exceeds input {h}x{w}")));
+                    }
+                    (
+                        OpKind::MaxPool2d { k, stride },
+                        vec![(h - k) / stride + 1, (w - k) / stride + 1, shape[2]],
+                    )
+                }
+                LayerSpec::Flatten => {
+                    if shape.len() != 3 {
+                        return Err(err(format!("flatten needs [h, w, c] input, got {shape:?}")));
+                    }
+                    (OpKind::Flatten, vec![shape.iter().product()])
+                }
+                LayerSpec::Dense { out } => {
+                    if shape.len() != 1 {
+                        return Err(err(format!(
+                            "dense needs flat input, got {shape:?} (insert a flatten layer)"
+                        )));
+                    }
+                    if out == 0 {
+                        return Err(err("dense out must be >= 1".into()));
+                    }
+                    self.n_fc += 1;
+                    self.params.push(ParamInfo {
+                        name: format!("fc{}_w", self.n_fc),
+                        shape: vec![shape[0], out],
+                        kind: ParamKind::Weight,
+                    });
+                    self.params.push(ParamInfo {
+                        name: format!("fc{}_b", self.n_fc),
+                        shape: vec![out],
+                        kind: ParamKind::Bias,
+                    });
+                    (OpKind::Dense { out }, vec![out])
+                }
+                LayerSpec::BatchNorm => {
+                    let c = *shape.last().unwrap();
+                    self.n_bn += 1;
+                    for (suffix, kind) in [
+                        ("g", ParamKind::Scale),
+                        ("b", ParamKind::Bias),
+                        ("m", ParamKind::StatMean),
+                        ("v", ParamKind::StatVar),
+                    ] {
+                        self.params.push(ParamInfo {
+                            name: format!("bn{}_{suffix}", self.n_bn),
+                            shape: vec![c],
+                            kind,
+                        });
+                    }
+                    (OpKind::BatchNorm, shape.clone())
+                }
+                LayerSpec::Residual { ref layers } => {
+                    if layers.is_empty() {
+                        return Err(err("residual body must list at least one layer".into()));
+                    }
+                    let slot = self.n_slots;
+                    self.n_slots += 1;
+                    self.stages.push(Stage {
+                        op: OpKind::SkipSave { slot },
+                        in_shape: shape.clone(),
+                        out_shape: shape.clone(),
+                        param_idx: None,
+                        qlayer: None,
+                        relu: false,
+                    });
+                    let body_out = self.lower(model, layers, shape.clone(), &at)?;
+                    if body_out != shape {
+                        return Err(err(format!(
+                            "residual body maps {shape:?} -> {body_out:?}; the identity \
+                             skip needs a shape-preserving body"
+                        )));
+                    }
+                    (OpKind::SkipAdd { slot }, shape.clone())
+                }
+            };
+            let (param_idx, qlayer) = match op {
+                OpKind::Conv2d { .. } | OpKind::Dense { .. } => {
+                    self.n_qlayers += 1;
+                    (Some(self.params.len() - 2), Some(self.n_qlayers - 1))
+                }
+                OpKind::BatchNorm => (Some(self.params.len() - 4), None),
+                _ => (None, None),
+            };
+            self.stages.push(Stage {
+                op,
+                in_shape: shape.clone(),
+                out_shape: out_shape.clone(),
+                param_idx,
+                qlayer,
+                relu: false, // assigned in the plan()'s post-pass
+            });
+            shape = out_shape;
+        }
+        Ok(shape)
     }
 }
 
@@ -121,8 +345,9 @@ impl ModelSpec {
         }
     }
 
-    /// Resolve shapes, parameter slots and quantized-layer indices;
-    /// errors describe the offending layer.
+    /// Resolve shapes, parameter slots and quantized-layer indices, and
+    /// lower residual blocks into skip junctions; errors describe the
+    /// offending layer.
     pub fn plan(&self) -> Result<Plan> {
         ensure!(
             !self.input_shape.is_empty() && self.input_shape.iter().all(|&d| d > 0),
@@ -141,88 +366,32 @@ impl ModelSpec {
             "model '{}' must end in a dense (logits) layer",
             self.name
         );
-        let mut stages = Vec::with_capacity(self.layers.len());
-        let mut params = Vec::new();
-        let mut shape = self.input_shape.clone();
-        let mut n_qlayers = 0usize;
-        let (mut n_conv, mut n_fc) = (0usize, 0usize);
-        for (i, &layer) in self.layers.iter().enumerate() {
-            let last = i == self.layers.len() - 1;
-            let err = |msg: String| anyhow!("model '{}', layer {i}: {msg}", self.name);
-            let out_shape = match layer {
-                LayerSpec::Conv2d { out_ch, k, stride, pad } => {
-                    if shape.len() != 3 {
-                        return Err(err(format!("conv needs [h, w, c] input, got {shape:?}")));
-                    }
-                    if out_ch == 0 || k == 0 || stride == 0 {
-                        return Err(err("conv out/k/stride must be >= 1".into()));
-                    }
-                    let (h, w) = (shape[0], shape[1]);
-                    if h + 2 * pad < k || w + 2 * pad < k {
-                        return Err(err(format!(
-                            "kernel {k} exceeds padded input {h}x{w} (pad {pad})"
-                        )));
-                    }
-                    n_conv += 1;
-                    params.push(ParamInfo {
-                        name: format!("conv{n_conv}_w"),
-                        shape: vec![k, k, shape[2], out_ch],
-                    });
-                    params.push(ParamInfo { name: format!("conv{n_conv}_b"), shape: vec![out_ch] });
-                    vec![(h + 2 * pad - k) / stride + 1, (w + 2 * pad - k) / stride + 1, out_ch]
-                }
-                LayerSpec::MaxPool2d { k, stride } => {
-                    if shape.len() != 3 {
-                        return Err(err(format!("pool needs [h, w, c] input, got {shape:?}")));
-                    }
-                    if k == 0 || stride == 0 {
-                        return Err(err("pool k/stride must be >= 1".into()));
-                    }
-                    let (h, w) = (shape[0], shape[1]);
-                    if h < k || w < k {
-                        return Err(err(format!("pool window {k} exceeds input {h}x{w}")));
-                    }
-                    vec![(h - k) / stride + 1, (w - k) / stride + 1, shape[2]]
-                }
-                LayerSpec::Flatten => {
-                    if shape.len() != 3 {
-                        return Err(err(format!("flatten needs [h, w, c] input, got {shape:?}")));
-                    }
-                    vec![shape.iter().product()]
-                }
-                LayerSpec::Dense { out } => {
-                    if shape.len() != 1 {
-                        return Err(err(format!(
-                            "dense needs flat input, got {shape:?} (insert a flatten layer)"
-                        )));
-                    }
-                    if out == 0 {
-                        return Err(err("dense out must be >= 1".into()));
-                    }
-                    n_fc += 1;
-                    params.push(ParamInfo {
-                        name: format!("fc{n_fc}_w"),
-                        shape: vec![shape[0], out],
-                    });
-                    params.push(ParamInfo { name: format!("fc{n_fc}_b"), shape: vec![out] });
-                    vec![out]
-                }
-            };
-            let has_params = matches!(layer, LayerSpec::Conv2d { .. } | LayerSpec::Dense { .. });
-            stages.push(Stage {
-                layer,
-                in_shape: shape.clone(),
-                out_shape: out_shape.clone(),
-                param_idx: has_params.then(|| params.len() - 2),
-                qlayer: has_params.then(|| {
-                    n_qlayers += 1;
-                    n_qlayers - 1
-                }),
-                relu: has_params && !last,
-            });
-            shape = out_shape;
+        let mut lw = Lowerer::default();
+        lw.lower(&self.name, &self.layers, self.input_shape.clone(), "")?;
+        let mut stages = lw.stages;
+        // ReLU placement post-pass: every conv/dense/bn/skip-add output
+        // passes through ReLU, except (a) the final (logits) stage,
+        // (b) a conv/dense immediately followed by its BatchNorm (the
+        // BN takes the activation over), and (c) any stage feeding a
+        // skip-add junction (classic post-add activation: the body's
+        // output stays linear, the junction applies the ReLU).
+        let n = stages.len();
+        for i in 0..n {
+            let activates = matches!(
+                stages[i].op,
+                OpKind::Conv2d { .. } | OpKind::Dense { .. } | OpKind::BatchNorm
+                    | OpKind::SkipAdd { .. }
+            );
+            let next_bn = i + 1 < n && matches!(stages[i + 1].op, OpKind::BatchNorm);
+            let next_add = i + 1 < n && matches!(stages[i + 1].op, OpKind::SkipAdd { .. });
+            stages[i].relu = activates && i + 1 < n && !next_bn && !next_add;
         }
-        Ok(Plan { stages, params, n_qlayers })
+        Ok(Plan {
+            stages,
+            params: lw.params,
+            n_qlayers: lw.n_qlayers,
+            n_skip_slots: lw.n_slots,
+        })
     }
 
     /// The shared registry surface for this model. Parameter order is
@@ -230,6 +399,7 @@ impl ModelSpec {
     /// identical to the entries the AOT manifest lists.
     pub fn entry(&self) -> Result<ModelEntry> {
         let plan = self.plan()?;
+        let requires = plan.required_features();
         Ok(ModelEntry {
             name: self.name.clone(),
             dataset: self.dataset.clone(),
@@ -247,6 +417,7 @@ impl ModelSpec {
             eval_path: String::new(),
             eval_batch: self.eval_batch,
             lr: self.lr,
+            requires,
             grads: self
                 .methods
                 .iter()
@@ -266,9 +437,10 @@ pub struct Registry {
 }
 
 /// Built-in registry: the paper's MLP rows scaled to this testbed, two
-/// small models (fast smoke/test target, textures substrate), and the
-/// conv rows (lenet5 on digits, minivgg on textures) the native conv
-/// executor brings to a bare checkout.
+/// small models (fast smoke/test target, textures substrate), the conv
+/// rows (lenet5 on digits, minivgg on textures), and the with-BN /
+/// residual rows (vgg8bn on textures, resnet8 on digits) that stand in
+/// for the paper's BatchNorm-equipped VGG and ResNet entries.
 pub const BUILTIN_MODELS: &str = r#"{
   "version": 1,
   "train_batch": 64,
@@ -329,6 +501,48 @@ pub const BUILTIN_MODELS: &str = r#"{
         {"type": "dense", "out": 10}
       ],
       "dataset": "textures",
+      "lr": 0.05,
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
+    },
+    "vgg8bn": {
+      "input": [16, 16, 3],
+      "layers": [
+        {"type": "conv", "out": 16, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "conv", "out": 16, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "pool", "k": 2},
+        {"type": "conv", "out": 32, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "conv", "out": 32, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "pool", "k": 2},
+        {"type": "conv", "out": 64, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "conv", "out": 64, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "pool", "k": 2},
+        {"type": "flatten"},
+        {"type": "dense", "out": 128},
+        {"type": "dense", "out": 10}
+      ],
+      "dataset": "textures",
+      "lr": 0.05,
+      "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
+    },
+    "resnet8": {
+      "input": [28, 28, 1],
+      "layers": [
+        {"type": "conv", "out": 8, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "residual", "layers": [
+          {"type": "conv", "out": 8, "k": 3, "pad": 1}, {"type": "batchnorm"},
+          {"type": "conv", "out": 8, "k": 3, "pad": 1}, {"type": "batchnorm"}
+        ]},
+        {"type": "pool", "k": 2},
+        {"type": "conv", "out": 16, "k": 3, "pad": 1}, {"type": "batchnorm"},
+        {"type": "residual", "layers": [
+          {"type": "conv", "out": 16, "k": 3, "pad": 1}, {"type": "batchnorm"},
+          {"type": "conv", "out": 16, "k": 3, "pad": 1}, {"type": "batchnorm"}
+        ]},
+        {"type": "pool", "k": 2},
+        {"type": "flatten"},
+        {"type": "dense", "out": 10}
+      ],
+      "dataset": "digits",
       "lr": 0.05,
       "methods": ["baseline", "dithered", "detq", "int8", "int8_dithered"]
     }
@@ -399,9 +613,20 @@ fn parse_layer(name: &str, v: &Value) -> Result<LayerSpec> {
         }
         "flatten" => Ok(LayerSpec::Flatten),
         "dense" => Ok(LayerSpec::Dense { out: req("out")? }),
+        "batchnorm" => Ok(LayerSpec::BatchNorm),
+        "residual" => {
+            let layers = v
+                .get("layers")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("model '{name}': residual layer needs a 'layers' array"))?
+                .iter()
+                .map(|l| parse_layer(name, l))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(LayerSpec::Residual { layers })
+        }
         other => bail!(
             "model '{name}': unknown layer type '{other}' \
-             (expected conv|pool|flatten|dense)"
+             (expected conv|pool|flatten|dense|batchnorm|residual)"
         ),
     }
 }
@@ -538,6 +763,141 @@ mod tests {
         assert_eq!(plan.stages[6].out_shape, vec![512]);
         assert_eq!(plan.params[8].name, "fc1_w");
         assert_eq!(plan.params[8].shape, vec![512, 128]);
+    }
+
+    #[test]
+    fn vgg8bn_plan_resolves_with_bn_stages() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        let spec = reg.specs.get("vgg8bn").unwrap();
+        let plan = spec.plan().unwrap();
+        // 6 conv + 2 dense weighted layers; BN is not a qlayer
+        assert_eq!(plan.n_qlayers, 8);
+        assert_eq!(plan.n_skip_slots, 0);
+        // 6 conv pairs + 6 BN quads + 2 dense pairs
+        assert_eq!(plan.n_params(), 6 * 2 + 6 * 4 + 2 * 2);
+        // 6 conv + 6 bn + 3 pool + flatten + 2 dense stages
+        assert_eq!(plan.stages.len(), 18);
+        // conv stages hand their ReLU to the following BN
+        assert!(matches!(plan.stages[0].op, OpKind::Conv2d { .. }));
+        assert!(!plan.stages[0].relu);
+        assert!(matches!(plan.stages[1].op, OpKind::BatchNorm));
+        assert!(plan.stages[1].relu);
+        // BN params: gamma/beta trainable, running stats not
+        assert_eq!(plan.params[2].name, "bn1_g");
+        assert_eq!(plan.params[2].kind, ParamKind::Scale);
+        assert_eq!(plan.params[3].kind, ParamKind::Bias);
+        assert_eq!(plan.params[4].kind, ParamKind::StatMean);
+        assert_eq!(plan.params[5].kind, ParamKind::StatVar);
+        assert!(!plan.params[4].kind.trainable());
+        // 16x16 -> 8 -> 4 -> 2 through the three pools
+        assert_eq!(plan.stages[4].out_shape, vec![8, 8, 16]);
+        assert_eq!(plan.stages[14].out_shape, vec![2, 2, 64]);
+        assert_eq!(plan.stages[15].out_shape, vec![256]);
+        assert_eq!(plan.required_features(), vec!["conv", "batchnorm"]);
+        assert_eq!(spec.entry().unwrap().requires, vec!["conv", "batchnorm"]);
+    }
+
+    #[test]
+    fn resnet8_plan_lowers_residual_blocks_to_skip_junctions() {
+        let reg = parse_registry(BUILTIN_MODELS).unwrap();
+        let spec = reg.specs.get("resnet8").unwrap();
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.n_qlayers, 7); // 6 conv + 1 fc
+        assert_eq!(plan.n_skip_slots, 2);
+        // 6 conv pairs + 6 BN quads + 1 dense pair
+        assert_eq!(plan.n_params(), 6 * 2 + 6 * 4 + 2);
+        // conv+bn, [save, conv+bn, conv+bn, add], pool — twice — then
+        // flatten + dense
+        assert_eq!(plan.stages.len(), 20);
+        assert!(matches!(plan.stages[2].op, OpKind::SkipSave { slot: 0 }));
+        assert!(matches!(plan.stages[7].op, OpKind::SkipAdd { slot: 0 }));
+        assert!(matches!(plan.stages[11].op, OpKind::SkipSave { slot: 1 }));
+        assert!(matches!(plan.stages[16].op, OpKind::SkipAdd { slot: 1 }));
+        // skip junctions preserve shape
+        assert_eq!(plan.stages[2].in_shape, plan.stages[2].out_shape);
+        assert_eq!(plan.stages[7].in_shape, vec![28, 28, 8]);
+        // the body's last BN stays linear; the add-junction ReLUs
+        assert!(matches!(plan.stages[6].op, OpKind::BatchNorm));
+        assert!(!plan.stages[6].relu);
+        assert!(plan.stages[7].relu);
+        // the BN *inside* the body between the two convs does ReLU
+        assert!(matches!(plan.stages[4].op, OpKind::BatchNorm));
+        assert!(plan.stages[4].relu);
+        // 28 -> 14 -> 7 through the pools; flatten 7*7*16
+        assert_eq!(plan.stages[17].out_shape, vec![7, 7, 16]);
+        assert_eq!(plan.stages[18].out_shape, vec![784]);
+        assert_eq!(
+            plan.required_features(),
+            vec!["conv", "batchnorm", "residual"]
+        );
+    }
+
+    #[test]
+    fn dense_side_batchnorm_plans_as_1d() {
+        // BN after a dense layer normalizes over the flat feature dim
+        let reg = parse_registry(
+            r#"{"version": 1, "models": {"m": {
+                "input": [8],
+                "layers": [{"type": "dense", "out": 6},
+                           {"type": "batchnorm"},
+                           {"type": "dense", "out": 3}]}}}"#,
+        )
+        .unwrap();
+        let plan = reg.specs.get("m").unwrap().plan().unwrap();
+        assert_eq!(plan.stages.len(), 3);
+        assert_eq!(plan.params[2].name, "bn1_g");
+        assert_eq!(plan.params[2].shape, vec![6]);
+        // dense -> bn: the BN carries the activation
+        assert!(!plan.stages[0].relu);
+        assert!(plan.stages[1].relu);
+        assert!(!plan.stages[2].relu); // logits
+    }
+
+    #[test]
+    fn rejects_bad_residual_blocks() {
+        // shape-changing body: identity skip impossible
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 2],
+                "layers": [{"type": "residual", "layers":
+                             [{"type": "conv", "out": 4, "k": 3, "pad": 1}]},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
+        // pooling inside a residual body changes the spatial shape
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 2],
+                "layers": [{"type": "residual", "layers": [{"type": "pool", "k": 2}]},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
+        // empty body
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 2],
+                "layers": [{"type": "residual", "layers": []},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
+        // residual needs a layers array at all
+        assert!(parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 2],
+                "layers": [{"type": "residual"},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#
+        )
+        .is_err());
+        // a shape error *inside* a body is addressed by its path
+        let err = parse_registry(
+            r#"{"version": 1, "models": {"m": {"input": [8, 8, 2],
+                "layers": [{"type": "residual", "layers":
+                             [{"type": "dense", "out": 4}]},
+                           {"type": "flatten"},
+                           {"type": "dense", "out": 4}]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("layer 0.0"), "{err}");
     }
 
     #[test]

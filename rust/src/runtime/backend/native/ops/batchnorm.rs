@@ -1,0 +1,302 @@
+//! Batch-normalization op over the trailing (channel) dimension of
+//! NHWC / flat activations: train-mode batched statistics with the full
+//! backward through the batch mean and variance, running statistics
+//! (EMA, momentum 0.1) for eval.
+//!
+//! Parameter slots (4, starting at the stage's `param_idx`): `gamma`
+//! (Scale), `beta` (Bias), `running_mean` (StatMean), `running_var`
+//! (StatVar). The stat slots are non-trainable: `backward` writes their
+//! *updated values* into the corresponding grad slots and the optimizer
+//! assigns them verbatim (see the Backend contract).
+//!
+//! Composition with the compressed deltas: BN is not a quantized layer
+//! itself. The cotangent reaching it is already dense — a quantized
+//! conv's input GEMM mixes every CSR nonzero into every output element
+//! — and BN's own `dx` recombination keeps it dense through the
+//! batch-statistic terms; the conv/dense layer *below* then
+//! re-quantizes (Eq. 7 applies per weighted layer), which is how the
+//! paper's with-BN rows keep their per-layer sparsity despite BN
+//! sitting between the compressed GEMMs.
+//!
+//! Determinism: the per-channel reductions are partitioned by *channel*
+//! across scoped threads — every channel's sum runs over batch rows in
+//! ascending order on exactly one thread, so any `DITHERPROP_THREADS`
+//! is bit-identical to serial. Reduction outputs live in arena buffers.
+
+use super::super::models::Stage;
+use super::{Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::{bn_backward_cost, BackwardCost};
+use crate::kernels::{self, Scratch, Variant};
+use crate::tensor::Tensor;
+use std::ops::Range;
+
+/// Variance-floor epsilon (the usual BN default).
+pub const BN_EPS: f32 = 1e-5;
+/// Running-stat EMA weight on the fresh batch statistic.
+pub const BN_MOMENTUM: f32 = 0.1;
+
+pub struct BatchNormOp {
+    /// Channel count (trailing activation dim).
+    c: usize,
+    /// Per-example activation numel (for the cost model).
+    numel: usize,
+    /// Gamma param index (beta +1, running mean +2, running var +3).
+    p: usize,
+    // train-forward residuals, all arena-backed
+    xhat: Vec<f32>,
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    istd: Vec<f32>,
+}
+
+impl BatchNormOp {
+    pub fn new(stage: &Stage) -> BatchNormOp {
+        BatchNormOp {
+            c: *stage.in_shape.last().expect("bn input has a channel dim"),
+            numel: stage.in_shape.iter().product(),
+            p: stage.param_idx.expect("bn stage has params"),
+            xhat: Vec::new(),
+            mu: Vec::new(),
+            var: Vec::new(),
+            istd: Vec::new(),
+        }
+    }
+}
+
+/// `out[j] = reduce_r f(r, crange.start + j)` for each channel in
+/// `crange`, accumulating over rows in ascending order (the serial
+/// reduction order the bit-identity contract pins). `out` is fully
+/// written.
+fn reduce_rows(rows: usize, crange: Range<usize>, out: &mut [f32], term: impl Fn(usize, usize) -> f32) {
+    debug_assert_eq!(out.len(), crange.len());
+    out.fill(0.0);
+    for r in 0..rows {
+        for (o, j) in out.iter_mut().zip(crange.clone()) {
+            *o += term(r, j);
+        }
+    }
+}
+
+/// Channel-partitioned threaded reduction driver: splits the channel
+/// axis across scoped threads, each owning a disjoint `out` chunk.
+fn reduce_channels<F>(rows: usize, c: usize, var: Variant, out: &mut [f32], term: F)
+where
+    F: Fn(usize, usize) -> f32 + Sync,
+{
+    let nt = match var {
+        Variant::Threaded(n) => kernels::planned_threads(n, rows * c / kernels::LANES, c),
+        _ => 1,
+    };
+    if nt <= 1 {
+        return reduce_rows(rows, 0..c, out, term);
+    }
+    let ranges = kernels::chunk_ranges(c, nt);
+    let term = &term;
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut handles = Vec::with_capacity(ranges.len());
+        for r in &ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
+            rest = tail;
+            let r = r.clone();
+            handles.push(s.spawn(move || reduce_rows(rows, r, chunk, term)));
+        }
+        for h in handles {
+            h.join().expect("bn reduction worker panicked");
+        }
+    });
+}
+
+impl LayerOp for BatchNormOp {
+    fn forward(&mut self, mut h: Vec<f32>, ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let c = self.c;
+        let gamma = ctx.params[self.p].data();
+        let beta = ctx.params[self.p + 1].data();
+        let rows = h.len() / c;
+        debug_assert_eq!(h.len(), rows * c);
+
+        if ctx.train {
+            let inv_n = 1.0 / rows as f32;
+            let mut mu = ex.sc.grab_overwritten(c);
+            {
+                let hr = &h;
+                reduce_channels(rows, c, ex.var, &mut mu, |r, j| hr[r * c + j]);
+            }
+            for m in mu.iter_mut() {
+                *m *= inv_n;
+            }
+            // biased (1/N) variance for both the normalization and the
+            // running stat — one convention everywhere keeps the FD
+            // checks and the eval path consistent
+            let mut var = ex.sc.grab_overwritten(c);
+            {
+                let (hr, mur) = (&h, &mu);
+                reduce_channels(rows, c, ex.var, &mut var, |r, j| {
+                    let d = hr[r * c + j] - mur[j];
+                    d * d
+                });
+            }
+            for v in var.iter_mut() {
+                *v *= inv_n;
+            }
+            let mut istd = ex.sc.grab_overwritten(c);
+            for (i, &v) in istd.iter_mut().zip(var.iter()) {
+                *i = 1.0 / (v + BN_EPS).sqrt();
+            }
+            let mut xhat = ex.sc.grab_overwritten(h.len());
+            for r in 0..rows {
+                let hrow = &h[r * c..(r + 1) * c];
+                let xrow = &mut xhat[r * c..(r + 1) * c];
+                for j in 0..c {
+                    xrow[j] = (hrow[j] - mu[j]) * istd[j];
+                }
+            }
+            for r in 0..rows {
+                let xrow = &xhat[r * c..(r + 1) * c];
+                let hrow = &mut h[r * c..(r + 1) * c];
+                for j in 0..c {
+                    hrow[j] = gamma[j] * xrow[j] + beta[j];
+                }
+            }
+            self.xhat = xhat;
+            self.mu = mu;
+            self.var = var;
+            self.istd = istd;
+        } else {
+            // eval: the stored running statistics, folded into one
+            // per-channel (scale, bias) pair so the hot row loop is a
+            // single fma per element — no per-element sqrt/div
+            let rm = ctx.params[self.p + 2].data();
+            let rv = ctx.params[self.p + 3].data();
+            let mut scale = ex.sc.grab_overwritten(c);
+            let mut bias = ex.sc.grab_overwritten(c);
+            for j in 0..c {
+                scale[j] = gamma[j] / (rv[j] + BN_EPS).sqrt();
+                bias[j] = beta[j] - rm[j] * scale[j];
+            }
+            for r in 0..rows {
+                let hrow = &mut h[r * c..(r + 1) * c];
+                for j in 0..c {
+                    hrow[j] = scale[j] * hrow[j] + bias[j];
+                }
+            }
+            ex.sc.put_back(scale);
+            ex.sc.put_back(bias);
+        }
+        h
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        ctx: &StepCtx,
+        grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        let c = self.c;
+        let rows = g.len() / c;
+        let inv_n = 1.0 / rows as f32;
+        let xhat = std::mem::take(&mut self.xhat);
+        debug_assert_eq!(xhat.len(), g.len(), "bn backward without a train forward");
+
+        // dbeta = sum(g), dgamma = sum(g * xhat), per channel
+        let mut dbeta = ex.sc.grab_overwritten(c);
+        reduce_channels(rows, c, ex.var, &mut dbeta, |r, j| g[r * c + j]);
+        let mut dgamma = ex.sc.grab_overwritten(c);
+        {
+            let xr = &xhat;
+            reduce_channels(rows, c, ex.var, &mut dgamma, |r, j| g[r * c + j] * xr[r * c + j]);
+        }
+
+        let gin = need_input.then(|| {
+            // dx = gamma * istd * (g - mean(g) - xhat * mean(g*xhat)),
+            // the full chain rule through the batch statistics
+            let gamma = ctx.params[self.p].data();
+            let istd = &self.istd;
+            let mut dx = ex.sc.grab_overwritten(g.len());
+            for r in 0..rows {
+                let grow = &g[r * c..(r + 1) * c];
+                let xrow = &xhat[r * c..(r + 1) * c];
+                let drow = &mut dx[r * c..(r + 1) * c];
+                for j in 0..c {
+                    drow[j] = gamma[j]
+                        * istd[j]
+                        * (grow[j] - dbeta[j] * inv_n - xrow[j] * dgamma[j] * inv_n);
+                }
+            }
+            dx
+        });
+
+        grads[self.p].data_mut().copy_from_slice(&dgamma);
+        grads[self.p + 1].data_mut().copy_from_slice(&dbeta);
+        // stat slots carry the UPDATED running statistics, not
+        // gradients: new = (1 - m) * old + m * batch_stat
+        let rm = ctx.params[self.p + 2].data();
+        let rv = ctx.params[self.p + 3].data();
+        for ((d, &old), &batch) in
+            grads[self.p + 2].data_mut().iter_mut().zip(rm.iter()).zip(self.mu.iter())
+        {
+            *d = (1.0 - BN_MOMENTUM) * old + BN_MOMENTUM * batch;
+        }
+        for ((d, &old), &batch) in
+            grads[self.p + 3].data_mut().iter_mut().zip(rv.iter()).zip(self.var.iter())
+        {
+            *d = (1.0 - BN_MOMENTUM) * old + BN_MOMENTUM * batch;
+        }
+
+        ex.sc.put_back(dgamma);
+        ex.sc.put_back(dbeta);
+        ex.sc.put_back(xhat);
+        ex.sc.put_back(std::mem::take(&mut self.mu));
+        ex.sc.put_back(std::mem::take(&mut self.var));
+        ex.sc.put_back(std::mem::take(&mut self.istd));
+        gin
+    }
+
+    fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost> {
+        Some(bn_backward_cost(batch, self.numel, p_nz))
+    }
+
+    fn recycle(&mut self, sc: &mut Scratch) {
+        sc.put_back(std::mem::take(&mut self.xhat));
+        sc.put_back(std::mem::take(&mut self.mu));
+        sc.put_back(std::mem::take(&mut self.var));
+        sc.put_back(std::mem::take(&mut self.istd));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reductions_threaded_match_serial_bitwise() {
+        let mut rng = Rng::new(7);
+        let (rows, c) = (37, 13);
+        let x: Vec<f32> = (0..rows * c).map(|_| rng.normal()).collect();
+        let mut serial = vec![0.0f32; c];
+        reduce_rows(rows, 0..c, &mut serial, |r, j| x[r * c + j]);
+        for nt in [2usize, 3, 5, 8] {
+            let mut threaded = vec![9.0f32; c];
+            reduce_channels(rows, c, Variant::Threaded(nt), &mut threaded, |r, j| x[r * c + j]);
+            for (a, b) in serial.iter().zip(threaded.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "nt={nt}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_rows_sums_channels_independently() {
+        // 2 rows x 3 channels
+        let x = [1.0f32, 10.0, 100.0, 2.0, 20.0, 200.0];
+        let mut out = vec![0.0f32; 3];
+        reduce_rows(2, 0..3, &mut out, |r, j| x[r * 3 + j]);
+        assert_eq!(out, vec![3.0, 30.0, 300.0]);
+        // partial channel range
+        let mut tail = vec![0.0f32; 2];
+        reduce_rows(2, 1..3, &mut tail, |r, j| x[r * 3 + j]);
+        assert_eq!(tail, vec![30.0, 300.0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! 2-D convolution op: im2col'd affine forward, sparse backward GEMMs
+//! over per-(example, position) CSR rows of the compressed `delta_z`
+//! feature maps, col2im scatter for the input gradient. The layout
+//! transforms dispatch through the scoped-thread drivers when the step
+//! runs threaded (row/example partitioning — bit-identical to serial).
+
+use super::super::conv::{self, ConvGeom};
+use super::super::models::{OpKind, Stage};
+use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::{conv_backward_cost, BackwardCost};
+use crate::kernels::{Scratch, Variant};
+use crate::sparse::CsrVec;
+use crate::tensor::Tensor;
+
+pub struct Conv2dOp {
+    geom: ConvGeom,
+    /// Weight param index (bias at +1).
+    p: usize,
+    /// Forward residual: im2col patches (of fq8'd inputs when int8).
+    patches: Vec<f32>,
+    /// fq8'd weights when int8.
+    wq: Option<Vec<f32>>,
+}
+
+impl Conv2dOp {
+    pub fn new(stage: &Stage) -> Conv2dOp {
+        let OpKind::Conv2d { k, stride, pad, .. } = stage.op else {
+            unreachable!("Conv2dOp on non-conv stage")
+        };
+        Conv2dOp {
+            geom: ConvGeom::of(stage, k, stride, pad),
+            p: stage.param_idx.expect("conv stage has params"),
+            patches: Vec::new(),
+            wq: None,
+        }
+    }
+}
+
+impl LayerOp for Conv2dOp {
+    fn forward(&mut self, h: Vec<f32>, ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let geom = self.geom;
+        let w = ctx.params[self.p].data();
+        let b = ctx.params[self.p + 1].data();
+        let (hq, wq) = stage_int8(h, w, ctx.int8, ex);
+        self.wq = wq;
+        let weff: &[f32] = self.wq.as_deref().unwrap_or(w);
+        let (rows, din) = (ctx.batch * geom.positions(), geom.patch_len());
+        // grab (zeroed): im2col leaves padding positions untouched
+        let mut patches = ex.sc.grab(rows * din);
+        match ex.var {
+            Variant::Threaded(n) => {
+                conv::im2col_threaded_into(&hq, &geom, ctx.batch, &mut patches, n)
+            }
+            _ => conv::im2col_into(&hq, &geom, ctx.batch, &mut patches),
+        }
+        ex.sc.put_back(hq);
+        let z = affine(&patches, weff, b, rows, din, geom.out_ch, ex);
+        self.patches = patches;
+        z
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        ctx: &StepCtx,
+        grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        let geom = self.geom;
+        // CSR per (example, position) row: the backward GEMMs reduce
+        // over out_ch at each spatial position.
+        let oc = geom.out_ch;
+        let rows: Vec<CsrVec> = (0..ctx.batch * geom.positions())
+            .map(|r| CsrVec::encode(&g[r * oc..(r + 1) * oc]))
+            .collect();
+
+        let patches = std::mem::take(&mut self.patches);
+        let plen = geom.patch_len();
+        let (dw, db) = grad_pair(grads, self.p);
+        param_gemm(&rows, &patches, plen, oc, dw.data_mut(), db.data_mut(), ex);
+        let gin = need_input.then(|| {
+            let weff: &[f32] = self.wq.as_deref().unwrap_or(ctx.params[self.p].data());
+            let dpatches = input_gemm(&rows, weff, plen, oc, ex);
+            // grab (zeroed): col2im accumulates into its target
+            let mut gnew = ex.sc.grab(ctx.batch * geom.in_numel());
+            match ex.var {
+                Variant::Threaded(n) => {
+                    conv::col2im_threaded_into(&dpatches, &geom, ctx.batch, &mut gnew, n)
+                }
+                _ => conv::col2im_into(&dpatches, &geom, ctx.batch, &mut gnew),
+            }
+            ex.sc.put_back(dpatches);
+            gnew
+        });
+        ex.sc.put_back(patches);
+        if let Some(wq) = self.wq.take() {
+            ex.sc.put_back(wq);
+        }
+        gin
+    }
+
+    fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost> {
+        let g = &self.geom;
+        Some(conv_backward_cost(batch, g.positions(), g.patch_len(), g.out_ch, p_nz))
+    }
+
+    fn recycle(&mut self, sc: &mut Scratch) {
+        sc.put_back(std::mem::take(&mut self.patches));
+        if let Some(wq) = self.wq.take() {
+            sc.put_back(wq);
+        }
+    }
+}

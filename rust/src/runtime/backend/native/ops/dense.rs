@@ -1,0 +1,87 @@
+//! Fully-connected layer op: forward affine + the two sparse backward
+//! GEMMs (Eqs. 8/9) over the executor-compressed `delta_z` rows.
+
+use super::super::models::{OpKind, Stage};
+use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::{fc_backward_cost, BackwardCost};
+use crate::kernels::Scratch;
+use crate::sparse::CsrVec;
+use crate::tensor::Tensor;
+
+pub struct DenseOp {
+    din: usize,
+    dout: usize,
+    /// Weight param index (bias at +1).
+    p: usize,
+    /// Forward residual: the GEMM input activations (fq8'd when int8).
+    xq: Vec<f32>,
+    /// fq8'd weights when int8 (backward must use the same weights the
+    /// forward multiplied by).
+    wq: Option<Vec<f32>>,
+}
+
+impl DenseOp {
+    pub fn new(stage: &Stage) -> DenseOp {
+        let OpKind::Dense { out } = stage.op else { unreachable!("DenseOp on non-dense stage") };
+        DenseOp {
+            din: stage.in_shape[0],
+            dout: out,
+            p: stage.param_idx.expect("dense stage has params"),
+            xq: Vec::new(),
+            wq: None,
+        }
+    }
+}
+
+impl LayerOp for DenseOp {
+    fn forward(&mut self, h: Vec<f32>, ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let w = ctx.params[self.p].data();
+        let b = ctx.params[self.p + 1].data();
+        let (hq, wq) = stage_int8(h, w, ctx.int8, ex);
+        self.wq = wq;
+        let weff: &[f32] = self.wq.as_deref().unwrap_or(w);
+        let z = affine(&hq, weff, b, ctx.batch, self.din, self.dout, ex);
+        self.xq = hq;
+        z
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        ctx: &StepCtx,
+        grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        let (din, dout) = (self.din, self.dout);
+        // CSR-encode each example row of delta_z-tilde once; both
+        // backward GEMMs then skip its zeros entirely.
+        let rows: Vec<CsrVec> = (0..ctx.batch)
+            .map(|bi| CsrVec::encode(&g[bi * dout..(bi + 1) * dout]))
+            .collect();
+
+        let xq = std::mem::take(&mut self.xq);
+        let (dw, db) = grad_pair(grads, self.p);
+        param_gemm(&rows, &xq, din, dout, dw.data_mut(), db.data_mut(), ex);
+        let gin = need_input.then(|| {
+            let weff: &[f32] = self.wq.as_deref().unwrap_or(ctx.params[self.p].data());
+            input_gemm(&rows, weff, din, dout, ex)
+        });
+        ex.sc.put_back(xq);
+        if let Some(wq) = self.wq.take() {
+            ex.sc.put_back(wq);
+        }
+        gin
+    }
+
+    fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost> {
+        Some(fc_backward_cost(batch, self.din, self.dout, p_nz))
+    }
+
+    fn recycle(&mut self, sc: &mut Scratch) {
+        sc.put_back(std::mem::take(&mut self.xq));
+        if let Some(wq) = self.wq.take() {
+            sc.put_back(wq);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! Flatten op: NHWC row-major is already flat, so forward is the
+//! identity and backward copies the cotangent through unchanged (only
+//! the tracked shape differs between the two sides).
+
+use super::{Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::BackwardCost;
+use crate::kernels::Scratch;
+use crate::tensor::Tensor;
+
+pub struct FlattenOp;
+
+impl LayerOp for FlattenOp {
+    fn forward(&mut self, h: Vec<f32>, _ctx: &StepCtx, _ex: &mut Exec) -> Vec<f32> {
+        h
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        _ctx: &StepCtx,
+        _grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        need_input.then(|| ex.sc.dup(g))
+    }
+
+    fn flops_cost(&self, _batch: usize, _p_nz: f64) -> Option<BackwardCost> {
+        None
+    }
+
+    fn recycle(&mut self, _sc: &mut Scratch) {}
+}

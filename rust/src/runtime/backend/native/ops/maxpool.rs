@@ -1,0 +1,54 @@
+//! Max-pool op: argmax routing forward, scatter-add backward.
+
+use super::super::conv::{self, PoolGeom};
+use super::super::models::{OpKind, Stage};
+use super::{Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::BackwardCost;
+use crate::kernels::Scratch;
+use crate::tensor::Tensor;
+
+pub struct MaxPoolOp {
+    geom: PoolGeom,
+    /// Forward residual: within-example argmax offsets, batch x out_numel.
+    argmax: Vec<u32>,
+}
+
+impl MaxPoolOp {
+    pub fn new(stage: &Stage) -> MaxPoolOp {
+        let OpKind::MaxPool2d { k, stride } = stage.op else {
+            unreachable!("MaxPoolOp on non-pool stage")
+        };
+        MaxPoolOp { geom: PoolGeom::of(stage, k, stride), argmax: Vec::new() }
+    }
+}
+
+impl LayerOp for MaxPoolOp {
+    fn forward(&mut self, h: Vec<f32>, ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let (z, argmax) = conv::maxpool_forward(&h, &self.geom, ctx.batch);
+        ex.sc.put_back(h);
+        self.argmax = argmax;
+        z
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        ctx: &StepCtx,
+        _grads: &mut [Tensor],
+        need_input: bool,
+        _ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        need_input.then(|| conv::maxpool_backward(g, &self.argmax, &self.geom, ctx.batch))
+    }
+
+    fn flops_cost(&self, batch: usize, _p_nz: f64) -> Option<BackwardCost> {
+        // routing only: one scatter-add per output element
+        let n = (batch * self.geom.out_numel()) as f64;
+        Some(BackwardCost { dense_ops: n, nsd_ops: 0.0, sparse_ops: n })
+    }
+
+    fn recycle(&mut self, _sc: &mut Scratch) {
+        // argmax is a u32 table, not an arena f32 buffer
+        self.argmax.clear();
+    }
+}

@@ -1,0 +1,371 @@
+//! Composable per-layer ops for the native executor.
+//!
+//! Every layer type is one self-contained [`LayerOp`]: it owns its
+//! forward residuals between the forward and backward walks, does its
+//! per-layer math (GEMMs, reductions, routing) through the dispatched
+//! kernels, and writes its parameter gradients into the positional
+//! grad list. The executor ([`super::graph`]) shrinks to a plan-driven
+//! loop that owns only activation storage, the ReLU masks, the
+//! dithered-compression call sites and the trace API — adding a layer
+//! type means adding one op file here plus a `models.rs` lowering arm,
+//! not another arm in an executor-wide match (the SparseProp lesson:
+//! per-layer sparse backward ops behind one uniform interface).
+//!
+//! Conventions every op upholds:
+//!
+//! * **Ownership**: `forward` consumes the input activations (an
+//!   arena-recyclable buffer) and returns the output; buffers an op
+//!   keeps as residuals are returned to the arena in `backward` (or
+//!   `recycle` after a forward-only eval pass).
+//! * **Compression boundary**: for quantized (conv/dense) stages the
+//!   executor compresses the incoming cotangent *before* calling
+//!   `backward`, so ops only ever see the final `delta_z`-tilde; ops
+//!   CSR-encode it at their own granularity (batch rows for dense,
+//!   (example, position) rows for conv).
+//! * **Determinism**: anything an op threads must partition *outputs*
+//!   disjointly and keep the serial reduction order, so every
+//!   `DITHERPROP_THREADS` count is bit-identical to serial (see
+//!   [`crate::kernels::gemm`] for the argument).
+
+pub mod batchnorm;
+pub mod conv2d;
+pub mod dense;
+pub mod flatten;
+pub mod maxpool;
+pub mod residual;
+
+use super::models::{OpKind, Plan, Stage};
+use crate::costmodel::flops::BackwardCost;
+use crate::kernels::{self, Scratch, Variant};
+use crate::sparse::CsrVec;
+use crate::tensor::Tensor;
+
+/// Symmetric per-tensor 8-bit fake quantization (layers.py::fq8).
+pub fn fq8(values: &[f32]) -> Vec<f32> {
+    let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return values.to_vec();
+    }
+    let scale = amax / 127.0;
+    values
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) * scale)
+        .collect()
+}
+
+/// Per-residual-block activation / cotangent stash, indexed by the
+/// plan's skip slots. The save and add junction ops of one block talk
+/// to each other exclusively through here.
+#[derive(Default)]
+pub struct SkipSlots {
+    act: Vec<Option<Vec<f32>>>,
+    grad: Vec<Option<Vec<f32>>>,
+}
+
+impl SkipSlots {
+    pub fn new(n_slots: usize) -> SkipSlots {
+        SkipSlots {
+            act: (0..n_slots).map(|_| None).collect(),
+            grad: (0..n_slots).map(|_| None).collect(),
+        }
+    }
+
+    /// Return any still-stashed buffers to the arena (end of a
+    /// forward-only pass, or a backward cut short at stage 0).
+    pub fn drain_into(&mut self, sc: &mut Scratch) {
+        for slot in self.act.iter_mut().chain(self.grad.iter_mut()) {
+            if let Some(buf) = slot.take() {
+                sc.put_back(buf);
+            }
+        }
+    }
+}
+
+/// Per-step execution context: the dispatched kernel variant, the
+/// thread-local buffer arena, and the residual skip slots.
+pub struct Exec<'a> {
+    pub var: Variant,
+    pub sc: &'a mut Scratch,
+    pub skips: SkipSlots,
+}
+
+/// Step-wide inputs every op sees.
+pub struct StepCtx<'a> {
+    pub batch: usize,
+    /// Full positional parameter list; ops index it via their stage's
+    /// `param_idx`.
+    pub params: &'a [Tensor],
+    /// Train mode: BN uses batched statistics (and reports running-stat
+    /// updates); eval mode uses the stored running statistics.
+    pub train: bool,
+    /// int8 forward regime (Banner et al.): conv/dense fake-quantize
+    /// activations and weights; BN and routing stages stay fp32.
+    pub int8: bool,
+}
+
+/// One self-contained layer operation.
+pub trait LayerOp {
+    /// Forward through this stage: consume the input activations,
+    /// return the output. Residuals needed by `backward` are stashed on
+    /// the op.
+    fn forward(&mut self, h: Vec<f32>, ctx: &StepCtx, ex: &mut Exec) -> Vec<f32>;
+
+    /// Backward through this stage. `g` is the cotangent of the stage
+    /// output — for quantized stages, the executor-compressed sparse
+    /// `delta_z`. Writes this stage's parameter gradients (and, for BN,
+    /// the updated running statistics) into the positional `grads`;
+    /// returns the input cotangent, or `None` when `need_input` is
+    /// false (stage 0) and the op can skip that work.
+    fn backward(
+        &mut self,
+        g: &[f32],
+        ctx: &StepCtx,
+        grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>>;
+
+    /// Eq. 12 backward arithmetic cost at incoming `delta_z` density
+    /// `p_nz`; `None` for stages whose backward is free (flatten).
+    fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost>;
+
+    /// Return residual buffers to the arena after a forward-only pass.
+    fn recycle(&mut self, sc: &mut Scratch);
+}
+
+/// Instantiate the op for one planned stage.
+pub fn build_op(stage: &Stage) -> Box<dyn LayerOp> {
+    match stage.op {
+        OpKind::Dense { .. } => Box::new(dense::DenseOp::new(stage)),
+        OpKind::Conv2d { .. } => Box::new(conv2d::Conv2dOp::new(stage)),
+        OpKind::MaxPool2d { .. } => Box::new(maxpool::MaxPoolOp::new(stage)),
+        OpKind::Flatten => Box::new(flatten::FlattenOp),
+        OpKind::BatchNorm => Box::new(batchnorm::BatchNormOp::new(stage)),
+        OpKind::SkipSave { slot } => Box::new(residual::SkipSaveOp::new(slot)),
+        OpKind::SkipAdd { slot } => Box::new(residual::SkipAddOp::new(stage, slot)),
+    }
+}
+
+/// Instantiate the full op pipeline for a plan.
+pub fn build(plan: &Plan) -> Vec<Box<dyn LayerOp>> {
+    plan.stages.iter().map(build_op).collect()
+}
+
+/// Eq. 12 backward cost of a whole model at the measured per-layer
+/// `delta_z` densities (`sparsity` indexed by qlayer, forward order).
+///
+/// Only a quantized stage's OWN backward GEMMs see its compressed
+/// delta: the input GEMM + col2im that feed the stage below emit a
+/// *dense* cotangent (every output element mixes the whole CSR row),
+/// so non-quantized stages (BN, pool, skip junctions) are billed at
+/// `p_nz = 1` — the conservative accounting that matches what the
+/// kernels actually execute.
+pub fn model_backward_cost(plan: &Plan, batch: usize, sparsity: &[f32]) -> BackwardCost {
+    let (mut dense, mut nsd, mut sparse) = (0.0, 0.0, 0.0);
+    for st in &plan.stages {
+        let p_nz = match st.qlayer {
+            Some(q) => {
+                (1.0 - sparsity.get(q).copied().unwrap_or(0.0) as f64).clamp(0.0, 1.0)
+            }
+            None => 1.0,
+        };
+        if let Some(c) = build_op(st).flops_cost(batch, p_nz) {
+            dense += c.dense_ops;
+            nsd += c.nsd_ops;
+            sparse += c.sparse_ops;
+        }
+    }
+    BackwardCost { dense_ops: dense, nsd_ops: nsd, sparse_ops: sparse }
+}
+
+// ---------------------------------------------------------------------
+// shared kernel wrappers (variant dispatch + arena staging)
+// ---------------------------------------------------------------------
+
+/// z = x @ w + b through the configured kernel variant. Dense layers
+/// call it with rows = batch; conv layers with rows = batch * out
+/// positions over im2col patches. The returned buffer comes from the
+/// arena (callers recycle it when the value dies).
+pub(super) fn affine(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    ex: &mut Exec,
+) -> Vec<f32> {
+    match ex.var {
+        Variant::Reference => kernels::affine_ref(x, w, b, rows, din, dout),
+        Variant::Blocked => {
+            // the blocked kernel writes every element: skip the memset
+            let mut z = ex.sc.grab_overwritten(rows * dout);
+            kernels::affine_blocked_into(x, w, b, rows, din, dout, &mut z);
+            z
+        }
+        Variant::Threaded(n) => {
+            let mut z = ex.sc.grab_overwritten(rows * dout);
+            kernels::affine_threaded_into(x, w, b, rows, din, dout, &mut z, n);
+            z
+        }
+    }
+}
+
+/// Eq. 9 pair through the configured variant: `dw += x^T . rows`
+/// (din x dout), `db += column sums of rows`. The blocked/threaded
+/// kernels accumulate the transposed gradient in an arena buffer and
+/// transpose back — bit-identical to the reference (fixed reduction
+/// order; see `kernels::gemm`).
+pub(super) fn param_gemm(
+    rows: &[CsrVec],
+    xq: &[f32],
+    din: usize,
+    dout: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+    ex: &mut Exec,
+) {
+    match ex.var {
+        Variant::Reference => kernels::sparse_param_gemm_ref(rows, xq, din, dout, dw, db),
+        _ => {
+            let mut dwt = ex.sc.grab(dout * din);
+            match ex.var {
+                Variant::Threaded(n) => {
+                    kernels::sparse_param_gemm_threaded(rows, xq, din, dout, &mut dwt, db, n)
+                }
+                _ => kernels::sparse_param_gemm_blocked(rows, xq, din, dout, &mut dwt, db),
+            }
+            kernels::transpose_into(&dwt, dout, din, dw);
+            ex.sc.put_back(dwt);
+        }
+    }
+}
+
+/// Eq. 8 through the configured variant: `g_in = rows . W^T`, with the
+/// W^T transpose staged in an arena buffer. Returns one din-row per
+/// input row (arena-backed for the blocked/threaded variants).
+pub(super) fn input_gemm(
+    rows: &[CsrVec],
+    w: &[f32],
+    din: usize,
+    dout: usize,
+    ex: &mut Exec,
+) -> Vec<f32> {
+    // transpose and the blocked/threaded GEMMs write every element of
+    // their outputs, so both buffers skip the zeroing memset
+    let mut wt = ex.sc.grab_overwritten(din * dout);
+    kernels::transpose_into(w, din, dout, &mut wt);
+    let gp = match ex.var {
+        Variant::Reference => kernels::sparse_input_gemm_ref(rows, &wt, din),
+        Variant::Blocked => {
+            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            kernels::sparse_input_gemm_blocked_into(rows, &wt, din, &mut gp);
+            gp
+        }
+        Variant::Threaded(n) => {
+            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            kernels::sparse_input_gemm_threaded_into(rows, &wt, din, &mut gp, n);
+            gp
+        }
+    };
+    ex.sc.put_back(wt);
+    gp
+}
+
+/// Split the positional grad list at a stage's first param index,
+/// yielding the (weight-like, trailing) tensor pair ops write into.
+pub(super) fn grad_pair(grads: &mut [Tensor], p: usize) -> (&mut Tensor, &mut Tensor) {
+    let (head, tail) = grads.split_at_mut(p + 1);
+    (&mut head[p], &mut tail[0])
+}
+
+/// int8 forward staging shared by the weighted (conv/dense) ops:
+/// fake-quantize the input activations (recycling the fp32 buffer) and
+/// the weights. Returns `(effective input, Some(fq8 weights))` in the
+/// int8 regime, `(input unchanged, None)` otherwise — the op stashes
+/// the weight copy so its backward multiplies by exactly what the
+/// forward did.
+pub(super) fn stage_int8(
+    h: Vec<f32>,
+    w: &[f32],
+    int8: bool,
+    ex: &mut Exec,
+) -> (Vec<f32>, Option<Vec<f32>>) {
+    if !int8 {
+        return (h, None);
+    }
+    let hq = fq8(&h);
+    ex.sc.put_back(h);
+    (hq, Some(fq8(w)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::native::models::ModelSpec;
+
+    #[test]
+    fn fq8_is_idempotent_and_range_preserving() {
+        let v = vec![0.5, -1.0, 0.25, 0.0];
+        let q = fq8(&v);
+        assert_eq!(q.iter().cloned().fold(0.0f32, |m, x| m.max(x.abs())), 1.0);
+        let q2 = fq8(&q);
+        for (a, b) in q.iter().zip(q2.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(fq8(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn skip_slots_drain_returns_buffers() {
+        let mut slots = SkipSlots::new(2);
+        slots.act[0] = Some(vec![1.0; 8]);
+        slots.grad[1] = Some(vec![2.0; 4]);
+        let mut sc = Scratch::new();
+        slots.drain_into(&mut sc);
+        assert_eq!(sc.pooled(), 2);
+        assert!(slots.act[0].is_none() && slots.grad[1].is_none());
+    }
+
+    #[test]
+    fn model_cost_bills_quantized_stages_at_their_own_density() {
+        // mlp 8 -> 6 -> 4: two dense stages, each at its own density
+        let spec =
+            ModelSpec::mlp("m", &[8, 6, 4], "digits", 4, vec!["baseline".into()]);
+        let plan = spec.plan().unwrap();
+        let c = model_backward_cost(&plan, 16, &[0.9, 0.5]);
+        let exp = crate::costmodel::flops::fc_backward_cost(16, 8, 6, 0.1).dense_ops
+            + crate::costmodel::flops::fc_backward_cost(16, 6, 4, 0.5).dense_ops;
+        assert_eq!(c.dense_ops, exp);
+        assert!(c.sparse_ops < c.dense_ops);
+        assert!(c.nsd_ops > 0.0);
+    }
+
+    #[test]
+    fn model_cost_bills_unquantized_stages_dense() {
+        // conv -> pool -> flatten -> dense: at full conv/dense sparsity
+        // the pool routing stage must still be billed at p_nz = 1 (its
+        // incoming delta is densified by the dense stage's input GEMM)
+        use crate::runtime::backend::native::models::LayerSpec;
+        let spec = ModelSpec {
+            name: "t".into(),
+            input_shape: vec![4, 4, 1],
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into()],
+            lr: None,
+        };
+        let plan = spec.plan().unwrap();
+        let c = model_backward_cost(&plan, 8, &[1.0, 1.0]);
+        // fully sparse quantized deltas: GEMM sparse terms vanish, but
+        // the pool's 8 * 2*2*2 routed elements remain at p_nz = 1
+        let pool_ops = (8 * 2 * 2 * 2) as f64;
+        assert!(c.sparse_ops >= pool_ops);
+    }
+}

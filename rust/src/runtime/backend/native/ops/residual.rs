@@ -1,0 +1,117 @@
+//! Residual skip-junction ops — the lowered form of
+//! `LayerSpec::Residual { layers }` (`y = relu(body(x) + x)`).
+//!
+//! [`SkipSaveOp`] marks the block entry: it stashes a copy of the
+//! activation in its skip slot on the way up, and on the way down adds
+//! the stashed skip cotangent into the body's input cotangent (the
+//! delta *merge*). [`SkipAddOp`] marks the exit: it adds the stashed
+//! activation on the way up (the identity skip; the post-add ReLU is
+//! the executor's, like every stage activation), and on the way down
+//! duplicates the incoming cotangent — one copy continues into the
+//! body, one is stashed for the skip (the delta *split*).
+//!
+//! When the executor compresses the body's weighted layers, the skip
+//! copy keeps the *uncompressed* junction delta — quantization noise is
+//! injected per weighted layer (Eq. 7), never onto the identity path.
+
+use super::super::models::Stage;
+use super::{Exec, LayerOp, StepCtx};
+use crate::costmodel::flops::{residual_backward_cost, BackwardCost};
+use crate::kernels::Scratch;
+use crate::tensor::Tensor;
+
+pub struct SkipSaveOp {
+    slot: usize,
+}
+
+impl SkipSaveOp {
+    pub fn new(slot: usize) -> SkipSaveOp {
+        SkipSaveOp { slot }
+    }
+}
+
+impl LayerOp for SkipSaveOp {
+    fn forward(&mut self, h: Vec<f32>, _ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let copy = ex.sc.dup(&h);
+        ex.skips.act[self.slot] = Some(copy);
+        h
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        _ctx: &StepCtx,
+        _grads: &mut [Tensor],
+        need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        let skip = ex.skips.grad[self.slot]
+            .take()
+            .expect("skip-save backward before its skip-add stashed a cotangent");
+        let gin = need_input.then(|| {
+            let mut gin = ex.sc.grab_overwritten(g.len());
+            for ((d, &a), &b) in gin.iter_mut().zip(g.iter()).zip(skip.iter()) {
+                *d = a + b;
+            }
+            gin
+        });
+        ex.sc.put_back(skip);
+        gin
+    }
+
+    fn flops_cost(&self, _batch: usize, _p_nz: f64) -> Option<BackwardCost> {
+        // billed at the block's SkipAdd; one junction, one cost entry
+        None
+    }
+
+    fn recycle(&mut self, _sc: &mut Scratch) {
+        // the stash lives in Exec::skips, drained by the executor
+    }
+}
+
+pub struct SkipAddOp {
+    slot: usize,
+    /// Per-example activation numel (for the cost model).
+    numel: usize,
+}
+
+impl SkipAddOp {
+    pub fn new(stage: &Stage, slot: usize) -> SkipAddOp {
+        SkipAddOp { slot, numel: stage.in_shape.iter().product() }
+    }
+}
+
+impl LayerOp for SkipAddOp {
+    fn forward(&mut self, mut h: Vec<f32>, _ctx: &StepCtx, ex: &mut Exec) -> Vec<f32> {
+        let skip = ex.skips.act[self.slot]
+            .take()
+            .expect("skip-add forward before its skip-save stashed an activation");
+        for (d, &s) in h.iter_mut().zip(skip.iter()) {
+            *d += s;
+        }
+        ex.sc.put_back(skip);
+        h
+    }
+
+    fn backward(
+        &mut self,
+        g: &[f32],
+        _ctx: &StepCtx,
+        _grads: &mut [Tensor],
+        _need_input: bool,
+        ex: &mut Exec,
+    ) -> Option<Vec<f32>> {
+        // the junction delta flows unchanged into BOTH branches: stash
+        // one copy for the skip, hand one to the body. (need_input is
+        // irrelevant: a skip-add is never stage 0 — its skip-save is.)
+        let skip = ex.sc.dup(g);
+        ex.skips.grad[self.slot] = Some(skip);
+        Some(ex.sc.dup(g))
+    }
+
+    fn flops_cost(&self, batch: usize, _p_nz: f64) -> Option<BackwardCost> {
+        Some(residual_backward_cost(batch, self.numel))
+    }
+
+    fn recycle(&mut self, _sc: &mut Scratch) {}
+}

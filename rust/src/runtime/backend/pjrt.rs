@@ -101,6 +101,9 @@ impl Backend for PjrtBackend {
             platform: self.client.platform_name(),
             compiled: true,
             conv: true,
+            // the AOT artifact zoo has no BN / residual graphs yet
+            batchnorm: false,
+            residual: false,
             methods: [
                 "baseline",
                 "dithered",

@@ -21,7 +21,7 @@ pub mod backend;
 pub mod engine;
 pub mod step;
 
-pub use artifact::{GradArtifact, Manifest, ModelEntry, ParamInfo};
+pub use artifact::{GradArtifact, Manifest, ModelEntry, ParamInfo, ParamKind};
 #[cfg(feature = "native")]
 pub use backend::native::NativeBackend;
 pub use backend::{Backend, Capabilities, SessionSpec};

@@ -59,7 +59,9 @@ pub struct TrainResult {
 pub fn train(engine: &Engine, data: &Dataset, cfg: &TrainConfig) -> Result<TrainResult> {
     let session = engine.training_session(&cfg.model, &cfg.method, cfg.batch)?;
     let mut params = engine.init_params(&cfg.model, cfg.seed as u32)?;
-    let mut opt = Sgd::new(cfg.opt, &params);
+    // BN running-stat slots are assigned from the grad slots, not
+    // SGD-stepped (Backend contract)
+    let mut opt = Sgd::new(cfg.opt, &params).with_stat_slots(&session.entry.params);
     let mut iter = BatchIter::new(&data.train, cfg.batch, cfg.seed);
     let mut history = History::default();
 

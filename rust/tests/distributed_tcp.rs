@@ -145,7 +145,11 @@ fn heartbeat_spammer_is_dropped_not_waited_on() {
     let (spam_server_side, mut spam_link) = ChannelTransport::pair("spam");
     let spam = std::thread::spawn(move || {
         spam_link
-            .send(&Msg::Hello { proto: ditherprop::net::PROTO_VERSION, caps: "spam".into() })
+            .send(&Msg::Hello {
+                proto: ditherprop::net::PROTO_VERSION,
+                platform: "spam".into(),
+                features: vec![],
+            })
             .unwrap();
         let node = match spam_link.recv().unwrap() {
             Msg::Welcome(w) => w.node,
@@ -184,6 +188,42 @@ fn heartbeat_spammer_is_dropped_not_waited_on() {
 }
 
 #[test]
+fn worker_missing_layer_capability_is_refused_at_handshake() {
+    // lenet5 requires the "conv" capability; a worker that advertises
+    // none must be refused with a Shutdown reason DURING the handshake
+    // — never admitted to fail mid-round with an executor error.
+    let spec = DataSpec::new("digits", 64, 256, 5);
+    let ds = spec.build();
+    let mut c = cfg(1, 1, &spec);
+    c.model = "lenet5".into();
+
+    let (server_side, mut bare) = ChannelTransport::pair("bare");
+    let worker = std::thread::spawn(move || {
+        bare.send(&Msg::Hello {
+            proto: ditherprop::net::PROTO_VERSION,
+            platform: "bare-mlp-backend".into(),
+            features: vec![], // no conv/batchnorm/residual
+        })
+        .unwrap();
+        match bare.recv().unwrap() {
+            Msg::Shutdown { reason } => {
+                assert!(reason.contains("conv"), "refusal must name the gap: {reason}");
+                assert!(reason.contains("lenet5"), "refusal must name the model: {reason}");
+            }
+            other => panic!("expected a Shutdown refusal, got tag {}", other.tag()),
+        }
+    });
+
+    let links = vec![Some(Box::new(server_side) as Box<dyn Transport>)];
+    let err = serve(links, &ds, &c).unwrap_err();
+    assert!(
+        err.to_string().contains("conv"),
+        "server error must surface the capability gap: {err}"
+    );
+    worker.join().unwrap();
+}
+
+#[test]
 fn silent_worker_is_dropped_as_straggler() {
     let spec = DataSpec::new("digits", 256, 256, 5);
     let ds = spec.build();
@@ -200,7 +240,11 @@ fn silent_worker_is_dropped_as_straggler() {
     let (mute_server_side, mut mute_worker_side) = ChannelTransport::pair("mute");
     let mute = std::thread::spawn(move || {
         mute_worker_side
-            .send(&Msg::Hello { proto: ditherprop::net::PROTO_VERSION, caps: "mute".into() })
+            .send(&Msg::Hello {
+                proto: ditherprop::net::PROTO_VERSION,
+                platform: "mute".into(),
+                features: vec![],
+            })
             .unwrap();
         // swallow the Welcome + params, never answer, outlive the run
         while mute_worker_side.recv().is_ok() {}

@@ -84,6 +84,45 @@ fn table1_lenet5_conv_row_smoke() {
 }
 
 #[test]
+fn table1_vgg8bn_with_bn_row_smoke() {
+    // The paper's with-BN rows run natively now: a few-step vgg8bn run
+    // (6 conv+BN stages + 2 dense) must learn under every table method
+    // and the dithered backward must report per-layer sparsity for all
+    // 8 weighted layers — BN re-densifies the deltas in between, so
+    // high sparsity here proves the per-layer re-quantization works.
+    let scale = Scale { steps: 16, rounds: 1, n_train: 384, n_test: 256, reps: 1 };
+    let cells =
+        table1::run(&artifacts(), &["vgg8bn".to_string()], scale, false).unwrap();
+    assert_eq!(cells.len(), 4); // baseline, dithered, int8, int8_dithered
+    for c in &cells {
+        assert_eq!(c.dataset, "textures");
+        assert!(
+            c.loss_end < c.loss_start,
+            "{}: loss did not decrease ({} -> {})",
+            c.method,
+            c.loss_start,
+            c.loss_end
+        );
+    }
+    let dith = cells.iter().find(|c| c.method == "dithered").unwrap();
+    let base = cells.iter().find(|c| c.method == "baseline").unwrap();
+    assert!(
+        dith.sparsity > 0.5,
+        "dithered backward sparsity only {:.3}",
+        dith.sparsity
+    );
+    assert!(dith.sparsity > base.sparsity, "dithered must beat baseline sparsity");
+    // per-layer sparsity covers all 8 weighted vgg8bn layers (6 conv +
+    // fc1 + fc2) and every layer got quantized
+    assert_eq!(dith.layer_sparsity.len(), 8);
+    assert!(
+        dith.layer_sparsity.iter().all(|&s| s > 0.0),
+        "per-layer sparsity has zeros: {:?}",
+        dith.layer_sparsity
+    );
+}
+
+#[test]
 fn table1_render_averages_and_headline() {
     let mk = |model: &str, method: &str, acc: f32, sp: f32| table1::Cell {
         model: model.into(),

@@ -1,21 +1,24 @@
 //! Native-backend correctness against host references:
 //!
-//! * gradient-check the baseline backward pass against central finite
-//!   differences of the eval loss, on tiny injected topologies — an
-//!   MLP and a conv→pool→dense graph — for `baseline` and for
-//!   `dithered` in its Δ→0 limit (s = 0), where it must coincide with
-//!   baseline exactly;
+//! * gradient-check the backward pass against central finite
+//!   differences of the train-mode loss, on tiny injected topologies —
+//!   an MLP, a conv→pool→dense graph, and a conv→bn→residual graph —
+//!   for `baseline` and for `dithered` in its Δ→0 limit (s = 0), where
+//!   it must coincide with baseline exactly (BN running-stat slots
+//!   carry replacement values, not gradients, and are skipped);
 //! * property-test that dithered gradients land on the Delta grid with
 //!   sparsity >= the baseline's and monotone in the dither scale —
 //!   via batch-1 bias gradients for dense layers (which *are* the
 //!   layer's compressed delta_z row) and via the executor's delta_z
 //!   trace for conv feature maps (whose bias gradients are position
-//!   sums, not the maps themselves);
+//!   sums, not the maps themselves), including a conv whose backward
+//!   delta arrives re-densified through a BatchNorm + skip junction;
 //! * property-test the blocked and threaded GEMM kernels against the
 //!   scalar reference oracle across a randomized
 //!   (din, dout, batch, sparsity, nthreads) grid, to the bit;
-//! * regression-test that a full lenet5 dithered training run is
-//!   bit-identical across `DITHERPROP_THREADS` settings.
+//! * regression-test that full lenet5 / resnet8 / vgg8bn dithered
+//!   training runs are bit-identical across `DITHERPROP_THREADS`
+//!   settings.
 
 use ditherprop::data;
 use ditherprop::kernels;
@@ -53,6 +56,24 @@ const TINY_REGISTRY: &str = r#"{
       "eval_batch": 4,
       "lr": 0.05,
       "methods": ["baseline", "dithered", "meprop_k3"]
+    },
+    "tinyres": {
+      "input": [6, 6, 1],
+      "layers": [
+        {"type": "conv", "out": 2, "k": 3, "pad": 1},
+        {"type": "batchnorm"},
+        {"type": "residual", "layers": [
+          {"type": "conv", "out": 2, "k": 3, "pad": 1},
+          {"type": "batchnorm"}
+        ]},
+        {"type": "pool", "k": 2},
+        {"type": "flatten"},
+        {"type": "dense", "out": 4}
+      ],
+      "dataset": "digits",
+      "eval_batch": 4,
+      "lr": 0.05,
+      "methods": ["baseline", "dithered", "meprop_k3"]
     }
   }
 }"#;
@@ -69,10 +90,14 @@ fn random_batch(batch: usize, dim: usize, classes: usize, seed: u64) -> (Vec<f32
 }
 
 /// Central finite-difference check of `method`'s gradients against the
-/// eval loss, over every parameter coordinate of `model`. ReLU kinks
-/// and pool-argmax switches inside the eps window can perturb a couple
-/// of coordinates; everything else must agree within `1e-3 * max(1,
-/// |g|)` and the overall gradient direction must be essentially exact.
+/// *train-mode* loss (the objective `grad_step` differentiates — for
+/// BN models the eval loss normalizes with running statistics and is a
+/// different function of the parameters), over every **trainable**
+/// parameter coordinate of `model`; BN running-stat slots carry
+/// replacement values, not gradients, and are skipped. ReLU kinks and
+/// pool-argmax switches inside the eps window can perturb a couple of
+/// coordinates; everything else must agree within `1e-3 * max(1, |g|)`
+/// and the overall gradient direction must be essentially exact.
 fn finite_difference_check(
     backend: &NativeBackend,
     model: &str,
@@ -84,13 +109,16 @@ fn finite_difference_check(
 ) {
     let spec = SessionSpec { model: model.into(), method: method.into(), batch };
     let params = backend.init_params(model, 3).unwrap();
+    let mspec = backend.model_spec(model).unwrap();
+    let trainable: Vec<bool> =
+        mspec.plan().unwrap().params.iter().map(|p| p.kind.trainable()).collect();
     let entry = backend.manifest().models.get(model).unwrap().clone();
     let dim: usize = entry.input_shape.iter().product();
     let (x, y) = random_batch(batch, dim, entry.num_classes, data_seed);
 
     let analytic = backend.grad_step(&spec, &params, &x, &y, 0, s).unwrap();
     let loss_at = |params: &[Tensor]| -> f32 {
-        backend.eval_step(&spec, params, &x, &y).unwrap().loss
+        graph::train_loss(mspec, params, &x, &y).unwrap()
     };
     assert!((analytic.loss - loss_at(&params)).abs() < 1e-6);
 
@@ -101,6 +129,9 @@ fn finite_difference_check(
     let mut n_a = 0.0f64;
     let mut n_f = 0.0f64;
     for pi in 0..params.len() {
+        if !trainable[pi] {
+            continue;
+        }
         for ci in 0..params[pi].len() {
             let mut plus = params.clone();
             plus[pi].data_mut()[ci] += eps;
@@ -117,7 +148,12 @@ fn finite_difference_check(
             checked += 1;
         }
     }
-    let total: usize = params.iter().map(|p| p.len()).sum();
+    let total: usize = params
+        .iter()
+        .zip(trainable.iter())
+        .filter(|(_, &t)| t)
+        .map(|(p, _)| p.len())
+        .sum();
     assert_eq!(checked, total);
     assert!(
         outliers <= max_outliers,
@@ -145,6 +181,35 @@ fn conv_dithered_at_delta_zero_matches_finite_differences() {
     // s = 0 is the Δ→0 limit: the dithered path must be the exact
     // baseline chain rule, FD-verified on the conv topology too.
     finite_difference_check(&tiny_backend(), "tinyconv", "dithered", 0.0, 4, 31, 6);
+}
+
+#[test]
+fn batchnorm_residual_grads_match_finite_differences() {
+    // conv -> bn -> residual[conv -> bn] -> pool -> flatten -> dense:
+    // the BN backward must carry the full chain rule through the batch
+    // statistics (FD against the train-mode loss), and the skip
+    // junction must merge both branch deltas. 142 trainable
+    // coordinates checked (the 8 running-stat slots are skipped).
+    finite_difference_check(&tiny_backend(), "tinyres", "baseline", 0.0, 4, 53, 8);
+}
+
+#[test]
+fn batchnorm_residual_dithered_at_delta_zero_matches_finite_differences() {
+    finite_difference_check(&tiny_backend(), "tinyres", "dithered", 0.0, 4, 59, 8);
+}
+
+#[test]
+fn batchnorm_residual_dithered_s0_equals_baseline_bitwise() {
+    let backend = tiny_backend();
+    let base = SessionSpec { model: "tinyres".into(), method: "baseline".into(), batch: 4 };
+    let dith = SessionSpec { model: "tinyres".into(), method: "dithered".into(), batch: 4 };
+    let params = backend.init_params("tinyres", 9).unwrap();
+    let (x, y) = random_batch(4, 36, 4, 47);
+    let b = backend.grad_step(&base, &params, &x, &y, 7, 0.0).unwrap();
+    let d = backend.grad_step(&dith, &params, &x, &y, 7, 0.0).unwrap();
+    for (gb, gd) in b.grads.iter().zip(d.grads.iter()) {
+        assert_eq!(gb.data(), gd.data());
+    }
 }
 
 #[test]
@@ -290,6 +355,64 @@ fn dithered_conv_delta_z_maps_live_on_the_delta_grid() {
     });
 }
 
+#[test]
+fn dithered_bn_residual_delta_z_on_grid_and_monotone() {
+    // Same Δ-grid contract through the new op set: conv1 of tinyres
+    // sits BELOW a BatchNorm and a skip junction in the backward walk
+    // (its incoming delta is re-densified by the BN statistics), yet
+    // its freshly-compressed delta_z must land on the recovered Δ grid
+    // with sparsity >= baseline's and monotone in the dither scale —
+    // the per-layer re-quantization the paper's with-BN rows rely on.
+    let backend = tiny_backend();
+    let spec = backend.model_spec("tinyres").unwrap();
+    let params = backend.init_params("tinyres", 13).unwrap();
+
+    check("bn/residual delta_z on-grid + monotone", 15, |g: &mut Gen| {
+        let seed = g.u32();
+        let s = g.f32_in(1.0, 4.0);
+        let (x, y) = random_batch(4, 36, 4, seed as u64 ^ 0xB17);
+        let (base_out, _) =
+            graph::grad_step_traced(spec, Method::Baseline, &params, &x, &y, seed, 0.0).unwrap();
+        let (out, tr) =
+            graph::grad_step_traced(spec, Method::Dithered, &params, &x, &y, seed, s).unwrap();
+        let (out2, _) =
+            graph::grad_step_traced(spec, Method::Dithered, &params, &x, &y, seed, 2.0 * s)
+                .unwrap();
+
+        // qlayers: conv1, conv2 (inside the residual), fc1
+        if tr.len() != 3 || tr[0].len() != 4 * 36 * 2 {
+            return false;
+        }
+        let qmap = &tr[0];
+        let max_level = out.max_level[0];
+        if max_level == 0.0 {
+            if qmap.iter().any(|&v| v != 0.0) {
+                return false;
+            }
+        } else {
+            let max_abs = qmap.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let delta = max_abs / max_level;
+            for &v in qmap {
+                let level = v / delta;
+                if (level - level.round()).abs() > 1e-3 {
+                    return false;
+                }
+            }
+            if (grid_stats(qmap, delta).sparsity - out.sparsity[0]).abs() > 1e-6 {
+                return false;
+            }
+        }
+        // the BN backward densifies the incoming delta, so baseline
+        // conv1 sparsity is near zero — NSD must beat it...
+        if out.sparsity[0] + 1e-6 < base_out.sparsity[0] {
+            return false;
+        }
+        // ...and a coarser grid (2s) can only zero more of the map
+        // (statistically: sampling slack on 288 values).
+        out2.sparsity[0] >= out.sparsity[0] - 0.05
+    });
+}
+
 fn zero_fraction(values: &[f32]) -> f32 {
     if values.is_empty() {
         return 0.0;
@@ -380,10 +503,13 @@ fn blocked_and_threaded_kernels_match_scalar_reference_bitwise() {
 }
 
 #[test]
-fn lenet5_dithered_training_is_bit_identical_across_thread_counts() {
-    // The determinism regression the threaded executor must hold: a
-    // full lenet5 dithered run (3 SGD steps) with DITHERPROP_THREADS=1
-    // vs =4 produces identical parameters, to the bit.
+fn dithered_training_is_bit_identical_across_thread_counts() {
+    // The determinism regression the threaded executor must hold,
+    // across every layer family in the zoo: full dithered runs (3 SGD
+    // steps) of lenet5 (conv/pool/dense), resnet8 (BN + residual
+    // junctions) and vgg8bn (deep with-BN stack) with
+    // DITHERPROP_THREADS=1 vs =4 produce identical parameters — and
+    // identical BN running statistics — to the bit.
     //
     // Mutating DITHERPROP_THREADS while sibling tests run is safe here:
     // std's env accessors synchronize against each other, this is the
@@ -395,14 +521,15 @@ fn lenet5_dithered_training_is_bit_identical_across_thread_counts() {
     // otherwise make both runs execute the identical scalar kernel);
     // EnvGuard restores the launch-time knobs when the test ends.
     let _kernels = kernels::EnvGuard::set(kernels::ENV_KERNELS, "auto");
-    let run = |threads: &str| -> Vec<Tensor> {
+    let run = |model: &str, batch: usize, threads: &str| -> Vec<Tensor> {
         let _t = kernels::EnvGuard::set(kernels::ENV_THREADS, threads);
         let engine = Engine::native().unwrap();
-        let sess = engine.training_session("lenet5", "dithered", 32).unwrap();
-        let mut params = engine.init_params("lenet5", 7).unwrap();
-        let ds = data::build(&sess.entry.dataset.clone(), 64, 16, 5);
-        let mut it = data::BatchIter::new(&ds.train, 32, 2);
-        let mut opt = Sgd::new(SgdConfig::paper(0.05, 100), &params);
+        let sess = engine.training_session(model, "dithered", batch).unwrap();
+        let mut params = engine.init_params(model, 7).unwrap();
+        let ds = data::build(&sess.entry.dataset.clone(), 2 * batch, 16, 5);
+        let mut it = data::BatchIter::new(&ds.train, batch, 2);
+        let mut opt =
+            Sgd::new(SgdConfig::paper(0.05, 100), &params).with_stat_slots(&sess.entry.params);
         for step in 0..3u32 {
             it.next_batch(&ds.train);
             let out = sess.grad(&params, &it.x, &it.y, step + 1, 2.0).unwrap();
@@ -410,14 +537,16 @@ fn lenet5_dithered_training_is_bit_identical_across_thread_counts() {
         }
         params
     };
-    let p1 = run("1");
-    let p4 = run("4");
-    assert_eq!(p1.len(), p4.len());
-    for (pi, (a, b)) in p1.iter().zip(p4.iter()).enumerate() {
-        assert!(
-            bits_eq(a.data(), b.data()),
-            "param {pi} diverged between DITHERPROP_THREADS=1 and =4"
-        );
+    for (model, batch) in [("lenet5", 32), ("resnet8", 16), ("vgg8bn", 8)] {
+        let p1 = run(model, batch, "1");
+        let p4 = run(model, batch, "4");
+        assert_eq!(p1.len(), p4.len());
+        for (pi, (a, b)) in p1.iter().zip(p4.iter()).enumerate() {
+            assert!(
+                bits_eq(a.data(), b.data()),
+                "{model}: param {pi} diverged between DITHERPROP_THREADS=1 and =4"
+            );
+        }
     }
 }
 
@@ -444,6 +573,7 @@ fn custom_conv_registry_flows_through_engine() {
     assert_eq!(entry.params[0].shape, vec![3, 3, 1, 3]);
     assert_eq!(entry.n_qlayers, 2);
     assert_eq!(entry.lr, Some(0.05));
+    assert_eq!(entry.requires, vec!["conv".to_string()]);
     let sess = engine.training_session("tinyconv", "dithered", 4).unwrap();
     let params = engine.init_params("tinyconv", 0).unwrap();
     let (x, y) = random_batch(4, 36, 4, 37);
@@ -452,4 +582,43 @@ fn custom_conv_registry_flows_through_engine() {
     assert_eq!(out.sparsity.len(), 2);
     let ev = sess.eval(&params, &x, &y).unwrap();
     assert!(ev.loss > 0.0);
+}
+
+#[test]
+fn custom_bn_residual_registry_flows_through_engine() {
+    // The parsed-registry path: batchnorm + residual schema entries
+    // produce the full param surface (incl. stat slots), advertise
+    // their feature requirements, and run a 2-step training loop whose
+    // running statistics actually move off their init.
+    let engine = Engine::from_backend(Box::new(tiny_backend()));
+    let entry = engine.manifest.model("tinyres").unwrap().clone();
+    assert_eq!(entry.requires, vec!["conv".to_string(), "batchnorm".to_string(), "residual".to_string()]);
+    assert_eq!(entry.n_qlayers, 3); // conv1, conv2 (in the block), fc1
+    // conv1 w/b, bn1 g/b/m/v, conv2 w/b, bn2 g/b/m/v, fc1 w/b
+    assert_eq!(entry.n_params(), 14);
+    assert_eq!(entry.params[2].name, "bn1_g");
+    assert_eq!(entry.params[5].name, "bn1_v");
+    let sess = engine.training_session("tinyres", "dithered", 4).unwrap();
+    let mut params = engine.init_params("tinyres", 0).unwrap();
+    // init: gamma/running-var one, beta/running-mean zero
+    assert!(params[2].data().iter().all(|&v| v == 1.0));
+    assert_eq!(params[3].abs_max(), 0.0);
+    assert_eq!(params[4].abs_max(), 0.0);
+    assert!(params[5].data().iter().all(|&v| v == 1.0));
+    let mut opt = Sgd::new(SgdConfig::paper(0.05, 100), &params).with_stat_slots(&entry.params);
+    let (x, y) = random_batch(4, 36, 4, 71);
+    for step in 0..2u32 {
+        let out = sess.grad(&params, &x, &y, step + 1, 2.0).unwrap();
+        assert_eq!(out.grads.len(), 14);
+        assert_eq!(out.sparsity.len(), 3);
+        opt.apply(&mut params, &out.grads);
+    }
+    // running mean moved off zero; running var off one (EMA of batch stats)
+    assert!(params[4].abs_max() > 0.0, "bn1 running mean never updated");
+    assert!(
+        params[5].data().iter().any(|&v| (v - 1.0).abs() > 1e-6),
+        "bn1 running var never updated"
+    );
+    let ev = sess.eval(&params, &x, &y).unwrap();
+    assert!(ev.loss.is_finite() && ev.loss > 0.0);
 }

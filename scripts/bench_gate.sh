@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Bench-regression gate: compare a fresh `cargo bench --bench
+# runtime_hotpath -- --json` run against the committed
+# BENCH_kernels.json baseline and fail on a >30% GFLOP/s regression in
+# any kernel-suite row. Plain bash + jq, no new dependencies.
+#
+# Kernel rows are joined on the machine-stable identity
+# (op, shape, p_nz, variant) — the `threads` field varies with the
+# runner and is deliberately NOT part of the key. A baseline with no
+# kernel rows (the seed placeholder) gates nothing and passes, with a
+# note on how to populate it.
+#
+# usage: scripts/bench_gate.sh <fresh.json> [baseline.json] [max_drop_pct]
+set -euo pipefail
+
+fresh="${1:?usage: bench_gate.sh <fresh.json> [baseline.json] [max_drop_pct]}"
+baseline="${2:-$(dirname "$0")/../BENCH_kernels.json}"
+max_drop="${3:-30}"
+
+jq -e '.schema == "ditherprop-bench-v1"' "$fresh" > /dev/null \
+  || { echo "bench-gate: $fresh is not a ditherprop-bench-v1 report" >&2; exit 2; }
+jq -e '.schema == "ditherprop-bench-v1"' "$baseline" > /dev/null \
+  || { echo "bench-gate: $baseline is not a ditherprop-bench-v1 report" >&2; exit 2; }
+
+n_base=$(jq '[.rows[] | select(.suite == "kernel")] | length' "$baseline")
+if [ "$n_base" -eq 0 ]; then
+  echo "bench-gate: baseline $baseline has no kernel rows (seed placeholder) — nothing to gate."
+  echo "bench-gate: populate it from rust/ with:"
+  echo "  cargo bench --bench runtime_hotpath -- --json ../BENCH_kernels.json"
+  exit 0
+fi
+
+fails=$(jq -r --slurpfile f "$fresh" --argjson drop "$max_drop" '
+  [ .rows[]
+    | select(.suite == "kernel")
+    | . as $b
+    | [ $f[0].rows[]
+        | select(.suite == "kernel"
+                 and .op == $b.op and .shape == $b.shape
+                 and .p_nz == $b.p_nz and .variant == $b.variant) ][0] as $n
+    | if $n == null then
+        "MISSING  \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): no matching row in the fresh run"
+      elif $n.gflops < $b.gflops * (1 - $drop / 100) then
+        "REGRESSED \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): \($n.gflops) GF/s vs baseline \($b.gflops) GF/s"
+      else
+        empty
+      end
+  ] | .[]' "$baseline")
+
+if [ -n "$fails" ]; then
+  echo "bench-gate: kernel GFLOP/s regression(s) beyond ${max_drop}%:"
+  echo "$fails"
+  exit 1
+fi
+
+n_checked=$(jq '[.rows[] | select(.suite == "kernel")] | length' "$fresh")
+echo "bench-gate: ${n_base} baseline kernel rows checked against ${n_checked} fresh rows — all within ${max_drop}%."
