@@ -1,0 +1,160 @@
+//! `ditherlint` — static analysis over the ditherprop source tree plus
+//! a fail-closed model-manifest verifier.  Zero registry deps: the
+//! walker, tokenizer, rule engine and reporters are `ditherprop::lint`,
+//! JSON output goes through `util::json`.
+//!
+//! Subcommands:
+//!   ditherlint [lint] [--root DIR] [--json]
+//!       Run the five source rules over `DIR/**/*.rs` (default:
+//!       `rust/src` when it exists, else `src` — so it works from the
+//!       repo root and from `rust/`).  Exit 1 on any finding.
+//!   ditherlint lint-manifest [--models FILE] [--json]
+//!       Validate every zoo entry of a `models.json` registry (default:
+//!       the built-in zoo) statically: `ModelSpec::plan()` shape/
+//!       qlayer resolution, feature tags vs native `Capabilities`, and
+//!       `prepare()` over every advertised (model, method) pair — no
+//!       training step.  Exit 1 on any finding.
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use anyhow::{bail, Context, Result};
+use ditherprop::lint::{lint_files, report, walk, Finding};
+use ditherprop::runtime::backend::native::NativeBackend;
+use ditherprop::runtime::backend::{Backend, SessionSpec};
+use ditherprop::util::cli::Args;
+use std::path::Path;
+
+const USAGE: &str = "usage: ditherlint [lint|lint-manifest] [--root DIR] [--models FILE] [--json]";
+
+fn main() {
+    let args = Args::from_env();
+    match run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("ditherlint: {e:#}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run(args: &Args) -> Result<i32> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("lint") => lint_sources(args),
+        Some("lint-manifest") => lint_manifest(args),
+        Some(other) => bail!("unknown subcommand '{other}'"),
+    }
+}
+
+/// Render findings on stdout (text or JSON) with a summary on stderr;
+/// map them to the process exit code.
+fn emit(findings: &[Finding], what: &str, args: &Args) -> i32 {
+    if args.has("json") {
+        println!("{}", report::json(findings));
+    } else {
+        print!("{}", report::text(findings));
+    }
+    if findings.is_empty() {
+        eprintln!("ditherlint: {what}: clean");
+        0
+    } else {
+        eprintln!("ditherlint: {what}: {} finding(s)", findings.len());
+        1
+    }
+}
+
+fn lint_sources(args: &Args) -> Result<i32> {
+    let root = match args.get("root") {
+        Some(r) => r.to_string(),
+        None if Path::new("rust/src").is_dir() => "rust/src".to_string(),
+        None => "src".to_string(),
+    };
+    let files = walk::collect(Path::new(&root))
+        .with_context(|| format!("walking source root {root}"))?;
+    let findings = lint_files(&files);
+    Ok(emit(&findings, &format!("{} files under {root}", files.len()), args))
+}
+
+fn lint_manifest(args: &Args) -> Result<i32> {
+    let backend = match args.get("models") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading registry {path}"))?;
+            let dir = Path::new(path).parent().unwrap_or(Path::new("."));
+            NativeBackend::from_json(&text, dir)
+        }
+        None => NativeBackend::builtin(),
+    };
+    // A registry that fails to parse or plan is itself one finding —
+    // fail closed, never "skip the broken entry".
+    let backend = match backend {
+        Ok(b) => b,
+        Err(e) => {
+            let f = vec![Finding {
+                rule: "manifest",
+                file: args.str_or("models", "builtin"),
+                line: 1,
+                msg: format!("{e:#}"),
+            }];
+            return Ok(emit(&f, "model registry", args));
+        }
+    };
+
+    let caps = backend.capabilities();
+    let feature_tags = caps.feature_tags();
+    let mut findings = Vec::new();
+    let manifest = backend.manifest();
+    for (name, entry) in &manifest.models {
+        // Every required feature must be one the backend advertises.
+        for feat in &entry.requires {
+            if !feature_tags.iter().any(|t| t == feat) {
+                findings.push(Finding {
+                    rule: "manifest",
+                    file: name.clone(),
+                    line: 1,
+                    msg: format!(
+                        "model '{name}' requires feature '{feat}' the native backend \
+                         does not advertise ({feature_tags:?})"
+                    ),
+                });
+            }
+        }
+        if entry.num_classes == 0 {
+            findings.push(Finding {
+                rule: "manifest",
+                file: name.clone(),
+                line: 1,
+                msg: format!("model '{name}' resolves to 0 classes"),
+            });
+        }
+        let methods = entry.methods();
+        if methods.is_empty() {
+            findings.push(Finding {
+                rule: "manifest",
+                file: name.clone(),
+                line: 1,
+                msg: format!("model '{name}' registers no training methods"),
+            });
+        }
+        // The real validation path, statically: prepare() for every
+        // advertised (model, method) pair at the registry batch sizes.
+        for method in &methods {
+            for batch in [manifest.train_batch, manifest.worker_batch] {
+                let spec =
+                    SessionSpec { model: name.clone(), method: method.clone(), batch };
+                if let Err(e) = backend.prepare(&spec) {
+                    findings.push(Finding {
+                        rule: "manifest",
+                        file: name.clone(),
+                        line: 1,
+                        msg: format!(
+                            "prepare({name}, {method}, batch={batch}) failed: {e:#}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    let n = manifest.models.len();
+    Ok(emit(&findings, &format!("{n} zoo entries"), args))
+}

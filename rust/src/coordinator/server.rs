@@ -165,7 +165,9 @@ pub fn serve(
     //    capabilities are refused HERE, with a reason, instead of
     //    surfacing as a mid-round executor error on the worker.
     for (node, slot) in links.iter_mut().enumerate() {
-        let link = slot.as_mut().expect("links start populated");
+        let Some(link) = slot.as_mut() else {
+            anyhow::bail!("worker {node} link missing before the handshake");
+        };
         // on failure, keep the underlying cause so the operator can
         // tell version skew from capability gaps from timeouts
         let refusal: Option<String> = match link.recv_deadline(cfg.round_timeout) {
@@ -225,10 +227,10 @@ pub fn serve(
             tensors: params.iter().map(|p| p.data().to_vec()).collect(),
         };
         for (node, slot) in links.iter_mut().enumerate() {
-            if slot.is_none() {
+            let Some(link) = slot.as_mut() else {
                 continue;
-            }
-            let sent = slot.as_mut().unwrap().send(&broadcast);
+            };
+            let sent = link.send(&broadcast);
             match sent {
                 Ok(()) => comm.record_down(param_bytes),
                 Err(e) => {
@@ -256,7 +258,10 @@ pub fn serve(
             loop {
                 // reborrow per attempt so the straggler arms below can
                 // retire the slot without fighting the borrow checker
-                let outcome = slot.as_mut().unwrap().recv_deadline(cfg.round_timeout);
+                let outcome = match slot.as_mut() {
+                    Some(link) => link.recv_deadline(cfg.round_timeout),
+                    None => break,
+                };
                 match outcome {
                     Ok(Some(Msg::Heartbeat { round: r, .. }))
                         if r as usize == round && acks == 0 =>
@@ -275,7 +280,9 @@ pub fn serve(
                                 .all(|(e, p)| e.len() == p.numel());
                         if well_formed {
                             comm.record_up(&grads, param_bytes);
-                            gathered[node] = Some(grads);
+                            if let Some(g) = gathered.get_mut(node) {
+                                *g = Some(grads);
+                            }
                         } else {
                             if cfg.verbose {
                                 println!(

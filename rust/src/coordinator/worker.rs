@@ -121,7 +121,13 @@ pub fn worker_loop(
                 // Draw this node's next example.
                 let idx = rng.below(shard.len());
                 shard.example(idx, &mut x);
-                let y = [shard.labels[idx]];
+                let label = shard.labels.get(idx).copied().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "shard example {idx} out of range ({} labels)",
+                        shard.labels.len()
+                    )
+                })?;
+                let y = [label];
 
                 let seed = node_round_seed(wc.node as usize, round as usize, wc.seed);
                 let out = session.grad(&params, &x, &y, seed, wc.s)?;

@@ -411,6 +411,8 @@ pub fn sparse_param_gemm_threaded(
             let (db_chunk, db_tail) = std::mem::take(&mut db_rest).split_at_mut(r.len());
             dwt_rest = dwt_tail;
             db_rest = db_tail;
+            // Range<usize> copy (two words), once per spawned worker.
+            // lint:allow(hotpath-alloc) -- not a per-element allocation
             let r = r.clone();
             handles.push(s.spawn(move || {
                 sparse_param_gemm_cols(rows, xq, din, r, dwt_chunk, db_chunk);

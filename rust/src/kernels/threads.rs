@@ -60,6 +60,9 @@ pub fn num_threads() -> usize {
 }
 
 fn default_threads() -> usize {
+    // The single sanctioned resolution point for the machine's thread
+    // count; every kernel variant is bit-identical at any count.
+    // lint:allow(determinism) -- chunking, not results, depends on this
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 

@@ -51,6 +51,7 @@ pub mod costmodel;
 pub mod data;
 pub mod experiments;
 pub mod kernels;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod optim;

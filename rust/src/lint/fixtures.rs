@@ -1,0 +1,262 @@
+//! Rule-engine self-tests: every rule has a must-fire and a
+//! must-not-fire fixture (the contract DESIGN.md §Static analysis
+//! requires of new rules), plus the escape-hatch semantics, a
+//! seeded-violation check against the real tree, and the acceptance
+//! gate: the repo itself lints clean.
+//!
+//! Fixtures are plain strings handed to [`lint_files`] under scoped
+//! fake paths — they are never compiled, so they can contain the very
+//! patterns the rules reject.
+
+use super::{lint_files, report, walk, Finding, SourceFile};
+use std::path::Path;
+
+fn lint_one(rel: &str, text: &str) -> Vec<Finding> {
+    lint_files(&[SourceFile { rel: rel.to_string(), text: text.to_string() }])
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---- hotpath-alloc ----------------------------------------------------
+
+#[test]
+fn hotpath_alloc_must_fire() {
+    let src = "fn hot(xs: &mut [f32], ys: &[f32]) {\n\
+               \x20   for i in 0..xs.len() {\n\
+               \x20       let tmp = vec![0.0f32; 4];\n\
+               \x20       let copy = ys.to_vec();\n\
+               \x20       let v = Vec::with_capacity(8);\n\
+               \x20       xs[i] = tmp[0] + copy[0] + v.len() as f32;\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_one("kernels/fixture.rs", src);
+    assert_eq!(rules_of(&f), vec!["hotpath-alloc"; 3], "{}", report::text(&f));
+}
+
+#[test]
+fn hotpath_alloc_must_not_fire() {
+    // Allocation before the loop, reuse inside: the arena discipline.
+    let src = "fn cold(xs: &mut [f32]) {\n\
+               \x20   let mut tmp = vec![0.0f32; 4];\n\
+               \x20   for i in 0..xs.len() {\n\
+               \x20       tmp[0] += 1.0;\n\
+               \x20       xs[i] = tmp[0];\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_one("kernels/fixture.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+#[test]
+fn hotpath_alloc_ignores_other_dirs_and_tests() {
+    let src = "fn elsewhere() { for _ in 0..3 { let v = vec![1]; drop(v); } }\n";
+    assert!(lint_one("train/fixture.rs", src).is_empty());
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn t() { for _ in 0..3 { let v = vec![1]; drop(v); } }\n}\n";
+    assert!(lint_one("kernels/fixture.rs", test_src).is_empty());
+}
+
+// ---- no-panic-transport -----------------------------------------------
+
+#[test]
+fn no_panic_transport_must_fire() {
+    let src = "fn decode(buf: &[u8]) -> u8 {\n\
+               \x20   if buf.is_empty() { panic!(\"empty\"); }\n\
+               \x20   let first = buf[0];\n\
+               \x20   first + buf.last().copied().unwrap()\n\
+               }\n";
+    let f = lint_one("net/fixture.rs", src);
+    assert_eq!(
+        rules_of(&f),
+        vec!["no-panic-transport"; 3],
+        "{}",
+        report::text(&f)
+    );
+}
+
+#[test]
+fn no_panic_transport_must_not_fire() {
+    let src = "fn decode(buf: &[u8]) -> anyhow::Result<u8> {\n\
+               \x20   let first = buf.first().copied();\n\
+               \x20   first.ok_or_else(|| anyhow::anyhow!(\"empty frame\"))\n\
+               }\n\
+               fn arrays() -> [u8; 4] { [0; 4] }\n\
+               fn iterate(xs: &[u8]) -> u8 { let mut s = 0; for x in [1, 2] { s += x; } s + xs.iter().sum::<u8>() }\n";
+    let f = lint_one("coordinator/fixture.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+#[test]
+fn no_panic_transport_skips_test_code() {
+    let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { assert_eq!(Some(1).unwrap(), 1); }\n}\n";
+    let f = lint_one("net/fixture.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+// ---- determinism ------------------------------------------------------
+
+#[test]
+fn determinism_must_fire() {
+    let src = "use std::collections::HashMap;\n\
+               use std::time::Instant;\n\
+               fn avg() -> u128 {\n\
+               \x20   let m: HashMap<u32, f32> = HashMap::new();\n\
+               \x20   let t = Instant::now();\n\
+               \x20   drop(m);\n\
+               \x20   t.elapsed().as_nanos()\n\
+               }\n";
+    let f = lint_one("sparse/fixture.rs", src);
+    // HashMap fires per mention (use + type + ctor), Instant::now once.
+    assert!(f.iter().filter(|x| x.rule == "determinism").count() >= 2, "{}", report::text(&f));
+    assert!(f.iter().any(|x| x.msg.contains("Instant::now")), "{}", report::text(&f));
+}
+
+#[test]
+fn determinism_must_not_fire() {
+    let src = "use std::collections::BTreeMap;\n\
+               use std::time::Duration;\n\
+               fn avg(m: &BTreeMap<u32, f32>) -> f32 {\n\
+               \x20   let _d = Duration::from_millis(5);\n\
+               \x20   m.values().sum()\n\
+               }\n";
+    let f = lint_one("quant/fixture.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+// ---- wire-tags --------------------------------------------------------
+
+const GOOD_PROTO: &str = "pub mod tag {\n\
+                          \x20   pub const A: u8 = 1;\n\
+                          \x20   pub const B: u8 = 2;\n\
+                          }\n\
+                          pub fn decode(t: u8) -> anyhow::Result<u8> {\n\
+                          \x20   match t {\n\
+                          \x20       tag::A => Ok(1),\n\
+                          \x20       tag::B => Ok(2),\n\
+                          \x20       other => anyhow::bail!(\"unknown tag {other}\"),\n\
+                          \x20   }\n\
+                          }\n";
+
+#[test]
+fn wire_tags_must_fire() {
+    // B reuses A's value, C leaves a hole at 2 and has no decode arm.
+    let src = "pub mod tag {\n\
+               \x20   pub const A: u8 = 1;\n\
+               \x20   pub const B: u8 = 1;\n\
+               \x20   pub const C: u8 = 4;\n\
+               }\n\
+               pub fn decode(t: u8) -> anyhow::Result<u8> {\n\
+               \x20   match t {\n\
+               \x20       tag::A => Ok(1),\n\
+               \x20       tag::B => Ok(2),\n\
+               \x20       other => anyhow::bail!(\"unknown tag {other}\"),\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_one("net/proto.rs", src);
+    let msgs = report::text(&f);
+    assert!(f.iter().all(|x| x.rule == "wire-tags"), "{msgs}");
+    assert!(msgs.contains("reuses wire value"), "{msgs}");
+    assert!(msgs.contains("not dense"), "{msgs}");
+    assert!(msgs.contains("tag C has no decode match arm"), "{msgs}");
+}
+
+#[test]
+fn wire_tags_must_not_fire() {
+    let f = lint_one("net/proto.rs", GOOD_PROTO);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+// ---- op-registration --------------------------------------------------
+
+fn op_fixture(mod_src: &str, op_rel: &str) -> Vec<Finding> {
+    lint_files(&[
+        SourceFile {
+            rel: "runtime/backend/native/ops/mod.rs".to_string(),
+            text: mod_src.to_string(),
+        },
+        SourceFile { rel: op_rel.to_string(), text: "pub struct Op;\n".to_string() },
+        SourceFile {
+            rel: "runtime/backend/native/models.rs".to_string(),
+            text: "fn required() -> Vec<String> { vec![\"conv\".to_string()] }\n".to_string(),
+        },
+        SourceFile {
+            rel: "runtime/backend/mod.rs".to_string(),
+            text: "pub struct Capabilities { pub conv: bool }\n".to_string(),
+        },
+    ])
+}
+
+#[test]
+fn op_registration_must_fire() {
+    // `rogue.rs` exists but is neither declared, dispatched, nor mapped.
+    let f = op_fixture(
+        "pub mod dense;\nfn build() { dense::new(); }\n",
+        "runtime/backend/native/ops/rogue.rs",
+    );
+    let msgs = report::text(&f);
+    assert!(f.iter().all(|x| x.rule == "op-registration"), "{msgs}");
+    assert!(msgs.contains("not declared"), "{msgs}");
+    assert!(msgs.contains("never dispatched"), "{msgs}");
+    assert!(msgs.contains("no Capabilities feature mapping"), "{msgs}");
+}
+
+#[test]
+fn op_registration_must_not_fire() {
+    let f = op_fixture(
+        "pub mod conv2d;\nfn build() { conv2d::new(); }\n",
+        "runtime/backend/native/ops/conv2d.rs",
+    );
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+// ---- escape hatch -----------------------------------------------------
+
+#[test]
+fn lint_allow_suppresses_same_and_next_line() {
+    let trailing = "fn f(x: Option<u8>) -> u8 {\n\
+                    \x20   // lint:allow(no-panic-transport) -- fixture reason\n\
+                    \x20   x.unwrap()\n\
+                    }\n";
+    let f = lint_one("net/fixture.rs", trailing);
+    assert!(f.is_empty(), "{}", report::text(&f));
+
+    let same_line = "fn f(x: Option<u8>) -> u8 { x.unwrap() } // lint:allow(no-panic-transport)\n";
+    assert!(lint_one("net/fixture.rs", same_line).is_empty());
+
+    // The wrong rule name does not suppress.
+    let wrong = "fn f(x: Option<u8>) -> u8 {\n\
+                 \x20   // lint:allow(determinism)\n\
+                 \x20   x.unwrap()\n\
+                 }\n";
+    assert_eq!(lint_one("net/fixture.rs", wrong).len(), 1);
+}
+
+// ---- teeth ------------------------------------------------------------
+
+/// A violation seeded into the real tree is caught — the check the CI
+/// `lint` leg relies on.
+#[test]
+fn seeded_violation_in_tcp_fires() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = walk::collect(&root).unwrap();
+    let tcp = files.iter_mut().find(|f| f.rel == "net/tcp.rs").unwrap();
+    tcp.text.push_str("\nfn seeded(x: Option<u8>) -> u8 { x.unwrap() }\n");
+    let findings = lint_files(&files);
+    assert!(
+        findings
+            .iter()
+            .any(|f| f.rule == "no-panic-transport" && f.file == "net/tcp.rs"),
+        "seeded unwrap not caught:\n{}",
+        report::text(&findings)
+    );
+}
+
+/// The acceptance criterion: the repo lints clean at merge.
+#[test]
+fn repo_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let files = walk::collect(&root).unwrap();
+    let findings = lint_files(&files);
+    assert!(findings.is_empty(), "ditherlint findings:\n{}", report::text(&findings));
+}

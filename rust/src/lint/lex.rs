@@ -1,0 +1,380 @@
+//! A lightweight Rust tokenizer for `ditherlint`.
+//!
+//! This is *not* a full Rust lexer — it is exactly enough to drive the
+//! rule engine: identifiers, numbers, string/char literals (including
+//! raw and byte forms), lifetimes, and single-character punctuation,
+//! each tagged with a 1-based source line.  Comments are skipped, but
+//! line comments are scanned for `lint:allow(<rule>)` escape-hatch
+//! directives, which are surfaced alongside the token stream.
+//!
+//! The deliberate simplifications (no token gluing — `::` is two `:`
+//! puncts, `=>` is `=` then `>` — and numeric literals kept as raw
+//! text) keep the lexer small; the rules match short token sequences,
+//! so gluing buys nothing.
+
+/// Token payload. Only the variants the rules inspect carry text.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`foo`, `for`, `unwrap`).
+    Ident(String),
+    /// Numeric literal, raw text (`42`, `0xFF`, `1.5`).
+    Num(String),
+    /// String literal; the payload is the *inner* text, un-escaped
+    /// only in the sense that quotes/prefixes are stripped (rules only
+    /// ever compare simple tags like `"conv"`).
+    Str(String),
+    /// Character or byte literal (`'x'`, `b'\n'`); content unused.
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`); content unused.
+    Lifetime,
+    /// Any other single character (`{`, `[`, `.`, `!`, ...).
+    Punct(char),
+}
+
+/// A token plus its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+}
+
+/// Tokenizer output: the token stream plus every `lint:allow`
+/// directive found in comments, as `(line, rule)` pairs.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub allows: Vec<(usize, String)>,
+}
+
+/// Extract `lint:allow(a, b)` rule names from one comment's text.
+fn scan_allows(comment: &str, line: usize, out: &mut Vec<(usize, String)>) {
+    let mut rest = comment;
+    while let Some(at) = rest.find("lint:allow(") {
+        let after = &rest[at + "lint:allow(".len()..];
+        let Some(close) = after.find(')') else { return };
+        for rule in after[..close].split(',') {
+            let rule = rule.trim();
+            if !rule.is_empty() {
+                out.push((line, rule.to_string()));
+            }
+        }
+        rest = &after[close + 1..];
+    }
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+}
+
+impl Cursor {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    /// Advance one char, tracking line numbers.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek(0)?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+
+    fn eat_while(&mut self, pred: impl Fn(char) -> bool) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.peek(0) {
+            if !pred(c) {
+                break;
+            }
+            s.push(c);
+            self.bump();
+        }
+        s
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize one source file.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), pos: 0, line: 1 };
+    let mut out = Lexed::default();
+
+    while let Some(c) = cur.peek(0) {
+        // Whitespace.
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        // Line comment (also the `lint:allow` carrier).
+        if c == '/' && cur.peek(1) == Some('/') {
+            let line = cur.line;
+            let text = cur.eat_while(|c| c != '\n');
+            scan_allows(&text, line, &mut out.allows);
+            continue;
+        }
+        // Block comment, nesting like Rust's.
+        if c == '/' && cur.peek(1) == Some('*') {
+            cur.bump();
+            cur.bump();
+            let mut depth = 1usize;
+            while depth > 0 {
+                match (cur.peek(0), cur.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        depth += 1;
+                        cur.bump();
+                        cur.bump();
+                    }
+                    (Some('*'), Some('/')) => {
+                        depth -= 1;
+                        cur.bump();
+                        cur.bump();
+                    }
+                    (Some(_), _) => {
+                        cur.bump();
+                    }
+                    (None, _) => break,
+                }
+            }
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# (and br variants), before
+        // identifier lexing so the `r`/`b` prefix is not an ident.
+        if c == 'r' || c == 'b' {
+            let mut look = 1;
+            if c == 'b' && cur.peek(1) == Some('r') {
+                look = 2;
+            }
+            let mut hashes = 0;
+            while cur.peek(look + hashes) == Some('#') {
+                hashes += 1;
+            }
+            let is_raw = (c == 'r' || look == 2) && cur.peek(look + hashes) == Some('"');
+            if is_raw {
+                let line = cur.line;
+                for _ in 0..look + hashes + 1 {
+                    cur.bump();
+                }
+                let mut body = String::new();
+                'raw: while let Some(ch) = cur.peek(0) {
+                    if ch == '"' {
+                        // A quote followed by `hashes` hashes closes it.
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if cur.peek(1 + h) != Some('#') {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            for _ in 0..hashes + 1 {
+                                cur.bump();
+                            }
+                            break 'raw;
+                        }
+                    }
+                    body.push(ch);
+                    cur.bump();
+                }
+                out.tokens.push(Token { tok: Tok::Str(body), line });
+                continue;
+            }
+            // Cooked byte string b"..." — fall through to the string
+            // arm by consuming the prefix here.
+            if c == 'b' && cur.peek(1) == Some('"') {
+                cur.bump(); // eat the 'b'; the '"' arm below takes over
+                continue;
+            }
+            if c == 'b' && cur.peek(1) == Some('\'') {
+                cur.bump(); // byte char literal: eat 'b', fall through
+                continue;
+            }
+            // Plain identifier starting with r/b.
+        }
+        // Cooked string literal.
+        if c == '"' {
+            let line = cur.line;
+            cur.bump();
+            let mut body = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\\' {
+                    cur.bump();
+                    cur.bump();
+                    // Escapes never matter to the rules; keep a marker
+                    // so `"con" + "v"` tricks can't forge a tag match.
+                    body.push('\\');
+                    continue;
+                }
+                if ch == '"' {
+                    cur.bump();
+                    break;
+                }
+                body.push(ch);
+                cur.bump();
+            }
+            out.tokens.push(Token { tok: Tok::Str(body), line });
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            let line = cur.line;
+            // `'a`, `'static`, `'outer:` — lifetime/label when the
+            // char after the ident start is not a closing quote.
+            if cur.peek(1).map(is_ident_start).unwrap_or(false) && cur.peek(2) != Some('\'') {
+                cur.bump();
+                cur.eat_while(is_ident_continue);
+                out.tokens.push(Token { tok: Tok::Lifetime, line });
+                continue;
+            }
+            // Char literal: consume until the closing quote, skipping
+            // escapes ('\n', '\'', '\u{1F600}').
+            cur.bump();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\\' {
+                    cur.bump();
+                    cur.bump();
+                    continue;
+                }
+                cur.bump();
+                if ch == '\'' {
+                    break;
+                }
+            }
+            out.tokens.push(Token { tok: Tok::Char, line });
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let line = cur.line;
+            let s = cur.eat_while(is_ident_continue);
+            out.tokens.push(Token { tok: Tok::Ident(s), line });
+            continue;
+        }
+        // Numeric literal (loose: stops '.' from eating a `..` range).
+        if c.is_ascii_digit() {
+            let line = cur.line;
+            let mut s = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch.is_alphanumeric() || ch == '_' {
+                    s.push(ch);
+                    cur.bump();
+                } else if ch == '.'
+                    && cur.peek(1) != Some('.')
+                    && cur.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+                {
+                    s.push(ch);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+            out.tokens.push(Token { tok: Tok::Num(s), line });
+            continue;
+        }
+        // Everything else: single-char punctuation.
+        let line = cur.line;
+        cur.bump();
+        out.tokens.push(Token { tok: Tok::Punct(c), line });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_tokens() {
+        let src = r##"
+            // unwrap in a comment
+            /* HashMap in a /* nested */ block */
+            let s = "Instant::now inside a string";
+            let r = r#"panic! raw"#;
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"Instant".to_string()));
+        assert!(!ids.contains(&"panic".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; let q = '\\''; }";
+        let toks = lex(src).tokens;
+        let lifetimes = toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn allow_directives_are_collected() {
+        let src = "let x = 1; // lint:allow(no-panic-transport)\n\
+                   // lint:allow(determinism, hotpath-alloc)\n\
+                   let y = 2;";
+        let lexed = lex(src);
+        assert_eq!(
+            lexed.allows,
+            vec![
+                (1, "no-panic-transport".to_string()),
+                (2, "determinism".to_string()),
+                (2, "hotpath-alloc".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "a\n/* c1\nc2 */\n\"s1\ns2\"\nb";
+        let toks = lex(src).tokens;
+        let a = toks.iter().find(|t| t.tok == Tok::Ident("a".into())).unwrap();
+        let b = toks.iter().find(|t| t.tok == Tok::Ident("b".into())).unwrap();
+        assert_eq!(a.line, 1);
+        assert_eq!(b.line, 6);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let src = r##"let a = r"x"; let b = b"y"; let c = br#"z"#; tail"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b", "let", "c", "tail"]);
+        let strs = lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| matches!(t.tok, Tok::Str(_)))
+            .count();
+        assert_eq!(strs, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let src = "for i in 0..n { a[i] = 1.5; }";
+        let toks = lex(src).tokens;
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("0".into())));
+        assert!(toks.iter().any(|t| t.tok == Tok::Num("1.5".into())));
+        assert_eq!(toks.iter().filter(|t| t.tok == Tok::Punct('.')).count(), 2);
+    }
+}

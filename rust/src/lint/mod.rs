@@ -1,0 +1,275 @@
+//! `ditherlint` — the repo-invariant static-analysis pass.
+//!
+//! Every performance and correctness claim this codebase makes is an
+//! *invariant*: bit-identical training at any `DITHERPROP_THREADS`,
+//! zero steady-state allocation in the kernel scratch arena, a
+//! transport layer that survives malformed peers, a wire-tag space
+//! that decodes densely, a native op zoo where every op is reachable
+//! and capability-gated.  Tests only catch a violation when they
+//! happen to execute it; this module makes the invariants *syntactic*
+//! so CI fails the moment one is reintroduced.
+//!
+//! Pipeline: [`walk`] collects `src/**/*.rs`, [`lex`] tokenizes each
+//! file (tracking `// lint:allow(<rule>)` escape hatches), a span pass
+//! here classifies every token as test/non-test and loop-depth, and
+//! [`rules`] runs the five named rules over the token streams.
+//! [`report`] renders findings as text or machine-readable JSON.
+//!
+//! Rules (catalog in DESIGN.md §Static analysis):
+//!
+//! * `hotpath-alloc`       — no allocation in `kernels/` loop bodies.
+//! * `no-panic-transport`  — no panic paths in `net/` + `coordinator/`.
+//! * `determinism`         — no unordered containers / wall-clock /
+//!   machine-dependent parallelism in deterministic paths.
+//! * `wire-tags`           — `net/proto.rs` tags unique, dense, decoded.
+//! * `op-registration`     — every native op declared, dispatched, and
+//!   capability-mapped.
+//!
+//! Escape hatch: a `// lint:allow(<rule>)` comment suppresses that
+//! rule on its own line and the next line, so both trailing and
+//! preceding-line placements work.  Every allow should carry a reason
+//! after the directive.
+
+pub mod lex;
+pub mod report;
+pub mod rules;
+pub mod walk;
+
+#[cfg(test)]
+mod fixtures;
+
+/// One source file, path-relative to the scanned root (always `/`
+/// separated, e.g. `net/proto.rs`).
+#[derive(Debug, Clone)]
+pub struct SourceFile {
+    pub rel: String,
+    pub text: String,
+}
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A tokenized file plus per-token span classification, the input the
+/// rules consume.
+pub struct FileCtx {
+    pub rel: String,
+    pub tokens: Vec<lex::Token>,
+    /// Token is inside a `#[cfg(test)]` / `#[test]` brace span.
+    pub in_test: Vec<bool>,
+    /// Number of enclosing `for`/`while`/`loop` bodies.
+    pub loop_depth: Vec<u32>,
+    pub allows: Vec<(usize, String)>,
+}
+
+impl FileCtx {
+    /// The identifier text at token index `i`, if it is one.
+    pub fn ident(&self, i: usize) -> Option<&str> {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(lex::Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// True when token `i` is the punctuation `c`.
+    pub fn is_punct(&self, i: usize, c: char) -> bool {
+        matches!(self.tokens.get(i).map(|t| &t.tok), Some(lex::Tok::Punct(p)) if *p == c)
+    }
+
+    /// The string-literal content at token index `i`, if it is one.
+    pub fn str_lit(&self, i: usize) -> Option<&str> {
+        match self.tokens.get(i).map(|t| &t.tok) {
+            Some(lex::Tok::Str(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Source line of token `i` (1 when out of range — findings always
+    /// point somewhere real).
+    pub fn line(&self, i: usize) -> usize {
+        self.tokens.get(i).map(|t| t.line).unwrap_or(1)
+    }
+}
+
+/// What a `{` opened, for the span pass.
+enum SpanKind {
+    Plain,
+    Test,
+    Loop,
+}
+
+/// Classify every token: inside test code? inside how many loop
+/// bodies?  `#[cfg(test)]` / `#[test]` attributes mark the next brace
+/// span as test code; `for`/`while`/`loop` keywords mark the next
+/// brace span as a loop body.
+fn spans(tokens: &[lex::Token]) -> (Vec<bool>, Vec<u32>) {
+    let n = tokens.len();
+    let mut in_test = vec![false; n];
+    let mut loop_depth = vec![0u32; n];
+    let mut stack: Vec<SpanKind> = Vec::new();
+    let mut test_level = 0u32;
+    let mut loops = 0u32;
+    let mut pending_test = false;
+    let mut pending_loop = false;
+
+    let ident = |i: usize| -> Option<&str> {
+        match tokens.get(i).map(|t| &t.tok) {
+            Some(lex::Tok::Ident(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    };
+    let punct = |i: usize, c: char| -> bool {
+        matches!(tokens.get(i).map(|t| &t.tok), Some(lex::Tok::Punct(p)) if *p == c)
+    };
+
+    let mut i = 0;
+    while i < n {
+        match &tokens[i].tok {
+            lex::Tok::Punct('{') => {
+                let kind = if pending_test {
+                    test_level += 1;
+                    SpanKind::Test
+                } else if pending_loop {
+                    loops += 1;
+                    SpanKind::Loop
+                } else {
+                    SpanKind::Plain
+                };
+                pending_test = false;
+                pending_loop = false;
+                stack.push(kind);
+            }
+            lex::Tok::Punct('}') => match stack.pop() {
+                Some(SpanKind::Test) => test_level = test_level.saturating_sub(1),
+                Some(SpanKind::Loop) => loops = loops.saturating_sub(1),
+                _ => {}
+            },
+            lex::Tok::Punct('#') if punct(i + 1, '[') => {
+                // Scan the attribute for a bare `test` ident:
+                // matches #[test], #[cfg(test)], #[cfg(all(test, ..))].
+                let mut j = i + 2;
+                let mut depth = 1usize;
+                while j < n && depth > 0 {
+                    if punct(j, '[') {
+                        depth += 1;
+                    } else if punct(j, ']') {
+                        depth -= 1;
+                    } else if ident(j) == Some("test") {
+                        pending_test = true;
+                    }
+                    j += 1;
+                }
+            }
+            lex::Tok::Ident(s) if s == "for" || s == "while" || s == "loop" => {
+                pending_loop = true;
+            }
+            _ => {}
+        }
+        in_test[i] = test_level > 0 || pending_test;
+        loop_depth[i] = loops;
+        i += 1;
+    }
+    (in_test, loop_depth)
+}
+
+/// Tokenize + classify one file.
+pub fn analyze(file: &SourceFile) -> FileCtx {
+    let lexed = lex::lex(&file.text);
+    let (in_test, loop_depth) = spans(&lexed.tokens);
+    FileCtx {
+        rel: file.rel.clone(),
+        tokens: lexed.tokens,
+        in_test,
+        loop_depth,
+        allows: lexed.allows,
+    }
+}
+
+/// Does an allow directive cover `(rule, line)`?  An allow on line L
+/// covers findings on L (trailing comment) and L+1 (preceding line).
+fn allowed(allows: &[(usize, String)], rule: &str, line: usize) -> bool {
+    allows
+        .iter()
+        .any(|(l, r)| r == rule && (*l == line || l + 1 == line))
+}
+
+/// Lint a set of in-memory files: the full engine minus the walker.
+/// Fixture self-tests and the CLI both enter here.
+pub fn lint_files(files: &[SourceFile]) -> Vec<Finding> {
+    let ctxs: Vec<FileCtx> = files.iter().map(analyze).collect();
+    let mut findings = rules::run_all(&ctxs);
+    findings.retain(|f| {
+        ctxs.iter()
+            .find(|c| c.rel == f.file)
+            .map(|c| !allowed(&c.allows, f.rule, f.line))
+            .unwrap_or(true)
+    });
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(rel: &str, text: &str) -> FileCtx {
+        analyze(&SourceFile { rel: rel.to_string(), text: text.to_string() })
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mods() {
+        let c = ctx(
+            "kernels/x.rs",
+            "fn live() { work(); }\n\
+             #[cfg(test)]\n\
+             mod tests {\n    fn t() { check(); }\n}\n\
+             fn live2() {}",
+        );
+        let find = |name: &str| {
+            c.tokens
+                .iter()
+                .position(|t| t.tok == lex::Tok::Ident(name.into()))
+                .unwrap()
+        };
+        assert!(!c.in_test[find("work")]);
+        assert!(c.in_test[find("check")]);
+        assert!(!c.in_test[find("live2")]);
+    }
+
+    #[test]
+    fn loop_spans_nest() {
+        let c = ctx(
+            "kernels/x.rs",
+            "fn f() { setup(); for i in 0..n { a(); while x { b(); } c(); } done(); }",
+        );
+        let depth_at = |name: &str| {
+            let i = c
+                .tokens
+                .iter()
+                .position(|t| t.tok == lex::Tok::Ident(name.into()))
+                .unwrap();
+            c.loop_depth[i]
+        };
+        assert_eq!(depth_at("setup"), 0);
+        assert_eq!(depth_at("a"), 1);
+        assert_eq!(depth_at("b"), 2);
+        assert_eq!(depth_at("c"), 1);
+        assert_eq!(depth_at("done"), 0);
+    }
+
+    #[test]
+    fn allow_covers_same_and_next_line() {
+        let allows = vec![(10usize, "determinism".to_string())];
+        assert!(allowed(&allows, "determinism", 10));
+        assert!(allowed(&allows, "determinism", 11));
+        assert!(!allowed(&allows, "determinism", 12));
+        assert!(!allowed(&allows, "hotpath-alloc", 10));
+    }
+}

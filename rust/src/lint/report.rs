@@ -1,0 +1,68 @@
+//! Finding reporters: compiler-style text for humans, a
+//! `ditherlint-v1` JSON document for machines (CI annotations, the
+//! bench/lint dashboards).
+
+use super::Finding;
+use crate::util::json::Value;
+use std::collections::BTreeMap;
+
+/// `path:line: [rule] message` — one finding per line, input order.
+pub fn text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    out
+}
+
+/// Machine-readable report (schema `ditherlint-v1`).
+pub fn json(findings: &[Finding]) -> String {
+    let rows: Vec<Value> = findings
+        .iter()
+        .map(|f| {
+            let mut row = BTreeMap::new();
+            row.insert("rule".to_string(), Value::Str(f.rule.to_string()));
+            row.insert("file".to_string(), Value::Str(f.file.clone()));
+            row.insert("line".to_string(), Value::Num(f.line as f64));
+            row.insert("msg".to_string(), Value::Str(f.msg.clone()));
+            Value::Obj(row)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Value::Str("ditherlint-v1".to_string()));
+    doc.insert("count".to_string(), Value::Num(findings.len() as f64));
+    doc.insert("findings".to_string(), Value::Arr(rows));
+    Value::Obj(doc).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Vec<Finding> {
+        vec![Finding {
+            rule: "determinism",
+            file: "kernels/gemm.rs".to_string(),
+            line: 42,
+            msg: "HashMap iteration order is nondeterministic".to_string(),
+        }]
+    }
+
+    #[test]
+    fn text_is_compiler_style() {
+        let t = text(&sample());
+        assert_eq!(t, "kernels/gemm.rs:42: [determinism] HashMap iteration order is nondeterministic\n");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let doc = json::parse(&json(&sample())).unwrap();
+        assert_eq!(doc.get("schema").and_then(Value::as_str), Some("ditherlint-v1"));
+        assert_eq!(doc.get("count").and_then(Value::as_usize), Some(1));
+        let rows = doc.get("findings").and_then(Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("line").and_then(Value::as_usize), Some(42));
+        assert_eq!(rows[0].get("rule").and_then(Value::as_str), Some("determinism"));
+    }
+}

@@ -1,0 +1,412 @@
+//! The five named rules.  Each rule is a function over tokenized files
+//! ([`FileCtx`]); single-file rules scope themselves by path prefix,
+//! cross-file rules (`wire-tags`, `op-registration`) look files up by
+//! relative path.  Scope prefixes are relative to `src/`.
+//!
+//! Adding a rule: write the checker here, add its name to [`RULES`],
+//! and add a must-fire + must-not-fire fixture pair in
+//! `lint/fixtures.rs` (the self-test enforces that both exist).
+
+use super::{FileCtx, Finding};
+
+/// Every rule name, the vocabulary of `lint:allow(...)`.
+pub const RULES: &[&str] = &[
+    "hotpath-alloc",
+    "no-panic-transport",
+    "determinism",
+    "wire-tags",
+    "op-registration",
+];
+
+/// Run every rule over every file.
+pub fn run_all(files: &[FileCtx]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        hotpath_alloc(f, &mut out);
+        no_panic_transport(f, &mut out);
+        determinism(f, &mut out);
+    }
+    wire_tags(files, &mut out);
+    op_registration(files, &mut out);
+    out
+}
+
+fn finding(f: &FileCtx, rule: &'static str, i: usize, msg: String) -> Finding {
+    Finding { rule, file: f.rel.clone(), line: f.line(i), msg }
+}
+
+/// Keywords that can directly precede a `[` that is *not* indexing
+/// (`for m in [..]`, `return [..]`, `let [a, b] = ..`, ...).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
+    "pub", "ref", "return", "static", "struct", "super", "trait", "type", "unsafe", "use",
+    "where", "while", "yield",
+];
+
+/// `hotpath-alloc`: no per-iteration allocation inside `kernels/` loop
+/// bodies — the scratch-arena discipline.  Flags `Vec::new` /
+/// `Vec::with_capacity` / `vec![..]` / `.to_vec()` / `.clone()` at
+/// loop depth > 0 in non-test code.
+fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
+    if !f.rel.starts_with("kernels/") {
+        return;
+    }
+    for i in 0..f.tokens.len() {
+        if f.in_test[i] || f.loop_depth[i] == 0 {
+            continue;
+        }
+        match f.ident(i) {
+            Some("vec") if f.is_punct(i + 1, '!') => out.push(finding(
+                f,
+                "hotpath-alloc",
+                i,
+                "vec! allocates inside a kernel loop body; use the scratch arena".into(),
+            )),
+            Some("Vec")
+                if f.is_punct(i + 1, ':')
+                    && f.is_punct(i + 2, ':')
+                    && matches!(f.ident(i + 3), Some("new") | Some("with_capacity")) =>
+            {
+                out.push(finding(
+                    f,
+                    "hotpath-alloc",
+                    i,
+                    format!(
+                        "Vec::{} inside a kernel loop body; use the scratch arena",
+                        f.ident(i + 3).unwrap_or("new")
+                    ),
+                ))
+            }
+            Some(m @ ("to_vec" | "clone"))
+                if i > 0 && f.is_punct(i - 1, '.') && f.is_punct(i + 1, '(') =>
+            {
+                out.push(finding(
+                    f,
+                    "hotpath-alloc",
+                    i,
+                    format!(".{m}() allocates inside a kernel loop body; hoist it out"),
+                ))
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `no-panic-transport`: a malformed or truncated peer must surface as
+/// `Err`, never a crash.  Flags `.unwrap()` / `.expect()`, panicking
+/// macros, and slice/array indexing (use `.get()`) in non-test code
+/// under `net/` and `coordinator/`.
+fn no_panic_transport(f: &FileCtx, out: &mut Vec<Finding>) {
+    if !(f.rel.starts_with("net/") || f.rel.starts_with("coordinator/")) {
+        return;
+    }
+    for i in 0..f.tokens.len() {
+        if f.in_test[i] {
+            continue;
+        }
+        if let Some(name @ ("unwrap" | "expect")) = f.ident(i) {
+            if i > 0 && f.is_punct(i - 1, '.') && f.is_punct(i + 1, '(') {
+                out.push(finding(
+                    f,
+                    "no-panic-transport",
+                    i,
+                    format!(".{name}() can panic on peer input; return a typed Err"),
+                ));
+            }
+        }
+        if let Some(m @ ("panic" | "unreachable" | "todo" | "unimplemented")) = f.ident(i) {
+            if f.is_punct(i + 1, '!') {
+                out.push(finding(
+                    f,
+                    "no-panic-transport",
+                    i,
+                    format!("{m}! in transport code; return a typed Err"),
+                ));
+            }
+        }
+        if f.is_punct(i, '[') && i > 0 {
+            let indexes = match f.ident(i - 1) {
+                Some(id) => !NON_INDEX_KEYWORDS.contains(&id),
+                None => f.is_punct(i - 1, ')') || f.is_punct(i - 1, ']'),
+            };
+            if indexes {
+                out.push(finding(
+                    f,
+                    "no-panic-transport",
+                    i,
+                    "slice/array indexing can panic; use .get()/.get_mut()".into(),
+                ));
+            }
+        }
+    }
+}
+
+/// `determinism`: gradient, averaging and kernel paths must be
+/// bit-identical across runs, machines and thread counts.  Flags
+/// unordered std containers (iteration order varies), wall-clock
+/// reads, and `available_parallelism` (the one machine-dependent
+/// value; its single sanctioned resolution point carries an allow).
+fn determinism(f: &FileCtx, out: &mut Vec<Finding>) {
+    let scoped = ["kernels/", "coordinator/", "sparse/", "quant/", "runtime/backend/native/"]
+        .iter()
+        .any(|p| f.rel.starts_with(p));
+    if !scoped {
+        return;
+    }
+    for i in 0..f.tokens.len() {
+        if f.in_test[i] {
+            continue;
+        }
+        match f.ident(i) {
+            Some(c @ ("HashMap" | "HashSet")) => out.push(finding(
+                f,
+                "determinism",
+                i,
+                format!("{c} iteration order is nondeterministic; use BTreeMap/BTreeSet"),
+            )),
+            Some(c @ ("Instant" | "SystemTime"))
+                if f.is_punct(i + 1, ':') && f.is_punct(i + 2, ':') && f.ident(i + 3) == Some("now") =>
+            {
+                out.push(finding(
+                    f,
+                    "determinism",
+                    i,
+                    format!("{c}::now() in a deterministic path; results must not depend on time"),
+                ))
+            }
+            Some("available_parallelism") => out.push(finding(
+                f,
+                "determinism",
+                i,
+                "machine-dependent thread count in a deterministic path; route through \
+                 kernels::threads::num_threads"
+                    .into(),
+            )),
+            _ => {}
+        }
+    }
+}
+
+/// `wire-tags`: the `net/proto.rs` tag namespace is unique, dense
+/// (1..=max with no holes), and every declared tag has a decode match
+/// arm (`tag::NAME =>`).  A stray or undecodable tag is a protocol
+/// hole a peer can hit.
+fn wire_tags(files: &[FileCtx], out: &mut Vec<Finding>) {
+    let Some(f) = files.iter().find(|f| f.rel == "net/proto.rs") else {
+        return;
+    };
+    // Locate `mod tag { ... }` and collect `const NAME: u8 = N;`.
+    let n = f.tokens.len();
+    let mut consts: Vec<(String, u64, usize)> = Vec::new(); // (name, value, token idx)
+    let mut mod_start = None;
+    for i in 0..n {
+        if f.ident(i) == Some("mod") && f.ident(i + 1) == Some("tag") && f.is_punct(i + 2, '{') {
+            mod_start = Some(i);
+            let mut depth = 1usize;
+            let mut j = i + 3;
+            while j < n && depth > 0 {
+                if f.is_punct(j, '{') {
+                    depth += 1;
+                } else if f.is_punct(j, '}') {
+                    depth -= 1;
+                } else if f.ident(j) == Some("const") {
+                    if let (Some(name), Some(super::lex::Tok::Num(v))) =
+                        (f.ident(j + 1), f.tokens.get(j + 5).map(|t| &t.tok))
+                    {
+                        if let Ok(value) = v.parse::<u64>() {
+                            consts.push((name.to_string(), value, j + 1));
+                        }
+                    }
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+    let Some(mod_i) = mod_start else {
+        out.push(Finding {
+            rule: "wire-tags",
+            file: f.rel.clone(),
+            line: 1,
+            msg: "net/proto.rs has no `mod tag { .. }` tag namespace".into(),
+        });
+        return;
+    };
+    if consts.is_empty() {
+        out.push(finding(f, "wire-tags", mod_i, "`mod tag` declares no tag constants".into()));
+        return;
+    }
+    // Unique.
+    for (k, (name, value, idx)) in consts.iter().enumerate() {
+        if consts.iter().take(k).any(|(_, v, _)| v == value) {
+            out.push(finding(
+                f,
+                "wire-tags",
+                *idx,
+                format!("tag {name} reuses wire value {value}"),
+            ));
+        }
+    }
+    // Dense: exactly 1..=max.
+    let mut values: Vec<u64> = consts.iter().map(|(_, v, _)| *v).collect();
+    values.sort_unstable();
+    values.dedup();
+    let max = values.last().copied().unwrap_or(0);
+    let dense: Vec<u64> = (1..=max).collect();
+    if values != dense {
+        out.push(finding(
+            f,
+            "wire-tags",
+            mod_i,
+            format!("tag values {values:?} are not dense over 1..={max}"),
+        ));
+    }
+    // Every tag has a decode arm: `tag::NAME =>` outside `mod tag`.
+    for (name, _, idx) in &consts {
+        let mut has_arm = false;
+        for i in 0..n {
+            if f.ident(i) == Some("tag")
+                && f.is_punct(i + 1, ':')
+                && f.is_punct(i + 2, ':')
+                && f.ident(i + 3) == Some(name)
+                && f.is_punct(i + 4, '=')
+                && f.is_punct(i + 5, '>')
+            {
+                has_arm = true;
+                break;
+            }
+        }
+        if !has_arm {
+            out.push(finding(
+                f,
+                "wire-tags",
+                *idx,
+                format!("tag {name} has no decode match arm (`tag::{name} =>`)"),
+            ));
+        }
+    }
+}
+
+/// Capability feature each native op file requires: the fail-closed
+/// map behind `op-registration`.  `None` = core op, always available.
+/// A new op file must be added here (and to `Capabilities`) or the
+/// rule fires.
+const OP_FEATURES: &[(&str, Option<&str>)] = &[
+    ("dense", None),
+    ("flatten", None),
+    ("conv2d", Some("conv")),
+    ("maxpool", Some("conv")),
+    ("batchnorm", Some("batchnorm")),
+    ("residual", Some("residual")),
+];
+
+/// `op-registration`: every file under `runtime/backend/native/ops/`
+/// is declared in `ops/mod.rs`, referenced from its dispatch
+/// (`build_op`), and covered by a `Capabilities` feature flag that the
+/// model planner actually emits.
+fn op_registration(files: &[FileCtx], out: &mut Vec<Finding>) {
+    const OPS_DIR: &str = "runtime/backend/native/ops/";
+    let mod_rel = format!("{OPS_DIR}mod.rs");
+    let ops: Vec<&FileCtx> = files
+        .iter()
+        .filter(|f| f.rel.starts_with(OPS_DIR) && f.rel.ends_with(".rs") && f.rel != mod_rel)
+        .collect();
+    if ops.is_empty() {
+        return;
+    }
+    let modf = files.iter().find(|f| f.rel == mod_rel);
+    let models = files.iter().find(|f| f.rel == "runtime/backend/native/models.rs");
+    let caps = files.iter().find(|f| f.rel == "runtime/backend/mod.rs");
+
+    for op in ops {
+        let stem = op
+            .rel
+            .trim_start_matches(OPS_DIR)
+            .trim_end_matches(".rs")
+            .to_string();
+        // (a) declared: `mod <stem>;` in ops/mod.rs.
+        let declared = modf
+            .map(|m| {
+                (0..m.tokens.len()).any(|i| {
+                    m.ident(i) == Some("mod")
+                        && m.ident(i + 1) == Some(stem.as_str())
+                        && m.is_punct(i + 2, ';')
+                })
+            })
+            .unwrap_or(false);
+        if !declared {
+            out.push(Finding {
+                rule: "op-registration",
+                file: op.rel.clone(),
+                line: 1,
+                msg: format!("op `{stem}` is not declared (`pub mod {stem};`) in ops/mod.rs"),
+            });
+        }
+        // (b) dispatched: `<stem>::` referenced from ops/mod.rs
+        // non-test code (the `build_op` plan dispatch).
+        let dispatched = modf
+            .map(|m| {
+                (0..m.tokens.len()).any(|i| {
+                    !m.in_test[i]
+                        && m.ident(i) == Some(stem.as_str())
+                        && m.is_punct(i + 1, ':')
+                        && m.is_punct(i + 2, ':')
+                })
+            })
+            .unwrap_or(false);
+        if !dispatched {
+            out.push(Finding {
+                rule: "op-registration",
+                file: op.rel.clone(),
+                line: 1,
+                msg: format!("op `{stem}` is never dispatched (`{stem}::..`) from ops/mod.rs"),
+            });
+        }
+        // (c) capability-mapped.
+        match OP_FEATURES.iter().find(|(s, _)| *s == stem) {
+            None => out.push(Finding {
+                rule: "op-registration",
+                file: op.rel.clone(),
+                line: 1,
+                msg: format!(
+                    "op `{stem}` has no Capabilities feature mapping; extend OP_FEATURES \
+                     in lint/rules.rs and Capabilities in runtime/backend/mod.rs"
+                ),
+            }),
+            Some((_, Some(feat))) => {
+                // The planner must be able to emit the feature tag...
+                let planned = models
+                    .map(|m| (0..m.tokens.len()).any(|i| m.str_lit(i) == Some(*feat)))
+                    .unwrap_or(false);
+                if !planned {
+                    out.push(Finding {
+                        rule: "op-registration",
+                        file: op.rel.clone(),
+                        line: 1,
+                        msg: format!(
+                            "feature \"{feat}\" for op `{stem}` never appears in \
+                             models.rs required_features"
+                        ),
+                    });
+                }
+                // ...and Capabilities must carry the flag.
+                let advertised = caps
+                    .map(|m| (0..m.tokens.len()).any(|i| m.ident(i) == Some(*feat)))
+                    .unwrap_or(false);
+                if !advertised {
+                    out.push(Finding {
+                        rule: "op-registration",
+                        file: op.rel.clone(),
+                        line: 1,
+                        msg: format!(
+                            "feature \"{feat}\" for op `{stem}` has no Capabilities \
+                             field in runtime/backend/mod.rs"
+                        ),
+                    });
+                }
+            }
+            Some((_, None)) => {}
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Source walker: collect every `.rs` file under a root, sorted by
+//! relative path so runs (and the JSON report) are deterministic.
+
+use super::SourceFile;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Recursively collect `root/**/*.rs` as [`SourceFile`]s with
+/// `/`-separated paths relative to `root`.
+pub fn collect(root: &Path) -> Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    descend(root, String::new(), &mut out)?;
+    out.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(out)
+}
+
+fn descend(dir: &Path, prefix: String, out: &mut Vec<SourceFile>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).with_context(|| format!("reading dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("reading dir {}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        let rel = if prefix.is_empty() { name.clone() } else { format!("{prefix}/{name}") };
+        if path.is_dir() {
+            descend(&path, rel, out)?;
+        } else if name.ends_with(".rs") {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            out.push(SourceFile { rel, text });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_this_crate_sorted() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = collect(&root).unwrap();
+        assert!(files.iter().any(|f| f.rel == "lib.rs"));
+        assert!(files.iter().any(|f| f.rel == "net/proto.rs"));
+        assert!(files.iter().any(|f| f.rel == "lint/walk.rs"));
+        let rels: Vec<&String> = files.iter().map(|f| &f.rel).collect();
+        let mut sorted = rels.clone();
+        sorted.sort();
+        assert_eq!(rels, sorted);
+    }
+}

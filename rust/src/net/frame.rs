@@ -45,36 +45,38 @@ pub fn encode_frame(tag: u8, payload: &[u8]) -> Vec<u8> {
 /// Parse a full frame buffer back into (tag, payload).
 pub fn parse_frame(frame: &[u8]) -> Result<(u8, &[u8])> {
     ensure!(frame.len() >= HEADER_LEN, "frame shorter than header: {} bytes", frame.len());
-    let (tag, len) = parse_header(frame[..HEADER_LEN].try_into().unwrap())?;
+    let mut h = [0u8; HEADER_LEN];
+    h.iter_mut().zip(frame.iter()).for_each(|(d, s)| *d = *s);
+    let (tag, len) = parse_header(h)?;
     ensure!(
         frame.len() == HEADER_LEN + len,
         "frame length mismatch: header says {len}, got {} payload bytes",
         frame.len() - HEADER_LEN
     );
-    Ok((tag, &frame[HEADER_LEN..]))
+    let payload = frame.get(HEADER_LEN..).unwrap_or(&[]);
+    Ok((tag, payload))
 }
 
 /// Validate a header and extract (tag, payload length).
 pub fn parse_header(h: [u8; HEADER_LEN]) -> Result<(u8, usize)> {
-    ensure!(h[0] == MAGIC[0] && h[1] == MAGIC[1], "bad frame magic {:02x}{:02x}", h[0], h[1]);
+    let [m0, m1, ver, tag, l0, l1, l2, l3] = h;
+    let [g0, g1] = MAGIC;
+    ensure!(m0 == g0 && m1 == g1, "bad frame magic {m0:02x}{m1:02x}");
     ensure!(
-        h[2] == WIRE_VERSION,
-        "wire version mismatch: peer speaks v{}, this build speaks v{WIRE_VERSION}",
-        h[2]
+        ver == WIRE_VERSION,
+        "wire version mismatch: peer speaks v{ver}, this build speaks v{WIRE_VERSION}",
     );
-    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    let len = u32::from_le_bytes([l0, l1, l2, l3]) as usize;
     ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})");
-    Ok((h[3], len))
+    Ok((tag, len))
 }
 
 /// Write one frame to a byte sink; returns total bytes written.
 pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<usize> {
     ensure!(payload.len() <= MAX_FRAME, "payload of {} bytes exceeds MAX_FRAME", payload.len());
-    let mut header = [0u8; HEADER_LEN];
-    header[..2].copy_from_slice(&MAGIC);
-    header[2] = WIRE_VERSION;
-    header[3] = tag;
-    header[4..].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let [g0, g1] = MAGIC;
+    let [l0, l1, l2, l3] = (payload.len() as u32).to_le_bytes();
+    let header = [g0, g1, WIRE_VERSION, tag, l0, l1, l2, l3];
     w.write_all(&header)?;
     w.write_all(payload)?;
     w.flush()?;
@@ -166,6 +168,14 @@ impl Wr {
     }
 }
 
+/// Gather a `chunks_exact(4)` window into an array; the window length
+/// is exact by construction, so no fallible conversion is needed.
+fn le4(c: &[u8]) -> [u8; 4] {
+    let mut a = [0u8; 4];
+    a.iter_mut().zip(c.iter()).for_each(|(d, v)| *d = *v);
+    a
+}
+
 /// Bounds-checked little-endian payload reader.
 pub struct Rd<'a> {
     buf: &'a [u8],
@@ -178,35 +188,47 @@ impl<'a> Rd<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(
-            self.pos + n <= self.buf.len(),
-            "truncated payload: need {n} bytes at offset {}, have {}",
-            self.pos,
-            self.buf.len() - self.pos
-        );
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
+        match self.buf.get(self.pos..self.pos.saturating_add(n)) {
+            Some(s) if s.len() == n => {
+                self.pos += n;
+                Ok(s)
+            }
+            _ => bail!(
+                "truncated payload: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len().saturating_sub(self.pos)
+            ),
+        }
+    }
+
+    /// Fixed-width read; `take(N)` makes the slice length exact by
+    /// construction, so no fallible array conversion is needed.
+    fn take_n<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.iter_mut().zip(s.iter()).for_each(|(d, v)| *d = *v);
+        Ok(a)
     }
 
     pub fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.take_n::<1>()?;
+        Ok(b)
     }
 
     pub fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_n()?))
     }
 
     pub fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_n()?))
     }
 
     pub fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_n()?))
     }
 
     pub fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_n()?))
     }
 
     /// Counted length with a sanity cap against the remaining payload,
@@ -229,13 +251,13 @@ impl<'a> Rd<'a> {
     pub fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.counted(4)?;
         let raw = self.take(4 * n)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(le4(c))).collect())
     }
 
     pub fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.counted(4)?;
         let raw = self.take(4 * n)?;
-        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(le4(c))).collect())
     }
 
     pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {

@@ -104,6 +104,7 @@ impl TcpTransport {
             self.stream
                 .set_read_timeout(per_read)
                 .context("setting socket read timeout")?;
+            // lint:allow(no-panic-transport) -- filled < buf.len() by the loop guard
             match self.stream.read(&mut buf[filled..]) {
                 Ok(0) => bail!("peer {} closed the connection", self.peer),
                 Ok(n) => {

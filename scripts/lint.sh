@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Run the ditherlint static-analysis pass + the fail-closed model
+# manifest verifier — the same two commands CI's `lint` leg runs
+# (DESIGN.md §Static-analysis). Works from the repo root or rust/.
+#
+# usage: scripts/lint.sh [--json]
+set -euo pipefail
+
+here="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$here/rust"
+
+cargo run --release --quiet --bin ditherlint -- lint --root src "$@"
+cargo run --release --quiet --bin ditherlint -- lint-manifest "$@"
