@@ -43,6 +43,24 @@ impl Encoded {
         }
     }
 
+    /// Exact payload bytes this tensor occupies inside a serialized
+    /// gradient message — the kind discriminant and every length/count
+    /// prefix `proto::write_encoded` emits included, unlike [`bytes`],
+    /// which prices the codec payload alone.
+    ///
+    /// [`bytes`]: Encoded::bytes
+    pub fn serialized_bytes(&self) -> usize {
+        // 1 kind byte, then per variant (u32 prefixes are 4 bytes):
+        //   dense:  f32s(v)                      = 4 + 4n
+        //   csr:    u32 len + u32s(idx) + f32s(v) = 4 + (4+4k) + (4+4k)
+        //   bitmap: u32 len + mask + f32s(v)      = 4 + ceil(n/8) + (4+4k)
+        1 + match self {
+            Encoded::Dense(v) => 4 + 4 * v.len(),
+            Encoded::Csr(c) => 4 + (4 + 4 * c.indices.len()) + (4 + 4 * c.values.len()),
+            Encoded::Bitmap(b) => 4 + b.len.div_ceil(8) + (4 + 4 * b.values.len()),
+        }
+    }
+
     /// Logical (decoded) element count.
     pub fn len(&self) -> usize {
         match self {
@@ -86,11 +104,16 @@ impl EncodedGrads {
         }
     }
 
+    /// Analytic payload size of this message exactly as
+    /// `proto::write_encoded_grads` serializes it: tensor-count prefix,
+    /// per-tensor kind tags and length prefixes, loss + correct, and
+    /// the count-prefixed stats vectors.  Pinned equal to the real
+    /// serialized payload by `wire_bytes_match_serialized_payload`.
     pub fn wire_bytes(&self) -> usize {
-        // tensors + 8 bytes metadata header + stats vectors
-        self.tensors.iter().map(Encoded::bytes).sum::<usize>()
+        4 + self.tensors.iter().map(Encoded::serialized_bytes).sum::<usize>()
             + 8
-            + 4 * (self.sparsity.len() + self.max_level.len())
+            + (4 + 4 * self.sparsity.len())
+            + (4 + 4 * self.max_level.len())
     }
 }
 
@@ -239,6 +262,56 @@ mod tests {
             assert_eq!(got_kind, expect_kind, "wrong codec at crossover nnz={nnz}");
             assert_eq!(e.bytes(), expect_bytes, "byte accounting drifted at nnz={nnz}");
         }
+    }
+
+    /// Satellite regression: the analytic `wire_bytes`/`serialized_bytes`
+    /// formulas must match the byte count `proto.rs` actually puts in a
+    /// frame payload, for every `Encoded` variant — the old formula
+    /// omitted the kind tags and length prefixes and so overstated
+    /// `up_savings`.
+    #[test]
+    fn wire_bytes_match_serialized_payload() {
+        use crate::net::frame::Wr;
+        use crate::net::proto::{write_encoded, write_encoded_grads};
+        for &(n, nnz) in &[(1usize, 0usize), (64, 2), (64, 30), (64, 64), (1000, 10), (1000, 500)]
+        {
+            let t = sparse_tensor(n, nnz);
+            let variants = [
+                Encoded::Dense(t.data().to_vec()),
+                Encoded::Csr(CsrVec::encode(t.data())),
+                Encoded::Bitmap(BitmapVec::encode(t.data())),
+                Encoded::best(&t),
+            ];
+            for e in &variants {
+                let mut w = Wr::new();
+                write_encoded(&mut w, e);
+                assert_eq!(
+                    e.serialized_bytes(),
+                    w.into_vec().len(),
+                    "per-tensor accounting drifted (n={n} nnz={nnz})"
+                );
+            }
+            let msg = EncodedGrads {
+                tensors: variants.to_vec(),
+                loss: 0.5,
+                correct: 1.0,
+                sparsity: vec![0.9, 0.8],
+                max_level: vec![2.0],
+            };
+            let mut w = Wr::new();
+            write_encoded_grads(&mut w, &msg);
+            assert_eq!(
+                msg.wire_bytes(),
+                w.into_vec().len(),
+                "message accounting drifted (n={n} nnz={nnz})"
+            );
+        }
+        // the stats-vector prefixes count even when the vectors are empty
+        let empty =
+            EncodedGrads { tensors: vec![], loss: 0.0, correct: 0.0, sparsity: vec![], max_level: vec![] };
+        let mut w = Wr::new();
+        write_encoded_grads(&mut w, &empty);
+        assert_eq!(empty.wire_bytes(), w.into_vec().len());
     }
 
     /// `best` must never pick a costlier encoding than any alternative.

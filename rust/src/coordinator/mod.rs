@@ -20,11 +20,20 @@
 //! cheaper per-node compute) at constant final accuracy.  That scaling
 //! law is exactly what Fig. 5 / Fig. 6 measure — now with *measured*
 //! on-the-wire bytes next to the analytic codec accounting.
+//!
+//! The same topology also runs *asynchronously* ([`run_distributed_async`]
+//! / `serve_tcp` with [`AsyncCfg`]): the server becomes a sharded
+//! bounded-staleness parameter service (pull/push per shard, stale
+//! uploads damped by `1/(1+staleness)`, elastic worker membership)
+//! instead of a lock-step round barrier.
 
 pub mod comm;
 pub mod server;
 pub mod worker;
 
-pub use comm::{CommStats, EncodedGrads};
-pub use server::{run_distributed, serve, serve_tcp, DistConfig, DistResult};
+pub use comm::{CommStats, Encoded, EncodedGrads};
+pub use server::{
+    run_distributed, run_distributed_async, serve, serve_async, serve_tcp, AsyncCfg, DistConfig,
+    DistResult,
+};
 pub use worker::worker_loop;

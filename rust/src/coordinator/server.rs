@@ -15,19 +15,37 @@
 //!
 //! Failure semantics: a worker that neither acks (`Heartbeat`) nor
 //! uploads within `cfg.round_timeout` is dropped as a straggler — its
-//! link is retired, the averaging denominator shrinks, and the round
-//! completes with the survivors.  The run only fails when *no* worker
-//! is left.  Gradients are accumulated in node order (not arrival
-//! order), so a run's result is a deterministic function of (seeds,
-//! config) regardless of transport or scheduling — the property the
-//! channel-vs-TCP parity test pins down.
+//! link is retired *with a reasoned fault `Shutdown`* (so the worker
+//! exits immediately with the server's actual reason instead of timing
+//! out its silence deadline), the averaging denominator shrinks, and
+//! the round completes with the survivors.  The run only fails when
+//! *no* worker is left.  Gradients are accumulated in node order (not
+//! arrival order), so a run's result is a deterministic function of
+//! (seeds, config) regardless of transport or scheduling — the
+//! property the channel-vs-TCP parity test pins down.
+//!
+//! Async mode ([`serve_async`], `cfg.async_cfg` set) drops the round
+//! barrier: parameter tensors are partitioned round-robin into
+//! [`AsyncCfg::shards`] server-side shards, each with its own version
+//! counter and optimizer state, and every worker runs its own
+//! pull-compute-push loop against them.  An upload computed at shard
+//! version `v` arriving at version `w` has staleness `w - v`; it is
+//! applied damped by `1/(1+staleness)` when within
+//! [`AsyncCfg::max_staleness`] and rejected (counted, not fatal) when
+//! beyond.  Membership is elastic: workers join mid-run through the
+//! same Hello handshake (over the TCP listener's accept queue) and
+//! leave — or die — without stalling the survivors.  Gradient
+//! *content* stays seeded-deterministic per (worker, local step), but
+//! application order depends on arrival order, so async runs assert
+//! staleness invariants instead of bit-equality.
 
 use super::comm::CommStats;
 use super::worker::worker_loop;
 use crate::data::Dataset;
-use crate::metrics::{History, StepRecord};
-use crate::net::{ChannelTransport, Msg, Transport, Welcome, PROTO_VERSION};
+use crate::metrics::{AsyncStats, History, StepRecord};
+use crate::net::{AsyncJob, ChannelTransport, Msg, Transport, Welcome, PROTO_VERSION};
 use crate::optim::{Sgd, SgdConfig};
+use crate::runtime::artifact::{ModelEntry, ParamInfo};
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
@@ -55,11 +73,31 @@ pub struct DistConfig {
     /// again for the gradient upload after the ack.  Workers that miss
     /// it are dropped as stragglers.
     pub round_timeout: Duration,
+    /// `Some` switches the run to the async bounded-staleness parameter
+    /// service ([`serve_async`]); `None` keeps the synchronous rounds.
+    pub async_cfg: Option<AsyncCfg>,
 }
 
 impl DistConfig {
     /// The default straggler deadline.
     pub const DEFAULT_ROUND_TIMEOUT: Duration = Duration::from_secs(30);
+}
+
+/// Async parameter-service knobs (`--async`, `--shards`,
+/// `--max-staleness`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AsyncCfg {
+    /// Parameter shard count; clamped to `1..=n_tensors` at run time.
+    pub shards: usize,
+    /// Largest shard-version lag an upload may have and still be
+    /// applied (damped by `1/(1+staleness)`).
+    pub max_staleness: u64,
+}
+
+impl Default for AsyncCfg {
+    fn default() -> Self {
+        AsyncCfg { shards: 4, max_staleness: 8 }
+    }
 }
 
 /// Outcome of a distributed run.
@@ -73,8 +111,10 @@ pub struct DistResult {
     /// Worst-case bitwidth over nodes and rounds (Fig. 6b).
     pub max_bits: u32,
     /// Workers still connected at the end (< `nodes` if stragglers
-    /// were dropped).
+    /// were dropped; may exceed `nodes` after elastic joins).
     pub live_workers: usize,
+    /// Staleness / membership accounting — `Some` only for async runs.
+    pub async_stats: Option<AsyncStats>,
 }
 
 /// Run synchronous distributed SGD with `cfg.nodes` in-process worker
@@ -99,14 +139,7 @@ pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
     // all workers still live must see clean workers; but if serve()
     // already dropped stragglers, their threads die of a retired link —
     // that's the tolerated-drop semantics, not a run failure.
-    let mut worker_err = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => worker_err = Some(e),
-            Err(_) => worker_err = Some(anyhow::anyhow!("worker thread panicked")),
-        }
-    }
+    let worker_err = join_workers(handles);
     match (res, worker_err) {
         (Ok(r), Some(e)) if r.live_workers == cfg.nodes => {
             Err(e.context("worker failed during an otherwise clean run"))
@@ -116,19 +149,135 @@ pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
     }
 }
 
-/// Accept `cfg.nodes` TCP workers on `listener` and run the same
-/// round loop.  `data` is the server's own copy (final evaluation);
-/// remote workers regenerate their shards from `cfg.data`.
+/// Run async bounded-staleness SGD with `cfg.nodes` in-process worker
+/// threads over channel transports (no elastic joins — thread workers
+/// are all present at launch).
+pub fn run_distributed_async(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
+    let mut links: Vec<Box<dyn Transport>> = Vec::with_capacity(cfg.nodes);
+    let mut handles = Vec::with_capacity(cfg.nodes);
+    for node in 0..cfg.nodes {
+        let (server_side, worker_side) = ChannelTransport::pair(&format!("w{node}"));
+        let shard = data.train.shard(node, cfg.nodes);
+        let dir = cfg.artifacts_dir.clone();
+        handles.push(std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), &dir, Some(shard))
+        }));
+        links.push(Box::new(server_side) as Box<dyn Transport>);
+    }
+
+    let res = serve_async(links, None, data, cfg);
+
+    let worker_err = join_workers(handles);
+    match (res, worker_err) {
+        (Ok(r), Some(e)) if r.async_stats.as_ref().is_some_and(|s| s.left == 0) => {
+            Err(e.context("worker failed during an otherwise clean async run"))
+        }
+        (Ok(r), _) => Ok(r),
+        (Err(e), _) => Err(e),
+    }
+}
+
+/// Join worker threads, aggregating *every* failure (not just the last
+/// one) into a single error so multi-worker faults are all visible.
+fn join_workers(handles: Vec<std::thread::JoinHandle<Result<()>>>) -> Option<anyhow::Error> {
+    use std::fmt::Write as _;
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    for (node, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failures.push((node, format!("{e:#}"))),
+            Err(_) => failures.push((node, "worker thread panicked".into())),
+        }
+    }
+    if failures.is_empty() {
+        return None;
+    }
+    let mut msg = format!("{} worker(s) failed:", failures.len());
+    for (node, why) in &failures {
+        let _ = write!(msg, "\n  worker {node}: {why}");
+    }
+    Some(anyhow::anyhow!(msg))
+}
+
+/// Accept `cfg.nodes` TCP workers on `listener` and run the round
+/// loop — synchronous by default, the async parameter service when
+/// `cfg.async_cfg` is set (in which case the listener keeps accepting
+/// elastic joiners mid-run).  `data` is the server's own copy (final
+/// evaluation); remote workers regenerate their shards from `cfg.data`.
 pub fn serve_tcp(listener: &TcpListener, data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
     anyhow::ensure!(
         cfg.data.is_some(),
         "TCP serving requires cfg.data (workers regenerate their shard from the spec)"
     );
-    let links = crate::net::tcp::accept_workers(listener, cfg.nodes, cfg.round_timeout)?
-        .into_iter()
-        .map(Some)
-        .collect();
-    serve(links, data, cfg)
+    let links = crate::net::tcp::accept_workers(listener, cfg.nodes, cfg.round_timeout)?;
+    if cfg.async_cfg.is_some() {
+        // accept_workers left the listener nonblocking, so this poll
+        // returns None immediately when nobody is dialing in.
+        let mut accept_one = || -> Option<Box<dyn Transport>> {
+            let (stream, _) = listener.accept().ok()?;
+            stream.set_nonblocking(false).ok()?;
+            crate::net::tcp::TcpTransport::from_stream(stream)
+                .ok()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+        };
+        serve_async(links, Some(&mut accept_one), data, cfg)
+    } else {
+        serve(links.into_iter().map(Some).collect(), data, cfg)
+    }
+}
+
+/// Retire a link, folding its measured byte counters into comm.
+///
+/// `shutdown: Some((fault, reason))` sends a best-effort reasoned
+/// `Shutdown` first, so a dropped-but-alive worker exits immediately
+/// with the server's actual reason instead of waiting out its own
+/// silence deadline (the old silent `retire` left stragglers hanging
+/// for up to two minutes).
+fn retire(
+    slot: &mut Option<Box<dyn Transport>>,
+    comm: &mut CommStats,
+    shutdown: Option<(bool, &str)>,
+) {
+    if let Some(mut link) = slot.take() {
+        if let Some((fault, reason)) = shutdown {
+            let _ = link.send(&Msg::Shutdown { fault, reason: reason.into() });
+        }
+        comm.absorb_link(link.bytes_sent(), link.bytes_received());
+    }
+}
+
+/// Run one Hello admission check on a fresh link.  `Ok((platform,
+/// features))` admits; `Err(reason)` refuses — the reason is also sent
+/// to the worker as a best-effort fault `Shutdown`.  Both the sync and
+/// async serve loops admit through this one gate, with identical
+/// refusal strings (the reason-propagation tests pin them).
+fn check_hello(
+    link: &mut dyn Transport,
+    entry: &ModelEntry,
+    cfg: &DistConfig,
+) -> std::result::Result<(String, Vec<String>), String> {
+    // on failure, keep the underlying cause so the operator can tell
+    // version skew from capability gaps from timeouts
+    let refusal = match link.recv_deadline(cfg.round_timeout) {
+        Ok(Some(Msg::Hello { proto, platform, features })) => {
+            if proto != PROTO_VERSION {
+                format!("protocol v{proto} not supported (server is v{PROTO_VERSION})")
+            } else if let Some(missing) = entry.requires.iter().find(|&r| !features.contains(r)) {
+                format!(
+                    "model '{}' requires the '{missing}' layer capability, which \
+                     worker backend '{platform}' (features: {features:?}) lacks",
+                    entry.name
+                )
+            } else {
+                return Ok((platform, features));
+            }
+        }
+        Ok(Some(other)) => format!("sent tag {} instead of Hello", other.tag()),
+        Ok(None) => format!("sent nothing within {:?}", cfg.round_timeout),
+        Err(e) => format!("handshake recv failed: {e}"),
+    };
+    let _ = link.send(&Msg::Shutdown { fault: true, reason: refusal.clone() });
+    Err(refusal)
 }
 
 /// The transport-agnostic server loop: handshake, rounds, shutdown,
@@ -153,68 +302,53 @@ pub fn serve(
     let param_bytes: usize = params.iter().map(|p| 4 * p.len()).sum();
 
     let mut comm = CommStats::default();
-    // Retire a link, folding its measured byte counters into comm.
-    fn retire(slot: &mut Option<Box<dyn Transport>>, comm: &mut CommStats) {
-        if let Some(link) = slot.take() {
-            comm.absorb_link(link.bytes_sent(), link.bytes_received());
-        }
-    }
 
     // 1. Hello/Welcome handshake: admit each worker, assign node ids
     //    and the dither-seed base. Version skew and missing layer
     //    capabilities are refused HERE, with a reason, instead of
     //    surfacing as a mid-round executor error on the worker.
-    for (node, slot) in links.iter_mut().enumerate() {
-        let Some(link) = slot.as_mut() else {
-            anyhow::bail!("worker {node} link missing before the handshake");
-        };
-        // on failure, keep the underlying cause so the operator can
-        // tell version skew from capability gaps from timeouts
-        let refusal: Option<String> = match link.recv_deadline(cfg.round_timeout) {
-            Ok(Some(Msg::Hello { proto, platform, features })) => {
-                if proto != PROTO_VERSION {
-                    let reason =
-                        format!("protocol v{proto} not supported (server is v{PROTO_VERSION})");
-                    let _ = link.send(&Msg::Shutdown { reason: reason.clone() });
-                    Some(reason)
-                } else if let Some(missing) =
-                    entry.requires.iter().find(|&r| !features.contains(r))
-                {
-                    let reason = format!(
-                        "model '{}' requires the '{missing}' layer capability, which \
-                         worker backend '{platform}' (features: {features:?}) lacks",
-                        entry.name
-                    );
-                    let _ = link.send(&Msg::Shutdown { reason: reason.clone() });
-                    Some(reason)
-                } else {
+    for node in 0..links.len() {
+        let outcome = match links.get_mut(node).and_then(Option::as_mut) {
+            None => Err(format!("worker {node} link missing before the handshake")),
+            Some(link) => match check_hello(link.as_mut(), &entry, cfg) {
+                Ok((platform, features)) => {
                     if cfg.verbose {
                         println!(
                             "[dist] worker {node} joined from {} ({platform}, features {features:?})",
                             link.peer()
                         );
                     }
-                    None
+                    link.send(&Msg::Welcome(Welcome {
+                        node: node as u32,
+                        nodes: cfg.nodes as u32,
+                        rounds: cfg.rounds as u32,
+                        seed: cfg.seed,
+                        s: cfg.s,
+                        model: cfg.model.clone(),
+                        method: cfg.method.clone(),
+                        data: cfg.data.clone(),
+                        async_job: None,
+                    }))
+                    .map_err(|e| format!("welcoming worker {node} failed: {e:#}"))
+                }
+                Err(why) => {
+                    // refusal already sent to the failing worker by
+                    // check_hello
+                    Err(why)
+                }
+            },
+        };
+        if let Err(why) = outcome {
+            // don't leave already-Welcomed workers blocking on their
+            // silence deadline: tell every other link the launch died
+            let abort = format!("aborting launch: worker {node} failed the handshake: {why}");
+            for (peer, slot) in links.iter_mut().enumerate() {
+                if peer != node {
+                    retire(slot, &mut comm, Some((true, &abort)));
                 }
             }
-            Ok(Some(other)) => Some(format!("sent tag {} instead of Hello", other.tag())),
-            Ok(None) => Some(format!("sent nothing within {:?}", cfg.round_timeout)),
-            Err(e) => Some(format!("handshake recv failed: {e}")),
-        };
-        if let Some(why) = refusal {
             anyhow::bail!("worker {node} failed the handshake: {why}");
         }
-        link.send(&Msg::Welcome(Welcome {
-            node: node as u32,
-            nodes: cfg.nodes as u32,
-            rounds: cfg.rounds as u32,
-            seed: cfg.seed,
-            s: cfg.s,
-            model: cfg.model.clone(),
-            method: cfg.method.clone(),
-            data: cfg.data.clone(),
-        }))
-        .with_context(|| format!("welcoming worker {node}"))?;
     }
 
     let mut history = History::default();
@@ -237,7 +371,9 @@ pub fn serve(
                     if cfg.verbose {
                         println!("[dist] dropping worker {node} (send failed: {e})");
                     }
-                    retire(slot, &mut comm);
+                    // the link can't carry a Shutdown either — just fold
+                    // in its counters
+                    retire(slot, &mut comm, None);
                 }
             }
         }
@@ -289,7 +425,11 @@ pub fn serve(
                                     "[dist] dropping worker {node} (malformed gradient shapes)"
                                 );
                             }
-                            retire(slot, &mut comm);
+                            retire(
+                                slot,
+                                &mut comm,
+                                Some((true, "malformed gradient upload (shape mismatch)")),
+                            );
                         }
                         break;
                     }
@@ -301,7 +441,9 @@ pub fn serve(
                                 other.tag()
                             );
                         }
-                        retire(slot, &mut comm);
+                        let why =
+                            format!("protocol violation: tag {} in round {round}", other.tag());
+                        retire(slot, &mut comm, Some((true, &why)));
                         break;
                     }
                     Ok(None) => {
@@ -311,14 +453,18 @@ pub fn serve(
                                 cfg.round_timeout
                             );
                         }
-                        retire(slot, &mut comm);
+                        let why = format!(
+                            "dropped as a straggler: no upload within {:?}",
+                            cfg.round_timeout
+                        );
+                        retire(slot, &mut comm, Some((true, &why)));
                         break;
                     }
                     Err(e) => {
                         if cfg.verbose {
                             println!("[dist] dropping worker {node} (recv failed: {e})");
                         }
-                        retire(slot, &mut comm);
+                        retire(slot, &mut comm, None);
                         break;
                     }
                 }
@@ -383,11 +529,10 @@ pub fn serve(
     // 5. graceful shutdown + absorb the remaining byte counters
     let mut live_workers = 0;
     for slot in links.iter_mut() {
-        if let Some(link) = slot.as_mut() {
-            let _ = link.send(&Msg::Shutdown { reason: "run complete".into() });
+        if slot.is_some() {
             live_workers += 1;
         }
-        retire(slot, &mut comm);
+        retire(slot, &mut comm, Some((false, "run complete")));
     }
 
     // Final evaluation on the server engine.
@@ -400,7 +545,499 @@ pub fn serve(
 
     let mean_sparsity = history.mean_sparsity();
     let max_bits = history.max_bits();
-    Ok(DistResult { params, history, comm, test_acc, mean_sparsity, max_bits, live_workers })
+    Ok(DistResult {
+        params,
+        history,
+        comm,
+        test_acc,
+        mean_sparsity,
+        max_bits,
+        live_workers,
+        async_stats: None,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Async bounded-staleness parameter service
+// ---------------------------------------------------------------------
+
+/// Poll granularity of the async event loop: how long each link's
+/// `recv_deadline` waits before the sweep moves on.  Must be nonzero —
+/// a zero deadline never reads from a TCP stream.
+const ASYNC_POLL: Duration = Duration::from_millis(2);
+
+/// One admitted async worker.
+struct AsyncLink {
+    link: Box<dyn Transport>,
+    node: u32,
+}
+
+/// One server-side parameter shard: the tensors whose flat-param slot
+/// index `i` satisfies `i % n_shards == shard`, with the shard's own
+/// optimizer state and version counter (bumped once per applied
+/// upload).
+struct ShardState {
+    /// Flat-param slot index of each tensor (ascending).
+    slots: Vec<usize>,
+    infos: Vec<ParamInfo>,
+    params: Vec<Tensor>,
+    opt: Sgd,
+    version: u64,
+}
+
+impl ShardState {
+    /// Dense wire bytes of one full-shard parameter (or gradient) set.
+    fn dense_bytes(&self) -> usize {
+        self.infos.iter().map(|p| 4 * p.numel()).sum()
+    }
+}
+
+/// Partition `init` round-robin into `n_shards` shards (tensor `i`
+/// goes to shard `i % n_shards`), each with its own positional
+/// optimizer.  Round-robin (not contiguous blocks) keeps the big early
+/// weight matrices spread across shards.
+fn partition_shards(
+    infos: &[ParamInfo],
+    init: Vec<Tensor>,
+    n_shards: usize,
+    opt_cfg: SgdConfig,
+) -> Vec<ShardState> {
+    let mut buckets: Vec<(Vec<usize>, Vec<ParamInfo>, Vec<Tensor>)> =
+        (0..n_shards).map(|_| (Vec::new(), Vec::new(), Vec::new())).collect();
+    for (i, (info, tensor)) in infos.iter().zip(init).enumerate() {
+        if let Some((slots, infs, params)) = buckets.get_mut(i % n_shards) {
+            slots.push(i);
+            infs.push(info.clone());
+            params.push(tensor);
+        }
+    }
+    buckets
+        .into_iter()
+        .map(|(slots, infos, params)| {
+            let opt = Sgd::new(opt_cfg, &params).with_stat_slots(&infos);
+            ShardState { slots, infos, params, opt, version: 0 }
+        })
+        .collect()
+}
+
+/// Retire an async link, folding its byte counters into `comm` and
+/// counting the departure.  `shutdown` works like [`retire`]'s.
+fn retire_async(
+    slot: &mut Option<AsyncLink>,
+    comm: &mut CommStats,
+    stats: &mut AsyncStats,
+    shutdown: Option<(bool, &str)>,
+) {
+    if let Some(mut al) = slot.take() {
+        if let Some((fault, reason)) = shutdown {
+            let _ = al.link.send(&Msg::Shutdown { fault, reason: reason.into() });
+        }
+        comm.absorb_link(al.link.bytes_sent(), al.link.bytes_received());
+        stats.left += 1;
+    }
+}
+
+/// Admit one fresh link into an async run: Hello check (shared with
+/// the sync path) then a Welcome carrying the [`AsyncJob`].  Consumes
+/// the link; on refusal its counters are absorbed into `comm`.
+fn admit_async(
+    mut link: Box<dyn Transport>,
+    node: u32,
+    entry: &ModelEntry,
+    cfg: &DistConfig,
+    job: AsyncJob,
+    comm: &mut CommStats,
+) -> std::result::Result<AsyncLink, String> {
+    match check_hello(link.as_mut(), entry, cfg) {
+        Ok((platform, features)) => {
+            if cfg.verbose {
+                println!(
+                    "[dist async] worker {node} admitted from {} ({platform}, \
+                     features {features:?})",
+                    link.peer()
+                );
+            }
+            match link.send(&Msg::Welcome(Welcome {
+                node,
+                nodes: cfg.nodes as u32,
+                rounds: cfg.rounds as u32,
+                seed: cfg.seed,
+                s: cfg.s,
+                model: cfg.model.clone(),
+                method: cfg.method.clone(),
+                data: cfg.data.clone(),
+                async_job: Some(job),
+            })) {
+                Ok(()) => Ok(AsyncLink { link, node }),
+                Err(e) => {
+                    comm.absorb_link(link.bytes_sent(), link.bytes_received());
+                    Err(format!("welcoming worker {node} failed: {e:#}"))
+                }
+            }
+        }
+        Err(why) => {
+            comm.absorb_link(link.bytes_sent(), link.bytes_received());
+            Err(why)
+        }
+    }
+}
+
+/// The async bounded-staleness server loop.
+///
+/// Each worker runs pull-compute-push against versioned parameter
+/// shards; an upload at staleness `d = shard.version - pushed.version`
+/// is applied damped by `1/(1+d)` when `d <= max_staleness`, rejected
+/// (counted) otherwise, and a *future* version is a protocol violation
+/// that drops the worker.  A push to the last shard closes one global
+/// step; the run ends after `cfg.rounds` steps.  `joins`, when
+/// present, is polled for elastic mid-run joiners (serve_tcp wires it
+/// to the listener's nonblocking accept); workers may also leave at
+/// any time without stalling the survivors.
+pub fn serve_async(
+    links: Vec<Box<dyn Transport>>,
+    mut joins: Option<&mut dyn FnMut() -> Option<Box<dyn Transport>>>,
+    data: &Dataset,
+    cfg: &DistConfig,
+) -> Result<DistResult> {
+    anyhow::ensure!(
+        !links.is_empty() || joins.is_some(),
+        "no worker links and no join channel: the async run cannot make progress"
+    );
+    let acfg = cfg.async_cfg.unwrap_or_default();
+    let engine = Engine::load(&cfg.artifacts_dir).context("server loading artifacts")?;
+    let entry = engine.manifest.model(&cfg.model)?.clone();
+    let init = engine.init_params(&cfg.model, cfg.seed as u32)?;
+    let n_shards = acfg.shards.max(1).min(entry.params.len().max(1));
+    let job = AsyncJob { shards: n_shards as u32, max_staleness: acfg.max_staleness as u32 };
+    let mut shards = partition_shards(&entry.params, init, n_shards, cfg.opt);
+
+    let mut stats = AsyncStats::new(acfg.max_staleness);
+    let mut comm = CommStats::default();
+    let mut history = History::default();
+
+    // Launch admissions.  Refusals here are tolerated (absorbed, not
+    // fatal) as long as somebody can still make progress.
+    let mut slots: Vec<Option<AsyncLink>> = Vec::new();
+    let mut next_node: u32 = 0;
+    for link in links {
+        match admit_async(link, next_node, &entry, cfg, job, &mut comm) {
+            Ok(al) => {
+                slots.push(Some(al));
+                next_node += 1;
+            }
+            Err(why) => {
+                if cfg.verbose {
+                    println!("[dist async] refused a worker at launch: {why}");
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        !slots.is_empty() || joins.is_some(),
+        "no worker admitted and no join channel: the async run cannot make progress"
+    );
+
+    let target = cfg.rounds;
+    let mut completed = 0usize;
+    // Stall detection without wall clocks (coordinator/ is in the
+    // determinism lint scope): one idle sweep visits every link for
+    // ASYNC_POLL, so round_timeout/ASYNC_POLL quiet sweeps is at least
+    // a round_timeout of silence.
+    let idle_limit = (cfg.round_timeout.as_millis() / ASYNC_POLL.as_millis().max(1)).max(1);
+    let mut idle_sweeps: u128 = 0;
+    // A pipelined worker queues at most one pull and one push per shard
+    // plus a heartbeat or two; drain that much per visit so one chatty
+    // link can't monopolize the sweep.
+    let burst = 2 * n_shards + 2;
+
+    'serve: while completed < target {
+        // elastic joins: drain the accept queue
+        if let Some(accept) = joins.as_mut() {
+            while let Some(link) = accept() {
+                match admit_async(link, next_node, &entry, cfg, job, &mut comm) {
+                    Ok(al) => {
+                        if cfg.verbose {
+                            println!(
+                                "[dist async] worker {} joined mid-run from {}",
+                                al.node,
+                                al.link.peer()
+                            );
+                        }
+                        slots.push(Some(al));
+                        next_node += 1;
+                        stats.joined += 1;
+                        idle_sweeps = 0;
+                    }
+                    Err(why) => {
+                        if cfg.verbose {
+                            println!("[dist async] refused a mid-run joiner: {why}");
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut traffic = false;
+        for i in 0..slots.len() {
+            'link: for _ in 0..burst {
+                let (node, outcome) = match slots.get_mut(i).and_then(Option::as_mut) {
+                    Some(st) => (st.node, st.link.recv_deadline(ASYNC_POLL)),
+                    None => break 'link,
+                };
+                match outcome {
+                    Ok(Some(Msg::PullParams { shard, .. })) => {
+                        traffic = true;
+                        let Some(sh) = shards.get(shard as usize) else {
+                            let why = format!("pulled nonexistent shard {shard} (of {n_shards})");
+                            if let Some(slot) = slots.get_mut(i) {
+                                retire_async(slot, &mut comm, &mut stats, Some((true, &why)));
+                            }
+                            break 'link;
+                        };
+                        let reply = Msg::ShardParams {
+                            shard,
+                            version: sh.version,
+                            tensors: sh.params.iter().map(|p| p.data().to_vec()).collect(),
+                        };
+                        let down = sh.dense_bytes();
+                        let Some(st) = slots.get_mut(i).and_then(Option::as_mut) else {
+                            break 'link;
+                        };
+                        match st.link.send(&reply) {
+                            Ok(()) => comm.record_down(down),
+                            Err(e) => {
+                                if cfg.verbose {
+                                    println!("[dist async] worker {node} left (send failed: {e})");
+                                }
+                                if let Some(slot) = slots.get_mut(i) {
+                                    retire_async(slot, &mut comm, &mut stats, None);
+                                }
+                                break 'link;
+                            }
+                        }
+                    }
+                    Ok(Some(Msg::PushGrads { shard, version, grads, .. })) => {
+                        traffic = true;
+                        let sidx = shard as usize;
+                        let verdict: std::result::Result<(), String> = match shards.get_mut(sidx)
+                        {
+                            None => {
+                                Err(format!("pushed to nonexistent shard {shard} (of {n_shards})"))
+                            }
+                            Some(sh) => {
+                                let well_formed = grads.tensors.len() == sh.infos.len()
+                                    && grads
+                                        .tensors
+                                        .iter()
+                                        .zip(sh.infos.iter())
+                                        .all(|(e, p)| e.len() == p.numel());
+                                if !well_formed {
+                                    Err("malformed gradient upload (shape mismatch)".into())
+                                } else if version > sh.version {
+                                    Err(format!(
+                                        "upload version {version} is ahead of shard {shard} \
+                                         (at {})",
+                                        sh.version
+                                    ))
+                                } else {
+                                    comm.record_up(&grads, sh.dense_bytes());
+                                    let staleness = sh.version - version;
+                                    if staleness > acfg.max_staleness {
+                                        stats.record_rejected();
+                                    } else {
+                                        let damp = 1.0 / (1.0 + staleness as f32);
+                                        let dec: Vec<Tensor> = grads
+                                            .tensors
+                                            .iter()
+                                            .zip(sh.infos.iter())
+                                            .map(|(enc, info)| {
+                                                let mut g = enc.decode(&info.shape);
+                                                // BN running stats are
+                                                // assigned, never damped
+                                                if info.kind.trainable() && staleness > 0 {
+                                                    g.scale(damp);
+                                                }
+                                                g
+                                            })
+                                            .collect();
+                                        sh.opt.apply(&mut sh.params, &dec);
+                                        sh.version += 1;
+                                        stats.record_applied(staleness);
+                                    }
+                                    // a push to the last shard closes
+                                    // one global step (applied or not —
+                                    // the worker finished a batch)
+                                    if sidx + 1 == n_shards {
+                                        let ms = if grads.sparsity.is_empty() {
+                                            0.0
+                                        } else {
+                                            grads.sparsity.iter().sum::<f32>()
+                                                / grads.sparsity.len() as f32
+                                        };
+                                        let bits = grads
+                                            .max_level
+                                            .iter()
+                                            .map(|&l| crate::util::math::bitwidth_for_level(l))
+                                            .max()
+                                            .unwrap_or(0);
+                                        history.push(StepRecord {
+                                            step: completed,
+                                            loss: grads.loss,
+                                            acc: grads.correct,
+                                            sparsity: ms,
+                                            bits,
+                                            layer_sparsity: vec![],
+                                        });
+                                        comm.rounds += 1;
+                                        completed += 1;
+                                    }
+                                    Ok(())
+                                }
+                            }
+                        };
+                        match verdict {
+                            Ok(()) => {
+                                if completed >= target {
+                                    break 'serve;
+                                }
+                                if cfg.verbose
+                                    && sidx + 1 == n_shards
+                                    && completed > 0
+                                    && completed % 100 == 0
+                                {
+                                    println!(
+                                        "[dist async x{}] step {completed}/{target}: applied {} \
+                                         rejected {} max-staleness {}",
+                                        cfg.nodes,
+                                        stats.applied,
+                                        stats.rejected,
+                                        stats.max_applied_staleness
+                                    );
+                                }
+                            }
+                            Err(why) => {
+                                if cfg.verbose {
+                                    println!("[dist async] dropping worker {node}: {why}");
+                                }
+                                if let Some(slot) = slots.get_mut(i) {
+                                    retire_async(slot, &mut comm, &mut stats, Some((true, &why)));
+                                }
+                                break 'link;
+                            }
+                        }
+                    }
+                    Ok(Some(Msg::Heartbeat { .. })) => {
+                        traffic = true;
+                    }
+                    Ok(Some(Msg::Shutdown { .. })) => {
+                        // the worker is announcing its own departure
+                        if cfg.verbose {
+                            println!("[dist async] worker {node} left voluntarily");
+                        }
+                        if let Some(slot) = slots.get_mut(i) {
+                            retire_async(slot, &mut comm, &mut stats, None);
+                        }
+                        break 'link;
+                    }
+                    Ok(Some(other)) => {
+                        let why = format!(
+                            "protocol violation: tag {} during an async run",
+                            other.tag()
+                        );
+                        if cfg.verbose {
+                            println!("[dist async] dropping worker {node}: {why}");
+                        }
+                        if let Some(slot) = slots.get_mut(i) {
+                            retire_async(slot, &mut comm, &mut stats, Some((true, &why)));
+                        }
+                        break 'link;
+                    }
+                    Ok(None) => break 'link,
+                    Err(e) => {
+                        if cfg.verbose {
+                            println!("[dist async] worker {node} left (recv failed: {e})");
+                        }
+                        if let Some(slot) = slots.get_mut(i) {
+                            retire_async(slot, &mut comm, &mut stats, None);
+                        }
+                        break 'link;
+                    }
+                }
+            }
+        }
+
+        if traffic {
+            idle_sweeps = 0;
+        } else {
+            let live = slots.iter().flatten().count();
+            anyhow::ensure!(
+                live > 0 || joins.is_some(),
+                "step {completed}/{target}: every worker is gone"
+            );
+            if live == 0 {
+                // nothing to poll: pace the join-only wait explicitly
+                std::thread::sleep(ASYNC_POLL);
+            }
+            idle_sweeps += 1;
+            anyhow::ensure!(
+                idle_sweeps < idle_limit,
+                "async run stalled at step {completed}/{target}: no worker traffic within ~{:?}",
+                cfg.round_timeout
+            );
+        }
+    }
+
+    // Graceful shutdown: reasoned clean Shutdown to every survivor
+    // (these are not departures, so don't count them in stats.left).
+    let mut live_workers = 0;
+    for slot in slots.iter_mut() {
+        if let Some(mut al) = slot.take() {
+            let _ = al
+                .link
+                .send(&Msg::Shutdown { fault: false, reason: "run complete".into() });
+            comm.absorb_link(al.link.bytes_sent(), al.link.bytes_received());
+            live_workers += 1;
+        }
+    }
+
+    // Reassemble the flat parameter list from the shards.
+    let mut flat: Vec<Option<Tensor>> = Vec::new();
+    flat.resize_with(entry.params.len(), || None);
+    for sh in shards.drain(..) {
+        for (slot, tensor) in sh.slots.into_iter().zip(sh.params) {
+            if let Some(dst) = flat.get_mut(slot) {
+                *dst = Some(tensor);
+            }
+        }
+    }
+    let params: Vec<Tensor> = flat.into_iter().flatten().collect();
+    anyhow::ensure!(
+        params.len() == entry.params.len(),
+        "shard reassembly produced {} of {} tensors",
+        params.len(),
+        entry.params.len()
+    );
+
+    // Final evaluation, identical to the sync path.
+    let session = engine.training_session(&cfg.model, "baseline", engine.manifest.train_batch)?;
+    let eb = session.entry.eval_batch;
+    let usable = (data.test.len() / eb) * eb;
+    anyhow::ensure!(usable > 0, "test split smaller than eval batch");
+    let eval = session.eval_dataset(&params, &data.test.images, &data.test.labels)?;
+    let test_acc = eval.correct / usable as f32;
+
+    let mean_sparsity = history.mean_sparsity();
+    let max_bits = history.max_bits();
+    Ok(DistResult {
+        params,
+        history,
+        comm,
+        test_acc,
+        mean_sparsity,
+        max_bits,
+        live_workers,
+        async_stats: Some(stats),
+    })
 }
 
 #[cfg(test)]
@@ -421,6 +1058,7 @@ mod tests {
             verbose: false,
             data: None,
             round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+            async_cfg: None,
         }
     }
 
@@ -445,5 +1083,57 @@ mod tests {
         let ds = crate::data::build("digits", 8, 8, 1);
         let err = serve_tcp(&listener, &ds, &cfg(1, 1)).unwrap_err();
         assert!(err.to_string().contains("requires cfg.data"), "{err}");
+    }
+
+    #[test]
+    fn partition_round_robins_and_reassembles() {
+        use crate::runtime::artifact::{ParamInfo, ParamKind};
+        let infos: Vec<ParamInfo> = (0..5)
+            .map(|i| ParamInfo {
+                name: format!("p{i}"),
+                shape: vec![i + 1],
+                kind: ParamKind::Weight,
+            })
+            .collect();
+        let init: Vec<Tensor> =
+            infos.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        let shards = partition_shards(&infos, init, 2, SgdConfig::plain(0.1));
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].slots, vec![0, 2, 4]);
+        assert_eq!(shards[1].slots, vec![1, 3]);
+        for sh in &shards {
+            assert_eq!(sh.version, 0);
+            assert_eq!(sh.infos.len(), sh.params.len());
+            for (info, p) in sh.infos.iter().zip(&sh.params) {
+                assert_eq!(info.numel(), p.len());
+            }
+        }
+        // round-robin covers every slot exactly once
+        let mut seen: Vec<usize> = shards.iter().flat_map(|s| s.slots.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn join_workers_aggregates_every_failure() {
+        let handles = vec![
+            std::thread::spawn(|| Ok(())),
+            std::thread::spawn(|| Err(anyhow::anyhow!("first fault"))),
+            std::thread::spawn(|| Err(anyhow::anyhow!("second fault"))),
+        ];
+        let err = join_workers(handles).expect("two failures must surface");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("2 worker(s) failed"), "{msg}");
+        assert!(msg.contains("worker 1: first fault"), "{msg}");
+        assert!(msg.contains("worker 2: second fault"), "{msg}");
+    }
+
+    #[test]
+    fn serve_async_without_workers_or_joins_bails() {
+        let ds = crate::data::build("digits", 8, 8, 1);
+        let mut c = cfg(0, 1);
+        c.async_cfg = Some(AsyncCfg::default());
+        let err = serve_async(vec![], None, &ds, &c).unwrap_err();
+        assert!(err.to_string().contains("cannot make progress"), "{err}");
     }
 }

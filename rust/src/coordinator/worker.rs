@@ -17,9 +17,18 @@
 //! [`DataSpec`] in the Welcome (procedural datasets are seeds, not
 //! files); in-process workers receive their shard directly.
 //!
+//! When the Welcome carries an [`AsyncJob`](crate::net::AsyncJob) the
+//! worker switches to the async pull-compute-push loop instead: pull
+//! every parameter shard (remembering each shard's version), compute
+//! one batch-1 dithered gradient, split it per shard and push each
+//! piece tagged with the version it was computed against — repeating
+//! until the server says `Shutdown`.  A clean (`fault: false`)
+//! shutdown is a normal exit; a fault shutdown surfaces the server's
+//! reason in this worker's error.
+//!
 //! [`DataSpec`]: crate::data::DataSpec
 
-use super::comm::EncodedGrads;
+use super::comm::{Encoded, EncodedGrads};
 use crate::data::Split;
 use crate::net::{Msg, Transport, Welcome, PROTO_VERSION};
 use crate::runtime::Engine;
@@ -58,7 +67,7 @@ pub fn worker_loop(
         .ok_or_else(|| anyhow::anyhow!("server went silent during handshake"))?;
     let wc: Welcome = match admission {
         Msg::Welcome(wc) => wc,
-        Msg::Shutdown { reason } => bail!("server refused admission: {reason}"),
+        Msg::Shutdown { reason, .. } => bail!("server refused admission: {reason}"),
         other => bail!("expected Welcome, got tag {}", other.tag()),
     };
 
@@ -70,7 +79,10 @@ pub fn worker_loop(
             let spec = wc.data.as_ref().ok_or_else(|| {
                 anyhow::anyhow!("Welcome carried no dataset spec and no local shard exists")
             })?;
-            spec.build().train.shard(wc.node as usize, wc.nodes as usize)
+            // elastic joiners can be assigned node ids >= nodes; wrap
+            // so every worker still gets a valid (shared) slice
+            let denom = (wc.nodes as usize).max(1);
+            spec.build().train.shard((wc.node as usize) % denom, denom)
         }
     };
     ensure!(!shard.is_empty(), "worker {} got an empty data shard", wc.node);
@@ -78,6 +90,111 @@ pub fn worker_loop(
     let dim = session.input_numel();
     let mut rng = Rng::new(wc.seed ^ (wc.node as u64).wrapping_mul(0x9E3779B97F4A7C15));
     let mut x = vec![0.0f32; dim];
+
+    if let Some(job) = wc.async_job {
+        // -- async pull-compute-push loop ------------------------------
+        let shards = job.shards.max(1) as usize;
+        let mut local_step: usize = 0;
+        loop {
+            // pull every shard (the server replies with its current
+            // version; pushes below carry these versions back)
+            for sh in 0..shards {
+                if link.send(&Msg::PullParams { node: wc.node, shard: sh as u32 }).is_err() {
+                    return Ok(()); // server gone after its clean shutdown
+                }
+            }
+            let mut versions: Vec<u64> = vec![0; shards];
+            let mut flats: Vec<Option<Vec<Vec<f32>>>> = (0..shards).map(|_| None).collect();
+            let mut received = 0usize;
+            while received < shards {
+                let msg = link.recv_deadline(SERVER_SILENCE_TIMEOUT)?.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "server {} silent for {:?} awaiting shard params",
+                        link.peer(),
+                        SERVER_SILENCE_TIMEOUT
+                    )
+                })?;
+                match msg {
+                    Msg::ShardParams { shard, version, tensors } => {
+                        let slot = flats.get_mut(shard as usize).ok_or_else(|| {
+                            anyhow::anyhow!("server sent out-of-range shard {shard}")
+                        })?;
+                        ensure!(slot.is_none(), "server sent shard {shard} twice in one pull");
+                        *slot = Some(tensors);
+                        if let Some(v) = versions.get_mut(shard as usize) {
+                            *v = version;
+                        }
+                        received += 1;
+                    }
+                    Msg::Shutdown { fault: false, .. } => return Ok(()),
+                    Msg::Shutdown { fault: true, reason } => {
+                        bail!("server dropped this worker: {reason}")
+                    }
+                    other => bail!("expected ShardParams, got tag {}", other.tag()),
+                }
+            }
+
+            // reassemble the flat param list (tensor i lives at shard
+            // i % shards, in slot-ascending order within its shard)
+            let mut iters: Vec<_> =
+                flats.into_iter().map(|f| f.unwrap_or_default().into_iter()).collect();
+            let mut params: Vec<Tensor> = Vec::with_capacity(entry.n_params());
+            for (i, info) in entry.params.iter().enumerate() {
+                let v = iters.get_mut(i % shards).and_then(|it| it.next()).ok_or_else(|| {
+                    anyhow::anyhow!("shard stream ran out at param '{}'", info.name)
+                })?;
+                ensure!(
+                    v.len() == info.numel(),
+                    "param '{}' length {} mismatches shape {:?}",
+                    info.name,
+                    v.len(),
+                    info.shape
+                );
+                params.push(Tensor::from_vec(&info.shape, v));
+            }
+
+            // one batch-1 dithered step, seeded by (node, local step)
+            let idx = rng.below(shard.len());
+            shard.example(idx, &mut x);
+            let label = shard.labels.get(idx).copied().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "shard example {idx} out of range ({} labels)",
+                    shard.labels.len()
+                )
+            })?;
+            let y = [label];
+            let seed = node_round_seed(wc.node as usize, local_step, wc.seed);
+            let out = session.grad(&params, &x, &y, seed, wc.s)?;
+            let EncodedGrads { tensors, loss, correct, sparsity, max_level } =
+                EncodedGrads::encode(&out.grads, out.loss, out.correct, out.sparsity, out.max_level);
+
+            // split per shard, preserving each shard's slot order
+            let mut per_shard: Vec<Vec<Encoded>> = (0..shards).map(|_| Vec::new()).collect();
+            for (i, t) in tensors.into_iter().enumerate() {
+                if let Some(bucket) = per_shard.get_mut(i % shards) {
+                    bucket.push(t);
+                }
+            }
+            for (sh, bucket) in per_shard.into_iter().enumerate() {
+                let push = Msg::PushGrads {
+                    node: wc.node,
+                    shard: sh as u32,
+                    version: versions.get(sh).copied().unwrap_or(0),
+                    grads: EncodedGrads {
+                        tensors: bucket,
+                        loss,
+                        correct,
+                        sparsity: sparsity.clone(),
+                        max_level: max_level.clone(),
+                    },
+                };
+                if link.send(&push).is_err() {
+                    return Ok(()); // server gone
+                }
+            }
+            local_step += 1;
+        }
+    }
 
     loop {
         let msg = match link.recv_deadline(SERVER_SILENCE_TIMEOUT)? {
@@ -89,7 +206,10 @@ pub fn worker_loop(
             ),
         };
         match msg {
-            Msg::Shutdown { .. } => break,
+            Msg::Shutdown { fault: false, .. } => break,
+            Msg::Shutdown { fault: true, reason } => {
+                bail!("server dropped this worker: {reason}")
+            }
             Msg::Params { round, tensors } => {
                 // Ack the round before computing: the server treats the
                 // heartbeat as "alive, working" and grants the full
@@ -199,8 +319,73 @@ mod tests {
             worker_loop(Box::new(worker_side), "/definitely/not/artifacts", None)
         });
         let _ = server_side.recv().unwrap(); // Hello
-        server_side.send(&Msg::Shutdown { reason: "version mismatch".into() }).unwrap();
+        server_side
+            .send(&Msg::Shutdown { fault: true, reason: "version mismatch".into() })
+            .unwrap();
         let err = h.join().unwrap().unwrap_err();
         assert!(err.to_string().contains("version mismatch"), "{err}");
+    }
+
+    fn welcome(async_job: Option<crate::net::AsyncJob>) -> Welcome {
+        Welcome {
+            node: 0,
+            nodes: 1,
+            rounds: 4,
+            seed: 7,
+            s: 2.0,
+            model: "mlp128".into(),
+            method: "dithered".into(),
+            data: None,
+            async_job,
+        }
+    }
+
+    #[test]
+    fn worker_surfaces_fault_shutdown_reason_mid_run() {
+        let shard = crate::data::build("digits", 64, 16, 1).train.shard(0, 1);
+        let (mut server_side, worker_side) = ChannelTransport::pair("w");
+        let h = std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), "/definitely/not/artifacts", Some(shard))
+        });
+        let _ = server_side.recv().unwrap(); // Hello
+        server_side.send(&Msg::Welcome(welcome(None))).unwrap();
+        server_side
+            .send(&Msg::Shutdown {
+                fault: true,
+                reason: "dropped as a straggler: no upload within 1s".into(),
+            })
+            .unwrap();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("server dropped this worker"), "{err}");
+        assert!(err.to_string().contains("dropped as a straggler"), "{err}");
+    }
+
+    #[test]
+    fn async_worker_pulls_every_shard_then_exits_cleanly() {
+        use crate::net::AsyncJob;
+        let shard = crate::data::build("digits", 64, 16, 1).train.shard(0, 1);
+        let (mut server_side, worker_side) = ChannelTransport::pair("w");
+        let h = std::thread::spawn(move || {
+            worker_loop(Box::new(worker_side), "/definitely/not/artifacts", Some(shard))
+        });
+        let _ = server_side.recv().unwrap(); // Hello
+        server_side
+            .send(&Msg::Welcome(welcome(Some(AsyncJob { shards: 3, max_staleness: 4 }))))
+            .unwrap();
+        // the async worker's first move is one pull per shard, in order
+        for want in 0..3u32 {
+            match server_side.recv().unwrap() {
+                Msg::PullParams { node, shard } => {
+                    assert_eq!(node, 0);
+                    assert_eq!(shard, want);
+                }
+                other => panic!("expected PullParams, got tag {}", other.tag()),
+            }
+        }
+        // a clean shutdown while it waits for shard params is a normal exit
+        server_side
+            .send(&Msg::Shutdown { fault: false, reason: "run complete".into() })
+            .unwrap();
+        h.join().unwrap().unwrap();
     }
 }

@@ -7,8 +7,13 @@
 //!   Fig. 6a — per-node delta_z sparsity grows with N,
 //!   Fig. 6b — worst-case bitwidth shrinks with N,
 //!   plus communication savings from sparse batch-1 weight gradients.
+//!
+//! Each point also re-runs the same config through the async
+//! bounded-staleness parameter service and reports both throughputs
+//! (completed steps per wall-clock second) side by side — the async
+//! column is where dropping the round barrier pays off as N grows.
 
-use crate::coordinator::{run_distributed, DistConfig};
+use crate::coordinator::{run_distributed, run_distributed_async, AsyncCfg, DistConfig};
 use crate::data;
 use crate::metrics::Table;
 use crate::optim::SgdConfig;
@@ -36,6 +41,15 @@ pub struct DistPoint {
     pub wire_up_per_round: f64,
     /// Eq. 12 per-node compute ratio at the measured density.
     pub compute_ratio: f64,
+    /// Synchronous rounds completed per wall-clock second.
+    pub rounds_per_sec: f64,
+    /// Async steps completed per wall-clock second (same config run
+    /// through the bounded-staleness parameter service).
+    pub async_rounds_per_sec: f64,
+    /// Final accuracy of the async run (sanity: should track `acc`).
+    pub async_acc: f32,
+    /// Measured upstream wire bytes per async step (all nodes).
+    pub async_wire_up_per_round: f64,
 }
 
 /// The paper grows s with N; this schedule spans its Fig. 5 x-axis.
@@ -82,8 +96,20 @@ pub fn run(
             verbose,
             data: None,
             round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+            async_cfg: None,
         };
+        // wall-clock timing is legal here (experiments/ is outside the
+        // determinism lint scope) — throughput is the figure's point
+        let sync_started = std::time::Instant::now();
         let res = run_distributed(&ds, &cfg)?;
+        let sync_elapsed = sync_started.elapsed().as_secs_f64().max(1e-9);
+
+        let mut acfg = cfg.clone();
+        acfg.async_cfg = Some(AsyncCfg::default());
+        let async_started = std::time::Instant::now();
+        let ares = run_distributed_async(&ds, &acfg)?;
+        let async_elapsed = async_started.elapsed().as_secs_f64().max(1e-9);
+
         // weight rows m for Eq. 12: use the largest layer's output dim
         let m = entry.params.iter().map(|p| *p.shape.last().unwrap_or(&1)).max().unwrap_or(1);
         let p = DistPoint {
@@ -96,11 +122,16 @@ pub fn run(
             comm_savings_measured: res.comm.measured_up_savings(),
             wire_up_per_round: res.comm.wire_up_per_round(),
             compute_ratio: crate::costmodel::savings_ratio(m, 1.0 - res.mean_sparsity as f64),
+            rounds_per_sec: res.comm.rounds as f64 / sync_elapsed,
+            async_rounds_per_sec: ares.comm.rounds as f64 / async_elapsed,
+            async_acc: ares.test_acc,
+            async_wire_up_per_round: ares.comm.wire_up_per_round(),
         };
         if verbose {
             println!(
                 "  N={:<3} s={:<4} acc {:.4} sparsity {:.3} bits {} comm x{:.1} \
-                 (measured x{:.1}, {:.0} wire B/round) compute ratio {:.3}",
+                 (measured x{:.1}, {:.0} wire B/round) compute ratio {:.3} | \
+                 sync {:.1} rounds/s vs async {:.1} steps/s ({:.0} wire B/step, acc {:.4})",
                 p.nodes,
                 p.s,
                 p.acc,
@@ -109,7 +140,11 @@ pub fn run(
                 p.comm_savings,
                 p.comm_savings_measured,
                 p.wire_up_per_round,
-                p.compute_ratio
+                p.compute_ratio,
+                p.rounds_per_sec,
+                p.async_rounds_per_sec,
+                p.async_wire_up_per_round,
+                p.async_acc,
             );
         }
         points.push(p);
@@ -121,6 +156,7 @@ pub fn render(points: &[DistPoint]) -> String {
     let mut t = Table::new(&[
         "nodes", "s", "acc% (Fig 5)", "sparsity% (Fig 6a)", "max bits (Fig 6b)",
         "comm savings", "measured (wire)", "wire B/round", "Eq12 compute ratio",
+        "sync rounds/s", "async steps/s", "async acc%", "async wire B/step",
     ]);
     for p in points {
         t.row(&[
@@ -133,6 +169,10 @@ pub fn render(points: &[DistPoint]) -> String {
             format!("x{:.1}", p.comm_savings_measured),
             format!("{:.0}", p.wire_up_per_round),
             format!("{:.3}", p.compute_ratio),
+            format!("{:.1}", p.rounds_per_sec),
+            format!("{:.1}", p.async_rounds_per_sec),
+            format!("{:.2}", p.async_acc * 100.0),
+            format!("{:.0}", p.async_wire_up_per_round),
         ]);
     }
     t.render()

@@ -18,7 +18,7 @@
 //! same commands run the compiled HLO instead.
 
 use anyhow::Result;
-use ditherprop::coordinator::{run_distributed, DistConfig};
+use ditherprop::coordinator::{run_distributed, run_distributed_async, AsyncCfg, DistConfig};
 use ditherprop::data;
 use ditherprop::experiments::{self, artifacts_dir, Scale};
 use ditherprop::optim::SgdConfig;
@@ -39,10 +39,13 @@ COMMANDS
   distributed   synchronous-SGD parameter server (paper §4.3),
                   single process, worker threads over channel transports
                   --model M --nodes N --rounds R --s S --method ...
+                  --async [--shards K --max-staleness D]  bounded-staleness
+                  async service instead of lock-step rounds
   dist-server   same loop over real TCP: bind, accept N dist-workers,
                   train, report analytic + measured wire bytes
                   --bind HOST:PORT (default 127.0.0.1:7461) --model M
                   --nodes N --rounds R --s S --method ... --timeout SECS
+                  --async keeps accepting elastic joiners mid-run
   dist-worker   one worker process: connect to a dist-server and work
                   rounds until shutdown
                   --connect HOST:PORT [--artifacts DIR]
@@ -175,6 +178,14 @@ fn dist_setup(args: &Args) -> Result<(ditherprop::data::Dataset, DistConfig)> {
         verbose: true,
         data: Some(spec),
         round_timeout: std::time::Duration::from_secs(args.u64_or("timeout", 30)),
+        async_cfg: if args.has("async") {
+            Some(AsyncCfg {
+                shards: args.usize_or("shards", 4),
+                max_staleness: args.u64_or("max-staleness", 8),
+            })
+        } else {
+            None
+        },
     };
     Ok((ds, cfg))
 }
@@ -194,11 +205,29 @@ fn print_dist_summary(res: &ditherprop::coordinator::DistResult) {
         res.comm.wire_up_bytes,
         res.comm.wire_up_per_round(),
     );
+    if let Some(st) = &res.async_stats {
+        println!(
+            "async: applied {} rejected {} (apply rate {:.3}) | staleness mean {:.2} max {} \
+             hist {:?} | joined {} left {}",
+            st.applied,
+            st.rejected,
+            st.apply_rate(),
+            st.mean_staleness(),
+            st.max_applied_staleness,
+            st.staleness_hist,
+            st.joined,
+            st.left,
+        );
+    }
 }
 
 fn cmd_distributed(args: &Args) -> Result<()> {
     let (ds, cfg) = dist_setup(args)?;
-    let res = run_distributed(&ds, &cfg)?;
+    let res = if cfg.async_cfg.is_some() {
+        run_distributed_async(&ds, &cfg)?
+    } else {
+        run_distributed(&ds, &cfg)?
+    };
     print_dist_summary(&res);
     Ok(())
 }

@@ -91,6 +91,74 @@ impl History {
     }
 }
 
+/// Async parameter-service telemetry: bounded-staleness accounting and
+/// elastic-membership counters for one run (`serve_async`).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct AsyncStats {
+    /// Gradient uploads applied (possibly staleness-damped).
+    pub applied: u64,
+    /// Uploads rejected for exceeding the staleness bound.
+    pub rejected: u64,
+    /// `staleness_hist[s]` = applied uploads at staleness `s`; length
+    /// `max_staleness + 1` (rejected uploads are not bucketed).
+    pub staleness_hist: Vec<u64>,
+    /// Largest staleness ever applied (must stay <= the bound).
+    pub max_applied_staleness: u64,
+    /// Workers admitted after the run started (elastic joins).
+    pub joined: u64,
+    /// Workers that left or were dropped mid-run.
+    pub left: u64,
+}
+
+impl AsyncStats {
+    pub fn new(max_staleness: u64) -> Self {
+        AsyncStats {
+            staleness_hist: vec![0; (max_staleness + 1) as usize],
+            ..AsyncStats::default()
+        }
+    }
+
+    pub fn record_applied(&mut self, staleness: u64) {
+        self.applied += 1;
+        self.max_applied_staleness = self.max_applied_staleness.max(staleness);
+        if let Some(bucket) = self.staleness_hist.get_mut(staleness as usize) {
+            *bucket += 1;
+        }
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Fraction of received uploads that were applied (1.0 when no
+    /// uploads arrived at all — nothing was lost).
+    pub fn apply_rate(&self) -> f64 {
+        let total = self.applied + self.rejected;
+        if total == 0 {
+            return 1.0;
+        }
+        self.applied as f64 / total as f64
+    }
+
+    /// Mean staleness over applied uploads.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.applied == 0 {
+            return 0.0;
+        }
+        let weighted: u64 =
+            self.staleness_hist.iter().enumerate().map(|(s, &c)| s as u64 * c).sum();
+        weighted as f64 / self.applied as f64
+    }
+
+    /// True iff every applied upload respected `bound` — the invariant
+    /// the bounded-staleness tests pin.
+    pub fn bound_respected(&self, bound: u64) -> bool {
+        self.max_applied_staleness <= bound
+            && self.staleness_hist.iter().skip(bound as usize + 1).all(|&c| c == 0)
+            && self.staleness_hist.iter().sum::<u64>() == self.applied
+    }
+}
+
 /// Fixed-width ASCII table writer for bench/experiment output.
 pub struct Table {
     headers: Vec<String>,
@@ -182,6 +250,26 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| model  | acc%  |"));
         assert!(s.contains("| lenet5 | 99.31 |"));
+    }
+
+    #[test]
+    fn async_stats_accounting() {
+        let mut st = AsyncStats::new(3);
+        assert_eq!(st.staleness_hist.len(), 4);
+        assert_eq!(st.apply_rate(), 1.0, "no traffic is a neutral rate");
+        st.record_applied(0);
+        st.record_applied(0);
+        st.record_applied(2);
+        st.record_rejected();
+        assert_eq!(st.applied, 3);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.staleness_hist, vec![2, 0, 1, 0]);
+        assert_eq!(st.max_applied_staleness, 2);
+        assert!((st.apply_rate() - 0.75).abs() < 1e-12);
+        assert!((st.mean_staleness() - 2.0 / 3.0).abs() < 1e-12);
+        assert!(st.bound_respected(3));
+        assert!(st.bound_respected(2));
+        assert!(!st.bound_respected(1), "staleness-2 application violates a bound of 1");
     }
 
     #[test]

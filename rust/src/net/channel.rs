@@ -112,7 +112,7 @@ mod tests {
     fn recv_deadline_times_out_then_delivers() {
         let (mut a, mut b) = ChannelTransport::pair("t");
         assert!(b.recv_deadline(Duration::from_millis(10)).unwrap().is_none());
-        a.send(&Msg::Shutdown { reason: "x".into() }).unwrap();
+        a.send(&Msg::Shutdown { fault: false, reason: "x".into() }).unwrap();
         assert!(b.recv_deadline(Duration::from_millis(100)).unwrap().is_some());
     }
 

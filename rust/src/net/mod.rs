@@ -28,7 +28,7 @@ pub mod proto;
 pub mod tcp;
 
 pub use channel::ChannelTransport;
-pub use proto::{Msg, Welcome, PROTO_VERSION};
+pub use proto::{AsyncJob, Msg, Welcome, PROTO_VERSION};
 pub use tcp::TcpTransport;
 
 use anyhow::Result;

@@ -12,7 +12,17 @@
 //!   | -- Heartbeat{node,round} --->|   compute-ack (resets deadline)
 //!   | -- Grads{node,round,…} ----->|   sparse upload (codecs, no densify)
 //!   |          … rounds …          |
-//!   |<------- Shutdown{reason} ----|   graceful shutdown
+//!   |<------- Shutdown{fault,reason}|   shutdown (clean or reasoned drop)
+//! ```
+//!
+//! Async mode (v3, `Welcome.async_job` present) replaces the
+//! Params/Heartbeat/Grads round barrier with a per-shard pull/push
+//! loop:
+//!
+//! ```text
+//!   | -- PullParams{node,shard} -->|   request one shard's params
+//!   |<--- ShardParams{shard,version,…}|  shard snapshot + its version
+//!   | -- PushGrads{node,shard,version,…}->|  sparse upload, version-tagged
 //! ```
 //!
 //! Gradients cross the process boundary in their [`Encoded`]
@@ -35,8 +45,14 @@ use anyhow::{bail, ensure, Result};
 /// can refuse a worker that cannot execute the job's model *at the
 /// handshake* instead of failing mid-round.
 ///
+/// v3: the async shard service.  `Welcome` carries an optional
+/// [`AsyncJob`] (shard count + staleness bound), `Shutdown` carries a
+/// `fault` flag so a worker can tell a clean run completion from a
+/// reasoned drop, and the `PullParams`/`ShardParams`/`PushGrads`
+/// triple replaces the round barrier when the job is async.
+///
 /// [`WIRE_VERSION`]: super::frame::WIRE_VERSION
-pub const PROTO_VERSION: u16 = 2;
+pub const PROTO_VERSION: u16 = 3;
 
 /// Frame tags, one per message variant.  Never reuse a retired tag.
 pub mod tag {
@@ -46,6 +62,23 @@ pub mod tag {
     pub const GRADS: u8 = 4;
     pub const HEARTBEAT: u8 = 5;
     pub const SHUTDOWN: u8 = 6;
+    pub const PULL_PARAMS: u8 = 7;
+    pub const SHARD_PARAMS: u8 = 8;
+    pub const PUSH_GRADS: u8 = 9;
+}
+
+/// Async-service job description carried in the [`Welcome`]: present
+/// iff the run is an async bounded-staleness run rather than
+/// synchronous rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AsyncJob {
+    /// Parameter shard count the server partitioned tensors into
+    /// (round-robin: tensor slot `i` lives in shard `i % shards`).
+    pub shards: u32,
+    /// Staleness bound: uploads computed more than this many shard
+    /// versions ago are rejected; fresher ones are damped by
+    /// `1 / (1 + staleness)`.
+    pub max_staleness: u32,
 }
 
 /// Everything a worker needs to join a run: its identity, the dither
@@ -69,6 +102,8 @@ pub struct Welcome {
     /// procedural dataset locally; examples never cross the wire).
     /// `None` when the worker already holds a local shard.
     pub data: Option<DataSpec>,
+    /// Async-service parameters; `None` = synchronous rounds.
+    pub async_job: Option<AsyncJob>,
 }
 
 /// A coordinator protocol message.
@@ -95,8 +130,20 @@ pub enum Msg {
     Grads { node: u32, round: u32, grads: EncodedGrads },
     /// Worker -> server: round ack / compute keepalive.
     Heartbeat { node: u32, round: u32 },
-    /// Either direction: terminate gracefully.
-    Shutdown { reason: String },
+    /// Either direction: terminate.  `fault: false` is a clean run
+    /// completion; `fault: true` tells the peer it is being dropped
+    /// and `reason` says why (straggler, malformed upload, protocol
+    /// violation, handshake abort).
+    Shutdown { fault: bool, reason: String },
+    /// Worker -> server (async): request one shard's current params.
+    PullParams { node: u32, shard: u32 },
+    /// Server -> worker (async): one shard's parameter tensors (dense,
+    /// in shard slot order) at `version`.
+    ShardParams { shard: u32, version: u64, tensors: Vec<Vec<f32>> },
+    /// Worker -> server (async): sparse-encoded gradients for one
+    /// shard, tagged with the shard `version` the worker pulled before
+    /// computing them — the server derives staleness from it.
+    PushGrads { node: u32, shard: u32, version: u64, grads: EncodedGrads },
 }
 
 impl Msg {
@@ -108,6 +155,9 @@ impl Msg {
             Msg::Grads { .. } => tag::GRADS,
             Msg::Heartbeat { .. } => tag::HEARTBEAT,
             Msg::Shutdown { .. } => tag::SHUTDOWN,
+            Msg::PullParams { .. } => tag::PULL_PARAMS,
+            Msg::ShardParams { .. } => tag::SHARD_PARAMS,
+            Msg::PushGrads { .. } => tag::PUSH_GRADS,
         }
     }
 
@@ -145,6 +195,14 @@ impl Msg {
                         w.u64(d.seed);
                     }
                 }
+                match &wc.async_job {
+                    None => w.u8(0),
+                    Some(j) => {
+                        w.u8(1);
+                        w.u32(j.shards);
+                        w.u32(j.max_staleness);
+                    }
+                }
             }
             Msg::Params { round, tensors } => {
                 w.u32(*round);
@@ -162,8 +220,27 @@ impl Msg {
                 w.u32(*node);
                 w.u32(*round);
             }
-            Msg::Shutdown { reason } => {
+            Msg::Shutdown { fault, reason } => {
+                w.u8(u8::from(*fault));
                 w.str(reason);
+            }
+            Msg::PullParams { node, shard } => {
+                w.u32(*node);
+                w.u32(*shard);
+            }
+            Msg::ShardParams { shard, version, tensors } => {
+                w.u32(*shard);
+                w.u64(*version);
+                w.u32(tensors.len() as u32);
+                for t in tensors {
+                    w.f32s(t);
+                }
+            }
+            Msg::PushGrads { node, shard, version, grads } => {
+                w.u32(*node);
+                w.u32(*shard);
+                w.u64(*version);
+                write_encoded_grads(&mut w, grads);
             }
         }
         w.into_vec()
@@ -210,7 +287,12 @@ impl Msg {
                     }),
                     k => bail!("bad DataSpec presence byte {k}"),
                 };
-                Msg::Welcome(Welcome { node, nodes, rounds, seed, s, model, method, data })
+                let async_job = match r.u8()? {
+                    0 => None,
+                    1 => Some(AsyncJob { shards: r.u32()?, max_staleness: r.u32()? }),
+                    k => bail!("bad AsyncJob presence byte {k}"),
+                };
+                Msg::Welcome(Welcome { node, nodes, rounds, seed, s, model, method, data, async_job })
             }
             tag::PARAMS => {
                 let round = r.u32()?;
@@ -228,7 +310,32 @@ impl Msg {
                 grads: read_encoded_grads(&mut r)?,
             },
             tag::HEARTBEAT => Msg::Heartbeat { node: r.u32()?, round: r.u32()? },
-            tag::SHUTDOWN => Msg::Shutdown { reason: r.str()? },
+            tag::SHUTDOWN => {
+                let fault = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    k => bail!("bad Shutdown fault byte {k}"),
+                };
+                Msg::Shutdown { fault, reason: r.str()? }
+            }
+            tag::PULL_PARAMS => Msg::PullParams { node: r.u32()?, shard: r.u32()? },
+            tag::SHARD_PARAMS => {
+                let shard = r.u32()?;
+                let version = r.u64()?;
+                let n = r.u32()? as usize;
+                ensure!(n <= 4096, "implausible tensor count {n} in shard-params message");
+                let mut tensors = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tensors.push(r.f32s()?);
+                }
+                Msg::ShardParams { shard, version, tensors }
+            }
+            tag::PUSH_GRADS => Msg::PushGrads {
+                node: r.u32()?,
+                shard: r.u32()?,
+                version: r.u64()?,
+                grads: read_encoded_grads(&mut r)?,
+            },
             other => bail!("unknown message tag {other} (peer speaks a newer protocol?)"),
         };
         r.done()?;
@@ -373,6 +480,7 @@ mod tests {
                 model: "mlp128".into(),
                 method: "dithered".into(),
                 data: Some(DataSpec::new("digits", 512, 256, 7)),
+                async_job: Some(AsyncJob { shards: 4, max_staleness: 8 }),
             }),
             Msg::Welcome(Welcome {
                 node: 0,
@@ -383,11 +491,20 @@ mod tests {
                 model: "m".into(),
                 method: "baseline".into(),
                 data: None,
+                async_job: None,
             }),
             Msg::Params { round: 3, tensors: vec![vec![1.0, 2.0], vec![], vec![-0.5]] },
-            Msg::Grads { node: 2, round: 3, grads },
+            Msg::Grads { node: 2, round: 3, grads: grads.clone() },
             Msg::Heartbeat { node: 2, round: 3 },
-            Msg::Shutdown { reason: "run complete".into() },
+            Msg::Shutdown { fault: false, reason: "run complete".into() },
+            Msg::Shutdown { fault: true, reason: "dropped as a straggler".into() },
+            Msg::PullParams { node: 5, shard: 2 },
+            Msg::ShardParams {
+                shard: 2,
+                version: 1 << 40,
+                tensors: vec![vec![0.5, -0.5], vec![], vec![9.0]],
+            },
+            Msg::PushGrads { node: 5, shard: 2, version: 17, grads },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg, "roundtrip failed for tag {}", msg.tag());

@@ -10,10 +10,14 @@
 //!  3. a worker that goes silent is dropped as a straggler and the run
 //!     completes with the survivors.
 
-use ditherprop::coordinator::{run_distributed, serve, serve_tcp, worker_loop, DistConfig};
+use ditherprop::coordinator::comm::EncodedGrads;
+use ditherprop::coordinator::{
+    run_distributed, run_distributed_async, serve, serve_tcp, worker_loop, AsyncCfg, DistConfig,
+};
 use ditherprop::data::DataSpec;
 use ditherprop::net::{ChannelTransport, Msg, TcpTransport, Transport};
 use ditherprop::optim::{LrSchedule, SgdConfig};
+use ditherprop::tensor::Tensor;
 use std::net::TcpListener;
 use std::time::Duration;
 
@@ -36,6 +40,62 @@ fn cfg(nodes: usize, rounds: usize, spec: &DataSpec) -> DistConfig {
         verbose: false,
         data: Some(spec.clone()),
         round_timeout: Duration::from_secs(20),
+        async_cfg: None,
+    }
+}
+
+/// Transport wrapper that swallows gradient uploads — a worker that
+/// stays connected and acks rounds but never delivers work, i.e. the
+/// worst kind of straggler.
+struct MuteUploads<T: Transport>(T);
+
+impl<T: Transport> Transport for MuteUploads<T> {
+    fn send(&mut self, msg: &Msg) -> anyhow::Result<()> {
+        if matches!(msg, Msg::Grads { .. }) {
+            return Ok(()); // the server never sees the upload
+        }
+        self.0.send(msg)
+    }
+    fn recv(&mut self) -> anyhow::Result<Msg> {
+        self.0.recv()
+    }
+    fn recv_deadline(&mut self, timeout: Duration) -> anyhow::Result<Option<Msg>> {
+        self.0.recv_deadline(timeout)
+    }
+    fn bytes_sent(&self) -> u64 {
+        self.0.bytes_sent()
+    }
+    fn bytes_received(&self) -> u64 {
+        self.0.bytes_received()
+    }
+    fn peer(&self) -> String {
+        self.0.peer()
+    }
+}
+
+/// Transport wrapper that sleeps before every send — slows a worker's
+/// step rate without violating any protocol rule.
+struct Throttled<T: Transport>(T, Duration);
+
+impl<T: Transport> Transport for Throttled<T> {
+    fn send(&mut self, msg: &Msg) -> anyhow::Result<()> {
+        std::thread::sleep(self.1);
+        self.0.send(msg)
+    }
+    fn recv(&mut self) -> anyhow::Result<Msg> {
+        self.0.recv()
+    }
+    fn recv_deadline(&mut self, timeout: Duration) -> anyhow::Result<Option<Msg>> {
+        self.0.recv_deadline(timeout)
+    }
+    fn bytes_sent(&self) -> u64 {
+        self.0.bytes_sent()
+    }
+    fn bytes_received(&self) -> u64 {
+        self.0.bytes_received()
+    }
+    fn peer(&self) -> String {
+        self.0.peer()
     }
 }
 
@@ -206,7 +266,7 @@ fn worker_missing_layer_capability_is_refused_at_handshake() {
         })
         .unwrap();
         match bare.recv().unwrap() {
-            Msg::Shutdown { reason } => {
+            Msg::Shutdown { reason, .. } => {
                 assert!(reason.contains("conv"), "refusal must name the gap: {reason}");
                 assert!(reason.contains("lenet5"), "refusal must name the model: {reason}");
             }
@@ -262,4 +322,210 @@ fn silent_worker_is_dropped_as_straggler() {
     assert_eq!(res.live_workers, 1, "straggler must be dropped");
     // the mute link's handshake bytes still show up in the accounting
     assert!(res.comm.wire_up_bytes > 0);
+}
+
+#[test]
+fn dropped_tcp_worker_exits_fast_with_the_servers_reason() {
+    // A worker dropped as a straggler must terminate promptly with the
+    // server's reason in its error — NOT block until its own
+    // SERVER_SILENCE_TIMEOUT (120s) expires against a retired link.
+    let spec = DataSpec::new("digits", 256, 256, 5);
+    let ds = spec.build();
+    let mut cfg = cfg(2, 6, &spec);
+    cfg.round_timeout = Duration::from_millis(500);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // worker A: honest
+    let honest = std::thread::spawn(move || {
+        let link = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))?;
+        worker_loop(Box::new(link), &artifacts(), None)
+    });
+    // worker B: a full worker_loop whose uploads vanish in transit
+    let muted = std::thread::spawn(move || {
+        let started = std::time::Instant::now();
+        let link = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))
+            .expect("connect");
+        let res = worker_loop(Box::new(MuteUploads(link)), &artifacts(), None);
+        (started.elapsed(), res)
+    });
+
+    let res = serve_tcp(&listener, &ds, &cfg).unwrap();
+    honest.join().unwrap().unwrap();
+    let (elapsed, muted_res) = muted.join().unwrap();
+
+    assert_eq!(res.comm.rounds, 6, "run must complete with the survivor");
+    assert_eq!(res.live_workers, 1);
+    let err = muted_res.expect_err("the muted worker must exit with an error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("server dropped this worker"), "{msg}");
+    assert!(msg.contains("straggler"), "reason must name the drop cause: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "dropped worker took {elapsed:?} to exit — the reasoned Shutdown did not reach it"
+    );
+}
+
+#[test]
+fn handshake_failure_notifies_already_admitted_workers() {
+    // When worker k fails the handshake, workers 0..k have already been
+    // Welcomed and are blocking on their first Params.  The server must
+    // broadcast the abort before bailing, or they hang out their full
+    // silence timeout.
+    let spec = DataSpec::new("digits", 128, 256, 5);
+    let ds = spec.build();
+    let c = cfg(2, 3, &spec);
+
+    // worker 0: a real worker_loop — gets Welcomed, then must be told
+    let (w0_server, w0_link) = ChannelTransport::pair("w0");
+    let shard = ds.train.shard(0, 2);
+    let w0 = std::thread::spawn(move || {
+        let started = std::time::Instant::now();
+        (started.elapsed(), worker_loop(Box::new(w0_link), &artifacts(), Some(shard)))
+    });
+    // worker 1: violates the handshake (Heartbeat instead of Hello)
+    let (w1_server, mut w1_link) = ChannelTransport::pair("w1");
+    let w1 = std::thread::spawn(move || {
+        w1_link.send(&Msg::Heartbeat { node: 9, round: 0 }).unwrap();
+        // the refusal must come back as a fault Shutdown
+        match w1_link.recv().unwrap() {
+            Msg::Shutdown { fault, reason } => {
+                assert!(fault, "a handshake refusal is a fault");
+                assert!(reason.contains("instead of Hello"), "{reason}");
+            }
+            other => panic!("expected Shutdown, got tag {}", other.tag()),
+        }
+    });
+
+    let links = vec![
+        Some(Box::new(w0_server) as Box<dyn Transport>),
+        Some(Box::new(w1_server) as Box<dyn Transport>),
+    ];
+    let err = serve(links, &ds, &c).unwrap_err();
+    assert!(err.to_string().contains("worker 1 failed the handshake"), "{err}");
+
+    let (elapsed, w0_res) = w0.join().unwrap();
+    w1.join().unwrap();
+    let msg = format!("{:#}", w0_res.expect_err("w0 must be told the launch died"));
+    assert!(msg.contains("aborting launch"), "{msg}");
+    assert!(msg.contains("worker 1 failed the handshake"), "{msg}");
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "admitted worker took {elapsed:?} to learn the launch died"
+    );
+}
+
+#[test]
+fn async_channel_run_respects_the_staleness_bound() {
+    let spec = DataSpec::new("digits", 384, 256, 11);
+    let ds = spec.build();
+    let mut c = cfg(2, 80, &spec);
+    c.async_cfg = Some(AsyncCfg { shards: 3, max_staleness: 5 });
+
+    let res = run_distributed_async(&ds, &c).unwrap();
+
+    assert_eq!(res.comm.rounds, 80, "async run must complete its step target");
+    assert_eq!(res.history.steps.len(), 80);
+    assert_eq!(res.live_workers, 2, "both workers should survive a clean run");
+    let stats = res.async_stats.expect("async run must report async stats");
+    assert!(stats.applied > 0, "no uploads were ever applied");
+    assert!(
+        stats.bound_respected(5),
+        "staleness bound violated: max {} hist {:?} applied {}",
+        stats.max_applied_staleness,
+        stats.staleness_hist,
+        stats.applied
+    );
+    assert_eq!(stats.joined, 0, "channel mode has no elastic joins");
+    // learning still happens through the async path
+    let first = res.history.steps[..20].iter().map(|r| r.loss).sum::<f32>() / 20.0;
+    let last = res.history.steps[60..].iter().map(|r| r.loss).sum::<f32>() / 20.0;
+    assert!(last < first, "async loss not decreasing: {first} -> {last}");
+    // measured wire accounting flows through the async path too
+    assert!(res.comm.wire_up_bytes > 0);
+    assert!(res.comm.up_bytes > 0);
+}
+
+#[test]
+fn elastic_membership_joins_and_leaves_mid_run() {
+    // 2 workers accepted at launch; one leaves after a few steps; a
+    // third dials in mid-run and is admitted through the same Hello
+    // handshake.  The run completes, the staleness bound holds, and
+    // the membership counters record the churn.
+    let spec = DataSpec::new("digits", 256, 256, 7);
+    let ds = spec.build();
+    let mut c = cfg(2, 100, &spec);
+    c.async_cfg = Some(AsyncCfg { shards: 2, max_staleness: 6 });
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // worker A: honest but throttled, so the run outlasts the churn below
+    let a = std::thread::spawn(move || {
+        let link = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))?;
+        worker_loop(Box::new(Throttled(link, Duration::from_millis(3))), &artifacts(), None)
+    });
+    // worker B: scripted async peer — 10 zero-gradient steps, then leaves
+    let b = std::thread::spawn(move || {
+        let mut link =
+            TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10)).unwrap();
+        link.send(&Msg::Hello {
+            proto: ditherprop::net::PROTO_VERSION,
+            platform: "scripted".into(),
+            features: vec![],
+        })
+        .unwrap();
+        let job = match link.recv().unwrap() {
+            Msg::Welcome(w) => w.async_job.expect("async server must describe the job"),
+            other => panic!("expected Welcome, got tag {}", other.tag()),
+        };
+        assert_eq!(job.shards, 2, "mlp128 has >= 2 tensors, shards stay at 2");
+        for _ in 0..10 {
+            for sh in 0..job.shards {
+                link.send(&Msg::PullParams { node: 99, shard: sh }).unwrap();
+            }
+            for _ in 0..job.shards {
+                match link.recv().unwrap() {
+                    Msg::ShardParams { shard, version, tensors } => {
+                        let flat: Vec<Tensor> = tensors
+                            .iter()
+                            .map(|v| Tensor::from_vec(&[v.len()], vec![0.0; v.len()]))
+                            .collect();
+                        let grads = EncodedGrads::encode(&flat, 2.3, 0.0, vec![1.0], vec![0.0]);
+                        link.send(&Msg::PushGrads { node: 99, shard, version, grads }).unwrap();
+                    }
+                    Msg::Shutdown { .. } => return, // run ended under us
+                    other => panic!("expected ShardParams, got tag {}", other.tag()),
+                }
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // leave without a word: the server must absorb the dead link
+    });
+
+    // worker C: honest, dials in mid-run
+    let c_handle = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        let link = TcpTransport::connect_retry(&addr.to_string(), Duration::from_secs(10))?;
+        worker_loop(Box::new(link), &artifacts(), None)
+    });
+
+    let res = serve_tcp(&listener, &ds, &c).unwrap();
+    a.join().unwrap().unwrap();
+    b.join().unwrap();
+    c_handle.join().unwrap().unwrap();
+
+    assert_eq!(res.comm.rounds, 100, "elastic run must complete its step target");
+    let stats = res.async_stats.expect("async run must report async stats");
+    assert!(stats.joined >= 1, "the mid-run joiner was never admitted");
+    assert!(stats.left >= 1, "the departed worker was never noticed");
+    assert!(
+        stats.bound_respected(6),
+        "staleness bound violated: max {} hist {:?}",
+        stats.max_applied_staleness,
+        stats.staleness_hist
+    );
+    assert!(stats.applied > 0);
+    assert_eq!(res.live_workers, 2, "A and C should be live at the end");
 }

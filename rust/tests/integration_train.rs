@@ -86,6 +86,7 @@ fn distributed_two_nodes_learns_and_compresses() {
         verbose: false,
         data: None,
         round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+        async_cfg: None,
     };
     let res = run_distributed(&ds, &cfg).unwrap();
     assert!(res.mean_sparsity > 0.7, "sparsity {}", res.mean_sparsity);
@@ -113,6 +114,7 @@ fn distributed_runs_every_method() {
             verbose: false,
             data: None,
             round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+            async_cfg: None,
         };
         let res = run_distributed(&ds, &cfg)
             .unwrap_or_else(|e| panic!("distributed {method} failed: {e:?}"));
@@ -142,6 +144,7 @@ fn distributed_noise_averaging_more_nodes_not_worse() {
             verbose: false,
             data: None,
             round_timeout: DistConfig::DEFAULT_ROUND_TIMEOUT,
+            async_cfg: None,
         };
         run_distributed(&ds, &cfg).unwrap()
     };

@@ -14,7 +14,7 @@ use ditherprop::net::frame::{
     encode_frame, parse_frame, parse_header, read_frame, HEADER_LEN, MAGIC, MAX_FRAME,
     WIRE_VERSION,
 };
-use ditherprop::net::{Msg, Welcome, PROTO_VERSION};
+use ditherprop::net::{AsyncJob, Msg, Welcome, PROTO_VERSION};
 use ditherprop::tensor::Tensor;
 use ditherprop::util::prop::{check, Gen};
 use std::io::Cursor;
@@ -40,6 +40,7 @@ fn sample_msgs() -> Vec<Msg> {
             model: "mlp500".into(),
             method: "dithered".into(),
             data: Some(DataSpec { kind: "digits".into(), n_train: 4096, n_test: 512, seed: 7 }),
+            async_job: Some(AsyncJob { shards: 4, max_staleness: 8 }),
         }),
         Msg::Welcome(Welcome {
             node: 0,
@@ -50,6 +51,7 @@ fn sample_msgs() -> Vec<Msg> {
             model: "mlp500".into(),
             method: "baseline".into(),
             data: None,
+            async_job: None,
         }),
         Msg::Params { round: 9, tensors: vec![vec![1.0; 16], vec![-0.5; 4], vec![]] },
         Msg::Grads {
@@ -58,7 +60,26 @@ fn sample_msgs() -> Vec<Msg> {
             grads: EncodedGrads::encode(&[dense, sparse], 0.7, 1.0, vec![0.6, 0.9], vec![2.0, 1.0]),
         },
         Msg::Heartbeat { node: 2, round: 5 },
-        Msg::Shutdown { reason: "orderly shutdown: run complete".into() },
+        Msg::Shutdown { fault: false, reason: "orderly shutdown: run complete".into() },
+        Msg::Shutdown { fault: true, reason: "dropped as a straggler: no upload within 2s".into() },
+        Msg::PullParams { node: 6, shard: 3 },
+        Msg::ShardParams {
+            shard: 3,
+            version: (1 << 40) + 5,
+            tensors: vec![vec![0.5, -0.5, 2.0], vec![], vec![-9.0]],
+        },
+        Msg::PushGrads {
+            node: 6,
+            shard: 3,
+            version: 17,
+            grads: EncodedGrads::encode(
+                &[Tensor::from_vec(&[4], vec![0.0, 0.0, 1.5, 0.0])],
+                0.25,
+                0.0,
+                vec![0.75],
+                vec![1.0],
+            ),
+        },
     ]
 }
 
@@ -144,9 +165,10 @@ fn garbage_payloads_never_panic() {
         let junk: Vec<u8> = (0..n).map(|_| (g.u32() & 0xFF) as u8).collect();
         let tag = (g.u32() & 0xFF) as u8;
         let r = Msg::decode(tag, &junk);
-        // Unknown tags must always be rejected; known tags may decode
-        // by coincidence but must not panic doing so.
-        (1..=6).contains(&tag) || r.is_err()
+        // Unknown tags must always be rejected; known tags (1..=9 as
+        // of proto v3) may decode by coincidence but must not panic
+        // doing so.
+        (1..=9).contains(&tag) || r.is_err()
     });
 }
 
