@@ -1,0 +1,198 @@
+//! Int8 inference GEMM: per-tensor symmetric quantization plus the
+//! i8 x i8 -> i32 forward affine behind the serving subsystem's
+//! quantized path (`runtime::backend::native::int8fwd`).
+//!
+//! **Quantization scheme.** Per-tensor symmetric: `scale = amax / 127`,
+//! `q = clamp(round(v / scale), -127, 127)` (the -128 code is unused so
+//! negation stays closed). Dequantization multiplies an i32 accumulator
+//! by `x_scale * w_scale` — exact integer accumulation, one f32
+//! multiply per output element.
+//!
+//! **Bit-identical by construction, trivially.** The accumulators are
+//! i32 and every product is at most `127 * 127`; with din bounded by
+//! `i32::MAX / 127^2` (~133k, far above any zoo layer) the sums cannot
+//! wrap, and integer addition is associative — so the reference and
+//! blocked variants agree exactly regardless of loop order, a stronger
+//! version of the f32 kernels' ordering contract.
+//!
+//! The blocked variant mirrors [`super::gemm::affine_blocked_into`]:
+//! `[i32; LANES]` register accumulators over a `dout` column block,
+//! skip-on-zero over the quantized activations (exact — zero
+//! activations quantize to the zero code).
+
+use super::LANES;
+
+/// Largest magnitude in `v` (0.0 for an all-zero or empty tensor).
+pub fn amax(v: &[f32]) -> f32 {
+    v.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+}
+
+/// Per-tensor symmetric scale. An all-zero tensor gets scale 0.0: every
+/// value quantizes to 0 and dequantization multiplies by 0.0, which is
+/// exactly the fp32 result for a zero tensor.
+pub fn quant_scale(amax: f32) -> f32 {
+    amax / 127.0
+}
+
+/// Quantize `v` into `out` (same length) with `q = clamp(round(v /
+/// scale))`. `scale == 0.0` writes all zeros.
+pub fn quantize_into(v: &[f32], scale: f32, out: &mut [i8]) {
+    debug_assert_eq!(v.len(), out.len());
+    if scale == 0.0 {
+        out.fill(0);
+        return;
+    }
+    let inv = 1.0 / scale;
+    for (q, &x) in out.iter_mut().zip(v.iter()) {
+        *q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Reference `z = x . w` (x: rows x din, w: din x dout row-major, both
+/// i8), i32 accumulators, skip-on-zero over x. The bias stays f32 and
+/// is added at dequantization, so no bias term here.
+pub fn i8_affine_ref(x: &[i8], w: &[i8], rows: usize, din: usize, dout: usize) -> Vec<i32> {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    let mut z = vec![0i32; rows * dout];
+    for bi in 0..rows {
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        let xrow = &x[bi * din..(bi + 1) * din];
+        for (a, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let wrow = &w[a * dout..(a + 1) * dout];
+            for (zv, &wv) in zrow.iter_mut().zip(wrow.iter()) {
+                *zv += xv * wv as i32;
+            }
+        }
+    }
+    z
+}
+
+/// Blocked `z = x . w` into a caller buffer: `[i32; LANES]` register
+/// accumulators per column block (autovectorizable on stable rust),
+/// scalar tail, skip-on-zero over x. Exactly equal to
+/// [`i8_affine_ref`] — integer accumulation has no ordering hazard.
+pub fn i8_affine_blocked_into(
+    x: &[i8],
+    w: &[i8],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    z: &mut [i32],
+) {
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(z.len(), rows * dout);
+    for bi in 0..rows {
+        let zrow = &mut z[bi * dout..(bi + 1) * dout];
+        let xrow = &x[bi * din..(bi + 1) * din];
+        let mut c = 0usize;
+        while c + LANES <= dout {
+            let mut acc = [0i32; LANES];
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                let xv = xv as i32;
+                let wrow = &w[a * dout + c..a * dout + c + LANES];
+                for (av, &wv) in acc.iter_mut().zip(wrow.iter()) {
+                    *av += xv * wv as i32;
+                }
+            }
+            zrow[c..c + LANES].copy_from_slice(&acc);
+            c += LANES;
+        }
+        while c < dout {
+            let mut acc = 0i32;
+            for (a, &xv) in xrow.iter().enumerate() {
+                if xv != 0 {
+                    acc += xv as i32 * w[a * dout + c] as i32;
+                }
+            }
+            zrow[c] = acc;
+            c += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_q(n: usize, rng: &mut Rng) -> Vec<i8> {
+        (0..n).map(|_| ((rng.uniform() * 255.0) as i32 - 127).clamp(-127, 127) as i8).collect()
+    }
+
+    #[test]
+    fn quantize_roundtrips_within_half_step() {
+        let mut rng = Rng::new(71);
+        let v: Vec<f32> = (0..512).map(|_| rng.normal() * 3.0).collect();
+        let s = quant_scale(amax(&v));
+        let mut q = vec![0i8; v.len()];
+        quantize_into(&v, s, &mut q);
+        for (&x, &qx) in v.iter().zip(q.iter()) {
+            let back = qx as f32 * s;
+            assert!(
+                (x - back).abs() <= 0.5 * s + 1e-6,
+                "value {x} quantized to {qx} (scale {s}) -> {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_to_zero_codes() {
+        let v = vec![0.0f32; 16];
+        let s = quant_scale(amax(&v));
+        assert_eq!(s, 0.0);
+        let mut q = vec![1i8; 16];
+        quantize_into(&v, s, &mut q);
+        assert!(q.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn extremes_hit_but_never_exceed_127() {
+        let v = [-2.0f32, -1.0, 0.0, 1.0, 2.0];
+        let s = quant_scale(amax(&v));
+        let mut q = vec![0i8; v.len()];
+        quantize_into(&v, s, &mut q);
+        assert_eq!(q, vec![-127, -64, 0, 64, 127]);
+    }
+
+    #[test]
+    fn blocked_matches_ref_exactly() {
+        let mut rng = Rng::new(73);
+        for &(rows, din, dout) in
+            &[(1usize, 1usize, 1usize), (3, 7, 5), (4, 16, 24), (2, 33, 17), (5, 8, 8)]
+        {
+            let x = random_q(rows * din, &mut rng);
+            let w = random_q(din * dout, &mut rng);
+            let zr = i8_affine_ref(&x, &w, rows, din, dout);
+            let mut zb = vec![0i32; rows * dout];
+            i8_affine_blocked_into(&x, &w, rows, din, dout, &mut zb);
+            assert_eq!(zr, zb, "blocked diverged at rows={rows} din={din} dout={dout}");
+        }
+    }
+
+    #[test]
+    fn skip_on_zero_is_exact_for_integers() {
+        // rows with many zero codes: skipping them is exactly a no-op
+        let mut rng = Rng::new(79);
+        let (rows, din, dout) = (3usize, 31usize, 9usize);
+        let mut x = random_q(rows * din, &mut rng);
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0;
+            }
+        }
+        let w = random_q(din * dout, &mut rng);
+        let zr = i8_affine_ref(&x, &w, rows, din, dout);
+        let mut zb = vec![0i32; rows * dout];
+        i8_affine_blocked_into(&x, &w, rows, din, dout, &mut zb);
+        assert_eq!(zr, zb);
+    }
+}

@@ -30,6 +30,7 @@
 //! allocate for them.
 
 pub mod gemm;
+pub mod int8;
 pub mod scratch;
 pub mod threads;
 
@@ -39,6 +40,7 @@ pub use gemm::{
     sparse_param_gemm_blocked, sparse_param_gemm_cols, sparse_param_gemm_ref,
     sparse_param_gemm_threaded, transpose, transpose_into, LANES,
 };
+pub use int8::{amax, i8_affine_blocked_into, i8_affine_ref, quant_scale, quantize_into};
 pub use scratch::Scratch;
 pub use threads::{
     chunk_ranges, num_threads, variant, EnvGuard, Variant, ENV_KERNELS, ENV_THREADS,

@@ -28,6 +28,11 @@
 //!   batch parallelism (`DITHERPROP_THREADS`), a scalar reference
 //!   oracle (`DITHERPROP_KERNELS=ref`), and a per-thread scratch
 //!   arena; all variants are bit-identical by construction.
+//! * **Serving** ([`serve`], feature `native`) — int8 inference
+//!   deployment: BatchNorm folding into conv/dense weights, a
+//!   per-example symmetric int8 forward, and a micro-batched TCP
+//!   serving loop (`serve` / `infer` / `bench-serve` subcommands) over
+//!   the same framed transport.
 //! * **Transport** ([`net`]) — the framed wire protocol under the
 //!   coordinator: a [`net::Transport`] trait with an in-process channel
 //!   implementation (single-process runs) and a `std::net` TCP
@@ -57,6 +62,8 @@ pub mod net;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+#[cfg(feature = "native")]
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod train;

@@ -50,6 +50,36 @@ fn hotpath_alloc_must_not_fire() {
 }
 
 #[test]
+fn hotpath_alloc_fires_in_the_int8_forward() {
+    // The serving int8 forward is hot-path scoped like kernels/.
+    let src = "fn forward(xs: &[f32]) -> f32 {\n\
+               \x20   let mut s = 0.0;\n\
+               \x20   for x in xs {\n\
+               \x20       let q = xs.to_vec();\n\
+               \x20       s += x + q[0];\n\
+               \x20   }\n\
+               \x20   s\n\
+               }\n";
+    let f = lint_one("runtime/backend/native/int8fwd.rs", src);
+    assert_eq!(rules_of(&f), vec!["hotpath-alloc"], "{}", report::text(&f));
+}
+
+#[test]
+fn hotpath_alloc_allows_int8_prepare_time_allocation() {
+    // Allocation at loop depth 0 (prepare-time buffers, helper fns
+    // called from loops) is fine; only per-iteration allocs fire.
+    let src = "fn prepare(w: &[f32]) -> Vec<f32> {\n\
+               \x20   let mut wq = w.to_vec();\n\
+               \x20   for v in wq.iter_mut() {\n\
+               \x20       *v *= 2.0;\n\
+               \x20   }\n\
+               \x20   wq\n\
+               }\n";
+    let f = lint_one("runtime/backend/native/int8fwd.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+#[test]
 fn hotpath_alloc_ignores_other_dirs_and_tests() {
     let src = "fn elsewhere() { for _ in 0..3 { let v = vec![1]; drop(v); } }\n";
     assert!(lint_one("train/fixture.rs", src).is_empty());
@@ -84,6 +114,25 @@ fn no_panic_transport_must_not_fire() {
                fn arrays() -> [u8; 4] { [0; 4] }\n\
                fn iterate(xs: &[u8]) -> u8 { let mut s = 0; for x in [1, 2] { s += x; } s + xs.iter().sum::<u8>() }\n";
     let f = lint_one("coordinator/fixture.rs", src);
+    assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+#[test]
+fn no_panic_transport_fires_in_serve() {
+    // The inference service parses the same peer-controlled frames.
+    let src = "fn reply(preds: &[u32]) -> u32 {\n\
+               \x20   preds[0] + preds.first().copied().unwrap()\n\
+               }\n";
+    let f = lint_one("serve/fixture.rs", src);
+    assert_eq!(rules_of(&f), vec!["no-panic-transport"; 2], "{}", report::text(&f));
+}
+
+#[test]
+fn no_panic_transport_must_not_fire_in_serve() {
+    let src = "fn reply(preds: &[u32]) -> anyhow::Result<u32> {\n\
+               \x20   preds.first().copied().ok_or_else(|| anyhow::anyhow!(\"empty reply\"))\n\
+               }\n";
+    let f = lint_one("serve/fixture.rs", src);
     assert!(f.is_empty(), "{}", report::text(&f));
 }
 

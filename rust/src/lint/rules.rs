@@ -44,12 +44,13 @@ const NON_INDEX_KEYWORDS: &[&str] = &[
     "where", "while", "yield",
 ];
 
-/// `hotpath-alloc`: no per-iteration allocation inside `kernels/` loop
+/// `hotpath-alloc`: no per-iteration allocation inside `kernels/` or
+/// int8-serving-forward (`runtime/backend/native/int8fwd.rs`) loop
 /// bodies — the scratch-arena discipline.  Flags `Vec::new` /
 /// `Vec::with_capacity` / `vec![..]` / `.to_vec()` / `.clone()` at
 /// loop depth > 0 in non-test code.
 fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
-    if !f.rel.starts_with("kernels/") {
+    if !(f.rel.starts_with("kernels/") || f.rel.starts_with("runtime/backend/native/int8fwd")) {
         return;
     }
     for i in 0..f.tokens.len() {
@@ -61,7 +62,7 @@ fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
                 f,
                 "hotpath-alloc",
                 i,
-                "vec! allocates inside a kernel loop body; use the scratch arena".into(),
+                "vec! allocates inside a hot-path loop body; use the scratch arena".into(),
             )),
             Some("Vec")
                 if f.is_punct(i + 1, ':')
@@ -73,7 +74,7 @@ fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
                     "hotpath-alloc",
                     i,
                     format!(
-                        "Vec::{} inside a kernel loop body; use the scratch arena",
+                        "Vec::{} inside a hot-path loop body; use the scratch arena",
                         f.ident(i + 3).unwrap_or("new")
                     ),
                 ))
@@ -85,7 +86,7 @@ fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
                     f,
                     "hotpath-alloc",
                     i,
-                    format!(".{m}() allocates inside a kernel loop body; hoist it out"),
+                    format!(".{m}() allocates inside a hot-path loop body; hoist it out"),
                 ))
             }
             _ => {}
@@ -96,9 +97,13 @@ fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
 /// `no-panic-transport`: a malformed or truncated peer must surface as
 /// `Err`, never a crash.  Flags `.unwrap()` / `.expect()`, panicking
 /// macros, and slice/array indexing (use `.get()`) in non-test code
-/// under `net/` and `coordinator/`.
+/// under `net/`, `coordinator/`, and `serve/` (the inference service
+/// parses the same peer-controlled frames).
 fn no_panic_transport(f: &FileCtx, out: &mut Vec<Finding>) {
-    if !(f.rel.starts_with("net/") || f.rel.starts_with("coordinator/")) {
+    if !(f.rel.starts_with("net/")
+        || f.rel.starts_with("coordinator/")
+        || f.rel.starts_with("serve/"))
+    {
         return;
     }
     for i in 0..f.tokens.len() {

@@ -7,6 +7,9 @@
 //! ditherprop distributed --model mlp500 --nodes 8 --rounds 300
 //! ditherprop dist-server --model mlp500 --nodes 2 --bind 127.0.0.1:7461
 //! ditherprop dist-worker --connect 127.0.0.1:7461
+//! ditherprop serve --bind 127.0.0.1:7600 --quant int8
+//! ditherprop infer --connect 127.0.0.1:7600 --model lenet5 --check
+//! ditherprop bench-serve --model mlp128 --json BENCH_serving.json
 //! ditherprop table1 [--quick] [--models mlp500,lenet5]
 //! ditherprop fig1|fig2|fig3|fig4|fig56|eq12 [--quick]
 //! ```
@@ -49,6 +52,20 @@ COMMANDS
   dist-worker   one worker process: connect to a dist-server and work
                   rounds until shutdown
                   --connect HOST:PORT [--artifacts DIR]
+  serve         int8 inference service: BN-folded quantized forward,
+                  micro-batched over the framed TCP transport
+                  --bind HOST:PORT (default 127.0.0.1:7600)
+                  --quant {int8|fp32} --seed SEED --steps N
+                  --max-batch B --max-delay-ms MS --cache K
+                  --max-requests N (serve N requests then exit)
+  infer         inference client: send deterministic batches, print
+                  predictions + round-trip latency
+                  --connect HOST:PORT --model M --batch B --requests N
+                  --check (verify replies bitwise vs a local forward;
+                  needs the server's --quant/--seed/--steps)
+  bench-serve   serving latency sweep over batch size x client count;
+                  p50/p99 + req/s table, JSON to --json PATH
+                  --model M --batches 1,8,32 --clients 1,4 --requests N
   table1        Table 1: acc% + sparsity% across models x methods
   fig1          Fig. 1: delta_z histograms before/after NSD
   fig2          Fig. 2: P(zero) vs scale factor s
@@ -73,6 +90,12 @@ fn main() -> Result<()> {
         "distributed" => cmd_distributed(&args),
         "dist-server" => cmd_dist_server(&args),
         "dist-worker" => cmd_dist_worker(&args),
+        #[cfg(feature = "native")]
+        "serve" => cmd_serve(&args),
+        #[cfg(feature = "native")]
+        "infer" => cmd_infer(&args),
+        #[cfg(feature = "native")]
+        "bench-serve" => cmd_bench_serve(&args),
         "table1" => cmd_table1(&args),
         "fig1" => cmd_fig1(&args),
         "fig2" => cmd_fig2(&args),
@@ -257,6 +280,96 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
     println!("[dist-worker] connected to {addr}");
     ditherprop::coordinator::worker_loop(Box::new(link), &artifacts, None)?;
     println!("[dist-worker] run complete, shutting down");
+    Ok(())
+}
+
+#[cfg(feature = "native")]
+fn cmd_serve(args: &Args) -> Result<()> {
+    use ditherprop::serve::{run_serve, QuantMode, ServeCfg};
+    let bind = args.str_or("bind", "127.0.0.1:7600");
+    let listener = std::net::TcpListener::bind(&bind)
+        .map_err(|e| anyhow::anyhow!("binding {bind}: {e}"))?;
+    let cfg = ServeCfg {
+        quant: QuantMode::parse(&args.str_or("quant", "int8"))?,
+        seed: args.u64_or("seed", 42),
+        steps: args.usize_or("steps", 40),
+        max_batch: args.usize_or("max-batch", 32),
+        max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 2)),
+        cache_cap: args.usize_or("cache", 4),
+        max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
+        verbose: args.has("verbose"),
+    };
+    println!(
+        "[serve] listening on {} | quant {} | seed {} steps {} | flush at {} examples or {:?}",
+        listener.local_addr()?,
+        cfg.quant.name(),
+        cfg.seed,
+        cfg.steps,
+        cfg.max_batch,
+        cfg.max_delay,
+    );
+    let stats = run_serve(&listener, &cfg)?;
+    println!("[serve] {}", stats.summary());
+    Ok(())
+}
+
+#[cfg(feature = "native")]
+fn cmd_infer(args: &Args) -> Result<()> {
+    use ditherprop::serve::{run_infer, InferCfg, QuantMode};
+    use ditherprop::util::math::percentile;
+    let cfg = InferCfg {
+        addr: args.str_or("connect", "127.0.0.1:7600"),
+        model: args.str_or("model", "mlp128"),
+        batch: args.usize_or("batch", 1),
+        requests: args.usize_or("requests", 16),
+        warmup: args.usize_or("warmup", 1),
+        seed: args.u64_or("seed", 42),
+        steps: args.usize_or("steps", 40),
+        quant: QuantMode::parse(&args.str_or("quant", "int8"))?,
+        check: args.has("check"),
+        connect_timeout: std::time::Duration::from_secs(args.u64_or("connect-timeout", 10)),
+    };
+    let summary = run_infer(&cfg)?;
+    println!(
+        "[infer] {}: {} requests ({} examples) | rtt p50 {:.3} ms p99 {:.3} ms | last preds {:?}{}",
+        cfg.model,
+        summary.requests,
+        summary.examples,
+        percentile(&summary.latencies_ms, 50.0),
+        percentile(&summary.latencies_ms, 99.0),
+        summary.last_preds,
+        if cfg.check {
+            format!(" | {} replies verified bit-identical", summary.checked)
+        } else {
+            String::new()
+        },
+    );
+    Ok(())
+}
+
+#[cfg(feature = "native")]
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use ditherprop::serve::{run_bench, BenchCfg, QuantMode};
+    let parse_list = |key: &str, defaults: &[&str]| -> Result<Vec<usize>> {
+        args.list_or(key, defaults)
+            .iter()
+            .map(|s| s.parse().map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}")))
+            .collect()
+    };
+    let cfg = BenchCfg {
+        model: args.str_or("model", "mlp128"),
+        batches: parse_list("batches", &["1", "8", "32"])?,
+        clients: parse_list("clients", &["1", "4"])?,
+        requests_per_client: args.usize_or("requests", 24),
+        quant: QuantMode::parse(&args.str_or("quant", "int8"))?,
+        seed: args.u64_or("seed", 42),
+        steps: args.usize_or("steps", 0),
+        max_batch: args.usize_or("max-batch", 64),
+        max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 2)),
+        json_path: args.str_or("json", "none"),
+    };
+    println!("=== serving latency sweep ({} | {}) ===", cfg.model, cfg.quant.name());
+    run_bench(&cfg)?;
     Ok(())
 }
 

@@ -51,8 +51,14 @@ use anyhow::{bail, ensure, Result};
 /// reasoned drop, and the `PullParams`/`ShardParams`/`PushGrads`
 /// triple replaces the round barrier when the job is async.
 ///
+/// v4: the inference service.  `InferRequest` carries a client-chosen
+/// request id, a model name and a flattened input batch;
+/// `InferReply` echoes the id back with argmax predictions and raw
+/// logits.  Serving speaks the same framed transport as training, so
+/// the corrupt-wire robustness suite covers it for free.
+///
 /// [`WIRE_VERSION`]: super::frame::WIRE_VERSION
-pub const PROTO_VERSION: u16 = 3;
+pub const PROTO_VERSION: u16 = 4;
 
 /// Frame tags, one per message variant.  Never reuse a retired tag.
 pub mod tag {
@@ -65,6 +71,8 @@ pub mod tag {
     pub const PULL_PARAMS: u8 = 7;
     pub const SHARD_PARAMS: u8 = 8;
     pub const PUSH_GRADS: u8 = 9;
+    pub const INFER_REQUEST: u8 = 10;
+    pub const INFER_REPLY: u8 = 11;
 }
 
 /// Async-service job description carried in the [`Welcome`]: present
@@ -144,6 +152,16 @@ pub enum Msg {
     /// shard, tagged with the shard `version` the worker pulled before
     /// computing them — the server derives staleness from it.
     PushGrads { node: u32, shard: u32, version: u64, grads: EncodedGrads },
+    /// Client -> server (serving): classify a batch.  `x` is the
+    /// flattened input batch (`batch * input_numel` f32s; the server
+    /// validates the length against the model registry).  `id` is
+    /// client-chosen and echoed in the reply so a client can pipeline
+    /// requests over one connection.
+    InferRequest { id: u64, model: String, batch: u32, x: Vec<f32> },
+    /// Server -> client (serving): `preds[i]` is the argmax class for
+    /// example `i`, `logits` the raw pre-softmax scores
+    /// (`batch * classes` f32s) for clients that want margins.
+    InferReply { id: u64, classes: u32, preds: Vec<u32>, logits: Vec<f32> },
 }
 
 impl Msg {
@@ -158,6 +176,8 @@ impl Msg {
             Msg::PullParams { .. } => tag::PULL_PARAMS,
             Msg::ShardParams { .. } => tag::SHARD_PARAMS,
             Msg::PushGrads { .. } => tag::PUSH_GRADS,
+            Msg::InferRequest { .. } => tag::INFER_REQUEST,
+            Msg::InferReply { .. } => tag::INFER_REPLY,
         }
     }
 
@@ -241,6 +261,18 @@ impl Msg {
                 w.u32(*shard);
                 w.u64(*version);
                 write_encoded_grads(&mut w, grads);
+            }
+            Msg::InferRequest { id, model, batch, x } => {
+                w.u64(*id);
+                w.str(model);
+                w.u32(*batch);
+                w.f32s(x);
+            }
+            Msg::InferReply { id, classes, preds, logits } => {
+                w.u64(*id);
+                w.u32(*classes);
+                w.u32s(preds);
+                w.f32s(logits);
             }
         }
         w.into_vec()
@@ -336,6 +368,34 @@ impl Msg {
                 version: r.u64()?,
                 grads: read_encoded_grads(&mut r)?,
             },
+            tag::INFER_REQUEST => {
+                let id = r.u64()?;
+                let model = r.str()?;
+                let batch = r.u32()?;
+                ensure!(batch <= 4096, "implausible batch {batch} in infer request");
+                let x = r.f32s()?;
+                ensure!(
+                    batch == 0 || x.len() % batch as usize == 0,
+                    "input length {} not divisible by batch {batch}",
+                    x.len()
+                );
+                Msg::InferRequest { id, model, batch, x }
+            }
+            tag::INFER_REPLY => {
+                let id = r.u64()?;
+                let classes = r.u32()?;
+                ensure!(classes <= 4096, "implausible class count {classes} in infer reply");
+                let preds = r.u32s()?;
+                ensure!(preds.len() <= 4096, "implausible prediction count {}", preds.len());
+                let logits = r.f32s()?;
+                ensure!(
+                    logits.len() == preds.len() * classes as usize,
+                    "logit count {} disagrees with {} predictions x {classes} classes",
+                    logits.len(),
+                    preds.len()
+                );
+                Msg::InferReply { id, classes, preds, logits }
+            }
             other => bail!("unknown message tag {other} (peer speaks a newer protocol?)"),
         };
         r.done()?;
@@ -505,6 +565,18 @@ mod tests {
                 tensors: vec![vec![0.5, -0.5], vec![], vec![9.0]],
             },
             Msg::PushGrads { node: 5, shard: 2, version: 17, grads },
+            Msg::InferRequest {
+                id: 0xFEED,
+                model: "lenet5".into(),
+                batch: 2,
+                x: vec![0.0, 0.5, -1.0, 1.0],
+            },
+            Msg::InferReply {
+                id: 0xFEED,
+                classes: 2,
+                preds: vec![1, 0],
+                logits: vec![0.1, 0.9, 0.7, 0.3],
+            },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg, "roundtrip failed for tag {}", msg.tag());

@@ -1,0 +1,325 @@
+//! BatchNorm folding: lower a trained model's eval forward into an
+//! inference plan with every foldable BN stage elided.
+//!
+//! Eval-mode BN is the per-channel affine
+//! `y[j] = scale[j] * z[j] + bias[j]` with
+//! `scale[j] = gamma[j] / sqrt(rv[j] + BN_EPS)` and
+//! `bias[j]  = beta[j] - rm[j] * scale[j]` (running statistics `rm`,
+//! `rv` — see [`super::ops::batchnorm`]). When `z` is the output of a
+//! conv or dense stage, that affine composes into the stage's own
+//! parameters: the out-channel is the *trailing* dim of both conv
+//! (`[k, k, in, out]` HWIO) and dense (`[din, out]`) weights, so
+//!
+//! ```text
+//! w'[.., oc] = w[.., oc] * scale[oc]
+//! b'[oc]     = scale[oc] * b[oc] + bias[oc]
+//! ```
+//!
+//! reproduces `scale * (w·x + b) + bias` exactly up to float
+//! re-association. The folded plan drops the BN stage and its four
+//! parameter slots, and the conv/dense stage inherits the BN stage's
+//! ReLU flag (the lowering guarantees a conv/dense directly followed by
+//! BN never carries its own ReLU).
+//!
+//! A BN stage that does *not* directly follow a conv/dense stage (no
+//! such topology is in the zoo, but registries are user-extensible) is
+//! kept verbatim, so folding is always safe to apply: the result
+//! evaluates the same function whether or not anything folded.
+
+use super::models::{ModelSpec, OpKind, Plan, Stage};
+use super::ops::batchnorm::BN_EPS;
+use crate::runtime::artifact::ParamInfo;
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// A model lowered for inference: the BN-elided plan plus the folded
+/// parameter tensors, positional with `plan.params`.
+#[derive(Debug, Clone)]
+pub struct FoldedModel {
+    pub name: String,
+    pub plan: Plan,
+    pub params: Vec<Tensor>,
+    pub classes: usize,
+    pub input_numel: usize,
+}
+
+impl FoldedModel {
+    /// How many BN stages were folded away (0 for BN-free models —
+    /// folding is then the identity and the plan passes through).
+    pub fn n_folded(&self, spec: &ModelSpec) -> Result<usize> {
+        let before = spec.plan()?.stages.len();
+        Ok(before - self.plan.stages.len())
+    }
+}
+
+/// Fold every eligible BatchNorm of `spec` into the preceding
+/// conv/dense stage. `params` is the full (trained) parameter list,
+/// positional with `spec.plan()`.
+pub fn fold(spec: &ModelSpec, params: &[Tensor]) -> Result<FoldedModel> {
+    let plan = spec.plan()?;
+    ensure!(
+        params.len() == plan.n_params(),
+        "model '{}' expects {} params, got {}",
+        spec.name,
+        plan.n_params(),
+        params.len()
+    );
+
+    let mut stages = Vec::with_capacity(plan.stages.len());
+    let mut infos: Vec<ParamInfo> = Vec::with_capacity(plan.params.len());
+    let mut out_params: Vec<Tensor> = Vec::with_capacity(params.len());
+    // original stage index of the stage last pushed onto `stages`
+    // (usize::MAX = none yet), used to require *direct* adjacency
+    let mut last_orig = usize::MAX;
+
+    for (si, st) in plan.stages.iter().enumerate() {
+        let foldable = matches!(st.op, OpKind::BatchNorm)
+            && si > 0
+            && last_orig == si - 1
+            && stages.last().is_some_and(|prev: &Stage| {
+                matches!(prev.op, OpKind::Conv2d { .. } | OpKind::Dense { .. }) && !prev.relu
+            });
+        if foldable {
+            let bnp = st.param_idx.unwrap_or_else(|| {
+                unreachable!("lowering always assigns BN param slots")
+            });
+            let gamma = params[bnp].data();
+            let beta = params[bnp + 1].data();
+            let rm = params[bnp + 2].data();
+            let rv = params[bnp + 3].data();
+            let c = gamma.len();
+            // previously-emitted conv/dense stage: its w/b are the two
+            // most recent output params
+            let wi = out_params.len() - 2;
+            let w = out_params[wi].data();
+            let b = out_params[wi + 1].data();
+            ensure!(
+                b.len() == c && w.len() % c == 0,
+                "model '{}': BN width {c} does not divide stage {si} params",
+                spec.name
+            );
+            let mut scale = vec![0.0f32; c];
+            let mut bias = vec![0.0f32; c];
+            for j in 0..c {
+                scale[j] = gamma[j] / (rv[j] + BN_EPS).sqrt();
+                bias[j] = beta[j] - rm[j] * scale[j];
+            }
+            let wf: Vec<f32> =
+                w.iter().enumerate().map(|(i, &v)| v * scale[i % c]).collect();
+            let bf: Vec<f32> =
+                (0..c).map(|j| scale[j] * b[j] + bias[j]).collect();
+            out_params[wi] = Tensor::from_vec(&infos[wi].shape, wf);
+            out_params[wi + 1] = Tensor::from_vec(&infos[wi + 1].shape, bf);
+            // the stage absorbs BN's ReLU; BN preserved the shape, so
+            // out_shape needs no update
+            if let Some(prev) = stages.last_mut() {
+                prev.relu = st.relu;
+            }
+            // BN's four param slots vanish; `last_orig` now points at
+            // this BN so a (pathological) second BN in a row is kept
+            last_orig = si;
+            continue;
+        }
+
+        let mut stage = st.clone();
+        if let Some(pi) = st.param_idx {
+            let n = match st.op {
+                OpKind::BatchNorm => 4,
+                _ => 2,
+            };
+            stage.param_idx = Some(infos.len());
+            for k in 0..n {
+                infos.push(plan.params[pi + k].clone());
+                out_params.push(params[pi + k].clone());
+            }
+        }
+        stages.push(stage);
+        last_orig = si;
+    }
+
+    let folded = Plan {
+        stages,
+        params: infos,
+        n_qlayers: plan.n_qlayers,
+        n_skip_slots: plan.n_skip_slots,
+    };
+    Ok(FoldedModel {
+        name: spec.name.clone(),
+        plan: folded,
+        params: out_params,
+        classes: spec.num_classes(),
+        input_numel: spec.input_numel(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::graph::PreparedForward;
+    use super::super::models::LayerSpec;
+    use super::super::NativeBackend;
+    use super::*;
+    use crate::runtime::artifact::ParamKind;
+    use crate::util::rng::Rng;
+
+    /// Random params with *non-trivial* running statistics (mean ~
+    /// N(0, 0.3), var in [0.5, 1.5]) so the fold actually moves the
+    /// weights — the zero/one init would make it a near-identity.
+    fn trained_like_params(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+        let plan = spec.plan().unwrap();
+        let mut rng = Rng::new(seed);
+        plan.params
+            .iter()
+            .map(|info| match info.kind {
+                ParamKind::Weight | ParamKind::Bias => {
+                    let scale = if info.shape.len() == 1 { 0.1 } else { 0.5 };
+                    Tensor::from_vec(
+                        &info.shape,
+                        (0..info.numel()).map(|_| rng.normal() * scale).collect(),
+                    )
+                }
+                ParamKind::Scale => Tensor::from_vec(
+                    &info.shape,
+                    (0..info.numel()).map(|_| 1.0 + rng.normal() * 0.1).collect(),
+                ),
+                ParamKind::StatMean => Tensor::from_vec(
+                    &info.shape,
+                    (0..info.numel()).map(|_| rng.normal() * 0.3).collect(),
+                ),
+                ParamKind::StatVar => Tensor::from_vec(
+                    &info.shape,
+                    (0..info.numel()).map(|_| 0.5 + rng.uniform()).collect(),
+                ),
+            })
+            .collect()
+    }
+
+    fn zoo_spec(name: &str) -> ModelSpec {
+        NativeBackend::builtin().unwrap().model_spec(name).unwrap().clone()
+    }
+
+    fn assert_fold_equivalent(spec: &ModelSpec, seed: u64, batch: usize) {
+        let params = trained_like_params(spec, seed);
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        let x: Vec<f32> =
+            (0..batch * spec.input_numel()).map(|_| rng.normal() * 0.5).collect();
+
+        let mut plain = PreparedForward::of_spec(spec).unwrap();
+        let base = plain.logits(&params, &x, batch).unwrap();
+
+        let fm = fold(spec, &params).unwrap();
+        let mut folded = PreparedForward::from_plan(
+            &fm.name,
+            fm.plan.clone(),
+            fm.classes,
+            fm.input_numel,
+        );
+        let got = folded.logits(&fm.params, &x, batch).unwrap();
+
+        assert_eq!(base.len(), got.len());
+        for (a, b) in base.iter().zip(got.iter()) {
+            let tol = 1e-4 + 1e-4 * a.abs();
+            assert!(
+                (a - b).abs() < tol,
+                "model '{}': folded logit {b} vs {a}",
+                spec.name
+            );
+        }
+        // identical top-1 per example
+        let classes = spec.num_classes();
+        for bi in 0..batch {
+            let argmax = |row: &[f32]| {
+                let mut best = 0usize;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best
+            };
+            let a = argmax(&base[bi * classes..(bi + 1) * classes]);
+            let g = argmax(&got[bi * classes..(bi + 1) * classes]);
+            assert_eq!(a, g, "model '{}': top-1 flipped (example {bi})", spec.name);
+        }
+    }
+
+    #[test]
+    fn vgg8bn_folds_numerically_equivalent() {
+        let spec = zoo_spec("vgg8bn");
+        assert_fold_equivalent(&spec, 101, 4);
+        let fm = fold(&spec, &trained_like_params(&spec, 101)).unwrap();
+        assert!(fm.n_folded(&spec).unwrap() > 0, "vgg8bn folded no BN stages");
+    }
+
+    #[test]
+    fn resnet8_folds_numerically_equivalent() {
+        let spec = zoo_spec("resnet8");
+        assert_fold_equivalent(&spec, 103, 4);
+        let fm = fold(&spec, &trained_like_params(&spec, 103)).unwrap();
+        assert!(fm.n_folded(&spec).unwrap() > 0, "resnet8 folded no BN stages");
+        // every zoo BN follows a conv directly, so none survive
+        assert!(
+            !fm.plan
+                .stages
+                .iter()
+                .any(|st| matches!(st.op, OpKind::BatchNorm)),
+            "resnet8 kept an unfolded BN stage"
+        );
+    }
+
+    #[test]
+    fn bn_free_model_passes_through_unchanged() {
+        let spec = zoo_spec("lenet5");
+        let params = trained_like_params(&spec, 107);
+        let fm = fold(&spec, &params).unwrap();
+        assert_eq!(fm.n_folded(&spec).unwrap(), 0);
+        assert_eq!(fm.plan.stages.len(), spec.plan().unwrap().stages.len());
+        for (a, b) in params.iter().zip(fm.params.iter()) {
+            assert_eq!(a.data(), b.data(), "BN-free fold must be the identity");
+        }
+    }
+
+    #[test]
+    fn folded_plan_reindexes_params_consistently() {
+        let spec = zoo_spec("vgg8bn");
+        let params = trained_like_params(&spec, 109);
+        let fm = fold(&spec, &params).unwrap();
+        assert_eq!(fm.plan.n_params(), fm.params.len());
+        for st in &fm.plan.stages {
+            if let Some(pi) = st.param_idx {
+                assert!(pi < fm.params.len());
+                assert_eq!(
+                    fm.params[pi].shape(),
+                    &fm.plan.params[pi].shape[..],
+                    "param_idx points at a mismatched slot"
+                );
+            }
+        }
+        // qlayer bookkeeping survives the fold untouched
+        assert_eq!(fm.plan.n_qlayers, spec.plan().unwrap().n_qlayers);
+    }
+
+    #[test]
+    fn orphan_bn_is_kept_not_folded() {
+        // BN directly after a pool stage: not foldable, must survive
+        // verbatim and still evaluate.
+        let spec = ModelSpec {
+            name: "bn-after-pool".into(),
+            input_shape: vec![4, 4, 2],
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::BatchNorm,
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into()],
+            lr: None,
+        };
+        let params = trained_like_params(&spec, 113);
+        let fm = fold(&spec, &params).unwrap();
+        assert_eq!(fm.n_folded(&spec).unwrap(), 0, "pool-fed BN must not fold");
+        assert_fold_equivalent(&spec, 113, 3);
+    }
+}

@@ -30,6 +30,7 @@ use crate::kernels::{self, scratch};
 use crate::runtime::step::{EvalOut, GradOut};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
+use std::cell::RefCell;
 
 pub use super::ops::fq8;
 
@@ -80,17 +81,10 @@ fn softmax_xent(
     Ok(((loss / batch as f64) as f32, correct, dlogits))
 }
 
-fn check_inputs(
-    spec: &ModelSpec,
-    plan: &Plan,
-    params: &[Tensor],
-    x: &[f32],
-    y: &[i32],
-) -> Result<usize> {
+fn check_params(name: &str, plan: &Plan, params: &[Tensor]) -> Result<()> {
     ensure!(
         params.len() == plan.n_params(),
-        "model '{}' expects {} params, got {}",
-        spec.name,
+        "model '{name}' expects {} params, got {}",
         plan.n_params(),
         params.len()
     );
@@ -103,15 +97,29 @@ fn check_inputs(
             info.shape
         );
     }
-    let batch = y.len();
+    Ok(())
+}
+
+fn check_batch(input_numel: usize, batch: usize, xlen: usize) -> Result<()> {
     ensure!(batch > 0, "empty batch");
     ensure!(
-        x.len() == batch * spec.input_numel(),
-        "x has {} values, expected {} (batch {batch} x input {})",
-        x.len(),
-        batch * spec.input_numel(),
-        spec.input_numel()
+        xlen == batch * input_numel,
+        "x has {xlen} values, expected {} (batch {batch} x input {input_numel})",
+        batch * input_numel,
     );
+    Ok(())
+}
+
+fn check_inputs(
+    spec: &ModelSpec,
+    plan: &Plan,
+    params: &[Tensor],
+    x: &[f32],
+    y: &[i32],
+) -> Result<usize> {
+    check_params(&spec.name, plan, params)?;
+    let batch = y.len();
+    check_batch(spec.input_numel(), batch, x.len())?;
     Ok(batch)
 }
 
@@ -124,13 +132,17 @@ fn forward_walk(
     x: &[f32],
     ctx: &StepCtx,
     ex: &mut Exec,
+    want_masks: bool,
 ) -> (Vec<f32>, Vec<Vec<bool>>) {
-    let mut masks: Vec<Vec<bool>> = vec![Vec::new(); plan.stages.len()];
+    let mut masks: Vec<Vec<bool>> =
+        if want_masks { vec![Vec::new(); plan.stages.len()] } else { Vec::new() };
     let mut h = ex.sc.dup(x);
     for (si, (st, op)) in plan.stages.iter().zip(ops.iter_mut()).enumerate() {
         h = op.forward(h, ctx, ex);
         if st.relu {
-            masks[si] = h.iter().map(|&v| v > 0.0).collect();
+            if want_masks {
+                masks[si] = h.iter().map(|&v| v > 0.0).collect();
+            }
             for v in h.iter_mut() {
                 if *v < 0.0 {
                     *v = 0.0;
@@ -182,7 +194,7 @@ pub fn grad_step_traced(
         let ctx = StepCtx { batch, params, train: true, int8: method.int8_forward() };
         let mut ops = ops::build(&plan);
 
-        let (logits, masks) = forward_walk(&plan, &mut ops, x, &ctx, &mut ex);
+        let (logits, masks) = forward_walk(&plan, &mut ops, x, &ctx, &mut ex, true);
         let (loss, correct, dlogits) = softmax_xent(&logits, y, spec.num_classes(), true)?;
         ex.sc.put_back(logits);
 
@@ -235,38 +247,110 @@ pub fn grad_step_traced(
     })
 }
 
-/// Shared forward-only pass: loss + correct count with every residual
-/// buffer recycled. `train` selects BN batched vs running statistics.
-fn forward_loss(
-    spec: &ModelSpec,
-    params: &[Tensor],
-    x: &[f32],
-    y: &[i32],
-    train: bool,
-) -> Result<EvalOut> {
-    let plan = spec.plan()?;
-    let batch = check_inputs(spec, &plan, params, x, y)?;
-    let var = kernels::variant();
-    scratch::with_thread_local(|sc| {
-        let mut ex = Exec { var, sc, skips: SkipSlots::new(plan.n_skip_slots) };
-        let ctx = StepCtx { batch, params, train, int8: false };
-        let mut ops = ops::build(&plan);
-        let (logits, _masks) = forward_walk(&plan, &mut ops, x, &ctx, &mut ex);
-        let (loss, correct, _) = softmax_xent(&logits, y, spec.num_classes(), false)?;
-        ex.sc.put_back(logits);
-        for op in ops.iter_mut() {
-            op.recycle(ex.sc);
-        }
-        ex.skips.drain_into(ex.sc);
-        Ok(EvalOut { loss, correct })
-    })
+/// A forward pass with the plan and op chain built once and reused
+/// across calls. `forward_loss` used to rebuild both per step, which
+/// repeated eval loops (and now the serving subsystem, which holds one
+/// of these per cached model) paid on every batch; preparing up front
+/// leaves only the math on the per-call path.
+pub struct PreparedForward {
+    name: String,
+    plan: Plan,
+    ops: Vec<Box<dyn LayerOp>>,
+    classes: usize,
+    input_numel: usize,
+}
+
+impl PreparedForward {
+    /// Prepare a spec's own (unfolded) plan.
+    pub fn of_spec(spec: &ModelSpec) -> Result<Self> {
+        let plan = spec.plan()?;
+        Ok(Self::from_plan(&spec.name, plan, spec.num_classes(), spec.input_numel()))
+    }
+
+    /// Prepare an already-lowered plan (the serving path hands the
+    /// BN-folded inference plan in here).
+    pub fn from_plan(name: &str, plan: Plan, classes: usize, input_numel: usize) -> Self {
+        let ops = ops::build(&plan);
+        PreparedForward { name: name.to_string(), plan, ops, classes, input_numel }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Forward-only loss + correct count with every residual buffer
+    /// recycled. `train` selects BN batched vs running statistics.
+    pub fn eval_loss(
+        &mut self,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+        train: bool,
+    ) -> Result<EvalOut> {
+        check_params(&self.name, &self.plan, params)?;
+        let batch = y.len();
+        check_batch(self.input_numel, batch, x.len())?;
+        let classes = self.classes;
+        let (plan, ops) = (&self.plan, &mut self.ops);
+        let var = kernels::variant();
+        scratch::with_thread_local(|sc| {
+            let mut ex = Exec { var, sc, skips: SkipSlots::new(plan.n_skip_slots) };
+            let ctx = StepCtx { batch, params, train, int8: false };
+            let (logits, _masks) = forward_walk(plan, ops, x, &ctx, &mut ex, false);
+            let (loss, correct, _) = softmax_xent(&logits, y, classes, false)?;
+            ex.sc.put_back(logits);
+            for op in ops.iter_mut() {
+                op.recycle(ex.sc);
+            }
+            ex.skips.drain_into(ex.sc);
+            Ok(EvalOut { loss, correct })
+        })
+    }
+
+    /// Eval-mode (running-stat, fp32) logits for a batch — the serving
+    /// forward. The returned buffer is the caller's to keep.
+    pub fn logits(&mut self, params: &[Tensor], x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        check_params(&self.name, &self.plan, params)?;
+        check_batch(self.input_numel, batch, x.len())?;
+        let (plan, ops) = (&self.plan, &mut self.ops);
+        let var = kernels::variant();
+        scratch::with_thread_local(|sc| {
+            let mut ex = Exec { var, sc, skips: SkipSlots::new(plan.n_skip_slots) };
+            let ctx = StepCtx { batch, params, train: false, int8: false };
+            let (logits, _masks) = forward_walk(plan, ops, x, &ctx, &mut ex, false);
+            for op in ops.iter_mut() {
+                op.recycle(ex.sc);
+            }
+            ex.skips.drain_into(ex.sc);
+            Ok(logits)
+        })
+    }
+}
+
+thread_local! {
+    /// Single-slot prepared-forward cache behind [`eval_step`]: the
+    /// eval loop calls with the same spec for a whole dataset sweep, so
+    /// one slot gets a near-100% hit rate without eviction policy.
+    /// Keyed on the full `ModelSpec` (not the name) so tests that reuse
+    /// a name across different topologies stay correct.
+    static EVAL_CACHE: RefCell<Option<(ModelSpec, PreparedForward)>> =
+        const { RefCell::new(None) };
 }
 
 /// One eval step: baseline fp32 forward + loss/correct (matching the
 /// AOT eval artifacts, which always evaluate un-instrumented — BN uses
 /// its stored running statistics, never the eval batch's).
 pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<EvalOut> {
-    forward_loss(spec, params, x, y, false)
+    EVAL_CACHE.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if !matches!(&*slot, Some((cached, _)) if cached == spec) {
+            *slot = Some((spec.clone(), PreparedForward::of_spec(spec)?));
+        }
+        match slot.as_mut() {
+            Some((_, pf)) => pf.eval_loss(params, x, y, false),
+            None => unreachable!("cache slot filled above"),
+        }
+    })
 }
 
 /// Train-mode loss of one batch — the loss `grad_step` differentiates
@@ -275,7 +359,7 @@ pub fn eval_step(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> R
 /// loss normalizes with *running* statistics and is therefore a
 /// different function of the parameters than the training objective.
 pub fn train_loss(spec: &ModelSpec, params: &[Tensor], x: &[f32], y: &[i32]) -> Result<f32> {
-    Ok(forward_loss(spec, params, x, y, true)?.loss)
+    Ok(PreparedForward::of_spec(spec)?.eval_loss(params, x, y, true)?.loss)
 }
 
 #[cfg(test)]
@@ -655,6 +739,45 @@ mod tests {
                 .count();
             assert!(nnz <= 8, "example {bi} kept {nnz} conv delta_z entries");
         }
+    }
+
+    #[test]
+    fn eval_cache_keys_on_topology_not_name() {
+        // Two different topologies sharing the name "tiny": alternating
+        // eval_step calls must never serve one's prepared plan to the
+        // other (the cache keys on the full spec, not the name).
+        let a = tiny_spec();
+        let b = ModelSpec::mlp("tiny", &[4, 5, 2], "digits", 4, vec!["baseline".into()]);
+        let pa = random_params(&a, 3);
+        let pb = random_params(&b, 3);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..2 * 4).map(|_| rng.uniform()).collect();
+        let y = [1, 0];
+        let ea1 = eval_step(&a, &pa, &x, &y).unwrap();
+        let eb1 = eval_step(&b, &pb, &x, &y).unwrap();
+        let ea2 = eval_step(&a, &pa, &x, &y).unwrap();
+        let eb2 = eval_step(&b, &pb, &x, &y).unwrap();
+        assert_eq!(ea1.loss, ea2.loss, "cached re-eval of spec A diverged");
+        assert_eq!(eb1.loss, eb2.loss, "cached re-eval of spec B diverged");
+        // cross-wiring params against the cached prepared plan errors
+        assert!(eval_step(&a, &pb, &x, &y).is_err());
+    }
+
+    #[test]
+    fn prepared_forward_logits_match_eval_loss_path() {
+        let spec = tiny_conv_spec();
+        let params = random_params(&spec, 13);
+        let mut rng = Rng::new(17);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal() * 0.7).collect();
+        let y = [0, 2, 1, 2];
+        let mut pf = PreparedForward::of_spec(&spec).unwrap();
+        let l1 = pf.logits(&params, &x, 4).unwrap();
+        let l2 = pf.logits(&params, &x, 4).unwrap();
+        assert_eq!(l1, l2, "reused prepared ops changed the forward");
+        let (loss, correct, _) = softmax_xent(&l1, &y, 3, false).unwrap();
+        let ev = eval_step(&spec, &params, &x, &y).unwrap();
+        assert!((loss - ev.loss).abs() < 1e-7);
+        assert_eq!(correct, ev.correct);
     }
 
     #[test]

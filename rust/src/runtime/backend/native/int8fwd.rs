@@ -1,0 +1,437 @@
+//! Int8 inference executor: the BN-folded plan's forward pass with
+//! per-tensor symmetric int8 weights and activations, i32 accumulators
+//! and f32 requantization between layers (`kernels::int8`).
+//!
+//! Per weighted (conv/dense) stage, [`Int8Model::prepare`] quantizes
+//! the folded weight once (per-tensor symmetric,
+//! `w_scale = amax(w)/127`); the f32 bias rides along unquantized. Per
+//! call, each weighted stage quantizes its incoming f32 activation
+//! **per example** (one symmetric scale per batch row group), runs the
+//! blocked i8 GEMM, and dequantizes with the fused affine
+//! `z[r, j] = acc[r, j] * (x_scale[e] * w_scale) + bias[j]` (plus the
+//! stage ReLU) — so the activation entering the *next* weighted stage
+//! is requantized against its own fresh range. Non-weighted stages
+//! (pool / flatten / skip junctions) run their regular f32 `LayerOp`s
+//! on the dequantized activations.
+//!
+//! Per-example (rather than per-batch) activation scales make the
+//! forward **batch-composition invariant**: an example's logits are
+//! bit-identical whether it runs alone or co-batched with arbitrary
+//! other requests. The serving micro-batcher concatenates requests
+//! from unrelated clients into one forward, and its `--check` clients
+//! verify replies against a local single-request forward — that only
+//! holds because no quantization statistic crosses example boundaries.
+//!
+//! This mirrors the training-side `fq8` fake-quantization (Banner et
+//! al., the paper's 8-bit compatibility story) but executes the real
+//! integer GEMM instead of simulating it in f32. Scratch discipline:
+//! f32 activations come from the per-thread arena; the i8/i32 staging
+//! buffers are persistent on the model (`resize` + overwrite, so
+//! steady-state serving allocates nothing — this file is under the
+//! `hotpath-alloc` lint scope).
+//!
+//! [`Int8Model::prepare`] rejects plans that still contain a BatchNorm
+//! stage (an unfoldable BN has no int8 lowering here); the serving
+//! layer falls back to the fp32 prepared forward for those.
+
+use super::conv::{self, ConvGeom};
+use super::fold::FoldedModel;
+use super::models::OpKind;
+use super::ops::{self, Exec, LayerOp, SkipSlots, StepCtx};
+use crate::kernels::{self, int8, scratch};
+use anyhow::{bail, ensure, Result};
+
+/// A weighted stage lowered to one quantized GEMM.
+struct QuantStage {
+    /// `Some(geom)` = conv (GEMM over im2col patch rows), `None` =
+    /// dense (GEMM over batch rows).
+    geom: Option<ConvGeom>,
+    din: usize,
+    dout: usize,
+    wq: Vec<i8>,
+    wscale: f32,
+    bias: Vec<f32>,
+    relu: bool,
+}
+
+enum Int8Stage {
+    Quant(QuantStage),
+    /// Non-weighted stage running its regular f32 op.
+    Plain { op: Box<dyn LayerOp>, relu: bool },
+}
+
+/// The prepared int8 forward for one folded model.
+pub struct Int8Model {
+    name: String,
+    classes: usize,
+    input_numel: usize,
+    n_skip_slots: usize,
+    stages: Vec<Int8Stage>,
+    // persistent per-call staging (resized, never reallocated once warm)
+    patches: Vec<f32>,
+    xq: Vec<i8>,
+    xscales: Vec<f32>,
+    acc: Vec<i32>,
+}
+
+/// i8 GEMM depth limit: beyond this, `127^2 * din` could wrap the i32
+/// accumulator. Every zoo layer is orders of magnitude below it.
+const MAX_GEMM_DEPTH: usize = (i32::MAX / (127 * 127)) as usize;
+
+impl Int8Model {
+    /// Quantize a folded model's weights and build the stage chain.
+    pub fn prepare(fm: &FoldedModel) -> Result<Int8Model> {
+        let mut stages = Vec::with_capacity(fm.plan.stages.len());
+        for st in &fm.plan.stages {
+            match st.op {
+                OpKind::Conv2d { out_ch, k, stride, pad } => {
+                    let geom = ConvGeom::of(st, k, stride, pad);
+                    let pi = param_idx(st, &fm.name)?;
+                    stages.push(Int8Stage::Quant(quant_stage(
+                        Some(geom),
+                        geom.patch_len(),
+                        out_ch,
+                        fm.params[pi].data(),
+                        fm.params[pi + 1].data(),
+                        st.relu,
+                        &fm.name,
+                    )?));
+                }
+                OpKind::Dense { out } => {
+                    let din: usize = st.in_shape.iter().product();
+                    let pi = param_idx(st, &fm.name)?;
+                    stages.push(Int8Stage::Quant(quant_stage(
+                        None,
+                        din,
+                        out,
+                        fm.params[pi].data(),
+                        fm.params[pi + 1].data(),
+                        st.relu,
+                        &fm.name,
+                    )?));
+                }
+                OpKind::BatchNorm => bail!(
+                    "model '{}' kept an unfoldable BatchNorm; int8 lowering \
+                     requires a fully-folded plan (serve falls back to fp32)",
+                    fm.name
+                ),
+                _ => stages.push(Int8Stage::Plain { op: ops::build_op(st), relu: st.relu }),
+            }
+        }
+        Ok(Int8Model {
+            name: fm.name.clone(),
+            classes: fm.classes,
+            input_numel: fm.input_numel,
+            n_skip_slots: fm.plan.n_skip_slots,
+            stages,
+            patches: Vec::new(),
+            xq: Vec::new(),
+            xscales: Vec::new(),
+            acc: Vec::new(),
+        })
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Int8 logits for a batch. The returned buffer is the caller's.
+    pub fn forward(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        ensure!(batch > 0, "empty batch");
+        ensure!(
+            x.len() == batch * self.input_numel,
+            "model '{}': x has {} values, expected {} (batch {batch} x input {})",
+            self.name,
+            x.len(),
+            batch * self.input_numel,
+            self.input_numel
+        );
+        let Int8Model { stages, patches, xq, xscales, acc, n_skip_slots, .. } = self;
+        let var = kernels::variant();
+        scratch::with_thread_local(|sc| {
+            let mut ex = Exec { var, sc, skips: SkipSlots::new(*n_skip_slots) };
+            // non-weighted f32 ops never touch params on the forward
+            // path (BN, the only one that would, is rejected at prepare)
+            let ctx = StepCtx { batch, params: &[], train: false, int8: false };
+            let mut h = ex.sc.dup(x);
+            for st in stages.iter_mut() {
+                match st {
+                    Int8Stage::Plain { op, relu } => {
+                        h = op.forward(h, &ctx, &mut ex);
+                        if *relu {
+                            for v in h.iter_mut() {
+                                if *v < 0.0 {
+                                    *v = 0.0;
+                                }
+                            }
+                        }
+                    }
+                    Int8Stage::Quant(q) => {
+                        // GEMM rows per example: im2col positions for a
+                        // conv, one row for a dense layer.
+                        let per = match &q.geom {
+                            Some(g) => {
+                                // im2col_into leaves padding untouched,
+                                // so the reused buffer must be re-zeroed
+                                patches.resize(batch * g.positions() * g.patch_len(), 0.0);
+                                patches.fill(0.0);
+                                conv::im2col_into(&h, g, batch, patches);
+                                g.positions()
+                            }
+                            None => 1,
+                        };
+                        let rows = batch * per;
+                        let gemm_in: &[f32] =
+                            if q.geom.is_some() { patches.as_slice() } else { h.as_slice() };
+                        // one symmetric scale per example: quantization
+                        // never looks across example boundaries
+                        let group = per * q.din;
+                        xscales.resize(batch, 0.0);
+                        xq.resize(gemm_in.len(), 0);
+                        for ((xs, x_ex), q_ex) in xscales
+                            .iter_mut()
+                            .zip(gemm_in.chunks_exact(group))
+                            .zip(xq.chunks_exact_mut(group))
+                        {
+                            *xs = int8::quant_scale(int8::amax(x_ex));
+                            int8::quantize_into(x_ex, *xs, q_ex);
+                        }
+                        acc.resize(rows * q.dout, 0);
+                        int8::i8_affine_blocked_into(xq, &q.wq, rows, q.din, q.dout, acc);
+                        let mut z = ex.sc.grab_overwritten(rows * q.dout);
+                        let ex_out = per * q.dout;
+                        for ((zchunk, achunk), &xs) in z
+                            .chunks_exact_mut(ex_out)
+                            .zip(acc.chunks_exact(ex_out))
+                            .zip(xscales.iter())
+                        {
+                            let s = xs * q.wscale;
+                            for (zrow, arow) in
+                                zchunk.chunks_exact_mut(q.dout).zip(achunk.chunks_exact(q.dout))
+                            {
+                                for ((zv, &av), &bv) in
+                                    zrow.iter_mut().zip(arow.iter()).zip(q.bias.iter())
+                                {
+                                    let v = av as f32 * s + bv;
+                                    *zv = if q.relu && v < 0.0 { 0.0 } else { v };
+                                }
+                            }
+                        }
+                        ex.sc.put_back(std::mem::replace(&mut h, z));
+                    }
+                }
+            }
+            for st in stages.iter_mut() {
+                if let Int8Stage::Plain { op, .. } = st {
+                    op.recycle(ex.sc);
+                }
+            }
+            ex.skips.drain_into(ex.sc);
+            Ok(h)
+        })
+    }
+}
+
+fn param_idx(st: &super::models::Stage, name: &str) -> Result<usize> {
+    st.param_idx
+        .ok_or_else(|| anyhow::anyhow!("model '{name}': weighted stage missing param slot"))
+}
+
+fn quant_stage(
+    geom: Option<ConvGeom>,
+    din: usize,
+    dout: usize,
+    w: &[f32],
+    bias: &[f32],
+    relu: bool,
+    name: &str,
+) -> Result<QuantStage> {
+    ensure!(
+        w.len() == din * dout && bias.len() == dout,
+        "model '{name}': weight/bias shape mismatch for int8 lowering"
+    );
+    ensure!(
+        din <= MAX_GEMM_DEPTH,
+        "model '{name}': GEMM depth {din} risks i32 accumulator overflow"
+    );
+    let wscale = int8::quant_scale(int8::amax(w));
+    let mut wq = vec![0i8; w.len()];
+    int8::quantize_into(w, wscale, &mut wq);
+    Ok(QuantStage { geom, din, dout, wq, wscale, bias: bias.to_vec(), relu })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fold;
+    use super::super::graph::PreparedForward;
+    use super::super::{Backend, NativeBackend};
+    use super::*;
+    use crate::data;
+    use crate::runtime::Engine;
+    use crate::train::serving_params;
+    use crate::util::rng::Rng;
+
+    /// The serving agreement gate: int8 top-1 must match fp32 top-1 on
+    /// >= 99% of dataset examples across the whole zoo, on the same
+    /// deterministic lightly-trained weights the `serve` CLI uses
+    /// (random-init margins would make this a coin-flip test).
+    #[test]
+    fn int8_top1_agrees_with_fp32_across_zoo() {
+        let engine = Engine::native().unwrap();
+        let be = NativeBackend::builtin().unwrap();
+        let names: Vec<String> = engine.manifest.models.keys().cloned().collect();
+        assert!(names.len() >= 8, "zoo shrank below the paper's Table 1 set");
+        let mut total = 0usize;
+        let mut agree = 0usize;
+        for name in &names {
+            let spec = be.model_spec(name).unwrap().clone();
+            let params = serving_params(&engine, name, 42, 40).unwrap();
+            let fm = fold::fold(&spec, &params).unwrap();
+            let mut fp =
+                PreparedForward::from_plan(&fm.name, fm.plan.clone(), fm.classes, fm.input_numel);
+            let mut q8 = Int8Model::prepare(&fm).unwrap();
+
+            let ds = data::build(&spec.dataset, 0, 64, 7);
+            let batch = 16usize;
+            let classes = spec.num_classes();
+            let mut x = vec![0.0f32; batch * fm.input_numel];
+            for start in (0..64).step_by(batch) {
+                for i in 0..batch {
+                    ds.test
+                        .example(start + i, &mut x[i * fm.input_numel..(i + 1) * fm.input_numel]);
+                }
+                let lf = fp.logits(&fm.params, &x, batch).unwrap();
+                let lq = q8.forward(&x, batch).unwrap();
+                for bi in 0..batch {
+                    let a = argmax(&lf[bi * classes..(bi + 1) * classes]);
+                    let b = argmax(&lq[bi * classes..(bi + 1) * classes]);
+                    total += 1;
+                    if a == b {
+                        agree += 1;
+                    }
+                }
+            }
+        }
+        let rate = agree as f32 / total as f32;
+        assert!(
+            rate >= 0.99,
+            "int8 top-1 agreement {rate:.4} ({agree}/{total}) below the 99% gate"
+        );
+    }
+
+    fn argmax(row: &[f32]) -> usize {
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn int8_logits_are_close_to_fp32_on_a_conv_model() {
+        let engine = Engine::native().unwrap();
+        let be = NativeBackend::builtin().unwrap();
+        let spec = be.model_spec("lenet5").unwrap().clone();
+        let params = serving_params(&engine, "lenet5", 9, 20).unwrap();
+        let fm = fold::fold(&spec, &params).unwrap();
+        let mut fp =
+            PreparedForward::from_plan(&fm.name, fm.plan.clone(), fm.classes, fm.input_numel);
+        let mut q8 = Int8Model::prepare(&fm).unwrap();
+        let mut rng = Rng::new(11);
+        let batch = 4usize;
+        let x: Vec<f32> = (0..batch * fm.input_numel).map(|_| rng.uniform()).collect();
+        let lf = fp.logits(&fm.params, &x, batch).unwrap();
+        let lq = q8.forward(&x, batch).unwrap();
+        let scale = lf.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-3);
+        for (a, b) in lf.iter().zip(lq.iter()) {
+            assert!(
+                (a - b).abs() < 0.15 * scale,
+                "int8 logit {b} far from fp32 {a} (batch amax {scale})"
+            );
+        }
+    }
+
+    /// The property serving micro-batching rests on: an example's int8
+    /// logits are bit-identical whether it runs alone or co-batched
+    /// with unrelated examples (no quantization statistic crosses
+    /// example boundaries).
+    #[test]
+    fn int8_forward_is_batch_composition_invariant() {
+        let engine = Engine::native().unwrap();
+        let be = NativeBackend::builtin().unwrap();
+        for name in ["mlp128", "lenet5"] {
+            let spec = be.model_spec(name).unwrap().clone();
+            let params = serving_params(&engine, name, 5, 10).unwrap();
+            let fm = fold::fold(&spec, &params).unwrap();
+            let mut q8 = Int8Model::prepare(&fm).unwrap();
+            let mut rng = Rng::new(23);
+            let batch = 3usize;
+            let classes = spec.num_classes();
+            let x: Vec<f32> =
+                (0..batch * fm.input_numel).map(|_| rng.normal() * 0.7).collect();
+            let joint = q8.forward(&x, batch).unwrap();
+            for bi in 0..batch {
+                let solo = q8
+                    .forward(&x[bi * fm.input_numel..(bi + 1) * fm.input_numel], 1)
+                    .unwrap();
+                assert_eq!(
+                    solo,
+                    joint[bi * classes..(bi + 1) * classes].to_vec(),
+                    "{name}: example {bi} logits depend on its co-batched neighbors"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_forward_is_deterministic_across_calls() {
+        let be = NativeBackend::builtin().unwrap();
+        let spec = be.model_spec("mlp128").unwrap().clone();
+        let params = be.init_params("mlp128", 3).unwrap();
+        let fm = fold::fold(&spec, &params).unwrap();
+        let mut q8 = Int8Model::prepare(&fm).unwrap();
+        let mut rng = Rng::new(13);
+        let x: Vec<f32> = (0..2 * fm.input_numel).map(|_| rng.uniform()).collect();
+        let a = q8.forward(&x, 2).unwrap();
+        let b = q8.forward(&x, 2).unwrap();
+        assert_eq!(a, b, "reused staging buffers changed the forward");
+    }
+
+    #[test]
+    fn unfoldable_bn_is_rejected_at_prepare() {
+        use super::super::models::{LayerSpec, ModelSpec};
+        let spec = ModelSpec {
+            name: "bn-after-pool".into(),
+            input_shape: vec![4, 4, 2],
+            layers: vec![
+                LayerSpec::Conv2d { out_ch: 2, k: 3, stride: 1, pad: 1 },
+                LayerSpec::MaxPool2d { k: 2, stride: 2 },
+                LayerSpec::BatchNorm,
+                LayerSpec::Flatten,
+                LayerSpec::Dense { out: 3 },
+            ],
+            dataset: "digits".into(),
+            eval_batch: 4,
+            methods: vec!["baseline".into()],
+            lr: None,
+        };
+        let plan = spec.plan().unwrap();
+        let mut rng = Rng::new(17);
+        let params: Vec<crate::tensor::Tensor> = plan
+            .params
+            .iter()
+            .map(|info| {
+                crate::tensor::Tensor::from_vec(
+                    &info.shape,
+                    (0..info.numel()).map(|_| rng.normal() * 0.1 + 0.5).collect(),
+                )
+            })
+            .collect();
+        let fm = fold::fold(&spec, &params).unwrap();
+        let err = Int8Model::prepare(&fm);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("BatchNorm"));
+    }
+}

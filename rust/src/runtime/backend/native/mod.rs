@@ -25,7 +25,9 @@
 //!   and max-pool kernels.
 
 pub mod conv;
+pub mod fold;
 pub mod graph;
+pub mod int8fwd;
 pub mod methods;
 pub mod models;
 pub mod ops;
@@ -39,6 +41,9 @@ use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+pub use fold::FoldedModel;
+pub use graph::PreparedForward;
+pub use int8fwd::Int8Model;
 pub use methods::Method;
 pub use models::{LayerSpec, ModelSpec, OpKind, Plan};
 

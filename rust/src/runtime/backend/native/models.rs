@@ -66,7 +66,9 @@ pub enum OpKind {
 }
 
 /// One native model: a layer-graph topology the host kernels execute.
-#[derive(Debug, Clone)]
+/// `PartialEq` lets callers key prepared-plan caches on the full
+/// topology rather than the (reusable) name.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     pub name: String,
     /// `[d]` (flat) or `[h, w, c]` (NHWC image).

@@ -1,0 +1,181 @@
+//! Micro-batching queue for the serving loop.
+//!
+//! Requests accumulate until either enough *examples* are queued
+//! (`max_batch`) or the oldest request has waited `max_delay`; the
+//! flush then drains the whole queue in FIFO order. Batching by example
+//! count rather than request count keeps the flush trigger meaningful
+//! when clients send different batch sizes.
+//!
+//! Time is injected through `Instant` parameters instead of read
+//! internally, so unit tests fabricate deadlines without sleeping.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One admitted inference request waiting for a flush.
+#[derive(Debug)]
+pub struct Pending {
+    /// Index of the originating connection in the server's table.
+    pub conn: usize,
+    /// Client-chosen request id, echoed back in the reply.
+    pub id: u64,
+    pub model: String,
+    /// Examples in this request (`x.len() == batch * input_numel`).
+    pub batch: usize,
+    pub x: Vec<f32>,
+    /// Admission time; flush latency is measured from here.
+    pub arrived: Instant,
+}
+
+/// FIFO micro-batch queue with example-count and deadline triggers.
+pub struct Batcher {
+    queue: VecDeque<Pending>,
+    queued_examples: usize,
+    max_batch: usize,
+    max_delay: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Batcher {
+        Batcher {
+            queue: VecDeque::new(),
+            queued_examples: 0,
+            max_batch: max_batch.max(1),
+            max_delay,
+        }
+    }
+
+    pub fn push(&mut self, p: Pending) {
+        self.queued_examples += p.batch;
+        self.queue.push_back(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn queued_examples(&self) -> usize {
+        self.queued_examples
+    }
+
+    /// Should the queue flush at time `now`?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queued_examples >= self.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(oldest) => now.saturating_duration_since(oldest.arrived) >= self.max_delay,
+            None => false,
+        }
+    }
+
+    /// Drain the whole queue in FIFO order if a trigger fired; empty
+    /// vec otherwise. Draining everything (not just `max_batch`
+    /// examples) keeps reply order deterministic and bounds the
+    /// latency of requests that arrived just after the trigger filled.
+    pub fn take_ready(&mut self, now: Instant) -> Vec<Pending> {
+        if !self.ready(now) {
+            return Vec::new();
+        }
+        self.queued_examples = 0;
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn req(conn: usize, id: u64, batch: usize, arrived: Instant) -> Pending {
+        Pending { conn, id, model: "mlp128".into(), batch, x: vec![0.0; batch], arrived }
+    }
+
+    #[test]
+    fn max_batch_trigger_counts_examples_not_requests() {
+        let mut b = Batcher::new(8, Duration::from_secs(3600));
+        let t0 = Instant::now();
+        b.push(req(0, 1, 3, t0));
+        b.push(req(1, 2, 4, t0));
+        assert!(!b.ready(t0), "7 of 8 examples queued");
+        assert!(b.take_ready(t0).is_empty());
+        b.push(req(0, 3, 1, t0));
+        assert!(b.ready(t0), "8 of 8 examples queued");
+        let flushed = b.take_ready(t0);
+        assert_eq!(flushed.iter().map(|p| p.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert!(b.is_empty());
+        assert_eq!(b.queued_examples(), 0);
+    }
+
+    #[test]
+    fn deadline_trigger_flushes_a_partial_batch() {
+        let delay = Duration::from_millis(50);
+        let mut b = Batcher::new(1024, delay);
+        let t0 = Instant::now();
+        b.push(req(0, 7, 2, t0));
+        assert!(!b.ready(t0));
+        assert!(!b.ready(t0 + delay / 2));
+        assert!(b.ready(t0 + delay), "oldest request hit its deadline");
+        let flushed = b.take_ready(t0 + delay);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed.first().map(|p| p.id), Some(7));
+    }
+
+    #[test]
+    fn deadline_is_measured_from_the_oldest_request() {
+        let delay = Duration::from_millis(50);
+        let mut b = Batcher::new(1024, delay);
+        let t0 = Instant::now();
+        b.push(req(0, 1, 1, t0));
+        // A fresh arrival must not reset the oldest deadline.
+        b.push(req(1, 2, 1, t0 + delay / 2));
+        assert!(b.ready(t0 + delay));
+        assert_eq!(b.take_ready(t0 + delay).len(), 2, "flush drains the whole queue");
+    }
+
+    #[test]
+    fn empty_queue_is_never_ready() {
+        let b = Batcher::new(1, Duration::from_millis(0));
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn fifo_order_survives_concurrent_enqueue() {
+        // Interleaving across threads is arbitrary, but each thread's
+        // own requests must flush in its submission order (ids encode
+        // thread * 1000 + seq).
+        let b = Mutex::new(Batcher::new(usize::MAX, Duration::from_secs(3600)));
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for thread in 0..4u64 {
+                let b = &b;
+                s.spawn(move || {
+                    for seq in 0..50u64 {
+                        b.lock().unwrap().push(req(
+                            thread as usize,
+                            thread * 1000 + seq,
+                            1,
+                            t0,
+                        ));
+                    }
+                });
+            }
+        });
+        let mut b = b.into_inner().unwrap();
+        assert_eq!(b.queued_examples(), 200);
+        let flushed = b.take_ready(t0 + Duration::from_secs(7200));
+        assert_eq!(flushed.len(), 200);
+        let mut last_seq = [None::<u64>; 4];
+        for p in &flushed {
+            let (thread, seq) = ((p.id / 1000) as usize, p.id % 1000);
+            if let Some(prev) = last_seq[thread] {
+                assert!(seq > prev, "thread {thread}: {seq} flushed after {prev}");
+            }
+            last_seq[thread] = Some(seq);
+        }
+    }
+}

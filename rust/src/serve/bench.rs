@@ -1,0 +1,198 @@
+//! Serving latency bench: loopback server + concurrent clients,
+//! swept over batch size and client count.
+//!
+//! Each `(batch, clients)` cell binds a fresh ephemeral-port server,
+//! runs `requests_per_client` timed round-trips from every client
+//! thread, and aggregates their latency samples into p50/p99 and
+//! throughput. Results render as a table and append to the JSON bench
+//! report (`BENCH_serving.json`).
+
+use super::client::{run_infer, InferCfg};
+use super::server::{run_serve, ServeCfg};
+use super::QuantMode;
+use crate::bench_util::{num, text, JsonReport};
+use crate::metrics::Table;
+use crate::util::math::percentile;
+use anyhow::{bail, Context, Result};
+use std::net::TcpListener;
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    pub model: String,
+    /// Per-request batch sizes to sweep.
+    pub batches: Vec<usize>,
+    /// Concurrent client counts to sweep.
+    pub clients: Vec<usize>,
+    pub requests_per_client: usize,
+    pub quant: QuantMode,
+    pub seed: u64,
+    /// Weight-reconstruction steps; benches default to 0 (seeded init
+    /// only) since latency does not depend on the trained values.
+    pub steps: usize,
+    /// Server-side micro-batch flush threshold (examples).
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    /// JSON output path ("none" to skip).
+    pub json_path: String,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            model: "mlp128".into(),
+            batches: vec![1, 8, 32],
+            clients: vec![1, 4],
+            requests_per_client: 24,
+            quant: QuantMode::Int8,
+            seed: 42,
+            steps: 0,
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            json_path: "none".into(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct BenchRow {
+    pub batch: usize,
+    pub clients: usize,
+    pub requests: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub req_per_s: f64,
+}
+
+/// One sweep cell: serve on a loopback ephemeral port, hammer it with
+/// `clients` concurrent checking-disabled clients, pool the latencies.
+fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
+    let warmup = 1usize;
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding bench listener")?;
+    let addr = listener.local_addr().context("reading bench listener addr")?.to_string();
+    let total_requests = (clients * (cfg.requests_per_client + warmup)) as u64;
+    let serve_cfg = ServeCfg {
+        quant: cfg.quant,
+        seed: cfg.seed,
+        steps: cfg.steps,
+        max_batch: cfg.max_batch,
+        max_delay: cfg.max_delay,
+        max_requests: Some(total_requests),
+        ..ServeCfg::default()
+    };
+
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut requests = 0u64;
+    let mut elapsed_s = 0.0f64;
+    std::thread::scope(|s| -> Result<()> {
+        let server = s.spawn(|| run_serve(&listener, &serve_cfg));
+        let client_handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let infer_cfg = InferCfg {
+                    addr: addr.clone(),
+                    model: cfg.model.clone(),
+                    batch,
+                    requests: cfg.requests_per_client,
+                    warmup,
+                    seed: cfg.seed,
+                    steps: cfg.steps,
+                    quant: cfg.quant,
+                    check: false,
+                    connect_timeout: Duration::from_secs(10),
+                };
+                s.spawn(move || run_infer(&infer_cfg))
+            })
+            .collect();
+        for h in client_handles {
+            match h.join() {
+                Ok(Ok(summary)) => {
+                    requests += summary.requests;
+                    latencies.extend_from_slice(&summary.latencies_ms);
+                }
+                Ok(Err(e)) => bail!("bench client failed: {e:#}"),
+                Err(_) => bail!("bench client thread panicked"),
+            }
+        }
+        match server.join() {
+            Ok(Ok(stats)) => elapsed_s = stats.elapsed_s,
+            Ok(Err(e)) => bail!("bench server failed: {e:#}"),
+            Err(_) => bail!("bench server thread panicked"),
+        }
+        Ok(())
+    })?;
+
+    Ok(BenchRow {
+        batch,
+        clients,
+        requests,
+        p50_ms: percentile(&latencies, 50.0),
+        p99_ms: percentile(&latencies, 99.0),
+        req_per_s: if elapsed_s > 0.0 { requests as f64 / elapsed_s } else { 0.0 },
+    })
+}
+
+/// Full sweep; renders a table to stdout and writes the JSON report.
+pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
+    let mut rows = Vec::new();
+    let mut table =
+        Table::new(&["model", "quant", "batch", "clients", "req", "p50 ms", "p99 ms", "req/s"]);
+    let mut json = JsonReport::new("serve_latency");
+    json.meta("model", text(&cfg.model));
+    json.meta("quant", text(cfg.quant.name()));
+    json.meta("requests_per_client", num(cfg.requests_per_client as f64));
+    json.meta("server_max_batch", num(cfg.max_batch as f64));
+    json.meta("server_max_delay_ms", num(cfg.max_delay.as_secs_f64() * 1e3));
+
+    for &batch in &cfg.batches {
+        for &clients in &cfg.clients {
+            let row = run_cell(cfg, batch, clients)
+                .with_context(|| format!("bench cell batch={batch} clients={clients}"))?;
+            table.row(&[
+                cfg.model.clone(),
+                cfg.quant.name().to_string(),
+                row.batch.to_string(),
+                row.clients.to_string(),
+                row.requests.to_string(),
+                format!("{:.3}", row.p50_ms),
+                format!("{:.3}", row.p99_ms),
+                format!("{:.1}", row.req_per_s),
+            ]);
+            json.row(&[
+                ("model", text(&cfg.model)),
+                ("quant", text(cfg.quant.name())),
+                ("batch", num(row.batch as f64)),
+                ("clients", num(row.clients as f64)),
+                ("requests", num(row.requests as f64)),
+                ("p50_ms", num(row.p50_ms)),
+                ("p99_ms", num(row.p99_ms)),
+                ("req_per_s", num(row.req_per_s)),
+            ]);
+            rows.push(row);
+        }
+    }
+
+    println!("{}", table.render());
+    if json.write(&cfg.json_path).context("writing serve bench json")? {
+        println!("wrote {}", cfg.json_path);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_cell_round_trips_on_loopback() {
+        let cfg = BenchCfg {
+            requests_per_client: 3,
+            batches: vec![2],
+            clients: vec![2],
+            ..BenchCfg::default()
+        };
+        let row = run_cell(&cfg, 2, 2).unwrap();
+        assert_eq!(row.requests, 6, "2 clients x 3 timed requests");
+        assert!(row.p50_ms >= 0.0 && row.p99_ms >= row.p50_ms);
+        assert!(row.req_per_s > 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! LRU cache of prepared serving plans.
+//!
+//! Folding + quantizing (and, for trained weights, deterministically
+//! re-running the seeded training) is the expensive part of serving a
+//! model, so the server keeps the `cap` most recently used
+//! [`ServeModel`]s. A `Vec` with MRU at the back is plenty at serving
+//! cache sizes (a handful of models); hit/miss counters feed the
+//! serve-loop summary.
+
+use super::ServeModel;
+use anyhow::{bail, Result};
+
+pub struct PlanCache {
+    cap: usize,
+    /// `(model name, prepared plan)`, least recently used first.
+    entries: Vec<(String, ServeModel)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache { cap: cap.max(1), entries: Vec::new(), hits: 0, misses: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Names currently cached, LRU first (for logs and tests).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Look up `name`, building (and possibly evicting) on a miss. A
+    /// failed build leaves the cache untouched and surfaces the error
+    /// to the caller, which maps it to a per-connection fault rather
+    /// than a server crash.
+    pub fn get_or_try_insert(
+        &mut self,
+        name: &str,
+        build: impl FnOnce() -> Result<ServeModel>,
+    ) -> Result<&mut ServeModel> {
+        if let Some(pos) = self.entries.iter().position(|(n, _)| n == name) {
+            self.hits += 1;
+            // Refresh: move the hit entry to the MRU slot.
+            let entry = self.entries.remove(pos);
+            self.entries.push(entry);
+        } else {
+            self.misses += 1;
+            let built = build()?;
+            if self.entries.len() >= self.cap {
+                self.entries.remove(0); // evict the LRU entry
+            }
+            self.entries.push((name.to_string(), built));
+        }
+        match self.entries.last_mut() {
+            Some((_, m)) => Ok(m),
+            None => bail!("plan cache invariant broken: empty after insert"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::QuantMode;
+
+    fn build(name: &str) -> Result<ServeModel> {
+        ServeModel::prepare_named(name, 1, 0, QuantMode::Fp32)
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = PlanCache::new(2);
+        c.get_or_try_insert("mlp128", || build("mlp128")).unwrap();
+        c.get_or_try_insert("mlp500", || build("mlp500")).unwrap();
+        assert_eq!(c.names(), vec!["mlp128", "mlp500"]);
+        // Touch mlp128 so mlp500 becomes the LRU entry...
+        c.get_or_try_insert("mlp128", || build("mlp128")).unwrap();
+        // ...then a third model must evict mlp500, not mlp128.
+        c.get_or_try_insert("lenet5", || build("lenet5")).unwrap();
+        assert_eq!(c.names(), vec!["mlp128", "lenet5"]);
+        assert_eq!((c.hits, c.misses), (1, 3));
+    }
+
+    #[test]
+    fn hits_do_not_rebuild() {
+        let mut c = PlanCache::new(4);
+        c.get_or_try_insert("mlp128", || build("mlp128")).unwrap();
+        let m = c
+            .get_or_try_insert("mlp128", || bail!("must not rebuild a cached model"))
+            .unwrap();
+        assert_eq!(m.name, "mlp128");
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn failed_builds_leave_the_cache_untouched() {
+        let mut c = PlanCache::new(2);
+        c.get_or_try_insert("mlp128", || build("mlp128")).unwrap();
+        assert!(c.get_or_try_insert("nope", || build("nope")).is_err());
+        assert_eq!(c.names(), vec!["mlp128"]);
+        assert_eq!((c.hits, c.misses), (0, 2));
+    }
+}

@@ -1,0 +1,214 @@
+//! Inference client: sends `InferRequest` frames, reads replies, and
+//! optionally proves them *bit-identical* to a local forward.
+//!
+//! Inputs are drawn deterministically from the model's registry
+//! dataset, so a checking client can reproduce both the inputs it sent
+//! and — via [`ServeModel::prepare_named`] with the server's
+//! `(seed, steps)` — the exact weights the server is serving. `--check`
+//! then asserts every reply's predictions *and logits* equal a local
+//! forward bitwise, which is the end-to-end proof that folding,
+//! quantization, framing and micro-batch concatenation are all
+//! numerics-preserving.
+
+use super::{QuantMode, ServeModel};
+use crate::data;
+use crate::net::{Msg, TcpTransport, Transport};
+use crate::runtime::Engine;
+use anyhow::{bail, ensure, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Seed offset for the client's synthetic input stream (distinct from
+/// the training-data seed so served inputs are "unseen").
+const INPUT_SEED: u64 = 0x1f2e3d;
+
+#[derive(Debug, Clone)]
+pub struct InferCfg {
+    pub addr: String,
+    pub model: String,
+    /// Examples per request.
+    pub batch: usize,
+    /// Timed requests to send.
+    pub requests: usize,
+    /// Untimed warm-up requests sent first (plan preparation happens
+    /// on the server's first batch).
+    pub warmup: usize,
+    /// Must match the server for `check` to hold.
+    pub seed: u64,
+    pub steps: usize,
+    pub quant: QuantMode,
+    /// Verify every reply bitwise against a local forward.
+    pub check: bool,
+    pub connect_timeout: Duration,
+}
+
+impl Default for InferCfg {
+    fn default() -> Self {
+        InferCfg {
+            addr: "127.0.0.1:7700".into(),
+            model: "mlp128".into(),
+            batch: 1,
+            requests: 16,
+            warmup: 1,
+            seed: 42,
+            steps: 40,
+            quant: QuantMode::Int8,
+            check: false,
+            connect_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct InferSummary {
+    pub requests: u64,
+    pub examples: u64,
+    /// Round-trip latency of each timed request, milliseconds.
+    pub latencies_ms: Vec<f64>,
+    /// Replies verified bit-identical against the local forward.
+    pub checked: u64,
+    /// Predictions from the final timed reply (CLI display).
+    pub last_preds: Vec<u32>,
+}
+
+/// Deterministic input batches: example `i` of the stream is the same
+/// in every process for a given model, so server-side weights plus
+/// these inputs fully determine the expected replies.
+fn input_stream(model: &str, total_examples: usize) -> Result<(Vec<f32>, usize)> {
+    let engine = Engine::native()?;
+    let entry = match engine.manifest.models.get(model) {
+        Some(e) => e,
+        None => bail!("unknown model '{model}'"),
+    };
+    let numel: usize = entry.input_shape.iter().product();
+    // data::build panics on unknown kinds; registry entries only name
+    // known kinds, so this cannot fire for a validated model.
+    let ds = data::build(&entry.dataset, 0, total_examples, INPUT_SEED);
+    ensure!(ds.test.len() >= total_examples, "dataset shorter than requested stream");
+    ensure!(ds.test.dim == numel, "dataset dim {} != registry numel {numel}", ds.test.dim);
+    let mut xs = vec![0.0f32; total_examples * numel];
+    let mut buf = vec![0.0f32; numel];
+    for i in 0..total_examples {
+        ds.test.example(i, &mut buf);
+        let at = i * numel;
+        if let Some(dst) = xs.get_mut(at..at + numel) {
+            dst.copy_from_slice(&buf);
+        }
+    }
+    Ok((xs, numel))
+}
+
+/// Run `warmup + requests` inference round-trips against `addr`.
+pub fn run_infer(cfg: &InferCfg) -> Result<InferSummary> {
+    ensure!(cfg.batch > 0, "batch must be positive");
+    ensure!(cfg.requests > 0, "need at least one timed request");
+    let total = cfg.warmup + cfg.requests;
+    let (xs, numel) = input_stream(&cfg.model, total * cfg.batch)?;
+    let mut local = if cfg.check {
+        Some(
+            ServeModel::prepare_named(&cfg.model, cfg.seed, cfg.steps, cfg.quant)
+                .context("preparing local reference model for --check")?,
+        )
+    } else {
+        None
+    };
+
+    let mut t = TcpTransport::connect_retry(&cfg.addr, cfg.connect_timeout)?;
+    let mut summary = InferSummary {
+        requests: 0,
+        examples: 0,
+        latencies_ms: Vec::with_capacity(cfg.requests),
+        checked: 0,
+        last_preds: Vec::new(),
+    };
+
+    for i in 0..total {
+        let span = i * cfg.batch * numel..(i + 1) * cfg.batch * numel;
+        let x = match xs.get(span) {
+            Some(x) => x,
+            None => bail!("input stream exhausted at request {i}"),
+        };
+        let sent_at = Instant::now();
+        t.send(&Msg::InferRequest {
+            id: i as u64,
+            model: cfg.model.clone(),
+            batch: cfg.batch as u32,
+            x: x.to_vec(),
+        })?;
+        let reply = match t.recv_deadline(Duration::from_secs(30))? {
+            Some(m) => m,
+            None => bail!("server sent no reply within 30s (request {i})"),
+        };
+        let rtt_ms = sent_at.elapsed().as_secs_f64() * 1e3;
+        let (id, classes, preds, logits) = match reply {
+            Msg::InferReply { id, classes, preds, logits } => (id, classes, preds, logits),
+            Msg::Shutdown { fault, reason } => {
+                bail!("server shut the connection (fault={fault}): {reason}")
+            }
+            other => bail!("unexpected reply tag {}", other.tag()),
+        };
+        ensure!(id == i as u64, "reply id {id} for request {i}");
+        ensure!(preds.len() == cfg.batch, "{} predictions for batch {}", preds.len(), cfg.batch);
+        ensure!(
+            logits.len() == cfg.batch * classes as usize,
+            "{} logits for batch {} x {classes} classes",
+            logits.len(),
+            cfg.batch
+        );
+
+        if let Some(local) = local.as_mut() {
+            let (want_preds, want_logits) = local.infer(x, cfg.batch)?;
+            ensure!(
+                preds == want_preds,
+                "request {i}: served predictions {preds:?} != local {want_preds:?}"
+            );
+            // Bitwise, not approximate: framing and micro-batching must
+            // not perturb a single ULP.
+            let same_bits = logits
+                .iter()
+                .zip(want_logits.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            ensure!(
+                same_bits && logits.len() == want_logits.len(),
+                "request {i}: served logits differ bitwise from the local forward"
+            );
+            summary.checked += 1;
+        }
+
+        if i >= cfg.warmup {
+            summary.requests += 1;
+            summary.examples += cfg.batch as u64;
+            summary.latencies_ms.push(rtt_ms);
+            summary.last_preds = preds;
+        }
+    }
+
+    // Best-effort courtesy: a bounded server (`--max-requests`) may
+    // already have exited after its last reply.
+    let _ = t.send(&Msg::Shutdown { fault: false, reason: "client done".into() });
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_stream_is_deterministic_and_registry_sized() {
+        let (a, numel_a) = input_stream("lenet5", 3).unwrap();
+        let (b, numel_b) = input_stream("lenet5", 3).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(numel_a, numel_b);
+        assert_eq!(a.len(), 3 * numel_a);
+        assert_eq!(numel_a, 28 * 28, "lenet5 serves the digits dataset");
+        assert!(input_stream("no-such-model", 1).is_err());
+    }
+
+    #[test]
+    fn infer_cfg_rejects_degenerate_shapes() {
+        let mut cfg = InferCfg { requests: 0, ..InferCfg::default() };
+        assert!(run_infer(&cfg).is_err());
+        cfg.requests = 1;
+        cfg.batch = 0;
+        assert!(run_infer(&cfg).is_err());
+    }
+}

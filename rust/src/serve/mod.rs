@@ -1,0 +1,248 @@
+//! Int8 inference serving: BN-folded, quantized forward behind the
+//! framed transport (DESIGN.md §Serving).
+//!
+//! The training stack optimizes the backward pass; this subsystem is
+//! the matching deployment story for the *forward* pass. A serving
+//! process prepares each model once — fold the trained BatchNorm
+//! statistics into the preceding conv/dense weights
+//! ([`runtime::backend::native::fold`]), then quantize the folded
+//! weights to int8 ([`runtime::backend::native::int8fwd`]) — and
+//! answers `InferRequest` frames over the same wire protocol the
+//! distributed coordinator speaks.
+//!
+//! Layering:
+//!
+//! ```text
+//! server      nonblocking accept + poll loop, request validation
+//!   |
+//! batcher     micro-batch queue: flush on max-batch or deadline
+//!   |
+//! cache       per-model LRU of prepared (folded + quantized) plans
+//!   |
+//! ServeModel  fold -> PreparedForward (fp32) + Int8Model (quantized)
+//! ```
+//!
+//! **Weights.** Serving weights are *deterministically reconstructed*:
+//! [`crate::train::serving_params`] runs a short seeded training run
+//! whose result is bit-identical in every process (seeded init + data,
+//! exact SGD, bit-identical kernels at any thread count). A server and
+//! an `infer --check` client therefore agree on the exact parameters
+//! without any checkpoint crossing the wire, and the client can verify
+//! replies *bitwise* against a local forward.
+//!
+//! **Bit-identity under batching.** The micro-batcher concatenates
+//! requests from unrelated clients into one forward. Replies still
+//! match a single-request local forward bit-for-bit because both
+//! forward paths are batch-composition invariant: the f32 kernels
+//! process batch rows independently, and the int8 path quantizes
+//! activations per example, never across example boundaries.
+//!
+//! This module is under the `no-panic-transport` lint scope: a
+//! malformed peer or a bad request must surface as `Err` / a reasoned
+//! `Shutdown`, never a server panic.
+
+pub mod batcher;
+pub mod bench;
+pub mod cache;
+pub mod client;
+pub mod server;
+
+pub use batcher::{Batcher, Pending};
+pub use bench::{run_bench, BenchCfg, BenchRow};
+pub use cache::PlanCache;
+pub use client::{run_infer, InferCfg, InferSummary};
+pub use server::{run_serve, ServeCfg, ServeStats};
+
+use crate::runtime::backend::native::models::ModelSpec;
+use crate::runtime::backend::native::{fold, Int8Model, NativeBackend, PreparedForward};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::train::serving_params;
+use anyhow::{bail, ensure, Result};
+
+/// Numeric mode of the serving forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    /// BN-folded fp32 forward (the accuracy reference).
+    Fp32,
+    /// BN-folded int8 forward (per-tensor weights, per-example
+    /// activations, i32 accumulators).
+    Int8,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<QuantMode> {
+        match s {
+            "fp32" => Ok(QuantMode::Fp32),
+            "int8" => Ok(QuantMode::Int8),
+            other => bail!("unknown quant mode '{other}' (expected fp32 | int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Fp32 => "fp32",
+            QuantMode::Int8 => "int8",
+        }
+    }
+}
+
+/// One model prepared for serving: the BN-folded plan with both a
+/// fp32 prepared forward and (when requested and foldable) the int8
+/// executor over the same folded parameters.
+pub struct ServeModel {
+    pub name: String,
+    pub classes: usize,
+    pub input_numel: usize,
+    /// Mode actually in use: an `Int8` request falls back to `Fp32`
+    /// when the plan kept an unfoldable BatchNorm.
+    pub mode: QuantMode,
+    /// BatchNorm stages folded away during preparation.
+    pub folded_bn: usize,
+    params: Vec<Tensor>,
+    fp32: PreparedForward,
+    int8: Option<Int8Model>,
+}
+
+impl ServeModel {
+    /// Fold + quantize a spec with explicit parameters.
+    pub fn prepare(spec: &ModelSpec, params: &[Tensor], want: QuantMode) -> Result<ServeModel> {
+        let fm = fold::fold(spec, params)?;
+        let folded_bn = fm.n_folded(spec)?;
+        let fp32 =
+            PreparedForward::from_plan(&fm.name, fm.plan.clone(), fm.classes, fm.input_numel);
+        let (mode, int8) = match want {
+            QuantMode::Fp32 => (QuantMode::Fp32, None),
+            // An unfoldable BatchNorm has no int8 lowering: serve the
+            // folded fp32 plan instead of refusing the model.
+            QuantMode::Int8 => match Int8Model::prepare(&fm) {
+                Ok(m) => (QuantMode::Int8, Some(m)),
+                Err(_) => (QuantMode::Fp32, None),
+            },
+        };
+        Ok(ServeModel {
+            name: fm.name.clone(),
+            classes: fm.classes,
+            input_numel: fm.input_numel,
+            mode,
+            folded_bn,
+            params: fm.params,
+            fp32,
+            int8,
+        })
+    }
+
+    /// Deterministic build for a registry model: every process calling
+    /// this with the same `(name, seed, steps)` reconstructs the same
+    /// bits (see [`crate::train::serving_params`]).
+    pub fn prepare_named(
+        name: &str,
+        seed: u64,
+        steps: usize,
+        want: QuantMode,
+    ) -> Result<ServeModel> {
+        let engine = Engine::native()?;
+        let be = NativeBackend::builtin()?;
+        let spec = be.model_spec(name)?.clone();
+        let params = serving_params(&engine, name, seed, steps)?;
+        ServeModel::prepare(&spec, &params, want)
+    }
+
+    /// Raw logits (`batch * classes`) through the active mode.
+    pub fn logits(&mut self, x: &[f32], batch: usize) -> Result<Vec<f32>> {
+        ensure!(batch > 0, "empty batch");
+        ensure!(
+            x.len() == batch * self.input_numel,
+            "model '{}': {} input values, expected {} (batch {batch} x {})",
+            self.name,
+            x.len(),
+            batch * self.input_numel,
+            self.input_numel
+        );
+        match (&mut self.int8, self.mode) {
+            (Some(q8), QuantMode::Int8) => q8.forward(x, batch),
+            _ => self.fp32.logits(&self.params, x, batch),
+        }
+    }
+
+    /// Argmax predictions + raw logits for a batch.
+    pub fn infer(&mut self, x: &[f32], batch: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+        let logits = self.logits(x, batch)?;
+        let preds = argmax_rows(&logits, self.classes);
+        Ok((preds, logits))
+    }
+}
+
+/// Row-wise argmax over flattened logits (ties go to the lowest class,
+/// matching the evaluator's `>` scan).
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u32> {
+    if classes == 0 {
+        return Vec::new();
+    }
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0u32;
+            let mut best_v = f32::NEG_INFINITY;
+            for (c, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = c as u32;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_mode_parses_both_ways() {
+        assert_eq!(QuantMode::parse("fp32").unwrap(), QuantMode::Fp32);
+        assert_eq!(QuantMode::parse("int8").unwrap(), QuantMode::Int8);
+        assert!(QuantMode::parse("fp16").is_err());
+        assert_eq!(QuantMode::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn argmax_rows_picks_first_of_ties() {
+        let logits = [0.1, 0.9, 0.3, 0.7, 0.7, 0.1];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+        assert!(argmax_rows(&[], 4).is_empty());
+        assert!(argmax_rows(&[1.0], 0).is_empty());
+    }
+
+    #[test]
+    fn prepare_named_folds_and_quantizes_vgg8bn() {
+        let mut m = ServeModel::prepare_named("vgg8bn", 3, 0, QuantMode::Int8).unwrap();
+        assert_eq!(m.mode, QuantMode::Int8);
+        assert!(m.folded_bn > 0, "vgg8bn should fold its BN stages");
+        let x = vec![0.25f32; m.input_numel];
+        let (preds, logits) = m.infer(&x, 1).unwrap();
+        assert_eq!(preds.len(), 1);
+        assert_eq!(logits.len(), m.classes);
+    }
+
+    #[test]
+    fn int8_request_on_bn_free_model_still_serves_int8() {
+        let m = ServeModel::prepare_named("mlp128", 3, 0, QuantMode::Int8).unwrap();
+        assert_eq!(m.mode, QuantMode::Int8);
+        assert_eq!(m.folded_bn, 0);
+    }
+
+    #[test]
+    fn fp32_mode_matches_int8_shapes_and_its_own_determinism() {
+        let mut a = ServeModel::prepare_named("mlp128", 7, 0, QuantMode::Fp32).unwrap();
+        let mut b = ServeModel::prepare_named("mlp128", 7, 0, QuantMode::Fp32).unwrap();
+        let x = vec![0.5f32; 2 * a.input_numel];
+        assert_eq!(a.infer(&x, 2).unwrap(), b.infer(&x, 2).unwrap());
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        assert!(ServeModel::prepare_named("nope", 1, 0, QuantMode::Fp32).is_err());
+    }
+}

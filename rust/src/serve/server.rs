@@ -1,0 +1,345 @@
+//! The serving loop: nonblocking accept, per-connection polling,
+//! micro-batched folded/quantized forwards, framed replies.
+//!
+//! Single-threaded by design — the forward pass dominates wall time
+//! and is already bit-deterministic at any kernel thread count, so one
+//! poll loop multiplexing every connection keeps reply order and
+//! latency accounting simple while still serving concurrent clients
+//! (each poll round visits every live connection).
+//!
+//! Protocol per connection: clients send `InferRequest` frames and
+//! read `InferReply` frames; either side ends with `Shutdown`. A
+//! malformed or invalid request earns a faulted `Shutdown` naming the
+//! reason and the connection is dropped — the server itself never
+//! exits on peer misbehavior.
+
+use super::batcher::{Batcher, Pending};
+use super::cache::PlanCache;
+use super::{QuantMode, ServeModel};
+use crate::net::{Msg, TcpTransport, Transport};
+use crate::runtime::Engine;
+use crate::util::math::percentile;
+use anyhow::{Context, Result};
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+/// Hard cap on examples per request, mirroring the decoder's guard in
+/// `net::proto` so an admitted request can never out-size the wire.
+pub const MAX_REQUEST_BATCH: usize = 4096;
+
+/// How long one poll round waits on each connection for the *start* of
+/// a frame. Small, so a round visits every connection quickly.
+const POLL: Duration = Duration::from_millis(1);
+
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    pub quant: QuantMode,
+    /// Seed + steps of the deterministic weight reconstruction
+    /// ([`crate::train::serving_params`]) — clients that want to
+    /// `--check` replies must use the same pair.
+    pub seed: u64,
+    pub steps: usize,
+    /// Flush the micro-batch queue at this many queued examples.
+    pub max_batch: usize,
+    /// ... or once the oldest queued request has waited this long.
+    pub max_delay: Duration,
+    /// LRU capacity of the prepared-plan cache.
+    pub cache_cap: usize,
+    /// Serve exactly this many requests, then return (tests, benches,
+    /// CI smoke). `None` serves until the process dies.
+    pub max_requests: Option<u64>,
+    pub verbose: bool,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            quant: QuantMode::Int8,
+            seed: 42,
+            steps: 40,
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            cache_cap: 4,
+            max_requests: None,
+            verbose: false,
+        }
+    }
+}
+
+/// Counters and latency samples from one `run_serve` call.
+#[derive(Debug, Default)]
+pub struct ServeStats {
+    /// Requests answered with an `InferReply`.
+    pub served: u64,
+    /// Examples inside those requests.
+    pub examples: u64,
+    /// Forward passes (flushed micro-batches, per model group).
+    pub batches: u64,
+    /// Requests rejected with a faulted `Shutdown`.
+    pub rejected: u64,
+    /// Admission-to-reply latency of each served request, milliseconds.
+    pub latencies_ms: Vec<f64>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub elapsed_s: f64,
+}
+
+impl ServeStats {
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 99.0)
+    }
+
+    pub fn req_per_s(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.served as f64 / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} requests ({} examples) in {} forwards over {:.2}s | \
+             p50 {:.3} ms, p99 {:.3} ms, {:.1} req/s | \
+             cache {} hits / {} misses | {} rejected",
+            self.served,
+            self.examples,
+            self.batches,
+            self.elapsed_s,
+            self.p50_ms(),
+            self.p99_ms(),
+            self.req_per_s(),
+            self.cache_hits,
+            self.cache_misses,
+            self.rejected
+        )
+    }
+}
+
+/// Validate an admitted `InferRequest` against the model registry.
+/// Decode guards already bounded `batch`; this adds existence and
+/// exact input-size checks so the forward can never see a shape error.
+fn validate(engine: &Engine, model: &str, batch: u32, x_len: usize) -> Result<(), String> {
+    let entry = match engine.manifest.models.get(model) {
+        Some(e) => e,
+        None => return Err(format!("unknown model '{model}'")),
+    };
+    let numel: usize = entry.input_shape.iter().product();
+    if batch == 0 || batch as usize > MAX_REQUEST_BATCH {
+        return Err(format!("batch {batch} outside 1..={MAX_REQUEST_BATCH}"));
+    }
+    if x_len != batch as usize * numel {
+        return Err(format!(
+            "model '{model}': {x_len} input values, expected {} (batch {batch} x {numel})",
+            batch as usize * numel
+        ));
+    }
+    Ok(())
+}
+
+/// Send a faulted `Shutdown` naming `reason`, then drop the slot.
+fn fault_drop(slot: &mut Option<Box<dyn Transport>>, reason: &str) {
+    if let Some(t) = slot.as_mut() {
+        let _ = t.send(&Msg::Shutdown { fault: true, reason: reason.to_string() });
+    }
+    *slot = None;
+}
+
+/// Run the serving loop on an already-bound listener until
+/// `max_requests` is reached (never returns when it is `None`).
+pub fn run_serve(listener: &TcpListener, cfg: &ServeCfg) -> Result<ServeStats> {
+    listener.set_nonblocking(true).context("setting listener nonblocking")?;
+    let engine = Engine::native()?;
+    let mut cache = PlanCache::new(cfg.cache_cap);
+    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_delay);
+    let mut conns: Vec<Option<Box<dyn Transport>>> = Vec::new();
+    let mut stats = ServeStats::default();
+    let started = Instant::now();
+
+    loop {
+        // Admit every connection waiting on the listener.
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => match TcpTransport::from_stream(stream) {
+                    Ok(t) => conns.push(Some(Box::new(t))),
+                    Err(e) => {
+                        if cfg.verbose {
+                            eprintln!("[serve] rejected connection: {e:#}");
+                        }
+                    }
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e).context("accepting connection"),
+            }
+        }
+
+        // One short poll per live connection.
+        for (ci, slot) in conns.iter_mut().enumerate() {
+            let Some(t) = slot.as_mut() else { continue };
+            match t.recv_deadline(POLL) {
+                Ok(None) => {}
+                Ok(Some(Msg::InferRequest { id, model, batch, x })) => {
+                    match validate(&engine, &model, batch, x.len()) {
+                        Ok(()) => batcher.push(Pending {
+                            conn: ci,
+                            id,
+                            model,
+                            batch: batch as usize,
+                            x,
+                            arrived: Instant::now(),
+                        }),
+                        Err(reason) => {
+                            stats.rejected += 1;
+                            fault_drop(slot, &reason);
+                        }
+                    }
+                }
+                Ok(Some(Msg::Shutdown { .. })) => *slot = None,
+                Ok(Some(other)) => {
+                    stats.rejected += 1;
+                    fault_drop(slot, &format!("unexpected message tag {}", other.tag()));
+                }
+                Err(_) => *slot = None, // peer hung up or sent garbage
+            }
+        }
+
+        // Flush: group the FIFO drain by model, one forward per group.
+        let now = Instant::now();
+        if batcher.ready(now) {
+            let drained = batcher.take_ready(now);
+            let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+            for p in drained {
+                match groups.iter_mut().find(|(m, _)| *m == p.model) {
+                    Some((_, g)) => g.push(p),
+                    None => groups.push((p.model.clone(), vec![p])),
+                }
+            }
+            for (model, group) in groups {
+                let prepared = cache.get_or_try_insert(&model, || {
+                    ServeModel::prepare_named(&model, cfg.seed, cfg.steps, cfg.quant)
+                });
+                let sm = match prepared {
+                    Ok(sm) => sm,
+                    Err(e) => {
+                        let reason = format!("preparing model '{model}': {e:#}");
+                        for p in &group {
+                            stats.rejected += 1;
+                            if let Some(slot) = conns.get_mut(p.conn) {
+                                fault_drop(slot, &reason);
+                            }
+                        }
+                        continue;
+                    }
+                };
+                let total: usize = group.iter().map(|p| p.batch).sum();
+                let mut xs = Vec::with_capacity(total * sm.input_numel);
+                for p in &group {
+                    xs.extend_from_slice(&p.x);
+                }
+                let (preds, logits) = match sm.infer(&xs, total) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        // Validation should make this unreachable; if a
+                        // forward still fails, fault the group, keep
+                        // serving.
+                        let reason = format!("forward failed for '{model}': {e:#}");
+                        for p in &group {
+                            stats.rejected += 1;
+                            if let Some(slot) = conns.get_mut(p.conn) {
+                                fault_drop(slot, &reason);
+                            }
+                        }
+                        continue;
+                    }
+                };
+                stats.batches += 1;
+                let classes = sm.classes;
+                let done = Instant::now();
+                let mut preds = preds.into_iter();
+                let mut logits = logits.into_iter();
+                for p in group {
+                    let reply = Msg::InferReply {
+                        id: p.id,
+                        classes: classes as u32,
+                        preds: preds.by_ref().take(p.batch).collect(),
+                        logits: logits.by_ref().take(p.batch * classes).collect(),
+                    };
+                    if let Some(slot) = conns.get_mut(p.conn) {
+                        if let Some(t) = slot.as_mut() {
+                            match t.send(&reply) {
+                                Ok(()) => {
+                                    stats.served += 1;
+                                    stats.examples += p.batch as u64;
+                                    stats
+                                        .latencies_ms
+                                        .push(done.saturating_duration_since(p.arrived).as_secs_f64() * 1e3);
+                                }
+                                Err(_) => *slot = None,
+                            }
+                        }
+                    }
+                }
+                if cfg.verbose {
+                    eprintln!(
+                        "[serve] {model}: batch of {total} examples served ({} total requests)",
+                        stats.served
+                    );
+                }
+            }
+        }
+
+        if let Some(cap) = cfg.max_requests {
+            if stats.served + stats.rejected >= cap && batcher.is_empty() {
+                break;
+            }
+        }
+
+        // Nothing to poll: sleep instead of spinning on accept().
+        if conns.iter().all(|c| c.is_none()) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    stats.cache_hits = cache.hits;
+    stats.cache_misses = cache.misses;
+    stats.elapsed_s = started.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_unknown_model_bad_batch_and_bad_len() {
+        let engine = Engine::native().unwrap();
+        let entry = engine.manifest.models.get("mlp128").unwrap();
+        let numel: usize = entry.input_shape.iter().product();
+        assert!(validate(&engine, "mlp128", 2, 2 * numel).is_ok());
+        assert!(validate(&engine, "no-such-model", 1, numel).is_err());
+        assert!(validate(&engine, "mlp128", 0, 0).is_err());
+        assert!(validate(&engine, "mlp128", 5000, 5000 * numel).is_err());
+        assert!(validate(&engine, "mlp128", 2, 2 * numel + 1).is_err());
+    }
+
+    #[test]
+    fn stats_summary_reports_percentiles() {
+        let stats = ServeStats {
+            served: 4,
+            examples: 8,
+            batches: 2,
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            elapsed_s: 2.0,
+            ..ServeStats::default()
+        };
+        assert_eq!(stats.p50_ms(), 3.0);
+        assert_eq!(stats.p99_ms(), 4.0);
+        assert_eq!(stats.req_per_s(), 2.0);
+        let s = stats.summary();
+        assert!(s.contains("p50") && s.contains("p99") && s.contains("req/s"), "{s}");
+    }
+}

@@ -110,6 +110,46 @@ pub fn evaluate(session: &TrainingSession, params: &[Tensor], data: &Dataset) ->
     Ok(out.correct / usable as f32)
 }
 
+/// Deterministic serving weights: seeded init plus a short, fixed
+/// training run on the model's registry dataset (`steps == 0` skips
+/// straight to the init). Every process calling this with the same
+/// `(model, seed, steps)` reconstructs bit-identical parameters — the
+/// kernels are bit-identical across variants and thread counts, the
+/// data substrate and batch order are seeded, and SGD is exact — so a
+/// `serve` server and an `infer --check` client agree without any
+/// checkpoint crossing the wire. The short run also moves the BN
+/// running statistics off their zero/one init (making the serving-side
+/// fold non-trivial) and grows real logit margins, without which an
+/// int8-vs-fp32 top-1 agreement gate would measure coin flips.
+pub fn serving_params(
+    engine: &Engine,
+    model: &str,
+    seed: u64,
+    steps: usize,
+) -> Result<Vec<Tensor>> {
+    if steps == 0 {
+        return engine.init_params(model, seed as u32);
+    }
+    let entry = engine
+        .manifest
+        .models
+        .get(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let data = crate::data::build(&entry.dataset, 512, entry.eval_batch, seed ^ 0x5e37e);
+    let cfg = TrainConfig {
+        model: model.to_string(),
+        method: "baseline".to_string(),
+        s: 0.0,
+        steps,
+        batch: 32,
+        opt: SgdConfig::plain(entry.lr.unwrap_or(0.05)),
+        eval_every: 0,
+        seed,
+        verbose: false,
+    };
+    Ok(train(engine, &data, &cfg)?.params)
+}
+
 /// Per-step dither seed: decorrelate steps without colliding with the
 /// per-layer folding done in L2.
 pub fn step_seed(run_seed: u64, step: usize) -> u32 {

@@ -57,6 +57,19 @@ pub fn median(xs: &[f64]) -> f64 {
     }
 }
 
+/// Nearest-rank percentile over unsorted samples (`p` in [0, 100],
+/// linear index rounding; 0.0 for an empty slice). Serving latency
+/// summaries use this for p50/p99.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+    v.get(rank).copied().unwrap_or(0.0)
+}
+
 /// Worst-case bitwidth to represent signed integer levels up to
 /// `max_abs_level` (Fig. 6b): sign bit + magnitude bits; 0 levels need 0
 /// bits (everything quantized away).
@@ -72,6 +85,17 @@ pub fn bitwidth_for_level(max_abs_level: f32) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_rank_selection() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 99.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+    }
 
     #[test]
     fn erf_known_values() {

@@ -80,6 +80,18 @@ fn sample_msgs() -> Vec<Msg> {
                 vec![1.0],
             ),
         },
+        Msg::InferRequest {
+            id: 77,
+            model: "vgg8bn".into(),
+            batch: 2,
+            x: vec![0.25, -0.5, 0.75, 1.0, 0.0, -1.0],
+        },
+        Msg::InferReply {
+            id: 77,
+            classes: 3,
+            preds: vec![2, 0],
+            logits: vec![0.1, 0.2, 0.7, 0.6, 0.3, 0.1],
+        },
     ]
 }
 
@@ -165,10 +177,10 @@ fn garbage_payloads_never_panic() {
         let junk: Vec<u8> = (0..n).map(|_| (g.u32() & 0xFF) as u8).collect();
         let tag = (g.u32() & 0xFF) as u8;
         let r = Msg::decode(tag, &junk);
-        // Unknown tags must always be rejected; known tags (1..=9 as
-        // of proto v3) may decode by coincidence but must not panic
+        // Unknown tags must always be rejected; known tags (1..=11 as
+        // of proto v4) may decode by coincidence but must not panic
         // doing so.
-        (1..=9).contains(&tag) || r.is_err()
+        (1..=11).contains(&tag) || r.is_err()
     });
 }
 
@@ -186,6 +198,23 @@ fn corrupt_counts_cannot_force_oversized_allocations() {
     // Same attack one level down: the f32s element count of tensor 0.
     let mut payload = msg.encode_payload();
     payload[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Msg::decode(msg.tag(), &payload).is_err());
+
+    // Serving messages carry counted vectors too. InferReply layout:
+    // id u64 | classes u32 | preds-count u32 | ... — rewrite the preds
+    // count to u32::MAX; decode must fail before allocating.
+    let msg = Msg::InferReply { id: 1, classes: 2, preds: vec![0, 1], logits: vec![1.0; 4] };
+    let mut payload = msg.encode_payload();
+    payload[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Msg::decode(msg.tag(), &payload).is_err());
+
+    // InferRequest layout: id u64 | model str | batch u32 | x f32s —
+    // the batch field sits right after the 8-byte id + (u32 len)-
+    // prefixed model string; an implausible batch must be rejected.
+    let msg = Msg::InferRequest { id: 1, model: "m".into(), batch: 1, x: vec![0.5] };
+    let mut payload = msg.encode_payload();
+    let batch_at = 8 + 4 + 1; // id + str length prefix + "m"
+    payload[batch_at..batch_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(Msg::decode(msg.tag(), &payload).is_err());
 }
 

@@ -1,0 +1,145 @@
+//! End-to-end serving test: a real TCP server, concurrent clients,
+//! and bitwise verification of every reply.
+//!
+//! This is the subsystem's headline guarantee in executable form: a
+//! reply that crossed the wire — possibly micro-batched together with
+//! another client's request — equals a direct in-process folded
+//! forward bit-for-bit (`check: true` compares predictions *and*
+//! logits by bit pattern).
+
+#![cfg(feature = "native")]
+
+use ditherprop::serve::{run_infer, run_serve, InferCfg, QuantMode, ServeCfg};
+use std::net::TcpListener;
+use std::time::Duration;
+
+fn e2e(quant: QuantMode, model: &str, steps: usize) {
+    const CLIENTS: u64 = 2;
+    const REQUESTS: usize = 3;
+    const WARMUP: usize = 1;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let serve_cfg = ServeCfg {
+        quant,
+        seed: 5,
+        steps,
+        // Tiny flush threshold + real delay window so concurrent
+        // clients actually co-batch some rounds.
+        max_batch: 4,
+        max_delay: Duration::from_millis(2),
+        max_requests: Some(CLIENTS * (REQUESTS + WARMUP) as u64),
+        ..ServeCfg::default()
+    };
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| run_serve(&listener, &serve_cfg));
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let cfg = InferCfg {
+                    addr: addr.clone(),
+                    model: model.to_string(),
+                    batch: 1 + c as usize, // distinct batch sizes co-batched
+                    requests: REQUESTS,
+                    warmup: WARMUP,
+                    seed: 5,
+                    steps,
+                    quant,
+                    check: true,
+                    connect_timeout: Duration::from_secs(10),
+                };
+                s.spawn(move || run_infer(&cfg))
+            })
+            .collect();
+        for (c, h) in clients.into_iter().enumerate() {
+            let summary = h.join().expect("client thread").expect("client run");
+            assert_eq!(summary.requests as usize, REQUESTS, "client {c}");
+            assert_eq!(
+                summary.checked as usize,
+                REQUESTS + WARMUP,
+                "client {c}: every reply must verify bit-identical"
+            );
+            assert_eq!(summary.last_preds.len(), 1 + c);
+        }
+        let stats = server.join().expect("server thread").expect("server run");
+        assert_eq!(stats.served, CLIENTS * (REQUESTS + WARMUP) as u64);
+        assert_eq!(stats.rejected, 0);
+        assert!(stats.batches > 0 && stats.batches <= stats.served);
+        assert_eq!(stats.latencies_ms.len() as u64, stats.served);
+        assert_eq!(stats.cache_misses, 1, "one model, prepared once");
+        assert!(stats.p99_ms() >= stats.p50_ms());
+    });
+}
+
+#[test]
+fn int8_replies_are_bit_identical_to_local_forward() {
+    // Trained weights (steps > 0) exercise the deterministic
+    // cross-process reconstruction; int8 exercises the quantized path.
+    e2e(QuantMode::Int8, "mlp128", 6);
+}
+
+#[test]
+fn fp32_replies_are_bit_identical_on_a_folded_bn_model() {
+    // vgg8bn folds real BatchNorm stages before serving.
+    e2e(QuantMode::Fp32, "vgg8bn", 0);
+}
+
+#[test]
+fn invalid_requests_fault_the_connection_not_the_server() {
+    use ditherprop::net::{Msg, TcpTransport, Transport};
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let serve_cfg = ServeCfg {
+        quant: QuantMode::Int8,
+        steps: 0,
+        max_requests: Some(3), // 2 rejects + 1 served
+        ..ServeCfg::default()
+    };
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| run_serve(&listener, &serve_cfg));
+
+        // Unknown model: the server must reply with a faulted Shutdown.
+        let mut bad = TcpTransport::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+        bad.send(&Msg::InferRequest { id: 1, model: "no-such-model".into(), batch: 1, x: vec![0.0] })
+            .expect("send");
+        match bad.recv_deadline(Duration::from_secs(10)).expect("recv") {
+            Some(Msg::Shutdown { fault, reason }) => {
+                assert!(fault, "rejection must be faulted");
+                assert!(reason.contains("unknown model"), "{reason}");
+            }
+            other => panic!("expected faulted Shutdown, got {other:?}"),
+        }
+
+        // Wrong input size for a real model: same fate.
+        let mut bad2 =
+            TcpTransport::connect_retry(&addr, Duration::from_secs(10)).expect("connect");
+        bad2.send(&Msg::InferRequest { id: 2, model: "mlp128".into(), batch: 1, x: vec![0.5; 3] })
+            .expect("send");
+        match bad2.recv_deadline(Duration::from_secs(10)).expect("recv") {
+            Some(Msg::Shutdown { fault, .. }) => assert!(fault),
+            other => panic!("expected faulted Shutdown, got {other:?}"),
+        }
+
+        // The server survives both and still serves a valid client.
+        let good = InferCfg {
+            addr: addr.clone(),
+            model: "mlp128".into(),
+            batch: 2,
+            requests: 1,
+            warmup: 0,
+            seed: 42,
+            steps: 0,
+            quant: QuantMode::Int8,
+            check: true,
+            connect_timeout: Duration::from_secs(10),
+        };
+        let summary = run_infer(&good).expect("valid client after invalid peers");
+        assert_eq!(summary.requests, 1);
+        assert_eq!(summary.checked, 1);
+
+        let stats = server.join().expect("server thread").expect("server run");
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.rejected, 2);
+    });
+}
