@@ -1,8 +1,12 @@
 //! Bench: L3 hot-path microbenchmarks (§Perf) — grad-step execution
-//! (pre-PR scalar-serial kernels vs blocked+threaded), a kernel-level
-//! sparse-GEMM suite at swept sparsity levels vs the `costmodel` Eq. 12
-//! prediction, optimizer update, sparse codecs, server aggregation.
-//! The numbers here drive the EXPERIMENTS.md §Perf log and the
+//! (pre-PR scalar-serial kernels vs the PR-8 scoped-spawn two-pass
+//! configuration vs the pooled + fused-emission default, including
+//! small-batch rows where per-call spawn and the dense dither pass
+//! dominated), a kernel-level sparse-GEMM suite at swept sparsity
+//! levels vs the `costmodel` Eq. 12 prediction (each row also reports
+//! the tier the adaptive dispatcher would choose for its measured
+//! nnz), optimizer update, sparse codecs, server aggregation.  The
+//! numbers here drive the EXPERIMENTS.md §Perf log and the
 //! `BENCH_kernels.json` perf trajectory.
 //!
 //! ```text
@@ -14,10 +18,11 @@ use ditherprop::bench_util::{bench_fn, num, report_header, text, BenchResult, Js
 use ditherprop::coordinator::comm::EncodedGrads;
 use ditherprop::costmodel::flops::{fc_backward_cost, gflops, BackwardCost};
 use ditherprop::data;
-use ditherprop::kernels::{self, ENV_KERNELS, ENV_THREADS};
+use ditherprop::kernels::{self, dispatch, Variant, ENV_KERNELS, ENV_SPAWN, ENV_THREADS};
 use ditherprop::optim::{Sgd, SgdConfig};
 // Eq. 12 whole-model backward cost now lives next to the ops it prices
 // (every LayerOp exposes `flops_cost`; the aggregator walks the plan)
+use ditherprop::runtime::backend::native::methods::ENV_FUSE;
 use ditherprop::runtime::backend::native::ops::model_backward_cost;
 use ditherprop::runtime::backend::native::NativeBackend;
 use ditherprop::runtime::Engine;
@@ -44,6 +49,15 @@ fn random_dense(n: usize, density: f32, rng: &mut Rng) -> Vec<f32> {
         .collect()
 }
 
+/// The `variant` vocabulary the bench JSON uses for a dispatch tier.
+fn vname(v: Variant) -> &'static str {
+    match v {
+        Variant::Reference => "ref",
+        Variant::Blocked => "blocked",
+        Variant::Threaded(_) => "threaded",
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let iters = args.usize_or("iters", 30);
@@ -60,11 +74,23 @@ fn main() -> anyhow::Result<()> {
     println!("kernel threads: {threads} (override with --threads or DITHERPROP_THREADS)");
     println!("{}", report_header());
 
-    // --- end-to-end grad step: pre-PR scalar-serial kernels vs the
-    //     blocked + threaded kernels, with the Eq. 12 cross-check -----
+    // --- end-to-end grad step: pre-PR scalar-serial kernels, the PR-8
+    //     configuration (per-call scoped spawn + two-pass dense dither),
+    //     and the current pooled + fused default, with the Eq. 12
+    //     cross-check.  Small batches (<= 32) are where the pool and
+    //     the fused emitter pay off: per-call spawn and the dense
+    //     quantize pass are fixed costs the tiny GEMMs cannot hide. ---
     let engine = Engine::load(&artifacts)?;
     let native = NativeBackend::load(&artifacts)?;
-    for (model, batch) in [("mlp500", 64), ("mlp500", 1), ("lenet5", 64), ("minivgg", 64)] {
+    let grad_cfgs = [
+        ("mlp500", 64),
+        ("mlp500", 16),
+        ("mlp500", 1),
+        ("lenet5", 64),
+        ("lenet5", 16),
+        ("minivgg", 64),
+    ];
+    for (model, batch) in grad_cfgs {
         // every row runs natively now; the guard only trips on custom
         // registries that omit a model
         if engine.manifest.model(model).is_err() {
@@ -85,11 +111,13 @@ fn main() -> anyhow::Result<()> {
             let stats = session.grad(&params, &it.x, &it.y, 1, 2.0)?;
             let cost = model_backward_cost(&plan, batch, &stats.sparsity);
 
-            let mut run = |label: &str, variant: &str, nthreads: usize| -> BenchResult {
+            let mut run = |label: &str, variant: &str, nthreads: usize, spawn: &str, fuse: &str| {
                 // EnvGuard restores the operator's launch-time knobs
                 // after each timed region
                 let _k = kernels::EnvGuard::set(ENV_KERNELS, variant);
                 let _t = kernels::EnvGuard::set(ENV_THREADS, &nthreads.to_string());
+                let _s = kernels::EnvGuard::set(ENV_SPAWN, spawn);
+                let _f = kernels::EnvGuard::set(ENV_FUSE, fuse);
                 let mut seed = 0u32;
                 let r = bench_fn(
                     &format!("grad {model}/{method} b{batch} {label}"),
@@ -103,14 +131,23 @@ fn main() -> anyhow::Result<()> {
                 println!("{}", r.report());
                 r
             };
-            let r_ref = run("scalar-serial", "ref", 1);
-            let r_new = run(&format!("blocked t{threads}"), "auto", threads);
-            let kernel_speedup = r_ref.median_s() / r_new.median_s().max(1e-12);
-            println!("    blocked+threaded vs pre-PR scalar serial: {kernel_speedup:.2}x");
+            let r_ref = run("scalar-serial", "ref", 1, "scoped", "off");
+            let r_pr8 = run(&format!("scoped-2pass t{threads}"), "auto", threads, "scoped", "off");
+            let r_new = run(&format!("pooled+fused t{threads}"), "auto", threads, "pooled", "on");
+            let vs_scalar = r_ref.median_s() / r_new.median_s().max(1e-12);
+            let vs_two_pass = r_pr8.median_s() / r_new.median_s().max(1e-12);
+            println!(
+                "    pooled+fused vs PR-8 scoped two-pass: {vs_two_pass:.2}x \
+                 (vs pre-PR scalar serial: {vs_scalar:.2}x)"
+            );
 
-            for (r, variant, nt) in
-                [(&r_ref, "scalar-serial", 1), (&r_new, "blocked+threaded", threads)]
-            {
+            let pr8_vs_scalar = r_ref.median_s() / r_pr8.median_s().max(1e-12);
+            let rows = [
+                (&r_ref, "scalar-serial", 1usize, 1.0),
+                (&r_pr8, "blocked+threaded", threads, pr8_vs_scalar),
+                (&r_new, "pooled+fused", threads, vs_scalar),
+            ];
+            for (r, variant, nt, spd) in rows {
                 rep.result_row(
                     r,
                     &[
@@ -121,10 +158,20 @@ fn main() -> anyhow::Result<()> {
                         ("variant", text(variant)),
                         ("threads", num(nt as f64)),
                         ("mean_sparsity", num(stats.mean_sparsity() as f64)),
-                        ("speedup_vs_scalar", num(kernel_speedup)),
+                        ("speedup_vs_scalar", num(spd)),
                     ],
                 );
             }
+            // the PR-9 acceptance row: fused + pooled against the PR-8
+            // configuration on the same model/method/batch
+            rep.row(&[
+                ("suite", text("fused")),
+                ("model", text(model)),
+                ("method", text(method)),
+                ("batch", num(batch as f64)),
+                ("threads", num(threads as f64)),
+                ("pooled_fused_vs_two_pass", num(vs_two_pass)),
+            ]);
             method_rows.push((method, r_new.median_s(), cost));
         }
         // measured dithered-vs-baseline speedup against the Eq. 12
@@ -234,6 +281,11 @@ fn main() -> anyhow::Result<()> {
                 ("input_gemm", input_flops, &input_variants),
             ] {
                 let ref_median = variants[0].2.median_s();
+                // the tier the adaptive dispatcher picks for this
+                // measured nnz (width = dWt row + db slot for Eq. 9,
+                // the gp row for Eq. 8) — pure, so the report is exact
+                let width = if op == "param_gemm" { sh.din + 1 } else { sh.din };
+                let auto = vname(dispatch::choose(nnz, width, threads));
                 for (variant, nt, r) in variants.iter() {
                     let med = r.median_s();
                     let gf = gflops(flops, med);
@@ -260,6 +312,7 @@ fn main() -> anyhow::Result<()> {
                             ("gflops", num(gf)),
                             ("speedup_vs_ref", num(speedup)),
                             ("eq12_speedup", num(pair.speedup())),
+                            ("auto_choice", text(auto)),
                         ],
                     );
                 }

@@ -126,6 +126,7 @@ pub fn run_distributed(data: &Dataset, cfg: &DistConfig) -> Result<DistResult> {
         let (server_side, worker_side) = ChannelTransport::pair(&format!("w{node}"));
         let shard = data.train.shard(node, cfg.nodes);
         let dir = cfg.artifacts_dir.clone();
+        // lint:allow(determinism) -- long-lived per-worker connection thread, not kernel fan-out
         handles.push(std::thread::spawn(move || {
             worker_loop(Box::new(worker_side), &dir, Some(shard))
         }));
@@ -159,6 +160,7 @@ pub fn run_distributed_async(data: &Dataset, cfg: &DistConfig) -> Result<DistRes
         let (server_side, worker_side) = ChannelTransport::pair(&format!("w{node}"));
         let shard = data.train.shard(node, cfg.nodes);
         let dir = cfg.artifacts_dir.clone();
+        // lint:allow(determinism) -- long-lived per-worker connection thread, not kernel fan-out
         handles.push(std::thread::spawn(move || {
             worker_loop(Box::new(worker_side), &dir, Some(shard))
         }));

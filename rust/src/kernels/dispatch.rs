@@ -1,0 +1,170 @@
+//! Sparsity-adaptive kernel dispatch for the sparse backward GEMMs.
+//!
+//! Which kernel tier is fastest depends on how much work the NSD
+//! sparsity left behind, and that is only known per layer per step,
+//! once the compressed `delta_z` is in hand: a near-empty cotangent
+//! (a deep layer late in training) makes the blocked kernel's lane
+//! staging and `dWt` transpose pure overhead, while a dense-ish early
+//! layer wants the blocked kernel plus the full threaded fan-out. A
+//! single step-wide variant cannot be right for both ends of one
+//! backward walk, so the executor asks [`Dispatch::sparse_gemm`] per
+//! (layer, GEMM) with the measured nonzero count.
+//!
+//! The choice is free: every tier is bit-identical for every thread
+//! count (see [`super::gemm`]), so adaptivity affects wall-clock only,
+//! never results. `DITHERPROP_KERNELS` force-overrides it (`ref` |
+//! `blocked` | `threaded` pin every GEMM; `auto`/unset = adaptive), so
+//! benches can still time one tier in isolation and tests can
+//! oracle-check against a pinned reference.
+
+use super::gemm::{planned_threads, LANES};
+use super::threads::{num_threads, Variant, ENV_KERNELS};
+
+/// Below this many lane-ops (`nnz * width / LANES`) a sparse GEMM runs
+/// the scalar reference kernel: the blocked tiers stage a transposed
+/// accumulator / register blocks whose setup costs more than the few
+/// multiply-adds the surviving nonzeros need.
+pub const REF_MAX_LANE_OPS: usize = 256;
+
+/// The kernel tier for one sparse GEMM: `nnz` measured nonzeros, each
+/// touching `width` contiguous output elements (din + 1 for the Eq. 9
+/// param GEMM's `dWt` row + `db` slot, din for the Eq. 8 input GEMM),
+/// with `threads` workers available. Pure in its inputs, so benches
+/// can report the exact variant a measured layer dispatched to.
+pub fn choose(nnz: usize, width: usize, threads: usize) -> Variant {
+    let lane_ops = nnz * width / LANES;
+    if lane_ops < REF_MAX_LANE_OPS {
+        return Variant::Reference;
+    }
+    // same per-worker floor the in-kernel fan-out guard applies, so a
+    // Threaded choice here really does spawn
+    if planned_threads(threads, lane_ops, usize::MAX) > 1 {
+        return Variant::Threaded(threads);
+    }
+    Variant::Blocked
+}
+
+/// A step's dispatch policy: a variant forced by `DITHERPROP_KERNELS`,
+/// or the adaptive per-GEMM chooser over `DITHERPROP_THREADS` workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    forced: Option<Variant>,
+    threads: usize,
+}
+
+impl Dispatch {
+    /// Read the policy from the env knobs (per step, not cached, so
+    /// tests and benches can flip them at runtime).
+    pub fn from_env() -> Dispatch {
+        Dispatch::from_knobs(std::env::var(ENV_KERNELS).ok().as_deref(), num_threads())
+    }
+
+    /// [`from_env`](Dispatch::from_env) with the knob values already
+    /// resolved — the pure half, kept separate so it is testable
+    /// without touching the process environment (other tests in this
+    /// binary legitimately mutate `DITHERPROP_*` under guards).
+    pub fn from_knobs(kernels: Option<&str>, threads: usize) -> Dispatch {
+        let forced = match kernels {
+            Some("ref") | Some("reference") | Some("scalar") => Some(Variant::Reference),
+            Some("blocked") | Some("serial") => Some(Variant::Blocked),
+            Some("threaded") | Some("threads") => Some(Variant::Threaded(threads.max(1))),
+            _ => None,
+        };
+        Dispatch { forced, threads: threads.max(1) }
+    }
+
+    /// A policy that pins every GEMM to `v` (benches pin their
+    /// configurations directly instead of routing through the env).
+    pub fn forced(v: Variant) -> Dispatch {
+        Dispatch { forced: Some(v), threads: v.threads() }
+    }
+
+    /// The adaptive policy over a fixed worker count.
+    pub fn adaptive(threads: usize) -> Dispatch {
+        Dispatch { forced: None, threads: threads.max(1) }
+    }
+
+    /// Worker count available to this policy.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The step-level variant for the dense kernels (forward affine,
+    /// im2col/col2im, pool scatter, BN reductions), which have no
+    /// measured sparsity to adapt on. Resolves exactly like
+    /// [`super::threads::variant`] did before dispatch became
+    /// adaptive: the forced variant, else threaded whenever more than
+    /// one worker is available.
+    pub fn step_variant(&self) -> Variant {
+        match self.forced {
+            Some(v) => v,
+            None if self.threads <= 1 => Variant::Blocked,
+            None => Variant::Threaded(self.threads),
+        }
+    }
+
+    /// The tier for one sparse backward GEMM (see [`choose`]).
+    pub fn sparse_gemm(&self, nnz: usize, width: usize) -> Variant {
+        match self.forced {
+            Some(v) => v,
+            None => choose(nnz, width, self.threads),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chooser_scales_with_measured_work() {
+        // a handful of nonzeros: scalar reference
+        assert_eq!(choose(4, 16, 8), Variant::Reference);
+        // mid-size work on one worker: blocked
+        assert_eq!(choose(4096, 64, 1), Variant::Blocked);
+        // mid-size work below the per-worker floor: still blocked
+        assert_eq!(choose(512, 16, 8), Variant::Blocked);
+        // big work with workers available: threaded
+        assert_eq!(choose(100_000, 64, 8), Variant::Threaded(8));
+    }
+
+    #[test]
+    fn forced_policy_ignores_measured_work() {
+        for v in [Variant::Reference, Variant::Blocked, Variant::Threaded(3)] {
+            let d = Dispatch::forced(v);
+            assert_eq!(d.sparse_gemm(0, 1), v);
+            assert_eq!(d.sparse_gemm(1_000_000, 512), v);
+            assert_eq!(d.step_variant(), v);
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_routes_through_the_chooser() {
+        let d = Dispatch::adaptive(4);
+        assert_eq!(d.sparse_gemm(2, 8), Variant::Reference);
+        assert_eq!(d.sparse_gemm(1_000_000, 64), Variant::Threaded(4));
+        assert_eq!(d.step_variant(), Variant::Threaded(4));
+        assert_eq!(Dispatch::adaptive(1).step_variant(), Variant::Blocked);
+    }
+
+    #[test]
+    fn knob_policy_matches_legacy_variant_resolution() {
+        // step_variant must resolve the legacy knob values exactly the
+        // way threads::variant() did (the serving / int8 forward paths
+        // used to route through it)
+        let cases = [
+            (Some("ref"), 1, Variant::Reference),
+            (Some("blocked"), 4, Variant::Blocked),
+            (Some("auto"), 1, Variant::Blocked),
+            (Some("auto"), 4, Variant::Threaded(4)),
+            (None, 1, Variant::Blocked),
+            (None, 4, Variant::Threaded(4)),
+        ];
+        for (kern, thr, want) in cases {
+            assert_eq!(Dispatch::from_knobs(kern, thr).step_variant(), want, "{kern:?}/{thr}");
+        }
+        let d = Dispatch::from_knobs(Some("threaded"), 3);
+        assert_eq!(d.step_variant(), Variant::Threaded(3));
+        assert_eq!(d.sparse_gemm(0, 1), Variant::Threaded(3), "threaded pin covers every GEMM");
+    }
+}

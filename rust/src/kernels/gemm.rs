@@ -39,8 +39,9 @@
 //! this to the bit across a (din, dout, batch, sparsity, nthreads)
 //! grid.
 
+use super::pool::{run_parts, DisjointMut};
 use super::threads::chunk_ranges;
-use crate::sparse::CsrVec;
+use crate::sparse::SparseRows;
 use std::ops::Range;
 
 /// Fixed autovectorization width: 8 f32 lanes (one AVX2 register; two
@@ -84,23 +85,25 @@ pub fn affine_ref(
 }
 
 /// Reference Eq. 9 skip-on-zero GEMM pair: `dw += x^T . rows`, `db +=
-/// column sums of rows` (dw in din x dout layout).
-pub fn sparse_param_gemm_ref(
-    rows: &[CsrVec],
+/// column sums of rows` (dw in din x dout layout). Generic over the
+/// rows' encoding — per-row `CsrVec`s or one fused `CsrMat`.
+pub fn sparse_param_gemm_ref<R: SparseRows + ?Sized>(
+    rows: &R,
     xq: &[f32],
     din: usize,
     dout: usize,
     dw: &mut [f32],
     db: &mut [f32],
 ) {
-    debug_assert_eq!(xq.len(), rows.len() * din);
+    debug_assert_eq!(xq.len(), rows.n_rows() * din);
     debug_assert_eq!(dw.len(), din * dout);
     debug_assert_eq!(db.len(), dout);
-    for (bi, row) in rows.iter().enumerate() {
-        if row.nnz() == 0 {
+    for bi in 0..rows.n_rows() {
+        let (idx, val) = rows.row(bi);
+        if idx.is_empty() {
             continue;
         }
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+        for (&j, &v) in idx.iter().zip(val.iter()) {
             db[j as usize] += v;
         }
         let xrow = &xq[bi * din..(bi + 1) * din];
@@ -109,7 +112,7 @@ pub fn sparse_param_gemm_ref(
                 continue;
             }
             let dst = &mut dw[a * dout..(a + 1) * dout];
-            for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+            for (&j, &v) in idx.iter().zip(val.iter()) {
                 dst[j as usize] += xv * v;
             }
         }
@@ -118,14 +121,15 @@ pub fn sparse_param_gemm_ref(
 
 /// Reference Eq. 8 skip-on-zero GEMM: `g_in = rows . W^T` (wt: dout x
 /// din, pre-transposed). Returns one din-row per input row.
-pub fn sparse_input_gemm_ref(rows: &[CsrVec], wt: &[f32], din: usize) -> Vec<f32> {
-    let mut gp = vec![0.0f32; rows.len() * din];
-    for (bi, row) in rows.iter().enumerate() {
-        if row.nnz() == 0 {
+pub fn sparse_input_gemm_ref<R: SparseRows + ?Sized>(rows: &R, wt: &[f32], din: usize) -> Vec<f32> {
+    let mut gp = vec![0.0f32; rows.n_rows() * din];
+    for bi in 0..rows.n_rows() {
+        let (idx, val) = rows.row(bi);
+        if idx.is_empty() {
             continue;
         }
         let dst = &mut gp[bi * din..(bi + 1) * din];
-        for (&j, &v) in row.indices.iter().zip(row.values.iter()) {
+        for (&j, &v) in idx.iter().zip(val.iter()) {
             let wrow = &wt[(j as usize) * din..(j as usize + 1) * din];
             for (d, &wv) in dst.iter_mut().zip(wrow.iter()) {
                 *d += v * wv;
@@ -223,28 +227,29 @@ pub fn affine_blocked_into(
 /// bit-identical: each `(j, a)` accumulator is owned by exactly one
 /// range, and within a range the reduction runs over batch rows in the
 /// same ascending order as the serial kernel.
-pub fn sparse_param_gemm_cols(
-    rows: &[CsrVec],
+pub fn sparse_param_gemm_cols<R: SparseRows + ?Sized>(
+    rows: &R,
     xq: &[f32],
     din: usize,
     cols: Range<usize>,
     dwt_cols: &mut [f32],
     db_cols: &mut [f32],
 ) {
-    debug_assert_eq!(xq.len(), rows.len() * din);
+    debug_assert_eq!(xq.len(), rows.n_rows() * din);
     debug_assert_eq!(dwt_cols.len(), cols.len() * din);
     debug_assert_eq!(db_cols.len(), cols.len());
-    for (bi, row) in rows.iter().enumerate() {
-        if row.nnz() == 0 {
+    for bi in 0..rows.n_rows() {
+        let (idx, val) = rows.row(bi);
+        if idx.is_empty() {
             continue;
         }
-        let lo = row.indices.partition_point(|&j| (j as usize) < cols.start);
-        let hi = row.indices.partition_point(|&j| (j as usize) < cols.end);
+        let lo = idx.partition_point(|&j| (j as usize) < cols.start);
+        let hi = idx.partition_point(|&j| (j as usize) < cols.end);
         if lo == hi {
             continue;
         }
         let xrow = &xq[bi * din..(bi + 1) * din];
-        for (&j, &v) in row.indices[lo..hi].iter().zip(row.values[lo..hi].iter()) {
+        for (&j, &v) in idx[lo..hi].iter().zip(val[lo..hi].iter()) {
             let jj = j as usize - cols.start;
             db_cols[jj] += v;
             axpy_lanes(v, xrow, &mut dwt_cols[jj * din..(jj + 1) * din]);
@@ -255,8 +260,8 @@ pub fn sparse_param_gemm_cols(
 /// Blocked Eq. 9 param GEMM: accumulates the full transposed gradient
 /// `dwt (dout x din)` and `db`. Transpose with [`transpose_into`] to
 /// recover the reference `dw (din x dout)` layout bit-exactly.
-pub fn sparse_param_gemm_blocked(
-    rows: &[CsrVec],
+pub fn sparse_param_gemm_blocked<R: SparseRows + ?Sized>(
+    rows: &R,
     xq: &[f32],
     din: usize,
     dout: usize,
@@ -271,15 +276,32 @@ pub fn sparse_param_gemm_blocked(
 /// block, a register accumulator streams the row's nonzeros through
 /// contiguous `W^T` slices — ascending-`j` order, same as the
 /// reference.
-pub fn sparse_input_gemm_blocked_into(rows: &[CsrVec], wt: &[f32], din: usize, gp: &mut [f32]) {
-    debug_assert_eq!(gp.len(), rows.len() * din);
-    for (bi, row) in rows.iter().enumerate() {
-        let dst = &mut gp[bi * din..(bi + 1) * din];
-        if row.nnz() == 0 {
+pub fn sparse_input_gemm_blocked_into<R: SparseRows + ?Sized>(
+    rows: &R,
+    wt: &[f32],
+    din: usize,
+    gp: &mut [f32],
+) {
+    sparse_input_gemm_rows(rows, 0..rows.n_rows(), wt, din, gp);
+}
+
+/// [`sparse_input_gemm_blocked_into`] over a row subrange — the
+/// threaded driver's per-part body (`gp` holds `range.len()` rows).
+fn sparse_input_gemm_rows<R: SparseRows + ?Sized>(
+    rows: &R,
+    range: Range<usize>,
+    wt: &[f32],
+    din: usize,
+    gp: &mut [f32],
+) {
+    debug_assert_eq!(gp.len(), range.len() * din);
+    for (oi, bi) in range.enumerate() {
+        let (idx, val) = rows.row(bi);
+        let dst = &mut gp[oi * din..(oi + 1) * din];
+        if idx.is_empty() {
             dst.fill(0.0);
             continue;
         }
-        let (idx, val) = (&row.indices[..], &row.values[..]);
         let mut c = 0;
         while c + LANES <= din {
             let mut acc = [0.0f32; LANES];
@@ -322,12 +344,13 @@ pub fn transpose(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 }
 
 // ---------------------------------------------------------------------
-// scoped-thread drivers (disjoint-output partitioning)
+// threaded drivers (disjoint-output partitioning over the worker pool)
 // ---------------------------------------------------------------------
 
-/// Don't spawn below this many lane-ops per candidate worker — scoped
-/// spawn + join costs ~10us, which tiny layers would feel. Purely a
-/// dispatch heuristic; results are bit-identical either way.
+/// Don't fan out below this many lane-ops per candidate worker — even a
+/// warm pool handoff has a cost tiny layers would feel (and the scoped
+/// fallback pays ~10us per spawn). Purely a dispatch heuristic; results
+/// are bit-identical either way.
 const MIN_OPS_PER_THREAD: usize = 16 * 1024;
 
 fn effective_threads(nthreads: usize, total_ops: usize) -> usize {
@@ -347,8 +370,8 @@ pub fn planned_threads(nthreads: usize, total_lane_ops: usize, max_partitions: u
     effective_threads(nthreads, total_lane_ops).min(max_partitions.max(1))
 }
 
-/// Threaded forward affine: batch rows partitioned across scoped
-/// threads; each worker owns a disjoint `z` row range.
+/// Threaded forward affine: batch rows partitioned across pool workers;
+/// each part owns a disjoint `z` row range.
 #[allow(clippy::too_many_arguments)]
 pub fn affine_threaded_into(
     x: &[f32],
@@ -365,29 +388,19 @@ pub fn affine_threaded_into(
         return affine_blocked_into(x, w, b, rows, din, dout, z);
     }
     let ranges = chunk_ranges(rows, nt);
-    std::thread::scope(|s| {
-        let mut rest = z;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * dout);
-            rest = tail;
-            let xc = &x[r.start * din..r.end * din];
-            let nrows = r.len();
-            handles.push(s.spawn(move || {
-                affine_blocked_into(xc, w, b, nrows, din, dout, chunk);
-            }));
-        }
-        for h in handles {
-            h.join().expect("affine worker panicked");
-        }
+    let parts = DisjointMut::new(z, ranges.iter().map(|r| r.len() * dout));
+    run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        let xc = &x[r.start * din..r.end * din];
+        affine_blocked_into(xc, w, b, r.len(), din, dout, parts.take(p));
     });
 }
 
-/// Threaded Eq. 9 param GEMM: `dout` columns partitioned across scoped
-/// threads; each worker owns a disjoint `dwt` row range + `db` slice,
-/// so no reduction crosses a thread and no merge pass exists.
-pub fn sparse_param_gemm_threaded(
-    rows: &[CsrVec],
+/// Threaded Eq. 9 param GEMM: `dout` columns partitioned across pool
+/// workers; each part owns a disjoint `dwt` row range + `db` slice, so
+/// no reduction crosses a thread and no merge pass exists.
+pub fn sparse_param_gemm_threaded<R: SparseRows + ?Sized>(
+    rows: &R,
     xq: &[f32],
     din: usize,
     dout: usize,
@@ -395,71 +408,47 @@ pub fn sparse_param_gemm_threaded(
     db: &mut [f32],
     nthreads: usize,
 ) {
-    let nnz: usize = rows.iter().map(CsrVec::nnz).sum();
+    let nnz = rows.nnz_total();
     let nt = planned_threads(nthreads, nnz * din / LANES, dout);
     if nt <= 1 {
         return sparse_param_gemm_blocked(rows, xq, din, dout, dwt, db);
     }
     let ranges = chunk_ranges(dout, nt);
-    std::thread::scope(|s| {
-        let mut dwt_rest = dwt;
-        let mut db_rest = db;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (dwt_chunk, dwt_tail) =
-                std::mem::take(&mut dwt_rest).split_at_mut(r.len() * din);
-            let (db_chunk, db_tail) = std::mem::take(&mut db_rest).split_at_mut(r.len());
-            dwt_rest = dwt_tail;
-            db_rest = db_tail;
-            // Range<usize> copy (two words), once per spawned worker.
-            // lint:allow(hotpath-alloc) -- not a per-element allocation
-            let r = r.clone();
-            handles.push(s.spawn(move || {
-                sparse_param_gemm_cols(rows, xq, din, r, dwt_chunk, db_chunk);
-            }));
-        }
-        for h in handles {
-            h.join().expect("param-gemm worker panicked");
-        }
+    let dwt_parts = DisjointMut::new(dwt, ranges.iter().map(|r| r.len() * din));
+    let db_parts = DisjointMut::new(db, ranges.iter().map(|r| r.len()));
+    run_parts(ranges.len(), |p| {
+        let r = ranges[p].start..ranges[p].end;
+        sparse_param_gemm_cols(rows, xq, din, r, dwt_parts.take(p), db_parts.take(p));
     });
 }
 
 /// Threaded Eq. 8 input GEMM: CSR rows (batch rows for dense layers,
-/// im2col patch rows for conv) partitioned across scoped threads; each
-/// worker owns a disjoint `gp` row range.
-pub fn sparse_input_gemm_threaded_into(
-    rows: &[CsrVec],
+/// im2col patch rows for conv) partitioned across pool workers; each
+/// part owns a disjoint `gp` row range.
+pub fn sparse_input_gemm_threaded_into<R: SparseRows + ?Sized>(
+    rows: &R,
     wt: &[f32],
     din: usize,
     gp: &mut [f32],
     nthreads: usize,
 ) {
-    let nnz: usize = rows.iter().map(CsrVec::nnz).sum();
-    let nt = planned_threads(nthreads, nnz * din / LANES, rows.len());
+    let nnz = rows.nnz_total();
+    let nt = planned_threads(nthreads, nnz * din / LANES, rows.n_rows());
     if nt <= 1 {
         return sparse_input_gemm_blocked_into(rows, wt, din, gp);
     }
-    let ranges = chunk_ranges(rows.len(), nt);
-    std::thread::scope(|s| {
-        let mut rest = gp;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * din);
-            rest = tail;
-            let rc = &rows[r.start..r.end];
-            handles.push(s.spawn(move || {
-                sparse_input_gemm_blocked_into(rc, wt, din, chunk);
-            }));
-        }
-        for h in handles {
-            h.join().expect("input-gemm worker panicked");
-        }
+    let ranges = chunk_ranges(rows.n_rows(), nt);
+    let parts = DisjointMut::new(gp, ranges.iter().map(|r| r.len() * din));
+    run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        sparse_input_gemm_rows(rows, r.start..r.end, wt, din, parts.take(p));
     });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::{CsrMat, CsrVec};
     use crate::util::rng::Rng;
 
     fn sparse_rows(n_rows: usize, cols: usize, density: f32, seed: u64) -> (Vec<CsrVec>, Vec<f32>) {
@@ -613,11 +602,106 @@ mod tests {
     }
 
     #[test]
+    fn csr_mat_rows_match_csr_vec_rows_bitwise() {
+        // the two SparseRows encodings must be interchangeable in every
+        // sparse kernel, to the bit
+        for (n_rows, din, dout, density) in
+            [(1usize, 7usize, 5usize, 1.0f32), (9, 24, 13, 0.3), (32, 40, 24, 0.05)]
+        {
+            let (vecs, dense) = sparse_rows(n_rows, dout, density, 71 + n_rows as u64);
+            let mat = CsrMat::encode_rows(&dense, n_rows, dout);
+            assert_eq!(mat.nnz(), vecs.iter().map(CsrVec::nnz).sum::<usize>());
+            let x = dense_vec(n_rows * din, 0.7, 73);
+            let wt = dense_vec(dout * din, 1.0, 79);
+
+            let mut dwt_v = vec![0.0f32; dout * din];
+            let mut db_v = vec![0.0f32; dout];
+            sparse_param_gemm_threaded(&vecs, &x, din, dout, &mut dwt_v, &mut db_v, 4);
+            let mut dwt_m = vec![0.0f32; dout * din];
+            let mut db_m = vec![0.0f32; dout];
+            sparse_param_gemm_threaded(&mat, &x, din, dout, &mut dwt_m, &mut db_m, 4);
+            assert_bits_eq(&dwt_v, &dwt_m, "csrmat param dwt");
+            assert_bits_eq(&db_v, &db_m, "csrmat param db");
+
+            let mut gp_v = vec![7.0f32; n_rows * din];
+            sparse_input_gemm_threaded_into(&vecs, &wt, din, &mut gp_v, 4);
+            let mut gp_m = vec![8.0f32; n_rows * din];
+            sparse_input_gemm_threaded_into(&mat, &wt, din, &mut gp_m, 4);
+            assert_bits_eq(&gp_v, &gp_m, "csrmat input gp");
+
+            let gr_v = sparse_input_gemm_ref(&vecs, &wt, din);
+            let gr_m = sparse_input_gemm_ref(&mat, &wt, din);
+            assert_bits_eq(&gr_v, &gr_m, "csrmat input ref");
+        }
+    }
+
+    #[test]
     fn empty_rows_zero_the_output() {
         let rows = vec![CsrVec::encode(&[0.0; 6]); 3];
         let wt = dense_vec(6 * 4, 1.0, 61);
         let mut gp = vec![5.0f32; 3 * 4];
         sparse_input_gemm_blocked_into(&rows, &wt, 4, &mut gp);
         assert!(gp.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pool_scoped_blocked_and_ref_agree_bitwise_on_all_drivers() {
+        // The pool-vs-scoped identity grid: every driver, random
+        // (batch, din, dout, sparsity, nthreads), all four execution
+        // paths — scalar reference, serial blocked, pooled fan-out,
+        // scoped fan-out — must agree to the bit.
+        use crate::kernels::pool::ENV_SPAWN;
+        use crate::kernels::threads::EnvGuard;
+        use crate::util::prop::{check, Gen};
+        check("ref/blocked/pooled/scoped drivers agree", 25, |gen: &mut Gen| {
+            let n_rows = gen.usize_in(1..=48);
+            let din = gen.usize_in(1..=40);
+            let dout = gen.usize_in(1..=40);
+            let density = gen.f32_in(0.0, 1.0);
+            let nt = gen.usize_in(2..=8);
+            let (rows, _) = sparse_rows(n_rows, dout, density, gen.u32() as u64);
+            let x = dense_vec(n_rows * din, 0.7, gen.u32() as u64);
+            let w = dense_vec(din * dout, 1.0, gen.u32() as u64);
+            let b = dense_vec(dout, 1.0, 99);
+            let wt = transpose(&w, din, dout);
+
+            let run_threaded = |spawn: &str| {
+                let _g = EnvGuard::set(ENV_SPAWN, spawn);
+                let mut z = vec![7.0f32; n_rows * dout];
+                affine_threaded_into(&x, &w, &b, n_rows, din, dout, &mut z, nt);
+                let mut dwt = vec![0.0f32; dout * din];
+                let mut db = vec![0.0f32; dout];
+                sparse_param_gemm_threaded(&rows, &x, din, dout, &mut dwt, &mut db, nt);
+                let mut dw = vec![0.0f32; din * dout];
+                transpose_into(&dwt, dout, din, &mut dw);
+                let mut gp = vec![7.0f32; n_rows * din];
+                sparse_input_gemm_threaded_into(&rows, &wt, din, &mut gp, nt);
+                (z, dw, db, gp)
+            };
+            let pooled = run_threaded("pool");
+            let scoped = run_threaded("scoped");
+
+            let z_ref = affine_ref(&x, &w, &b, n_rows, din, dout);
+            let mut dw_ref = vec![0.0f32; din * dout];
+            let mut db_ref = vec![0.0f32; dout];
+            sparse_param_gemm_ref(&rows, &x, din, dout, &mut dw_ref, &mut db_ref);
+            let gp_ref = sparse_input_gemm_ref(&rows, &wt, din);
+
+            let mut z_blk = vec![0.0f32; n_rows * dout];
+            affine_blocked_into(&x, &w, &b, n_rows, din, dout, &mut z_blk);
+
+            let bits = |a: &[f32], c: &[f32]| {
+                a.iter().zip(c.iter()).all(|(p, q)| p.to_bits() == q.to_bits())
+            };
+            bits(&pooled.0, &scoped.0)
+                && bits(&pooled.0, &z_ref)
+                && bits(&pooled.0, &z_blk)
+                && bits(&pooled.1, &scoped.1)
+                && bits(&pooled.1, &dw_ref)
+                && bits(&pooled.2, &scoped.2)
+                && bits(&pooled.2, &db_ref)
+                && bits(&pooled.3, &scoped.3)
+                && bits(&pooled.3, &gp_ref)
+        });
     }
 }

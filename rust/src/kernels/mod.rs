@@ -13,27 +13,34 @@
 //! * **blocked** — SIMD-friendly restructurings whose inner loops are
 //!   fixed-width `[f32; 8]` lanes the stable-rust compiler
 //!   autovectorizes (no `std::simd`, no intrinsics);
-//! * **threaded** — scoped-thread (`std::thread::scope`, zero
-//!   dependencies) drivers that partition *outputs* disjointly (batch
+//! * **threaded** — drivers that partition *outputs* disjointly (batch
 //!   rows / im2col patch rows for Eq. 8 and the forward, `dout`
-//!   columns for Eq. 9), so every reduction stays on one thread in
-//!   serial order and results are bit-identical for every thread
-//!   count — no merge pass, no reassociation.
+//!   columns for Eq. 9) and fan the parts out over the persistent
+//!   worker pool in [`pool`] (long-lived parked threads;
+//!   `DITHERPROP_SPAWN=scoped` falls back to per-call scoped spawn),
+//!   so every reduction stays on one thread in serial order and
+//!   results are bit-identical for every thread count — no merge
+//!   pass, no reassociation.
 //!
 //! Dispatch is controlled by two env knobs read per step (see
 //! [`threads`]): `DITHERPROP_THREADS` (worker count) and
-//! `DITHERPROP_KERNELS` (`ref`/`blocked`/`auto`) — the latter lets
-//! benches time the pre-blocking scalar kernels against the new ones
-//! in one binary. [`scratch`] hoists the per-step buffers (the `W^T`
+//! `DITHERPROP_KERNELS` (`ref`/`blocked`/`threaded`/`auto`) — a pinned
+//! value lets benches time one tier in isolation, while `auto` (the
+//! default) makes the sparse backward GEMMs pick their tier per
+//! (layer, GEMM) from the measured nonzero count ([`dispatch`]).
+//! [`scratch`] hoists the per-step buffers (the `W^T`
 //! transpose, `gp` rows, im2col patches, the transposed `dW`
 //! accumulator) into a per-thread arena so steady-state steps never
 //! allocate for them.
 
+pub mod dispatch;
 pub mod gemm;
 pub mod int8;
+pub mod pool;
 pub mod scratch;
 pub mod threads;
 
+pub use dispatch::Dispatch;
 pub use gemm::{
     affine_blocked_into, affine_ref, affine_threaded_into, planned_threads,
     sparse_input_gemm_blocked_into, sparse_input_gemm_ref, sparse_input_gemm_threaded_into,
@@ -41,6 +48,7 @@ pub use gemm::{
     sparse_param_gemm_threaded, transpose, transpose_into, LANES,
 };
 pub use int8::{amax, i8_affine_blocked_into, i8_affine_ref, quant_scale, quantize_into};
+pub use pool::{run_parts, run_parts_pooled, run_parts_scoped, DisjointMut, ENV_SPAWN};
 pub use scratch::Scratch;
 pub use threads::{
     chunk_ranges, num_threads, variant, EnvGuard, Variant, ENV_KERNELS, ENV_THREADS,

@@ -1,0 +1,345 @@
+//! Persistent worker pool for the batch-parallel kernels.
+//!
+//! PR 4's threaded drivers spawned fresh scoped threads
+//! (`std::thread::scope`) on every kernel call — correct, but a
+//! spawn+join round trip costs ~10us per worker, which small-batch
+//! steps feel on every GEMM. This module keeps a process-wide set of
+//! **long-lived parked workers** instead:
+//!
+//! * **init** — workers are spawned lazily the first time a job needs
+//!   them ([`run_parts_pooled`] grows the pool to the job's width) and
+//!   never exit; pool size is bounded by the widest job ever run,
+//!   which the drivers cap at `DITHERPROP_THREADS`.
+//! * **park** — each worker owns an `mpsc` receiver and blocks in
+//!   `recv()` between jobs (a parked channel wait, zero spin).
+//! * **handoff** — a job is a type-erased `&dyn Fn(usize)` closure plus
+//!   a shared atomic part counter; workers and the *submitting thread
+//!   itself* claim part indices from the counter until none remain.
+//!   The closure hands each part a disjoint `&mut` window of the
+//!   output via [`DisjointMut`], so the borrow discipline of the
+//!   scoped drivers is kept: no locks around data, no merge step, and
+//!   results stay bit-identical at any thread count because *which*
+//!   thread runs a part never changes *what* the part computes.
+//! * **teardown** — none. Workers park forever; the OS reclaims them
+//!   at process exit. (A `teardown` would buy nothing: parked threads
+//!   cost one stack each and no CPU.)
+//! * **panic propagation** — each part runs under `catch_unwind`; a
+//!   panicking part sets a shared flag, the job still runs to
+//!   completion (remaining parts execute or are skipped by other
+//!   claimants), and the submitting thread re-panics after the
+//!   completion latch. Workers never die from a task panic, so the
+//!   pool cannot be poisoned.
+//!
+//! The submitting thread always waits on a completion latch counting
+//! the helper workers: a worker counts down only after it stops
+//! touching the job closure, which is what makes the lifetime erasure
+//! in [`Job`] sound — the closure (and everything it borrows) outlives
+//! every access.
+//!
+//! `DITHERPROP_SPAWN=scoped` routes [`run_parts`] through the old
+//! per-call scoped spawn instead (the PR-8 configuration), so benches
+//! can measure the pool win and tests can cross-check both paths in
+//! one binary.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Env var selecting the fan-out mechanism (`pool` default | `scoped`).
+pub const ENV_SPAWN: &str = "DITHERPROP_SPAWN";
+
+/// Shared per-job state: the part counter, the panic flag, and the
+/// completion latch counting helper workers still holding the closure.
+struct JobShared {
+    next: AtomicUsize,
+    n_parts: usize,
+    panicked: AtomicBool,
+    helpers_left: Mutex<usize>,
+    done: Condvar,
+}
+
+/// One job handed to a parked worker: a lifetime-erased pointer to the
+/// part closure on the submitting thread's stack, plus the shared
+/// state. The pointer is valid until the latch trips — the submitter
+/// blocks in [`run_parts_pooled`] until every helper counted down.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    shared: Arc<JobShared>,
+}
+
+// SAFETY: the raw closure pointer crosses threads, but the submitting
+// thread keeps the referent alive (and its borrows valid) until every
+// worker has counted down the completion latch, which each worker does
+// strictly after its last dereference of `task`.
+unsafe impl Send for Job {}
+
+fn erase<'a>(f: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync + 'static) {
+    type Src<'b> = &'b (dyn Fn(usize) + Sync + 'b);
+    type Dst = *const (dyn Fn(usize) + Sync + 'static);
+    // SAFETY: fat-pointer lifetime erasure only; validity is enforced
+    // by the completion latch (see `Job`).
+    unsafe { std::mem::transmute::<Src<'a>, Dst>(f) }
+}
+
+/// Claim part indices until the counter runs out, firewalling panics
+/// into the shared flag so the job always runs to completion.
+fn drain(f: &(dyn Fn(usize) + Sync), shared: &JobShared) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= shared.n_parts {
+            return;
+        }
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        // SAFETY: see `Job` — the submitter blocks until our count-down.
+        let f = unsafe { &*job.task };
+        drain(f, &job.shared);
+        let mut left = job.shared.helpers_left.lock().unwrap_or_else(|e| e.into_inner());
+        *left -= 1;
+        if *left == 0 {
+            job.shared.done.notify_all();
+        }
+    }
+}
+
+/// The parked workers' job senders. Grown lazily, never shrunk; the
+/// mutex is held only to grow the pool and enqueue jobs (microseconds),
+/// never while work runs.
+static POOL: Mutex<Vec<Sender<Job>>> = Mutex::new(Vec::new());
+
+/// Run `f(0..n_parts)` with each part executed exactly once, on the
+/// persistent pool (`n_parts - 1` helpers + the calling thread). Parts
+/// are claimed dynamically, which is safe for bit-identity because the
+/// partitioning — not the claimant — determines every result.
+pub fn run_parts_pooled(n_parts: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_parts <= 1 {
+        if n_parts == 1 {
+            f(0);
+        }
+        return;
+    }
+    let helpers = n_parts - 1;
+    let shared = Arc::new(JobShared {
+        next: AtomicUsize::new(0),
+        n_parts,
+        panicked: AtomicBool::new(false),
+        helpers_left: Mutex::new(helpers),
+        done: Condvar::new(),
+    });
+    let task = erase(f);
+    {
+        let mut pool = POOL.lock().unwrap_or_else(|e| e.into_inner());
+        while pool.len() < helpers {
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("ditherprop-pool-{}", pool.len()))
+                .spawn(move || worker_loop(rx))
+                .expect("spawning pool worker");
+            pool.push(tx);
+        }
+        for tx in pool.iter().take(helpers) {
+            // workers never exit, so the receiver is always alive
+            tx.send(Job { task, shared: Arc::clone(&shared) }).expect("pool worker alive");
+        }
+    }
+    // The submitting thread is a full participant — on a warm pool the
+    // common small job often finishes before a worker even wakes.
+    drain(f, &shared);
+    let mut left = shared.helpers_left.lock().unwrap_or_else(|e| e.into_inner());
+    while *left > 0 {
+        left = shared.done.wait(left).unwrap_or_else(|e| e.into_inner());
+    }
+    drop(left);
+    if shared.panicked.load(Ordering::Relaxed) {
+        panic!("kernel pool task panicked");
+    }
+}
+
+/// The PR-8 fan-out: per-call scoped spawn, one thread per part (the
+/// calling thread takes part 0). Kept as the `DITHERPROP_SPAWN=scoped`
+/// fallback and as the oracle for the pool-vs-scoped identity tests.
+pub fn run_parts_scoped(n_parts: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_parts <= 1 {
+        if n_parts == 1 {
+            f(0);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for i in 1..n_parts {
+            s.spawn(move || f(i));
+        }
+        f(0);
+    });
+}
+
+fn pool_enabled() -> bool {
+    // read per call, not cached, so tests and benches can flip it
+    !matches!(std::env::var(ENV_SPAWN).as_deref(), Ok("scoped") | Ok("scope"))
+}
+
+/// Fan `f` out over `n_parts` disjoint parts using the mechanism
+/// `DITHERPROP_SPAWN` selects (persistent pool by default). This is
+/// the one entry point the threaded kernel drivers use.
+pub fn run_parts(n_parts: usize, f: impl Fn(usize) + Sync) {
+    if pool_enabled() {
+        run_parts_pooled(n_parts, &f)
+    } else {
+        run_parts_scoped(n_parts, &f)
+    }
+}
+
+/// Hands out disjoint `&mut` windows of one slice to concurrent parts —
+/// the pool-era replacement for the scoped drivers' sequential
+/// `split_at_mut` walk. Construction fixes the partition (part `i`
+/// covers `part_lens[i]` elements starting where part `i-1` ended);
+/// [`DisjointMut::take`] is one-shot per part, so no two claims can
+/// alias even if a buggy caller passes the same index twice.
+pub struct DisjointMut<'a, T> {
+    base: *mut T,
+    parts: Vec<Range<usize>>,
+    taken: Vec<AtomicBool>,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: every part window is a disjoint sub-slice of the exclusively
+// borrowed `data`, and `take` enforces one claimant per part, so
+// concurrent access from multiple threads touches disjoint memory.
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+
+impl<'a, T> DisjointMut<'a, T> {
+    /// Partition `data` into consecutive windows of the given lengths.
+    /// The lengths must tile the slice exactly.
+    pub fn new(data: &'a mut [T], part_lens: impl Iterator<Item = usize>) -> Self {
+        let mut parts = Vec::new();
+        let mut start = 0usize;
+        for len in part_lens {
+            parts.push(start..start + len);
+            start += len;
+        }
+        assert_eq!(start, data.len(), "part lengths must tile the slice exactly");
+        let taken = parts.iter().map(|_| AtomicBool::new(false)).collect();
+        DisjointMut { base: data.as_mut_ptr(), parts, taken, _marker: std::marker::PhantomData }
+    }
+
+    /// Claim part `i`'s window. Panics if `i` was already taken.
+    #[allow(clippy::mut_from_ref)] // disjointness enforced by the one-shot flag
+    pub fn take(&self, i: usize) -> &mut [T] {
+        let was = self.taken[i].swap(true, Ordering::Relaxed);
+        assert!(!was, "DisjointMut part {i} taken twice");
+        let r = &self.parts[i];
+        // SAFETY: windows are disjoint by construction, each claimed at
+        // most once, and the underlying slice outlives `self` (`'a`).
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(r.start), r.len()) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pooled_runs_every_part_exactly_once() {
+        for n_parts in [1usize, 2, 3, 7, 16] {
+            let hits: Vec<AtomicUsize> = (0..n_parts).map(|_| AtomicUsize::new(0)).collect();
+            run_parts_pooled(n_parts, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "part {i} of {n_parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_runs_every_part_exactly_once() {
+        for n_parts in [1usize, 2, 5] {
+            let hits: Vec<AtomicUsize> = (0..n_parts).map(|_| AtomicUsize::new(0)).collect();
+            run_parts_scoped(n_parts, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn disjoint_mut_windows_tile_the_slice() {
+        let mut data = vec![0u32; 10];
+        let parts = DisjointMut::new(&mut data, [4usize, 0, 3, 3].into_iter());
+        run_parts_pooled(4, &|i| {
+            for v in parts.take(i) {
+                *v = i as u32 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1, 1, 3, 3, 3, 4, 4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "taken twice")]
+    fn disjoint_mut_double_take_panics() {
+        let mut data = vec![0u8; 4];
+        let parts = DisjointMut::new(&mut data, [2usize, 2].into_iter());
+        let _a = parts.take(1);
+        let _b = parts.take(1);
+    }
+
+    #[test]
+    fn pool_survives_and_repropagates_task_panics() {
+        let r = std::panic::catch_unwind(|| {
+            run_parts_pooled(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "task panic must propagate to the submitter");
+        // the pool is not poisoned: the next job runs normally
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        run_parts_pooled(4, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn env_knob_selects_scoped_path() {
+        // run_parts must complete every part under both knob settings
+        let g = crate::kernels::EnvGuard::set(ENV_SPAWN, "scoped");
+        let hits: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        run_parts(6, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        drop(g);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // two threads submit jobs at once; parts must not cross wires
+        std::thread::scope(|s| {
+            for seed in 0..2u32 {
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let mut data = vec![0u32; 64];
+                        let parts = DisjointMut::new(&mut data, [16usize; 4].into_iter());
+                        run_parts_pooled(4, &|i| {
+                            for v in parts.take(i) {
+                                *v = seed + 1;
+                            }
+                        });
+                        assert!(data.iter().all(|&v| v == seed + 1));
+                    }
+                });
+            }
+        });
+    }
+}

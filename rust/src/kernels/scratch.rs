@@ -33,10 +33,12 @@ use std::cell::RefCell;
 /// accumulate at the bottom of the LIFO forever.
 const MAX_POOLED: usize = 64;
 
-/// LIFO pool of reusable f32 buffers.
+/// LIFO pool of reusable f32 buffers (plus a small side pool of u32
+/// buffers for the fused quantizer's CSR `row_ptr`/`indices`).
 #[derive(Debug, Default)]
 pub struct Scratch {
     pool: Vec<Vec<f32>>,
+    pool_u32: Vec<Vec<u32>>,
     grabs: u64,
     allocs: u64,
 }
@@ -96,9 +98,30 @@ impl Scratch {
         }
     }
 
+    /// Take a recycled **empty** u32 buffer with whatever capacity it
+    /// retained — the fused quantizer sizes it itself (`row_ptr` and
+    /// `indices` lengths are only known mid-emission).
+    pub fn grab_u32(&mut self) -> Vec<u32> {
+        self.grabs += 1;
+        let mut buf = self.pool_u32.pop().unwrap_or_default();
+        if buf.capacity() == 0 {
+            self.allocs += 1;
+        }
+        buf.clear();
+        buf
+    }
+
+    /// Return a u32 buffer to its pool (same drop/cap policy as
+    /// [`put_back`](Scratch::put_back)).
+    pub fn put_back_u32(&mut self, buf: Vec<u32>) {
+        if buf.capacity() > 0 && self.pool_u32.len() < MAX_POOLED {
+            self.pool_u32.push(buf);
+        }
+    }
+
     /// Buffers currently pooled.
     pub fn pooled(&self) -> usize {
-        self.pool.len()
+        self.pool.len() + self.pool_u32.len()
     }
 
     /// (total grabs, grabs that had to allocate) — lets tests assert the
@@ -184,6 +207,20 @@ mod tests {
         s.put_back(b2);
         let b3 = s.grab_overwritten(12);
         assert_eq!(b3.len(), 12);
+    }
+
+    #[test]
+    fn u32_pool_recycles_capacity() {
+        let mut s = Scratch::new();
+        let mut a = s.grab_u32();
+        a.resize(64, 7);
+        s.put_back_u32(a);
+        let b = s.grab_u32();
+        assert!(b.is_empty(), "recycled u32 buffers come back cleared");
+        assert!(b.capacity() >= 64, "u32 pool must retain capacity");
+        // empty buffers are dropped, not pooled
+        s.put_back_u32(Vec::new());
+        assert_eq!(s.pooled(), 0);
     }
 
     #[test]

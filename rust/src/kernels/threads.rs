@@ -1,13 +1,13 @@
 //! Thread-count resolution and deterministic work partitioning for the
 //! batch-parallel kernels.
 //!
-//! There is deliberately no persistent thread pool: the kernels spawn
-//! scoped threads (`std::thread::scope`) per call, which keeps the
-//! crate registry-free (no rayon) and keeps every borrow checked — the
-//! partitions hand each worker a *disjoint* `&mut` slice of the output,
-//! so no locks, no atomics, and no merge step are needed (see
-//! [`super::gemm`] for why that also makes results bit-identical across
-//! thread counts).
+//! The kernels fan work out over the persistent worker pool in
+//! [`super::pool`] (long-lived parked threads, still registry-free —
+//! no rayon); `DITHERPROP_SPAWN=scoped` falls back to per-call scoped
+//! spawn. Either way the partitions hand each part a *disjoint*
+//! `&mut` slice of the output, so no locks around data, no merge step,
+//! and results stay bit-identical across thread counts (see
+//! [`super::gemm`]).
 //!
 //! The knobs, both read per step (not cached, so tests and benches can
 //! flip them at runtime):

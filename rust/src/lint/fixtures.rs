@@ -162,6 +162,35 @@ fn determinism_must_fire() {
 }
 
 #[test]
+fn determinism_spawn_must_fire() {
+    // Ad hoc threading in a deterministic path bypasses the pool's
+    // partition/fan-out discipline.
+    let src = "fn fan_out(xs: &mut [f32]) {\n\
+               \x20   let h = std::thread::spawn(move || 1u32);\n\
+               \x20   std::thread::scope(|s| { s.spawn(|| xs[0] = 1.0); });\n\
+               \x20   drop(h);\n\
+               }\n";
+    let f = lint_one("kernels/fixture.rs", src);
+    let spawns: Vec<_> = f.iter().filter(|x| x.msg.contains("raw thread::")).collect();
+    assert_eq!(spawns.len(), 2, "{}", report::text(&f));
+    assert!(spawns.iter().all(|x| x.rule == "determinism"), "{}", report::text(&f));
+}
+
+#[test]
+fn determinism_spawn_must_not_fire() {
+    // The pool module is the sanctioned spawn point; test code and
+    // out-of-scope dirs are exempt; thread::sleep is not a spawn.
+    let pool = "fn start() { std::thread::spawn(|| park()); std::thread::scope(|s| run(s)); }\n";
+    assert!(lint_one("kernels/pool.rs", pool).is_empty());
+    let test_src = "#[cfg(test)]\nmod tests {\n\
+                    \x20   fn t() { std::thread::spawn(|| 1).join().unwrap(); }\n}\n";
+    assert!(lint_one("kernels/fixture.rs", test_src).is_empty());
+    let sleep = "fn nap() { std::thread::sleep(std::time::Duration::from_millis(1)); }\n";
+    assert!(lint_one("coordinator/fixture.rs", sleep).is_empty());
+    assert!(lint_one("serve/fixture.rs", "fn f() { std::thread::spawn(|| 1); }\n").is_empty());
+}
+
+#[test]
 fn determinism_must_not_fire() {
     let src = "use std::collections::BTreeMap;\n\
                use std::time::Duration;\n\

@@ -20,7 +20,8 @@
 //! * `hotpath-alloc`       — no allocation in `kernels/` loop bodies.
 //! * `no-panic-transport`  — no panic paths in `net/` + `coordinator/`.
 //! * `determinism`         — no unordered containers / wall-clock /
-//!   machine-dependent parallelism in deterministic paths.
+//!   machine-dependent parallelism / raw `thread::spawn` outside the
+//!   worker pool in deterministic paths.
 //! * `wire-tags`           — `net/proto.rs` tags unique, dense, decoded.
 //! * `op-registration`     — every native op declared, dispatched, and
 //!   capability-mapped.

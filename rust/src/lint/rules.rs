@@ -150,8 +150,12 @@ fn no_panic_transport(f: &FileCtx, out: &mut Vec<Finding>) {
 /// `determinism`: gradient, averaging and kernel paths must be
 /// bit-identical across runs, machines and thread counts.  Flags
 /// unordered std containers (iteration order varies), wall-clock
-/// reads, and `available_parallelism` (the one machine-dependent
-/// value; its single sanctioned resolution point carries an allow).
+/// reads, `available_parallelism` (the one machine-dependent value;
+/// its single sanctioned resolution point carries an allow), and raw
+/// `thread::spawn` / `thread::scope` outside `kernels/pool.rs` — ad
+/// hoc threading bypasses the pool's deterministic output-partition
+/// fan-out (the coordinator's long-lived per-worker connection
+/// threads carry allows).
 fn determinism(f: &FileCtx, out: &mut Vec<Finding>) {
     let scoped = ["kernels/", "coordinator/", "sparse/", "quant/", "runtime/backend/native/"]
         .iter()
@@ -188,6 +192,23 @@ fn determinism(f: &FileCtx, out: &mut Vec<Finding>) {
                  kernels::threads::num_threads"
                     .into(),
             )),
+            Some("thread")
+                if f.is_punct(i + 1, ':')
+                    && f.is_punct(i + 2, ':')
+                    && matches!(f.ident(i + 3), Some("spawn") | Some("scope"))
+                    && f.rel != "kernels/pool.rs" =>
+            {
+                out.push(finding(
+                    f,
+                    "determinism",
+                    i,
+                    format!(
+                        "raw thread::{} outside kernels/pool.rs; fan work out through the \
+                         persistent worker pool (kernels::pool::run_parts)",
+                        f.ident(i + 3).unwrap_or("spawn")
+                    ),
+                ))
+            }
             _ => {}
         }
     }

@@ -1,10 +1,19 @@
-//! Host-side quantization-grid analysis.
+//! Host-side quantization-grid analysis and the fused NSD→CSR emitter.
 //!
 //! The L1 kernel does the actual NSD quantization; this module analyses
 //! its *outputs* on the coordinator: recovering the Delta grid from a
 //! tensor, worst-case bitwidth (Fig. 6b), and a host reference NSD used
 //! by property tests and the Fig. 1 histogram bench.
+//!
+//! [`nsd_csr_rows`] is the training hot path's fused form of Eq. 4: it
+//! quantizes a dense `rows x cols` gradient straight into a
+//! [`CsrMat`](crate::sparse::CsrMat), never materialising the dithered
+//! dense tensor. Determinism comes from per-row dither streams
+//! ([`row_rng`]): each row's draws depend only on `(seed, row)`, so the
+//! two-phase emission (count, then fill) replays identical streams and
+//! any thread count partitions rows without perturbing a single draw.
 
+use crate::kernels::{chunk_ranges, planned_threads, run_parts, DisjointMut, LANES};
 use crate::util::math::bitwidth_for_level;
 use crate::util::rng::Rng;
 
@@ -51,6 +60,148 @@ pub fn nsd_host(values: &[f32], delta: f32, rng: &mut Rng) -> Vec<f32> {
             delta * ((x + nu) / delta + 0.5).floor()
         })
         .collect()
+}
+
+/// Dither stream for one gradient row of the fused emitter. Streams
+/// are keyed by `(seed, row)` only — not by nnz, phase, or thread — so
+/// the count and fill phases replay identical draws and row
+/// partitioning is free to change with `DITHERPROP_THREADS`.
+pub fn row_rng(seed: u32, row: usize) -> Rng {
+    Rng::new((seed as u64) ^ (row as u64).wrapping_mul(0xA24B_AED4_963E_E407))
+}
+
+/// Eq. 4 over one row with its own stream, streaming surviving
+/// nonzeros to `emit` in column order. A draw is consumed for *every*
+/// element (including those that quantize to zero), which is what
+/// makes the count and fill phases agree. Returns
+/// `(nnz, max_abs_level)`.
+fn nsd_row_emit(
+    row_vals: &[f32],
+    delta: f32,
+    rng: &mut Rng,
+    mut emit: impl FnMut(u32, f32),
+) -> (usize, f32) {
+    let mut nnz = 0usize;
+    let mut max_level = 0.0f32;
+    for (c, &x) in row_vals.iter().enumerate() {
+        let nu = rng.range(-0.5, 0.5) * delta;
+        let q = delta * ((x + nu) / delta + 0.5).floor();
+        if q != 0.0 {
+            emit(c as u32, q);
+            nnz += 1;
+            max_level = max_level.max((q / delta).abs().round());
+        }
+    }
+    (nnz, max_level)
+}
+
+/// Dense reference for the fused emitter: Eq. 4 with the same per-row
+/// streams ([`row_rng`]), materialising the full tensor. The property
+/// tests pin `nsd_csr_rows` to the row-wise CSR encoding of this.
+pub fn nsd_rows_host(g: &[f32], rows: usize, cols: usize, delta: f32, seed: u32) -> Vec<f32> {
+    assert_eq!(g.len(), rows * cols);
+    let mut out = Vec::with_capacity(g.len());
+    for row in 0..rows {
+        let mut rng = row_rng(seed, row);
+        out.extend_from_slice(&nsd_host(&g[row * cols..(row + 1) * cols], delta, &mut rng));
+    }
+    out
+}
+
+/// Fused NSD quantize → CSR emission (Eq. 4 + encode in one pass, no
+/// dense intermediate), threaded over the worker pool.
+///
+/// Two phases over per-row dither streams: (1) replay each row's
+/// stream to count its surviving nonzeros into `row_ptr[row + 1]`,
+/// serial prefix-sum, then (2) replay the same streams filling each
+/// row's now-known disjoint `indices`/`values` window. Both phases
+/// partition rows the same way, every output element is written by
+/// exactly one thread, and the result is bit-identical for every
+/// `nthreads`.
+///
+/// The three output buffers are caller-provided (arena-recycled by
+/// `methods::compress_grad_csr`) and are cleared and resized here.
+/// Returns the exact `max_abs_level` of the emission (order-free max
+/// reduction). Requires `delta > 0` — callers gate the degenerate
+/// grids on the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn nsd_csr_rows(
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    delta: f32,
+    seed: u32,
+    nthreads: usize,
+    row_ptr: &mut Vec<u32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) -> f32 {
+    assert_eq!(g.len(), rows * cols);
+    assert!(delta > 0.0, "fused emission requires a positive grid step");
+    row_ptr.clear();
+    row_ptr.resize(rows + 1, 0);
+    if rows == 0 {
+        indices.clear();
+        values.clear();
+        return 0.0;
+    }
+    let nt = planned_threads(nthreads, rows * cols / LANES, rows);
+    let ranges = chunk_ranges(rows, nt.max(1));
+
+    // phase 1: count each row's nonzeros by running its full stream
+    {
+        let counts = &mut row_ptr[1..];
+        let parts = DisjointMut::new(counts, ranges.iter().map(|r| r.len()));
+        run_parts(ranges.len(), |p| {
+            let r = &ranges[p];
+            let out = parts.take(p);
+            for (o, row) in out.iter_mut().zip(r.start..r.end) {
+                let mut rng = row_rng(seed, row);
+                let vals = &g[row * cols..(row + 1) * cols];
+                let (nnz, _) = nsd_row_emit(vals, delta, &mut rng, |_, _| {});
+                *o = nnz as u32;
+            }
+        });
+    }
+    for i in 1..=rows {
+        row_ptr[i] += row_ptr[i - 1];
+    }
+    let total = row_ptr[rows] as usize;
+    indices.clear();
+    indices.resize(total, 0);
+    values.clear();
+    values.resize(total, 0.0);
+
+    // phase 2: replay the same streams, filling each part's disjoint
+    // window (parts are consecutive row spans, so the windows tile the
+    // buffers in order)
+    let mut part_max = vec![0.0f32; ranges.len()];
+    {
+        let span = |r: &std::ops::Range<usize>| (row_ptr[r.end] - row_ptr[r.start]) as usize;
+        let idx_parts = DisjointMut::new(indices, ranges.iter().map(span));
+        let val_parts = DisjointMut::new(values, ranges.iter().map(span));
+        let max_parts = DisjointMut::new(&mut part_max, ranges.iter().map(|_| 1));
+        run_parts(ranges.len(), |p| {
+            let r = &ranges[p];
+            let idx = idx_parts.take(p);
+            let val = val_parts.take(p);
+            let mut off = 0usize;
+            let mut level = 0.0f32;
+            for row in r.start..r.end {
+                let mut rng = row_rng(seed, row);
+                let vals = &g[row * cols..(row + 1) * cols];
+                let (_, row_level) = nsd_row_emit(vals, delta, &mut rng, |c, q| {
+                    idx[off] = c;
+                    val[off] = q;
+                    off += 1;
+                });
+                level = level.max(row_level);
+            }
+            debug_assert_eq!(off, idx.len(), "fill phase disagrees with count phase");
+            max_parts.take(p)[0] = level;
+        });
+    }
+    part_max.iter().fold(0.0f32, |m, &v| m.max(v))
 }
 
 /// Standard deviation of a slice (Alg. 1 line 2).
@@ -144,5 +295,99 @@ mod tests {
         assert!((std_of(&[1.0, 1.0, 1.0]) - 0.0).abs() < 1e-7);
         assert!((std_of(&[0.0, 2.0]) - 1.0).abs() < 1e-6);
         assert_eq!(std_of(&[5.0]), 0.0);
+    }
+
+    /// Run the fused emitter and return (csr buffers, max level).
+    fn fused(g: &[f32], rows: usize, cols: usize, delta: f32, seed: u32, nt: usize) -> FusedOut {
+        let (mut rp, mut idx, mut val) = (Vec::new(), Vec::new(), Vec::new());
+        let level = nsd_csr_rows(g, rows, cols, delta, seed, nt, &mut rp, &mut idx, &mut val);
+        (rp, idx, val, level)
+    }
+    type FusedOut = (Vec<u32>, Vec<u32>, Vec<f32>, f32);
+
+    #[test]
+    fn fused_csr_equals_two_pass_reference_across_threads_and_deltas() {
+        check("fused csr == dense nsd + encode", 40, |g: &mut Gen| {
+            let rows = g.usize_in(1..=24);
+            let cols = g.usize_in(1..=40);
+            let seed = g.u32();
+            let mut rng = Rng::new(seed as u64);
+            let grad: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.1).collect();
+            // sweep the grid step across the useful s-range
+            for s in [0.25f32, 1.0, 3.0] {
+                let delta = s * std_of(&grad);
+                if delta <= 0.0 {
+                    continue;
+                }
+                // two-pass reference: dense per-row NSD, then row encode
+                let dense = nsd_rows_host(&grad, rows, cols, delta, seed);
+                let mut exp_rp = vec![0u32; 1];
+                let (mut exp_idx, mut exp_val) = (Vec::new(), Vec::new());
+                for r in 0..rows {
+                    for (c, &v) in dense[r * cols..(r + 1) * cols].iter().enumerate() {
+                        if v != 0.0 {
+                            exp_idx.push(c as u32);
+                            exp_val.push(v);
+                        }
+                    }
+                    exp_rp.push(exp_val.len() as u32);
+                }
+                let exp_level = grid_stats(&dense, delta).max_abs_level;
+                for nt in [1usize, 2, 3, 8] {
+                    let (rp, idx, val, level) = fused(&grad, rows, cols, delta, seed, nt);
+                    assert_eq!(rp, exp_rp, "row_ptr nt={nt} s={s}");
+                    assert_eq!(idx, exp_idx, "indices nt={nt} s={s}");
+                    let bits_ok = val.len() == exp_val.len()
+                        && val.iter().zip(&exp_val).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(bits_ok, "values nt={nt} s={s}");
+                    assert_eq!(level.to_bits(), exp_level.to_bits(), "level nt={nt} s={s}");
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn fused_emission_is_pool_vs_scoped_invariant() {
+        use crate::kernels::{EnvGuard, ENV_SPAWN};
+        let mut rng = Rng::new(11);
+        let (rows, cols) = (33, 29);
+        let grad: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let delta = 1.5 * std_of(&grad);
+        let pooled = fused(&grad, rows, cols, delta, 7, 4);
+        let scoped = {
+            let _g = EnvGuard::set(ENV_SPAWN, "scoped");
+            fused(&grad, rows, cols, delta, 7, 4)
+        };
+        assert_eq!(pooled.0, scoped.0);
+        assert_eq!(pooled.1, scoped.1);
+        assert!(pooled.2.iter().zip(&scoped.2).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(pooled.3.to_bits(), scoped.3.to_bits());
+    }
+
+    #[test]
+    fn fused_handles_degenerate_shapes() {
+        let (rp, idx, val, level) = fused(&[], 0, 5, 1.0, 3, 4);
+        assert_eq!((rp.len(), idx.len(), val.len(), level), (1, 0, 0, 0.0));
+        // single huge-delta row quantizes everything to zero
+        let (rp, idx, val, _) = fused(&[1e-3, -2e-3, 5e-4], 1, 3, 1e6, 3, 4);
+        assert_eq!(rp, vec![0, 0]);
+        assert!(idx.is_empty() && val.is_empty());
+    }
+
+    #[test]
+    fn row_streams_are_independent_of_batch_position() {
+        // a row's draws depend only on (seed, row): quantizing rows
+        // 0..2 and then just row 1 must agree on row 1's output
+        let mut rng = Rng::new(2);
+        let cols = 17;
+        let grad: Vec<f32> = (0..2 * cols).map(|_| rng.normal()).collect();
+        let delta = 0.8 * std_of(&grad);
+        let both = nsd_rows_host(&grad, 2, cols, delta, 42);
+        let solo = {
+            let mut r = row_rng(42, 1);
+            nsd_host(&grad[cols..], delta, &mut r)
+        };
+        assert_eq!(both[cols..].to_vec(), solo);
     }
 }

@@ -112,10 +112,10 @@ fn im2col_rows(x: &[f32], g: &ConvGeom, rows: std::ops::Range<usize>, out_rows: 
     }
 }
 
-/// [`im2col_into`] with the patch rows partitioned across scoped
-/// threads. Pure data movement over disjoint output rows, so any
-/// thread count is trivially bit-identical to serial; the spawn
-/// threshold ([`kernels::planned_threads`]) keeps tiny layers serial.
+/// [`im2col_into`] with the patch rows partitioned across the worker
+/// pool. Pure data movement over disjoint output rows, so any thread
+/// count is trivially bit-identical to serial; the fan-out threshold
+/// ([`kernels::planned_threads`]) keeps tiny layers serial.
 ///
 /// [`kernels::planned_threads`]: crate::kernels::planned_threads
 pub fn im2col_threaded_into(x: &[f32], g: &ConvGeom, batch: usize, out: &mut [f32], nthreads: usize) {
@@ -128,18 +128,10 @@ pub fn im2col_threaded_into(x: &[f32], g: &ConvGeom, batch: usize, out: &mut [f3
     debug_assert_eq!(x.len(), batch * g.in_numel());
     debug_assert_eq!(out.len(), rows * plen);
     let ranges = crate::kernels::chunk_ranges(rows, nt);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * plen);
-            rest = tail;
-            let r = r.clone();
-            handles.push(s.spawn(move || im2col_rows(x, g, r, chunk)));
-        }
-        for h in handles {
-            h.join().expect("im2col worker panicked");
-        }
+    let parts = crate::kernels::DisjointMut::new(out, ranges.iter().map(|r| r.len() * plen));
+    crate::kernels::run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        im2col_rows(x, g, r.start..r.end, parts.take(p));
     });
 }
 
@@ -206,10 +198,11 @@ fn col2im_examples(
     }
 }
 
-/// [`col2im_into`] with the batch examples partitioned across scoped
-/// threads: each worker scatter-adds into a disjoint per-example `dx`
-/// slice, preserving the serial accumulation order inside every image
-/// (bit-identical for any thread count). Batch-1 backward stays serial.
+/// [`col2im_into`] with the batch examples partitioned across the
+/// worker pool: each part scatter-adds into a disjoint per-example
+/// `dx` slice, preserving the serial accumulation order inside every
+/// image (bit-identical for any thread count). Batch-1 backward stays
+/// serial.
 pub fn col2im_threaded_into(
     dpatches: &[f32],
     g: &ConvGeom,
@@ -226,18 +219,10 @@ pub fn col2im_threaded_into(
     debug_assert_eq!(dpatches.len(), batch * per_example);
     debug_assert_eq!(dx.len(), batch * g.in_numel());
     let ranges = crate::kernels::chunk_ranges(batch, nt);
-    std::thread::scope(|s| {
-        let mut rest = dx;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len() * g.in_numel());
-            rest = tail;
-            let r = r.clone();
-            handles.push(s.spawn(move || col2im_examples(dpatches, g, r, chunk)));
-        }
-        for h in handles {
-            h.join().expect("col2im worker panicked");
-        }
+    let parts = crate::kernels::DisjointMut::new(dx, ranges.iter().map(|r| r.len() * g.in_numel()));
+    crate::kernels::run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        col2im_examples(dpatches, g, r.start..r.end, parts.take(p));
     });
 }
 
@@ -313,12 +298,43 @@ pub fn maxpool_forward(x: &[f32], g: &PoolGeom, batch: usize) -> (Vec<f32>, Vec<
 /// Route pooled-output cotangents back to the winning input positions
 /// (overlapping windows accumulate).
 pub fn maxpool_backward(dz: &[f32], argmax: &[u32], g: &PoolGeom, batch: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; batch * g.in_numel()];
+    maxpool_backward_into(dz, argmax, g, batch, &mut dx);
+    dx
+}
+
+/// [`maxpool_backward`] into a caller buffer (must be zeroed — the
+/// scatter accumulates). Lets the executor route through the arena.
+pub fn maxpool_backward_into(
+    dz: &[f32],
+    argmax: &[u32],
+    g: &PoolGeom,
+    batch: usize,
+    dx: &mut [f32],
+) {
+    debug_assert_eq!(dz.len(), batch * g.out_numel());
+    debug_assert_eq!(argmax.len(), batch * g.out_numel());
+    debug_assert_eq!(dx.len(), batch * g.in_numel());
+    maxpool_backward_examples(dz, argmax, g, 0..batch, dx);
+}
+
+/// Scatter one contiguous example range's pooled cotangents into
+/// `dx_chunk` (`examples.len() * in_numel`, zeroed). The argmax offsets
+/// are within-example, so each example's image is owned by exactly one
+/// caller and the accumulation keeps its serial order — partitioning by
+/// example is bit-identical. Skips exact zeros (the dithered `delta_z`
+/// sparsity survives the pool routing).
+fn maxpool_backward_examples(
+    dz: &[f32],
+    argmax: &[u32],
+    g: &PoolGeom,
+    examples: std::ops::Range<usize>,
+    dx_chunk: &mut [f32],
+) {
     let (inn, outn) = (g.in_numel(), g.out_numel());
-    debug_assert_eq!(dz.len(), batch * outn);
-    debug_assert_eq!(argmax.len(), batch * outn);
-    let mut dx = vec![0.0f32; batch * inn];
-    for bi in 0..batch {
-        let dxi = &mut dx[bi * inn..(bi + 1) * inn];
+    debug_assert_eq!(dx_chunk.len(), examples.len() * inn);
+    for (ei, bi) in examples.enumerate() {
+        let dxi = &mut dx_chunk[ei * inn..(ei + 1) * inn];
         let go = &dz[bi * outn..(bi + 1) * outn];
         let am = &argmax[bi * outn..(bi + 1) * outn];
         for (&idx, &gv) in am.iter().zip(go.iter()) {
@@ -327,7 +343,34 @@ pub fn maxpool_backward(dz: &[f32], argmax: &[u32], g: &PoolGeom, batch: usize) 
             }
         }
     }
-    dx
+}
+
+/// [`maxpool_backward_into`] with the batch examples partitioned across
+/// the worker pool — the same disjoint-output discipline as col2im, so
+/// any thread count is bit-identical to serial. Batch-1 stays serial.
+pub fn maxpool_backward_threaded_into(
+    dz: &[f32],
+    argmax: &[u32],
+    g: &PoolGeom,
+    batch: usize,
+    dx: &mut [f32],
+    nthreads: usize,
+) {
+    let nt = crate::kernels::planned_threads(
+        nthreads,
+        batch * g.out_numel() / crate::kernels::LANES,
+        batch,
+    );
+    if nt <= 1 {
+        return maxpool_backward_into(dz, argmax, g, batch, dx);
+    }
+    debug_assert_eq!(dx.len(), batch * g.in_numel());
+    let ranges = crate::kernels::chunk_ranges(batch, nt);
+    let parts = crate::kernels::DisjointMut::new(dx, ranges.iter().map(|r| r.len() * g.in_numel()));
+    crate::kernels::run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        maxpool_backward_examples(dz, argmax, g, r.start..r.end, parts.take(p));
+    });
 }
 
 #[cfg(test)]
@@ -456,6 +499,32 @@ mod tests {
 
             cols.iter().zip(cols_t.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
                 && dx.iter().zip(dx_t.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+        });
+    }
+
+    #[test]
+    fn maxpool_backward_threaded_matches_serial_bitwise() {
+        // per-example partition over the pool; exact for any thread
+        // count, including batches below the fan-out threshold
+        check("maxpool backward threaded == serial", 30, |gen: &mut Gen| {
+            let k = gen.usize_in(1..=3);
+            let stride = gen.usize_in(1..=2);
+            let c = gen.usize_in(1..=3);
+            let side = k + gen.usize_in(0..=5);
+            let out_side = (side - k) / stride + 1;
+            let g = PoolGeom { h: side, w: side, c, out_h: out_side, out_w: out_side, k, stride };
+            let batch = gen.usize_in(1..=5);
+            let nthreads = gen.usize_in(2..=6);
+            let mut rng = Rng::new(gen.u32() as u64);
+            let x: Vec<f32> = (0..batch * g.in_numel()).map(|_| rng.normal()).collect();
+            let (_, am) = maxpool_forward(&x, &g, batch);
+            let dz: Vec<f32> = (0..batch * g.out_numel())
+                .map(|_| if rng.uniform() < 0.5 { rng.normal() } else { 0.0 })
+                .collect();
+            let dx = maxpool_backward(&dz, &am, &g, batch);
+            let mut dx_t = vec![0.0f32; dx.len()];
+            maxpool_backward_threaded_into(&dz, &am, &g, batch, &mut dx_t, nthreads);
+            dx.iter().zip(dx_t.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
         });
     }
 

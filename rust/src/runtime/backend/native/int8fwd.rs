@@ -37,8 +37,8 @@
 use super::conv::{self, ConvGeom};
 use super::fold::FoldedModel;
 use super::models::OpKind;
-use super::ops::{self, Exec, LayerOp, SkipSlots, StepCtx};
-use crate::kernels::{self, int8, scratch};
+use super::ops::{self, Exec, LayerOp, StepCtx};
+use crate::kernels::{int8, scratch};
 use anyhow::{bail, ensure, Result};
 
 /// A weighted stage lowered to one quantized GEMM.
@@ -147,9 +147,8 @@ impl Int8Model {
             self.input_numel
         );
         let Int8Model { stages, patches, xq, xscales, acc, n_skip_slots, .. } = self;
-        let var = kernels::variant();
         scratch::with_thread_local(|sc| {
-            let mut ex = Exec { var, sc, skips: SkipSlots::new(*n_skip_slots) };
+            let mut ex = Exec::new(sc, *n_skip_slots);
             // non-weighted f32 ops never touch params on the forward
             // path (BN, the only one that would, is rejected at prepare)
             let ctx = StepCtx { batch, params: &[], train: false, int8: false };

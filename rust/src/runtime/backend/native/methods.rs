@@ -7,17 +7,26 @@
 //!
 //! * `baseline`       — `g` used as-is.
 //! * `dithered`       — NSD quantization (Eq. 4), `Delta = s * std(g)`,
-//!   via the host reference kernel [`crate::quant::nsd_host`] with the
-//!   counter RNG in [`crate::util::rng`].
+//!   with one dither stream per gradient row
+//!   ([`crate::quant::row_rng`]) so the fused CSR emission and the
+//!   dense reference replay identical draws at any thread count.
 //! * `detq`           — same grid, deterministic rounding (ablation).
 //! * `int8`           — deterministic symmetric 8-bit quantization.
 //! * `int8_dithered`  — int8 forward is handled in `mlp`; the backward
 //!   compression is identical to `dithered`.
 //! * `meprop_k<N>`    — per-example top-k magnitude selection (Sun et
 //!   al., the biased comparator of Fig. 4).
+//!
+//! The NSD methods have two equivalent implementations:
+//! [`compress_grad`] (dense output, then the caller encodes rows) and
+//! [`compress_grad_csr`] (fused quantize-into-CSR, no dense
+//! intermediate — the hot path). `DITHERPROP_FUSE=off` disables the
+//! fused form; it is a pure performance knob — the CSR result decodes
+//! bit-identically to the dense one.
 
-use crate::quant::{grid_stats, nsd_host, std_of};
-use crate::util::rng::Rng;
+use crate::kernels::Scratch;
+use crate::quant::{grid_stats, nsd_csr_rows, nsd_rows_host, std_of};
+use crate::sparse::CsrMat;
 use anyhow::{anyhow, bail, Result};
 
 /// Parsed backward-compression method string.
@@ -120,8 +129,7 @@ pub fn compress_grad(
                     GradStats { sparsity: zero_fraction(g), max_level: 0.0 },
                 );
             }
-            let mut rng = Rng::new(seed as u64);
-            let q = nsd_host(g, delta, &mut rng);
+            let q = nsd_rows_host(g, rows, cols, delta, seed);
             let gs = grid_stats(&q, delta);
             (q, GradStats { sparsity: gs.sparsity, max_level: gs.max_abs_level })
         }
@@ -155,6 +163,88 @@ pub fn compress_grad(
     }
 }
 
+/// Env knob for the fused quantize-into-CSR path (`off`/`0` disables).
+pub const ENV_FUSE: &str = "DITHERPROP_FUSE";
+
+/// Whether fused NSD→CSR emission is enabled (default on). Read per
+/// call — benches flip it between timed sections to compare against
+/// the dense+encode configuration. Pure perf knob: both paths produce
+/// bit-identical gradients.
+pub fn fuse_enabled() -> bool {
+    !matches!(std::env::var(ENV_FUSE).as_deref(), Ok("off") | Ok("0"))
+}
+
+/// Fused form of [`compress_grad`] for the NSD methods: quantize the
+/// `(rows, cols)` gradient straight into a [`CsrMat`] over
+/// arena-recycled buffers, skipping the dense intermediate and the
+/// per-row encode. Returns `None` when the method has no NSD grid
+/// (baseline/detq/int8/meprop keep their dense definitions), the grid
+/// is degenerate (`delta <= 0`, the identity case), or fusion is
+/// disabled via [`ENV_FUSE`] — callers then fall back to
+/// [`compress_grad`]. When it fires, the `CsrMat` decodes
+/// bit-identically to the dense result and the stats match exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn compress_grad_csr(
+    method: Method,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    seed: u32,
+    s: f32,
+    nthreads: usize,
+    sc: &mut Scratch,
+) -> Option<(CsrMat, GradStats)> {
+    if !fuse_enabled() {
+        return None;
+    }
+    compress_grad_csr_unchecked(method, g, rows, cols, seed, s, nthreads, sc)
+}
+
+/// [`compress_grad_csr`] minus the [`ENV_FUSE`] read: the knob-free
+/// core, so in-process tests can pin the fused path without racing a
+/// concurrent test's `EnvGuard` on the process-global environment.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn compress_grad_csr_unchecked(
+    method: Method,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    seed: u32,
+    s: f32,
+    nthreads: usize,
+    sc: &mut Scratch,
+) -> Option<(CsrMat, GradStats)> {
+    debug_assert_eq!(g.len(), rows * cols);
+    if !matches!(method, Method::Dithered | Method::Int8Dithered) {
+        return None;
+    }
+    let delta = s * std_of(g);
+    if delta <= 0.0 {
+        return None;
+    }
+    let mut row_ptr = sc.grab_u32();
+    let mut indices = sc.grab_u32();
+    let mut values = sc.grab_overwritten(0);
+    let max_level = nsd_csr_rows(
+        g,
+        rows,
+        cols,
+        delta,
+        seed,
+        nthreads,
+        &mut row_ptr,
+        &mut indices,
+        &mut values,
+    );
+    let len = rows * cols;
+    let zeros = len - values.len();
+    let stats = GradStats {
+        sparsity: if len == 0 { 0.0 } else { zeros as f32 / len as f32 },
+        max_level,
+    };
+    Some((CsrMat { rows, cols, row_ptr, indices, values }, stats))
+}
+
 /// Keep the k largest-|g| entries of each example row, zero the rest
 /// (ties at the threshold are kept, matching `layers.py::_meprop_topk`).
 fn meprop_topk(g: &[f32], rows: usize, cols: usize, k: usize) -> Vec<f32> {
@@ -186,6 +276,7 @@ fn meprop_topk(g: &[f32], rows: usize, cols: usize, k: usize) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn gaussian(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);
@@ -297,5 +388,74 @@ mod tests {
         let g = gaussian(32, 8);
         let (q, _) = compress_grad(Method::Meprop(64), &g, 4, 8, 0, 0.0);
         assert_eq!(q, g);
+    }
+
+    #[test]
+    fn fused_csr_decodes_bit_identical_to_dense_path() {
+        let mut sc = Scratch::new();
+        for (rows, cols, s, seed) in [(8, 64, 2.0, 7u32), (1, 5, 0.5, 1), (17, 33, 4.0, 999)] {
+            let g = gaussian(rows * cols, seed as u64);
+            let (dense, dst) = compress_grad(Method::Dithered, &g, rows, cols, seed, s);
+            let (mat, cst) =
+                compress_grad_csr_unchecked(Method::Dithered, &g, rows, cols, seed, s, 4, &mut sc)
+                    .expect("fused path fires for dithered with delta > 0");
+            let dec = mat.decode();
+            assert_eq!(dec.len(), dense.len());
+            for (a, b) in dec.iter().zip(dense.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} cols={cols} s={s}");
+            }
+            assert_eq!(cst.sparsity.to_bits(), dst.sparsity.to_bits());
+            assert_eq!(cst.max_level.to_bits(), dst.max_level.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_path_declines_non_nsd_methods_and_degenerate_grids() {
+        let mut sc = Scratch::new();
+        let g = gaussian(64, 3);
+        for m in [Method::Baseline, Method::Detq, Method::Int8, Method::Meprop(4)] {
+            assert!(compress_grad_csr_unchecked(m, &g, 8, 8, 1, 2.0, 1, &mut sc).is_none());
+        }
+        // s = 0 → delta = 0 → dense identity path
+        assert!(compress_grad_csr_unchecked(Method::Dithered, &g, 8, 8, 1, 0.0, 1, &mut sc)
+            .is_none());
+        // constant gradient → std 0 → delta 0
+        let flat = vec![0.25f32; 64];
+        assert!(compress_grad_csr_unchecked(Method::Dithered, &flat, 8, 8, 1, 2.0, 1, &mut sc)
+            .is_none());
+    }
+
+    #[test]
+    fn fuse_knob_disables_fused_path() {
+        use crate::kernels::EnvGuard;
+        let mut sc = Scratch::new();
+        let g = gaussian(64, 4);
+        let _guard = EnvGuard::set(ENV_FUSE, "off");
+        assert!(compress_grad_csr(Method::Dithered, &g, 8, 8, 1, 2.0, 1, &mut sc).is_none());
+    }
+
+    #[test]
+    fn fused_buffers_recycle_through_the_arena() {
+        let mut sc = Scratch::new();
+        let g = gaussian(32 * 16, 5);
+        for _ in 0..3 {
+            let (mat, _) =
+                compress_grad_csr_unchecked(Method::Dithered, &g, 32, 16, 9, 2.0, 2, &mut sc)
+                    .unwrap();
+            sc.put_back_u32(mat.row_ptr);
+            sc.put_back_u32(mat.indices);
+            sc.put_back(mat.values);
+        }
+        let (_, allocs_warm) = sc.stats();
+        for _ in 0..4 {
+            let (mat, _) =
+                compress_grad_csr_unchecked(Method::Dithered, &g, 32, 16, 9, 2.0, 2, &mut sc)
+                    .unwrap();
+            sc.put_back_u32(mat.row_ptr);
+            sc.put_back_u32(mat.indices);
+            sc.put_back(mat.values);
+        }
+        let (_, allocs) = sc.stats();
+        assert_eq!(allocs, allocs_warm, "steady-state fused emission must not allocate");
     }
 }

@@ -19,12 +19,12 @@
 //! sitting between the compressed GEMMs.
 //!
 //! Determinism: the per-channel reductions are partitioned by *channel*
-//! across scoped threads — every channel's sum runs over batch rows in
+//! across the worker pool — every channel's sum runs over batch rows in
 //! ascending order on exactly one thread, so any `DITHERPROP_THREADS`
 //! is bit-identical to serial. Reduction outputs live in arena buffers.
 
 use super::super::models::Stage;
-use super::{Exec, LayerOp, StepCtx};
+use super::{Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::{bn_backward_cost, BackwardCost};
 use crate::kernels::{self, Scratch, Variant};
 use crate::tensor::Tensor;
@@ -78,7 +78,8 @@ fn reduce_rows(rows: usize, crange: Range<usize>, out: &mut [f32], term: impl Fn
 }
 
 /// Channel-partitioned threaded reduction driver: splits the channel
-/// axis across scoped threads, each owning a disjoint `out` chunk.
+/// axis across the worker pool, each part owning a disjoint `out`
+/// chunk.
 fn reduce_channels<F>(rows: usize, c: usize, var: Variant, out: &mut [f32], term: F)
 where
     F: Fn(usize, usize) -> f32 + Sync,
@@ -91,19 +92,10 @@ where
         return reduce_rows(rows, 0..c, out, term);
     }
     let ranges = kernels::chunk_ranges(c, nt);
-    let term = &term;
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut handles = Vec::with_capacity(ranges.len());
-        for r in &ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.len());
-            rest = tail;
-            let r = r.clone();
-            handles.push(s.spawn(move || reduce_rows(rows, r, chunk, term)));
-        }
-        for h in handles {
-            h.join().expect("bn reduction worker panicked");
-        }
+    let parts = kernels::DisjointMut::new(out, ranges.iter().map(|r| r.len()));
+    kernels::run_parts(ranges.len(), |p| {
+        let r = &ranges[p];
+        reduce_rows(rows, r.start..r.end, parts.take(p), &term);
     });
 }
 
@@ -188,12 +180,13 @@ impl LayerOp for BatchNormOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         ctx: &StepCtx,
         grads: &mut [Tensor],
         need_input: bool,
         ex: &mut Exec,
     ) -> Option<Vec<f32>> {
+        let g = g.dense();
         let c = self.c;
         let rows = g.len() / c;
         let inv_n = 1.0 / rows as f32;

@@ -6,10 +6,10 @@
 
 use super::super::conv::{self, ConvGeom};
 use super::super::models::{OpKind, Stage};
-use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, LayerOp, StepCtx};
+use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::{conv_backward_cost, BackwardCost};
 use crate::kernels::{Scratch, Variant};
-use crate::sparse::CsrVec;
+use crate::sparse::{CsrVec, SparseRows};
 use crate::tensor::Tensor;
 
 pub struct Conv2dOp {
@@ -61,7 +61,7 @@ impl LayerOp for Conv2dOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         ctx: &StepCtx,
         grads: &mut [Tensor],
         need_input: bool,
@@ -69,19 +69,30 @@ impl LayerOp for Conv2dOp {
     ) -> Option<Vec<f32>> {
         let geom = self.geom;
         // CSR per (example, position) row: the backward GEMMs reduce
-        // over out_ch at each spatial position.
+        // over out_ch at each spatial position. The fused path already
+        // emitted delta_z-tilde at exactly this granularity.
         let oc = geom.out_ch;
-        let rows: Vec<CsrVec> = (0..ctx.batch * geom.positions())
-            .map(|r| CsrVec::encode(&g[r * oc..(r + 1) * oc]))
-            .collect();
+        let encoded: Vec<CsrVec>;
+        let rows: &dyn SparseRows = match g {
+            Grad::Csr(mat) => {
+                debug_assert_eq!((mat.rows, mat.cols), (ctx.batch * geom.positions(), oc));
+                mat
+            }
+            Grad::Dense(g) => {
+                encoded = (0..ctx.batch * geom.positions())
+                    .map(|r| CsrVec::encode(&g[r * oc..(r + 1) * oc]))
+                    .collect();
+                &encoded
+            }
+        };
 
         let patches = std::mem::take(&mut self.patches);
         let plen = geom.patch_len();
         let (dw, db) = grad_pair(grads, self.p);
-        param_gemm(&rows, &patches, plen, oc, dw.data_mut(), db.data_mut(), ex);
+        param_gemm(rows, &patches, plen, oc, dw.data_mut(), db.data_mut(), ex);
         let gin = need_input.then(|| {
             let weff: &[f32] = self.wq.as_deref().unwrap_or(ctx.params[self.p].data());
-            let dpatches = input_gemm(&rows, weff, plen, oc, ex);
+            let dpatches = input_gemm(rows, weff, plen, oc, ex);
             // grab (zeroed): col2im accumulates into its target
             let mut gnew = ex.sc.grab(ctx.batch * geom.in_numel());
             match ex.var {
@@ -98,6 +109,10 @@ impl LayerOp for Conv2dOp {
             ex.sc.put_back(wq);
         }
         gin
+    }
+
+    fn qrows(&self, batch: usize) -> Option<(usize, usize)> {
+        Some((batch * self.geom.positions(), self.geom.out_ch))
     }
 
     fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost> {

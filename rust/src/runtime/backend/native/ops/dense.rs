@@ -2,10 +2,10 @@
 //! GEMMs (Eqs. 8/9) over the executor-compressed `delta_z` rows.
 
 use super::super::models::{OpKind, Stage};
-use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, LayerOp, StepCtx};
+use super::{affine, grad_pair, input_gemm, param_gemm, stage_int8, Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::{fc_backward_cost, BackwardCost};
 use crate::kernels::Scratch;
-use crate::sparse::CsrVec;
+use crate::sparse::{CsrVec, SparseRows};
 use crate::tensor::Tensor;
 
 pub struct DenseOp {
@@ -47,31 +47,46 @@ impl LayerOp for DenseOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         ctx: &StepCtx,
         grads: &mut [Tensor],
         need_input: bool,
         ex: &mut Exec,
     ) -> Option<Vec<f32>> {
         let (din, dout) = (self.din, self.dout);
-        // CSR-encode each example row of delta_z-tilde once; both
+        // Fused path: the executor already emitted delta_z-tilde as CSR
+        // batch rows; otherwise CSR-encode each example row once. Both
         // backward GEMMs then skip its zeros entirely.
-        let rows: Vec<CsrVec> = (0..ctx.batch)
-            .map(|bi| CsrVec::encode(&g[bi * dout..(bi + 1) * dout]))
-            .collect();
+        let encoded: Vec<CsrVec>;
+        let rows: &dyn SparseRows = match g {
+            Grad::Csr(mat) => {
+                debug_assert_eq!((mat.rows, mat.cols), (ctx.batch, dout));
+                mat
+            }
+            Grad::Dense(g) => {
+                encoded = (0..ctx.batch)
+                    .map(|bi| CsrVec::encode(&g[bi * dout..(bi + 1) * dout]))
+                    .collect();
+                &encoded
+            }
+        };
 
         let xq = std::mem::take(&mut self.xq);
         let (dw, db) = grad_pair(grads, self.p);
-        param_gemm(&rows, &xq, din, dout, dw.data_mut(), db.data_mut(), ex);
+        param_gemm(rows, &xq, din, dout, dw.data_mut(), db.data_mut(), ex);
         let gin = need_input.then(|| {
             let weff: &[f32] = self.wq.as_deref().unwrap_or(ctx.params[self.p].data());
-            input_gemm(&rows, weff, din, dout, ex)
+            input_gemm(rows, weff, din, dout, ex)
         });
         ex.sc.put_back(xq);
         if let Some(wq) = self.wq.take() {
             ex.sc.put_back(wq);
         }
         gin
+    }
+
+    fn qrows(&self, batch: usize) -> Option<(usize, usize)> {
+        Some((batch, self.dout))
     }
 
     fn flops_cost(&self, batch: usize, p_nz: f64) -> Option<BackwardCost> {

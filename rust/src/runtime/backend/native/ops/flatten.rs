@@ -2,7 +2,7 @@
 //! identity and backward copies the cotangent through unchanged (only
 //! the tracked shape differs between the two sides).
 
-use super::{Exec, LayerOp, StepCtx};
+use super::{Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::BackwardCost;
 use crate::kernels::Scratch;
 use crate::tensor::Tensor;
@@ -16,13 +16,13 @@ impl LayerOp for FlattenOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         _ctx: &StepCtx,
         _grads: &mut [Tensor],
         need_input: bool,
         ex: &mut Exec,
     ) -> Option<Vec<f32>> {
-        need_input.then(|| ex.sc.dup(g))
+        need_input.then(|| ex.sc.dup(g.dense()))
     }
 
     fn flops_cost(&self, _batch: usize, _p_nz: f64) -> Option<BackwardCost> {

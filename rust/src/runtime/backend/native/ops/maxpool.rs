@@ -1,10 +1,11 @@
-//! Max-pool op: argmax routing forward, scatter-add backward.
+//! Max-pool op: argmax routing forward, scatter-add backward (arena
+//! buffered, per-example threaded when the step runs threaded).
 
 use super::super::conv::{self, PoolGeom};
 use super::super::models::{OpKind, Stage};
-use super::{Exec, LayerOp, StepCtx};
+use super::{Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::BackwardCost;
-use crate::kernels::Scratch;
+use crate::kernels::{Scratch, Variant};
 use crate::tensor::Tensor;
 
 pub struct MaxPoolOp {
@@ -32,13 +33,29 @@ impl LayerOp for MaxPoolOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         ctx: &StepCtx,
         _grads: &mut [Tensor],
         need_input: bool,
-        _ex: &mut Exec,
+        ex: &mut Exec,
     ) -> Option<Vec<f32>> {
-        need_input.then(|| conv::maxpool_backward(g, &self.argmax, &self.geom, ctx.batch))
+        let g = g.dense();
+        need_input.then(|| {
+            // grab (zeroed): the scatter only touches argmax positions
+            let mut dx = ex.sc.grab(ctx.batch * self.geom.in_numel());
+            match ex.var {
+                Variant::Threaded(n) => conv::maxpool_backward_threaded_into(
+                    g,
+                    &self.argmax,
+                    &self.geom,
+                    ctx.batch,
+                    &mut dx,
+                    n,
+                ),
+                _ => conv::maxpool_backward_into(g, &self.argmax, &self.geom, ctx.batch, &mut dx),
+            }
+            dx
+        })
     }
 
     fn flops_cost(&self, batch: usize, _p_nz: f64) -> Option<BackwardCost> {

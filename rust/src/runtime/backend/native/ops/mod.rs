@@ -19,9 +19,11 @@
 //!   `recycle` after a forward-only eval pass).
 //! * **Compression boundary**: for quantized (conv/dense) stages the
 //!   executor compresses the incoming cotangent *before* calling
-//!   `backward`, so ops only ever see the final `delta_z`-tilde; ops
-//!   CSR-encode it at their own granularity (batch rows for dense,
-//!   (example, position) rows for conv).
+//!   `backward`, so ops only ever see the final `delta_z`-tilde. On
+//!   the fused path it arrives as [`Grad::Csr`] already at the op's
+//!   [`LayerOp::qrows`] granularity (batch rows for dense,
+//!   (example, position) rows for conv); on the dense fallback the op
+//!   CSR-encodes it itself at that same granularity.
 //! * **Determinism**: anything an op threads must partition *outputs*
 //!   disjointly and keep the serial reduction order, so every
 //!   `DITHERPROP_THREADS` count is bit-identical to serial (see
@@ -36,8 +38,8 @@ pub mod residual;
 
 use super::models::{OpKind, Plan, Stage};
 use crate::costmodel::flops::BackwardCost;
-use crate::kernels::{self, Scratch, Variant};
-use crate::sparse::CsrVec;
+use crate::kernels::{self, Dispatch, Scratch, Variant};
+use crate::sparse::{CsrMat, SparseRows};
 use crate::tensor::Tensor;
 
 /// Symmetric per-tensor 8-bit fake quantization (layers.py::fq8).
@@ -81,12 +83,27 @@ impl SkipSlots {
     }
 }
 
-/// Per-step execution context: the dispatched kernel variant, the
+/// Per-step execution context: the kernel dispatch policy (with the
+/// resolved step-level variant for the dense kernels), the
 /// thread-local buffer arena, and the residual skip slots.
 pub struct Exec<'a> {
+    /// Step-level variant for the dense/layout kernels (forward
+    /// affine, im2col/col2im, pool scatter, BN reductions), which have
+    /// no measured sparsity to adapt on.
     pub var: Variant,
+    /// The sparse backward GEMMs adapt per (layer, GEMM) through this
+    /// (forced to `var`'s tier when `DITHERPROP_KERNELS` is pinned).
+    pub disp: Dispatch,
     pub sc: &'a mut Scratch,
     pub skips: SkipSlots,
+}
+
+impl<'a> Exec<'a> {
+    /// Build a step's context from the `DITHERPROP_*` env knobs.
+    pub fn new(sc: &'a mut Scratch, n_skip_slots: usize) -> Exec<'a> {
+        let disp = Dispatch::from_env();
+        Exec { var: disp.step_variant(), disp, sc, skips: SkipSlots::new(n_skip_slots) }
+    }
 }
 
 /// Step-wide inputs every op sees.
@@ -103,6 +120,28 @@ pub struct StepCtx<'a> {
     pub int8: bool,
 }
 
+/// The cotangent handed to [`LayerOp::backward`]: dense, or — for
+/// quantized GEMM stages on the fused path — already CSR-encoded at
+/// the op's own row granularity ([`LayerOp::qrows`]) by the fused
+/// quantizer, so the op skips its per-row encode entirely.
+pub enum Grad<'a> {
+    Dense(&'a [f32]),
+    Csr(&'a CsrMat),
+}
+
+impl<'a> Grad<'a> {
+    /// The dense view. Only quantized GEMM ops (conv/dense) ever
+    /// receive [`Grad::Csr`] — the executor fuses only at stages that
+    /// advertise a [`LayerOp::qrows`] granularity — so every other op
+    /// unwraps through here.
+    pub fn dense(&self) -> &'a [f32] {
+        match self {
+            Grad::Dense(g) => g,
+            Grad::Csr(_) => panic!("CSR cotangent reached an op without a fused backward"),
+        }
+    }
+}
+
 /// One self-contained layer operation.
 pub trait LayerOp {
     /// Forward through this stage: consume the input activations,
@@ -112,18 +151,29 @@ pub trait LayerOp {
 
     /// Backward through this stage. `g` is the cotangent of the stage
     /// output — for quantized stages, the executor-compressed sparse
-    /// `delta_z`. Writes this stage's parameter gradients (and, for BN,
-    /// the updated running statistics) into the positional `grads`;
-    /// returns the input cotangent, or `None` when `need_input` is
-    /// false (stage 0) and the op can skip that work.
+    /// `delta_z` (dense, or fused CSR at this op's [`qrows`]
+    /// granularity). Writes this stage's parameter gradients (and, for
+    /// BN, the updated running statistics) into the positional
+    /// `grads`; returns the input cotangent, or `None` when
+    /// `need_input` is false (stage 0) and the op can skip that work.
+    ///
+    /// [`qrows`]: LayerOp::qrows
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         ctx: &StepCtx,
         grads: &mut [Tensor],
         need_input: bool,
         ex: &mut Exec,
     ) -> Option<Vec<f32>>;
+
+    /// The `(rows, cols)` CSR granularity this op's sparse backward
+    /// GEMMs consume (`rows * cols` = output numel): batch rows for
+    /// dense layers, (example, position) rows for conv. `None` for ops
+    /// without sparse GEMMs — the executor never fuses those.
+    fn qrows(&self, _batch: usize) -> Option<(usize, usize)> {
+        None
+    }
 
     /// Eq. 12 backward arithmetic cost at incoming `delta_z` density
     /// `p_nz`; `None` for stages whose backward is free (flatten).
@@ -211,13 +261,15 @@ pub(super) fn affine(
     }
 }
 
-/// Eq. 9 pair through the configured variant: `dw += x^T . rows`
-/// (din x dout), `db += column sums of rows`. The blocked/threaded
-/// kernels accumulate the transposed gradient in an arena buffer and
-/// transpose back — bit-identical to the reference (fixed reduction
-/// order; see `kernels::gemm`).
-pub(super) fn param_gemm(
-    rows: &[CsrVec],
+/// Eq. 9 pair through the dispatched tier: `dw += x^T . rows`
+/// (din x dout), `db += column sums of rows`. The tier adapts to the
+/// measured nonzero count — each nonzero axpys one din-wide `x` row
+/// into `dWt` plus its `db` slot. The blocked/threaded kernels
+/// accumulate the transposed gradient in an arena buffer and transpose
+/// back — bit-identical to the reference (fixed reduction order; see
+/// `kernels::gemm`).
+pub(super) fn param_gemm<R: SparseRows + ?Sized>(
+    rows: &R,
     xq: &[f32],
     din: usize,
     dout: usize,
@@ -225,11 +277,11 @@ pub(super) fn param_gemm(
     db: &mut [f32],
     ex: &mut Exec,
 ) {
-    match ex.var {
+    match ex.disp.sparse_gemm(rows.nnz_total(), din + 1) {
         Variant::Reference => kernels::sparse_param_gemm_ref(rows, xq, din, dout, dw, db),
-        _ => {
+        var => {
             let mut dwt = ex.sc.grab(dout * din);
-            match ex.var {
+            match var {
                 Variant::Threaded(n) => {
                     kernels::sparse_param_gemm_threaded(rows, xq, din, dout, &mut dwt, db, n)
                 }
@@ -241,11 +293,13 @@ pub(super) fn param_gemm(
     }
 }
 
-/// Eq. 8 through the configured variant: `g_in = rows . W^T`, with the
-/// W^T transpose staged in an arena buffer. Returns one din-row per
-/// input row (arena-backed for the blocked/threaded variants).
-pub(super) fn input_gemm(
-    rows: &[CsrVec],
+/// Eq. 8 through the dispatched tier: `g_in = rows . W^T`, with the
+/// W^T transpose staged in an arena buffer. The tier adapts to the
+/// measured nonzero count — each nonzero axpys one din-wide `W^T` row.
+/// Returns one din-row per input row (arena-backed for the
+/// blocked/threaded variants).
+pub(super) fn input_gemm<R: SparseRows + ?Sized>(
+    rows: &R,
     w: &[f32],
     din: usize,
     dout: usize,
@@ -255,15 +309,15 @@ pub(super) fn input_gemm(
     // their outputs, so both buffers skip the zeroing memset
     let mut wt = ex.sc.grab_overwritten(din * dout);
     kernels::transpose_into(w, din, dout, &mut wt);
-    let gp = match ex.var {
+    let gp = match ex.disp.sparse_gemm(rows.nnz_total(), din) {
         Variant::Reference => kernels::sparse_input_gemm_ref(rows, &wt, din),
         Variant::Blocked => {
-            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            let mut gp = ex.sc.grab_overwritten(rows.n_rows() * din);
             kernels::sparse_input_gemm_blocked_into(rows, &wt, din, &mut gp);
             gp
         }
         Variant::Threaded(n) => {
-            let mut gp = ex.sc.grab_overwritten(rows.len() * din);
+            let mut gp = ex.sc.grab_overwritten(rows.n_rows() * din);
             kernels::sparse_input_gemm_threaded_into(rows, &wt, din, &mut gp, n);
             gp
         }

@@ -15,7 +15,7 @@
 //! injected per weighted layer (Eq. 7), never onto the identity path.
 
 use super::super::models::Stage;
-use super::{Exec, LayerOp, StepCtx};
+use super::{Exec, Grad, LayerOp, StepCtx};
 use crate::costmodel::flops::{residual_backward_cost, BackwardCost};
 use crate::kernels::Scratch;
 use crate::tensor::Tensor;
@@ -39,12 +39,13 @@ impl LayerOp for SkipSaveOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         _ctx: &StepCtx,
         _grads: &mut [Tensor],
         need_input: bool,
         ex: &mut Exec,
     ) -> Option<Vec<f32>> {
+        let g = g.dense();
         let skip = ex.skips.grad[self.slot]
             .take()
             .expect("skip-save backward before its skip-add stashed a cotangent");
@@ -95,7 +96,7 @@ impl LayerOp for SkipAddOp {
 
     fn backward(
         &mut self,
-        g: &[f32],
+        g: Grad<'_>,
         _ctx: &StepCtx,
         _grads: &mut [Tensor],
         _need_input: bool,
@@ -104,6 +105,7 @@ impl LayerOp for SkipAddOp {
         // the junction delta flows unchanged into BOTH branches: stash
         // one copy for the skip, hand one to the body. (need_input is
         // irrelevant: a skip-add is never stage 0 — its skip-save is.)
+        let g = g.dense();
         let skip = ex.sc.dup(g);
         ex.skips.grad[self.slot] = Some(skip);
         Some(ex.sc.dup(g))

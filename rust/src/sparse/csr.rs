@@ -1,8 +1,10 @@
-//! CSR-style sparse vector: (u32 index, f32 value) pairs + length.
+//! CSR-style sparse encodings: [`CsrVec`] (one flat vector — the wire
+//! codec) and [`CsrMat`] (row-major matrix with shared index/value
+//! buffers — the fused-quantizer output the backward GEMMs consume),
+//! unified for the kernels by the [`SparseRows`] row-access trait.
 //!
-//! The flat-vector analogue of CSR (gradients are encoded per-tensor,
-//! flattened); decode is exact — the codec must round-trip bit-perfectly
-//! because the server averages decoded gradients.
+//! Decode is exact — the codec must round-trip bit-perfectly because
+//! the server averages decoded gradients.
 
 /// Sparse vector encoding.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,6 +67,119 @@ impl CsrVec {
 /// Wire size for (n, nnz) without building the encoding.
 pub fn encoded_bytes(_n: usize, nnz: usize) -> usize {
     4 + 8 * nnz
+}
+
+/// Row-major CSR matrix: `rows x cols` with one shared index buffer,
+/// one shared value buffer, and `rows + 1` prefix offsets. This is what
+/// the fused NSD quantizer emits (`quant::nsd_csr_rows`) — no per-row
+/// `Vec`s, so the whole encoding lives in three arena-recyclable
+/// buffers and a steady-state grad step allocates nothing for it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMat {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `indices` / `values` (ascending).
+    pub row_ptr: Vec<u32>,
+    /// Column indices, sorted ascending within each row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl CsrMat {
+    /// Encode a dense `rows x cols` tensor (exact zeros dropped).
+    pub fn encode_rows(dense: &[f32], rows: usize, cols: usize) -> CsrMat {
+        assert_eq!(dense.len(), rows * cols);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for r in 0..rows {
+            for (c, &v) in dense[r * cols..(r + 1) * cols].iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        CsrMat { rows, cols, row_ptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (sorted column indices, values) of row `r`.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Decode into an existing dense buffer (zeroed first).
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows * self.cols);
+        out.fill(0.0);
+        for r in 0..self.rows {
+            let (idx, val) = self.row(r);
+            let dst = &mut out[r * self.cols..(r + 1) * self.cols];
+            for (&c, &v) in idx.iter().zip(val.iter()) {
+                dst[c as usize] = v;
+            }
+        }
+    }
+
+    /// Decode into a fresh dense vector.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        self.decode_into(&mut out);
+        out
+    }
+}
+
+/// Uniform row access over sparse encodings, so the backward GEMM
+/// kernels run unchanged on `&[CsrVec]` (per-row vectors, the wire
+/// path and the tests' encoding) and [`CsrMat`] (the fused-quantizer
+/// output). Rows must present sorted indices — the column-partitioned
+/// param GEMM binary-searches them.
+pub trait SparseRows: Sync {
+    fn n_rows(&self) -> usize;
+    /// (sorted indices, values) of row `r`.
+    fn row(&self, r: usize) -> (&[u32], &[f32]);
+    /// Total nonzeros (the threaded drivers' fan-out estimate).
+    fn nnz_total(&self) -> usize {
+        (0..self.n_rows()).map(|r| self.row(r).0.len()).sum()
+    }
+}
+
+impl SparseRows for [CsrVec] {
+    fn n_rows(&self) -> usize {
+        self.len()
+    }
+    fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        (&self[r].indices, &self[r].values)
+    }
+}
+
+impl SparseRows for Vec<CsrVec> {
+    fn n_rows(&self) -> usize {
+        self.len()
+    }
+    fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        (&self[r].indices, &self[r].values)
+    }
+}
+
+impl SparseRows for CsrMat {
+    fn n_rows(&self) -> usize {
+        self.rows
+    }
+    fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        CsrMat::row(self, r)
+    }
+    fn nnz_total(&self) -> usize {
+        self.nnz()
+    }
 }
 
 #[cfg(test)]

@@ -16,7 +16,7 @@ pub mod csr;
 pub mod packed;
 
 pub use bitmap::BitmapVec;
-pub use csr::CsrVec;
+pub use csr::{CsrMat, CsrVec, SparseRows};
 pub use packed::PackedGrid;
 
 /// Encoded sizes in bytes for a dense f32 tensor of `n` elements.

@@ -18,7 +18,8 @@
 //!   (din, dout, batch, sparsity, nthreads) grid, to the bit;
 //! * regression-test that full lenet5 / resnet8 / vgg8bn dithered
 //!   training runs are bit-identical across `DITHERPROP_THREADS`
-//!   settings.
+//!   settings, the pooled/scoped spawn modes, and the fused/two-pass
+//!   quantize emission paths.
 
 use ditherprop::data;
 use ditherprop::kernels;
@@ -509,9 +510,12 @@ fn dithered_training_is_bit_identical_across_thread_counts() {
     // steps) of lenet5 (conv/pool/dense), resnet8 (BN + residual
     // junctions) and vgg8bn (deep with-BN stack) with
     // DITHERPROP_THREADS=1 vs =4 produce identical parameters — and
-    // identical BN running statistics — to the bit.
+    // identical BN running statistics — to the bit.  The threaded runs
+    // fan out over the persistent worker pool; the scoped-spawn
+    // fallback and the two-pass (fuse-off) emission must land on the
+    // same bits, so each model also reruns under those knobs.
     //
-    // Mutating DITHERPROP_THREADS while sibling tests run is safe here:
+    // Mutating DITHERPROP_* while sibling tests run is safe here:
     // std's env accessors synchronize against each other, this is the
     // only env-mutating test in this binary, and every kernel variant
     // is bit-identical — a concurrent test observing a flipped knob
@@ -520,9 +524,12 @@ fn dithered_training_is_bit_identical_across_thread_counts() {
     // under the `DITHERPROP_KERNELS=ref` oracle test leg (which would
     // otherwise make both runs execute the identical scalar kernel);
     // EnvGuard restores the launch-time knobs when the test ends.
+    use ditherprop::runtime::backend::native::methods::ENV_FUSE;
     let _kernels = kernels::EnvGuard::set(kernels::ENV_KERNELS, "auto");
-    let run = |model: &str, batch: usize, threads: &str| -> Vec<Tensor> {
+    let run = |model: &str, batch: usize, threads: &str, spawn: &str, fuse: &str| -> Vec<Tensor> {
         let _t = kernels::EnvGuard::set(kernels::ENV_THREADS, threads);
+        let _s = kernels::EnvGuard::set(kernels::ENV_SPAWN, spawn);
+        let _f = kernels::EnvGuard::set(ENV_FUSE, fuse);
         let engine = Engine::native().unwrap();
         let sess = engine.training_session(model, "dithered", batch).unwrap();
         let mut params = engine.init_params(model, 7).unwrap();
@@ -538,13 +545,27 @@ fn dithered_training_is_bit_identical_across_thread_counts() {
         params
     };
     for (model, batch) in [("lenet5", 32), ("resnet8", 16), ("vgg8bn", 8)] {
-        let p1 = run(model, batch, "1");
-        let p4 = run(model, batch, "4");
+        let p1 = run(model, batch, "1", "pooled", "on");
+        let p4 = run(model, batch, "4", "pooled", "on");
+        let p4_scoped = run(model, batch, "4", "scoped", "on");
+        let p4_two_pass = run(model, batch, "4", "pooled", "off");
         assert_eq!(p1.len(), p4.len());
         for (pi, (a, b)) in p1.iter().zip(p4.iter()).enumerate() {
             assert!(
                 bits_eq(a.data(), b.data()),
                 "{model}: param {pi} diverged between DITHERPROP_THREADS=1 and =4"
+            );
+        }
+        for (pi, (a, b)) in p4.iter().zip(p4_scoped.iter()).enumerate() {
+            assert!(
+                bits_eq(a.data(), b.data()),
+                "{model}: param {pi} diverged between pooled and scoped spawn"
+            );
+        }
+        for (pi, (a, b)) in p4.iter().zip(p4_two_pass.iter()).enumerate() {
+            assert!(
+                bits_eq(a.data(), b.data()),
+                "{model}: param {pi} diverged between fused and two-pass emission"
             );
         }
     }

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Re-measure the bench-gate baseline on the current host: run the
+# hot-path bench at a fixed iteration count, stamp the report as a
+# *measured* baseline (`meta.baseline_kind = "measured"`, vs the seed's
+# hand-set "floor" rows), and rewrite BENCH_kernels.json. Review the
+# diff before committing — a baseline measured on a noisy host makes
+# the gate either toothless (too slow) or flaky (too fast).
+#
+# usage: scripts/bench_baseline.sh [iters] [out.json]
+set -euo pipefail
+
+iters="${1:-30}"
+out="${2:-$(dirname "$0")/../BENCH_kernels.json}"
+tmp="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
+trap 'rm -f "$tmp"' EXIT
+
+(cd "$(dirname "$0")/../rust" \
+  && cargo bench --bench runtime_hotpath -- --iters "$iters" --json "$tmp")
+
+jq -e '.schema == "ditherprop-bench-v1"' "$tmp" > /dev/null \
+  || { echo "bench-baseline: bench did not emit a ditherprop-bench-v1 report" >&2; exit 2; }
+
+note="measured bench-gate baseline (scripts/bench_baseline.sh, --iters $iters, quiet host);"
+note="$note scripts/bench_gate.sh fails on any kernel row missing from a fresh run"
+note="$note or more than 30% below these GFLOP/s."
+jq --arg note "$note" \
+  '.meta.baseline_kind = "measured" | .meta.note = $note' "$tmp" > "$out"
+
+n=$(jq '[.rows[] | select(.suite == "kernel")] | length' "$out")
+echo "bench-baseline: wrote $n kernel rows (baseline_kind=measured) to $out"

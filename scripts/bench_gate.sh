@@ -25,12 +25,17 @@ jq -e '.schema == "ditherprop-bench-v1"' "$baseline" > /dev/null \
 n_base=$(jq '[.rows[] | select(.suite == "kernel")] | length' "$baseline")
 if [ "$n_base" -eq 0 ]; then
   echo "bench-gate: baseline $baseline has no kernel rows (seed placeholder) — nothing to gate."
-  echo "bench-gate: populate it from rust/ with:"
+  echo "bench-gate: populate it with scripts/bench_baseline.sh (measured rows), or from rust/:"
   echo "  cargo bench --bench runtime_hotpath -- --json ../BENCH_kernels.json"
   exit 0
 fi
 
-fails=$(jq -r --slurpfile f "$fresh" --argjson drop "$max_drop" '
+# "floor" = hand-set conservative floors, "measured" = a real
+# bench_baseline.sh run; a failure message means something different in
+# each case, so say which kind tripped it.
+kind=$(jq -r '.meta.baseline_kind // "unknown"' "$baseline")
+
+fails=$(jq -r --slurpfile f "$fresh" --argjson drop "$max_drop" --arg kind "$kind" '
   [ .rows[]
     | select(.suite == "kernel")
     | . as $b
@@ -39,19 +44,19 @@ fails=$(jq -r --slurpfile f "$fresh" --argjson drop "$max_drop" '
                  and .op == $b.op and .shape == $b.shape
                  and .p_nz == $b.p_nz and .variant == $b.variant) ][0] as $n
     | if $n == null then
-        "MISSING  \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): no matching row in the fresh run"
+        "MISSING  \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): no matching row in the fresh run (baseline_kind=\($kind))"
       elif $n.gflops < $b.gflops * (1 - $drop / 100) then
-        "REGRESSED \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): \($n.gflops) GF/s vs baseline \($b.gflops) GF/s"
+        "REGRESSED \($b.op) \($b.shape) p_nz=\($b.p_nz) \($b.variant): \($n.gflops) GF/s vs \($kind) baseline \($b.gflops) GF/s"
       else
         empty
       end
   ] | .[]' "$baseline")
 
 if [ -n "$fails" ]; then
-  echo "bench-gate: kernel GFLOP/s regression(s) beyond ${max_drop}%:"
+  echo "bench-gate: kernel GFLOP/s regression(s) beyond ${max_drop}% (baseline_kind=${kind}):"
   echo "$fails"
   exit 1
 fi
 
 n_checked=$(jq '[.rows[] | select(.suite == "kernel")] | length' "$fresh")
-echo "bench-gate: ${n_base} baseline kernel rows checked against ${n_checked} fresh rows — all within ${max_drop}%."
+echo "bench-gate: ${n_base} ${kind}-baseline kernel rows checked against ${n_checked} fresh rows — all within ${max_drop}%."

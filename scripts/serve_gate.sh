@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Serving-latency gate: compare a fresh `ditherprop bench-serve --json`
+# run against the committed BENCH_serving.json baseline and fail when a
+# sweep cell blows past its bounds. Plain bash + jq, no new
+# dependencies.
+#
+# Rows join on (model, quant, batch, clients). The baseline's p50_ms /
+# p99_ms are latency *ceilings* and req_per_s a throughput *floor*,
+# scaled by the tolerance factor: a fresh cell fails if its p50 or p99
+# exceeds ceiling * tol, or its req/s drops under floor / tol. The
+# committed baseline is `baseline_kind: "bound"` (generous hand-set
+# bounds, so the gate catches catastrophic regressions without flaking
+# on runner speed); a re-measured baseline tightens it.
+#
+# usage: scripts/serve_gate.sh <fresh.json> [baseline.json] [tolerance]
+set -euo pipefail
+
+fresh="${1:?usage: serve_gate.sh <fresh.json> [baseline.json] [tolerance]}"
+baseline="${2:-$(dirname "$0")/../BENCH_serving.json}"
+tol="${3:-1.0}"
+
+jq -e '.schema == "ditherprop-bench-v1" and .bench == "serve_latency"' "$fresh" > /dev/null \
+  || { echo "serve-gate: $fresh is not a serve_latency bench report" >&2; exit 2; }
+jq -e '.schema == "ditherprop-bench-v1" and .bench == "serve_latency"' "$baseline" > /dev/null \
+  || { echo "serve-gate: $baseline is not a serve_latency bench report" >&2; exit 2; }
+
+n_base=$(jq '.rows | length' "$baseline")
+if [ "$n_base" -eq 0 ]; then
+  echo "serve-gate: baseline $baseline has no rows — nothing to gate."
+  exit 0
+fi
+
+kind=$(jq -r '.meta.baseline_kind // "unknown"' "$baseline")
+
+fails=$(jq -r --slurpfile f "$fresh" --argjson tol "$tol" --arg kind "$kind" '
+  [ .rows[]
+    | . as $b
+    | [ $f[0].rows[]
+        | select(.model == $b.model and .quant == $b.quant
+                 and .batch == $b.batch and .clients == $b.clients) ][0] as $n
+    | if $n == null then
+        "MISSING  \($b.model)/\($b.quant) b\($b.batch) c\($b.clients): no matching row in the fresh run (baseline_kind=\($kind))"
+      else
+        [ (if $n.p50_ms > $b.p50_ms * $tol then
+             "p50 \($n.p50_ms)ms > \($kind) ceiling \($b.p50_ms)ms x \($tol)" else empty end),
+          (if $n.p99_ms > $b.p99_ms * $tol then
+             "p99 \($n.p99_ms)ms > \($kind) ceiling \($b.p99_ms)ms x \($tol)" else empty end),
+          (if $n.req_per_s < $b.req_per_s / $tol then
+             "req/s \($n.req_per_s) < \($kind) floor \($b.req_per_s) / \($tol)" else empty end)
+        ]
+        | if length > 0 then
+            "REGRESSED \($b.model)/\($b.quant) b\($b.batch) c\($b.clients): " + join("; ")
+          else empty end
+      end
+  ] | .[]' "$baseline")
+
+if [ -n "$fails" ]; then
+  echo "serve-gate: serving latency regression(s) vs ${kind} baseline (tolerance ${tol}):"
+  echo "$fails"
+  exit 1
+fi
+
+echo "serve-gate: ${n_base} ${kind}-baseline cells checked — all within p50/p99 ceilings and req/s floor (tolerance ${tol})."
