@@ -197,6 +197,25 @@ pub fn run_parts(n_parts: usize, f: impl Fn(usize) + Sync) {
     }
 }
 
+/// Spawn a named long-lived **service thread** (serve execution lanes,
+/// background listeners) and return its join handle.
+///
+/// This exists so every `thread::Builder::spawn` in the crate lives in
+/// this module: the ditherlint determinism rule treats `pool.rs` as the
+/// single sanctioned spawn point, and routing service threads through
+/// it keeps that invariant auditable. Service threads are *not* pool
+/// workers — they own their own receive loop and lifetime (the caller
+/// joins them), they just share the sanctioned doorway.
+pub fn spawn_service(
+    name: &str,
+    f: impl FnOnce() + Send + 'static,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("ditherprop-{name}"))
+        .spawn(f)
+        .expect("spawning service thread")
+}
+
 /// Hands out disjoint `&mut` windows of one slice to concurrent parts —
 /// the pool-era replacement for the scoped drivers' sequential
 /// `split_at_mut` walk. Construction fixes the partition (part `i`
@@ -320,6 +339,15 @@ mod tests {
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         drop(g);
+    }
+
+    #[test]
+    fn spawn_service_runs_and_joins() {
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&flag);
+        let h = spawn_service("test-service", move || f2.store(true, Ordering::Relaxed));
+        h.join().expect("service thread exits cleanly");
+        assert!(flag.load(Ordering::Relaxed));
     }
 
     #[test]

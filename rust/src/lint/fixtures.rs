@@ -80,6 +80,43 @@ fn hotpath_alloc_allows_int8_prepare_time_allocation() {
 }
 
 #[test]
+fn hotpath_alloc_fires_in_the_serve_lanes() {
+    // A lane's steady-state loop must reuse lane-lifetime scratch, not
+    // allocate per drained request.
+    let src = "fn lane(reqs: &[Vec<f32>]) -> f32 {\n\
+               \x20   let mut s = 0.0;\n\
+               \x20   for r in reqs {\n\
+               \x20       let copy = r.clone();\n\
+               \x20       s += copy.len() as f32;\n\
+               \x20   }\n\
+               \x20   s\n\
+               }\n";
+    let f = lint_one("serve/lanes.rs", src);
+    assert!(
+        f.iter().any(|x| x.rule == "hotpath-alloc"),
+        "{}",
+        report::text(&f)
+    );
+}
+
+#[test]
+fn hotpath_alloc_allows_lane_lifetime_scratch() {
+    // The pattern lanes actually use: hoisted scratch, per-iteration
+    // extend into it (extend_from_slice reuses capacity).
+    let src = "fn lane(reqs: &[f32], xs: &mut Vec<f32>) {\n\
+               \x20   for r in reqs.chunks(4) {\n\
+               \x20       xs.extend_from_slice(r);\n\
+               \x20   }\n\
+               }\n";
+    let f = lint_one("serve/lanes.rs", src);
+    assert!(
+        f.iter().all(|x| x.rule != "hotpath-alloc"),
+        "{}",
+        report::text(&f)
+    );
+}
+
+#[test]
 fn hotpath_alloc_ignores_other_dirs_and_tests() {
     let src = "fn elsewhere() { for _ in 0..3 { let v = vec![1]; drop(v); } }\n";
     assert!(lint_one("train/fixture.rs", src).is_empty());
@@ -134,6 +171,38 @@ fn no_panic_transport_must_not_fire_in_serve() {
                }\n";
     let f = lint_one("serve/fixture.rs", src);
     assert!(f.is_empty(), "{}", report::text(&f));
+}
+
+#[test]
+fn no_panic_transport_fires_in_lane_and_stream_code() {
+    // The I/O thread's frame reassembly and the execution lanes handle
+    // the same peer-controlled bytes as net/.
+    let conn = "fn header(buf: &[u8]) -> u8 {\n\
+                \x20   buf[0]\n\
+                }\n";
+    let f = lint_one("serve/conn.rs", conn);
+    assert_eq!(rules_of(&f), vec!["no-panic-transport"], "{}", report::text(&f));
+    let lanes = "fn first(chunk: &[u32]) -> u32 {\n\
+                 \x20   chunk.first().copied().expect(\"empty chunk\")\n\
+                 }\n";
+    let f = lint_one("serve/lanes.rs", lanes);
+    assert!(
+        f.iter().any(|x| x.rule == "no-panic-transport"),
+        "{}",
+        report::text(&f)
+    );
+}
+
+#[test]
+fn no_panic_transport_must_not_fire_in_lane_and_stream_code() {
+    let conn = "fn header(buf: &[u8]) -> anyhow::Result<u8> {\n\
+                \x20   buf.first().copied().ok_or_else(|| anyhow::anyhow!(\"short header\"))\n\
+                }\n";
+    assert!(lint_one("serve/conn.rs", conn).is_empty());
+    let lanes = "fn first(chunk: &[u32]) -> Option<u32> {\n\
+                 \x20   chunk.first().copied()\n\
+                 }\n";
+    assert!(lint_one("serve/lanes.rs", lanes).is_empty());
 }
 
 #[test]

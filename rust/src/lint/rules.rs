@@ -44,13 +44,18 @@ const NON_INDEX_KEYWORDS: &[&str] = &[
     "where", "while", "yield",
 ];
 
-/// `hotpath-alloc`: no per-iteration allocation inside `kernels/` or
-/// int8-serving-forward (`runtime/backend/native/int8fwd.rs`) loop
-/// bodies — the scratch-arena discipline.  Flags `Vec::new` /
+/// `hotpath-alloc`: no per-iteration allocation inside `kernels/`,
+/// int8-serving-forward (`runtime/backend/native/int8fwd.rs`), or
+/// serve execution-lane (`serve/lanes.rs`) loop bodies — the
+/// scratch-arena discipline; a lane's steady-state iteration must
+/// reuse its lane-lifetime buffers.  Flags `Vec::new` /
 /// `Vec::with_capacity` / `vec![..]` / `.to_vec()` / `.clone()` at
 /// loop depth > 0 in non-test code.
 fn hotpath_alloc(f: &FileCtx, out: &mut Vec<Finding>) {
-    if !(f.rel.starts_with("kernels/") || f.rel.starts_with("runtime/backend/native/int8fwd")) {
+    if !(f.rel.starts_with("kernels/")
+        || f.rel.starts_with("runtime/backend/native/int8fwd")
+        || f.rel.starts_with("serve/lanes"))
+    {
         return;
     }
     for i in 0..f.tokens.len() {

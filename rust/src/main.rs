@@ -53,19 +53,30 @@ COMMANDS
                   rounds until shutdown
                   --connect HOST:PORT [--artifacts DIR]
   serve         int8 inference service: BN-folded quantized forward,
-                  micro-batched over the framed TCP transport
+                  micro-batched over the framed TCP transport, executed
+                  on per-model lanes with admission control
                   --bind HOST:PORT (default 127.0.0.1:7600)
                   --quant {int8|fp32} --seed SEED --steps N
                   --max-batch B --max-delay-ms MS --cache K
+                  --lanes L (default DITHERPROP_SERVE_LANES or 2)
+                  --max-queue Q (per-lane admission cap; overflow
+                  answers Busy with a retry hint)
+                  --fp32-models A,B (serve these fp32 regardless of
+                  --quant: mixed-precision multi-model serving)
                   --max-requests N (serve N requests then exit)
   infer         inference client: send deterministic batches, print
                   predictions + round-trip latency
                   --connect HOST:PORT --model M --batch B --requests N
                   --check (verify replies bitwise vs a local forward;
                   needs the server's --quant/--seed/--steps)
-  bench-serve   serving latency sweep over batch size x client count;
-                  p50/p99 + req/s table, JSON to --json PATH
+                  --probe-busy (pipeline all requests at once to drive
+                  the server into Busy, retry until served)
+  bench-serve   serving latency sweep over batch size x client count,
+                  plus a mixed-model head-of-line pair at 1 vs >=2
+                  lanes; p50/p99 + req/s table, JSON to --json PATH
                   --model M --batches 1,8,32 --clients 1,4 --requests N
+                  --lanes L --max-queue Q --mixed-model M2 (fp32
+                  background load; "none" skips the mixed cells)
   table1        Table 1: acc% + sparsity% across models x methods
   fig1          Fig. 1: delta_z histograms before/after NSD
   fig2          Fig. 2: P(zero) vs scale factor s
@@ -285,10 +296,16 @@ fn cmd_dist_worker(args: &Args) -> Result<()> {
 
 #[cfg(feature = "native")]
 fn cmd_serve(args: &Args) -> Result<()> {
-    use ditherprop::serve::{run_serve, QuantMode, ServeCfg};
+    use ditherprop::serve::{default_lanes, run_serve, QuantMode, ServeCfg};
     let bind = args.str_or("bind", "127.0.0.1:7600");
     let listener = std::net::TcpListener::bind(&bind)
         .map_err(|e| anyhow::anyhow!("binding {bind}: {e}"))?;
+    let fp32_models: Vec<String> = args
+        .list_or("fp32-models", &[])
+        .iter()
+        .map(|s| s.to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
     let cfg = ServeCfg {
         quant: QuantMode::parse(&args.str_or("quant", "int8"))?,
         seed: args.u64_or("seed", 42),
@@ -297,16 +314,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 2)),
         cache_cap: args.usize_or("cache", 4),
         max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
+        lanes: args.usize_or("lanes", default_lanes()),
+        max_queue: args.usize_or("max-queue", 64),
+        fp32_models,
         verbose: args.has("verbose"),
     };
     println!(
-        "[serve] listening on {} | quant {} | seed {} steps {} | flush at {} examples or {:?}",
+        "[serve] listening on {} | quant {} | seed {} steps {} | flush at {} examples or {:?} \
+         | {} lanes, queue cap {}",
         listener.local_addr()?,
         cfg.quant.name(),
         cfg.seed,
         cfg.steps,
         cfg.max_batch,
         cfg.max_delay,
+        cfg.lanes,
+        cfg.max_queue,
     );
     let stats = run_serve(&listener, &cfg)?;
     println!("[serve] {}", stats.summary());
@@ -315,7 +338,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 #[cfg(feature = "native")]
 fn cmd_infer(args: &Args) -> Result<()> {
-    use ditherprop::serve::{run_infer, InferCfg, QuantMode};
+    use ditherprop::serve::{run_busy_probe, run_infer, InferCfg, QuantMode};
     use ditherprop::util::math::percentile;
     let cfg = InferCfg {
         addr: args.str_or("connect", "127.0.0.1:7600"),
@@ -329,15 +352,35 @@ fn cmd_infer(args: &Args) -> Result<()> {
         check: args.has("check"),
         connect_timeout: std::time::Duration::from_secs(args.u64_or("connect-timeout", 10)),
     };
+    if args.has("probe-busy") {
+        let probe = run_busy_probe(&cfg)?;
+        println!(
+            "[infer] {}: busy replies: {} | {} served after retries{}",
+            cfg.model,
+            probe.busy,
+            probe.served,
+            if cfg.check {
+                format!(" | {} replies verified bit-identical", probe.checked)
+            } else {
+                String::new()
+            },
+        );
+        return Ok(());
+    }
     let summary = run_infer(&cfg)?;
     println!(
-        "[infer] {}: {} requests ({} examples) | rtt p50 {:.3} ms p99 {:.3} ms | last preds {:?}{}",
+        "[infer] {}: {} requests ({} examples) | rtt p50 {:.3} ms p99 {:.3} ms | last preds {:?}{}{}",
         cfg.model,
         summary.requests,
         summary.examples,
         percentile(&summary.latencies_ms, 50.0),
         percentile(&summary.latencies_ms, 99.0),
         summary.last_preds,
+        if summary.busy > 0 {
+            format!(" | {} busy retries absorbed", summary.busy)
+        } else {
+            String::new()
+        },
         if cfg.check {
             format!(" | {} replies verified bit-identical", summary.checked)
         } else {
@@ -349,7 +392,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 #[cfg(feature = "native")]
 fn cmd_bench_serve(args: &Args) -> Result<()> {
-    use ditherprop::serve::{run_bench, BenchCfg, QuantMode};
+    use ditherprop::serve::{default_lanes, run_bench, BenchCfg, QuantMode};
     let parse_list = |key: &str, defaults: &[&str]| -> Result<Vec<usize>> {
         args.list_or(key, defaults)
             .iter()
@@ -366,6 +409,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         steps: args.usize_or("steps", 0),
         max_batch: args.usize_or("max-batch", 64),
         max_delay: std::time::Duration::from_millis(args.u64_or("max-delay-ms", 2)),
+        lanes: args.usize_or("lanes", default_lanes()),
+        max_queue: args.usize_or("max-queue", 64),
+        mixed_model: args.str_or("mixed-model", "vgg8bn"),
         json_path: args.str_or("json", "none"),
     };
     println!("=== serving latency sweep ({} | {}) ===", cfg.model, cfg.quant.name());

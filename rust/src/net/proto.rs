@@ -57,8 +57,17 @@ use anyhow::{bail, ensure, Result};
 /// logits.  Serving speaks the same framed transport as training, so
 /// the corrupt-wire robustness suite covers it for free.
 ///
+/// v5: serving admission control.  `Busy` is the typed rejection the
+/// server sends when the execution lane for a request's model is at
+/// its queue-depth cap: the request was *not* queued, the connection
+/// stays open, and `retry_after_ms` is the server's estimate of when a
+/// retry will be admitted.  A v4 client treats the unknown tag as a
+/// decode error and drops the connection, which is the correct
+/// fail-closed behavior for an overloaded server it cannot back off
+/// from.
+///
 /// [`WIRE_VERSION`]: super::frame::WIRE_VERSION
-pub const PROTO_VERSION: u16 = 4;
+pub const PROTO_VERSION: u16 = 5;
 
 /// Frame tags, one per message variant.  Never reuse a retired tag.
 pub mod tag {
@@ -73,6 +82,7 @@ pub mod tag {
     pub const PUSH_GRADS: u8 = 9;
     pub const INFER_REQUEST: u8 = 10;
     pub const INFER_REPLY: u8 = 11;
+    pub const BUSY: u8 = 12;
 }
 
 /// Async-service job description carried in the [`Welcome`]: present
@@ -162,6 +172,13 @@ pub enum Msg {
     /// example `i`, `logits` the raw pre-softmax scores
     /// (`batch * classes` f32s) for clients that want margins.
     InferReply { id: u64, classes: u32, preds: Vec<u32>, logits: Vec<f32> },
+    /// Server -> client (serving): admission-control rejection.  The
+    /// request `id` was *not* queued — the execution lane serving its
+    /// model is at the queue-depth cap.  Not a fault: the connection
+    /// stays open and the client should retry after roughly
+    /// `retry_after_ms` milliseconds (the server's estimate from the
+    /// lane's current depth and recent execution times).
+    Busy { id: u64, retry_after_ms: u32 },
 }
 
 impl Msg {
@@ -178,6 +195,7 @@ impl Msg {
             Msg::PushGrads { .. } => tag::PUSH_GRADS,
             Msg::InferRequest { .. } => tag::INFER_REQUEST,
             Msg::InferReply { .. } => tag::INFER_REPLY,
+            Msg::Busy { .. } => tag::BUSY,
         }
     }
 
@@ -273,6 +291,10 @@ impl Msg {
                 w.u32(*classes);
                 w.u32s(preds);
                 w.f32s(logits);
+            }
+            Msg::Busy { id, retry_after_ms } => {
+                w.u64(*id);
+                w.u32(*retry_after_ms);
             }
         }
         w.into_vec()
@@ -395,6 +417,17 @@ impl Msg {
                     preds.len()
                 );
                 Msg::InferReply { id, classes, preds, logits }
+            }
+            tag::BUSY => {
+                let id = r.u64()?;
+                let retry_after_ms = r.u32()?;
+                // An hour-plus backoff hint is a corrupt frame, not a
+                // plausible overload estimate.
+                ensure!(
+                    retry_after_ms <= 3_600_000,
+                    "implausible retry hint {retry_after_ms}ms in busy reply"
+                );
+                Msg::Busy { id, retry_after_ms }
             }
             other => bail!("unknown message tag {other} (peer speaks a newer protocol?)"),
         };
@@ -577,6 +610,7 @@ mod tests {
                 preds: vec![1, 0],
                 logits: vec![0.1, 0.9, 0.7, 0.3],
             },
+            Msg::Busy { id: 0xFEED, retry_after_ms: 7 },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg, "roundtrip failed for tag {}", msg.tag());
@@ -685,5 +719,10 @@ mod tests {
         assert!(read_encoded(&mut Rd::new(&buf)).is_err());
         // unknown message tag
         assert!(Msg::decode(200, &[]).is_err());
+        // busy reply with an implausible retry hint
+        let mut w = Wr::new();
+        w.u64(1);
+        w.u32(3_600_001);
+        assert!(Msg::decode(tag::BUSY, &w.into_vec()).is_err());
     }
 }

@@ -73,6 +73,15 @@ impl Batcher {
         }
     }
 
+    /// The instant at which the deadline trigger will fire: the oldest
+    /// queued request's arrival plus `max_delay`, or `None` when the
+    /// queue is empty. Execution lanes park on their request channel
+    /// with exactly this timeout, so a lane sleeps precisely until its
+    /// next flush is due instead of polling.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|oldest| oldest.arrived + self.max_delay)
+    }
+
     /// Drain the whole queue in FIFO order if a trigger fired; empty
     /// vec otherwise. Draining everything (not just `max_batch`
     /// examples) keeps reply order deterministic and bounds the
@@ -141,6 +150,19 @@ mod tests {
     fn empty_queue_is_never_ready() {
         let b = Batcher::new(1, Duration::from_millis(0));
         assert!(!b.ready(Instant::now()));
+        assert!(b.deadline().is_none());
+    }
+
+    #[test]
+    fn deadline_tracks_the_oldest_request() {
+        let delay = Duration::from_millis(50);
+        let mut b = Batcher::new(1024, delay);
+        let t0 = Instant::now();
+        b.push(req(0, 1, 1, t0));
+        assert_eq!(b.deadline(), Some(t0 + delay));
+        // A fresh arrival must not push the deadline back.
+        b.push(req(1, 2, 1, t0 + delay / 2));
+        assert_eq!(b.deadline(), Some(t0 + delay));
     }
 
     #[test]

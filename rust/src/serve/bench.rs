@@ -6,9 +6,18 @@
 //! thread, and aggregates their latency samples into p50/p99 and
 //! throughput. Results render as a table and append to the JSON bench
 //! report (`BENCH_serving.json`).
+//!
+//! Since the lane executor (PR 10) the sweep also runs **mixed-model
+//! cells**: the primary model's clients race a background client
+//! hammering a slow fp32 model (default vgg8bn) on the same server, at
+//! 1 lane and again at >=2 lanes. The pair of rows is the head-of-line
+//! blocking measurement: with one lane the slow model's forwards sit
+//! in front of the fast model's requests; with per-model lanes they
+//! run on separate threads and the fast model's p99 drops back toward
+//! its solo value.
 
 use super::client::{run_infer, InferCfg};
-use super::server::{run_serve, ServeCfg};
+use super::server::{default_lanes, run_serve, ServeCfg};
 use super::QuantMode;
 use crate::bench_util::{num, text, JsonReport};
 use crate::metrics::Table;
@@ -16,6 +25,12 @@ use crate::util::math::percentile;
 use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
 use std::time::Duration;
+
+/// Background-load shape of a mixed cell: one client, batch-8
+/// requests, enough of them to overlap the primary clients end to end.
+const MIXED_BG_CLIENTS: usize = 1;
+const MIXED_BG_BATCH: usize = 8;
+const MIXED_BG_REQUESTS: usize = 12;
 
 #[derive(Debug, Clone)]
 pub struct BenchCfg {
@@ -33,6 +48,14 @@ pub struct BenchCfg {
     /// Server-side micro-batch flush threshold (examples).
     pub max_batch: usize,
     pub max_delay: Duration,
+    /// Execution lanes for the single-model sweep.
+    pub lanes: usize,
+    /// Admission cap handed to the server (benches stay under it; the
+    /// overload path has its own e2e test).
+    pub max_queue: usize,
+    /// Background model for the mixed-model cells, served BN-folded
+    /// fp32 on the same server ("none" skips the mixed sweep).
+    pub mixed_model: String,
     /// JSON output path ("none" to skip).
     pub json_path: String,
 }
@@ -49,6 +72,9 @@ impl Default for BenchCfg {
             steps: 0,
             max_batch: 64,
             max_delay: Duration::from_millis(2),
+            lanes: default_lanes(),
+            max_queue: 64,
+            mixed_model: "vgg8bn".into(),
             json_path: "none".into(),
         }
     }
@@ -58,6 +84,10 @@ impl Default for BenchCfg {
 pub struct BenchRow {
     pub batch: usize,
     pub clients: usize,
+    /// Execution lanes the cell's server ran.
+    pub lanes: usize,
+    /// Background model of a mixed cell ("none" for single-model).
+    pub mixed: String,
     pub requests: u64,
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -66,11 +96,20 @@ pub struct BenchRow {
 
 /// One sweep cell: serve on a loopback ephemeral port, hammer it with
 /// `clients` concurrent checking-disabled clients, pool the latencies.
-fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
+/// With `mixed` set, a background client drives that model (served
+/// fp32) on the same server; only the primary clients' latencies land
+/// in the row — the background load exists to contend, not to be
+/// measured.
+fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize, lanes: usize) -> Result<BenchRow> {
     let warmup = 1usize;
+    let mixed = (cfg.mixed_model != "none").then_some(cfg.mixed_model.as_str());
     let listener = TcpListener::bind("127.0.0.1:0").context("binding bench listener")?;
     let addr = listener.local_addr().context("reading bench listener addr")?.to_string();
-    let total_requests = (clients * (cfg.requests_per_client + warmup)) as u64;
+    let bg_requests = match mixed {
+        Some(_) => (MIXED_BG_CLIENTS * (MIXED_BG_REQUESTS + warmup)) as u64,
+        None => 0,
+    };
+    let total_requests = (clients * (cfg.requests_per_client + warmup)) as u64 + bg_requests;
     let serve_cfg = ServeCfg {
         quant: cfg.quant,
         seed: cfg.seed,
@@ -78,6 +117,9 @@ fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
         max_batch: cfg.max_batch,
         max_delay: cfg.max_delay,
         max_requests: Some(total_requests),
+        lanes,
+        max_queue: cfg.max_queue,
+        fp32_models: mixed.map(|m| vec![m.to_string()]).unwrap_or_default(),
         ..ServeCfg::default()
     };
 
@@ -103,6 +145,25 @@ fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
                 s.spawn(move || run_infer(&infer_cfg))
             })
             .collect();
+        let bg_handles: Vec<_> = mixed
+            .iter()
+            .flat_map(|m| (0..MIXED_BG_CLIENTS).map(move |_| m.to_string()))
+            .map(|m| {
+                let infer_cfg = InferCfg {
+                    addr: addr.clone(),
+                    model: m,
+                    batch: MIXED_BG_BATCH,
+                    requests: MIXED_BG_REQUESTS,
+                    warmup,
+                    seed: cfg.seed,
+                    steps: cfg.steps,
+                    quant: QuantMode::Fp32,
+                    check: false,
+                    connect_timeout: Duration::from_secs(10),
+                };
+                s.spawn(move || run_infer(&infer_cfg))
+            })
+            .collect();
         for h in client_handles {
             match h.join() {
                 Ok(Ok(summary)) => {
@@ -111,6 +172,13 @@ fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
                 }
                 Ok(Err(e)) => bail!("bench client failed: {e:#}"),
                 Err(_) => bail!("bench client thread panicked"),
+            }
+        }
+        for h in bg_handles {
+            match h.join() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => bail!("bench background client failed: {e:#}"),
+                Err(_) => bail!("bench background client thread panicked"),
             }
         }
         match server.join() {
@@ -124,6 +192,8 @@ fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
     Ok(BenchRow {
         batch,
         clients,
+        lanes,
+        mixed: mixed.unwrap_or("none").to_string(),
         requests,
         p50_ms: percentile(&latencies, 50.0),
         p99_ms: percentile(&latencies, 99.0),
@@ -132,42 +202,66 @@ fn run_cell(cfg: &BenchCfg, batch: usize, clients: usize) -> Result<BenchRow> {
 }
 
 /// Full sweep; renders a table to stdout and writes the JSON report.
+///
+/// Single-model cells run first (`mixed = "none"`, `cfg.lanes`), then
+/// the mixed-model head-of-line pair: primary batch-1 clients against
+/// the fp32 background model at 1 lane and at `max(2, cfg.lanes)`.
 pub fn run_bench(cfg: &BenchCfg) -> Result<Vec<BenchRow>> {
     let mut rows = Vec::new();
-    let mut table =
-        Table::new(&["model", "quant", "batch", "clients", "req", "p50 ms", "p99 ms", "req/s"]);
+    let mut table = Table::new(&[
+        "model", "quant", "batch", "clients", "lanes", "mixed", "req", "p50 ms", "p99 ms",
+        "req/s",
+    ]);
     let mut json = JsonReport::new("serve_latency");
     json.meta("model", text(&cfg.model));
     json.meta("quant", text(cfg.quant.name()));
     json.meta("requests_per_client", num(cfg.requests_per_client as f64));
     json.meta("server_max_batch", num(cfg.max_batch as f64));
     json.meta("server_max_delay_ms", num(cfg.max_delay.as_secs_f64() * 1e3));
+    json.meta("server_max_queue", num(cfg.max_queue as f64));
 
+    let mut emit = |row: BenchRow, table: &mut Table, json: &mut JsonReport| {
+        table.row(&[
+            cfg.model.clone(),
+            cfg.quant.name().to_string(),
+            row.batch.to_string(),
+            row.clients.to_string(),
+            row.lanes.to_string(),
+            row.mixed.clone(),
+            row.requests.to_string(),
+            format!("{:.3}", row.p50_ms),
+            format!("{:.3}", row.p99_ms),
+            format!("{:.1}", row.req_per_s),
+        ]);
+        json.row(&[
+            ("model", text(&cfg.model)),
+            ("quant", text(cfg.quant.name())),
+            ("batch", num(row.batch as f64)),
+            ("clients", num(row.clients as f64)),
+            ("lanes", num(row.lanes as f64)),
+            ("mixed", text(&row.mixed)),
+            ("requests", num(row.requests as f64)),
+            ("p50_ms", num(row.p50_ms)),
+            ("p99_ms", num(row.p99_ms)),
+            ("req_per_s", num(row.req_per_s)),
+        ]);
+        rows.push(row);
+    };
+
+    let solo = BenchCfg { mixed_model: "none".into(), ..cfg.clone() };
     for &batch in &cfg.batches {
         for &clients in &cfg.clients {
-            let row = run_cell(cfg, batch, clients)
+            let row = run_cell(&solo, batch, clients, cfg.lanes)
                 .with_context(|| format!("bench cell batch={batch} clients={clients}"))?;
-            table.row(&[
-                cfg.model.clone(),
-                cfg.quant.name().to_string(),
-                row.batch.to_string(),
-                row.clients.to_string(),
-                row.requests.to_string(),
-                format!("{:.3}", row.p50_ms),
-                format!("{:.3}", row.p99_ms),
-                format!("{:.1}", row.req_per_s),
-            ]);
-            json.row(&[
-                ("model", text(&cfg.model)),
-                ("quant", text(cfg.quant.name())),
-                ("batch", num(row.batch as f64)),
-                ("clients", num(row.clients as f64)),
-                ("requests", num(row.requests as f64)),
-                ("p50_ms", num(row.p50_ms)),
-                ("p99_ms", num(row.p99_ms)),
-                ("req_per_s", num(row.req_per_s)),
-            ]);
-            rows.push(row);
+            emit(row, &mut table, &mut json);
+        }
+    }
+
+    if cfg.mixed_model != "none" {
+        for lanes in [1, cfg.lanes.max(2)] {
+            let row = run_cell(cfg, 1, 2, lanes)
+                .with_context(|| format!("mixed bench cell lanes={lanes}"))?;
+            emit(row, &mut table, &mut json);
         }
     }
 
@@ -188,11 +282,28 @@ mod tests {
             requests_per_client: 3,
             batches: vec![2],
             clients: vec![2],
+            mixed_model: "none".into(),
             ..BenchCfg::default()
         };
-        let row = run_cell(&cfg, 2, 2).unwrap();
+        let row = run_cell(&cfg, 2, 2, 2).unwrap();
         assert_eq!(row.requests, 6, "2 clients x 3 timed requests");
+        assert_eq!(row.lanes, 2);
+        assert_eq!(row.mixed, "none");
         assert!(row.p50_ms >= 0.0 && row.p99_ms >= row.p50_ms);
         assert!(row.req_per_s > 0.0);
+    }
+
+    #[test]
+    fn a_mixed_cell_times_only_the_primary_model() {
+        // mlp128 primary + mlp500 background on one server: the row's
+        // request count is the primary clients' alone.
+        let cfg = BenchCfg {
+            requests_per_client: 2,
+            mixed_model: "mlp500".into(),
+            ..BenchCfg::default()
+        };
+        let row = run_cell(&cfg, 1, 2, 2).unwrap();
+        assert_eq!(row.requests, 4, "2 primary clients x 2 timed requests");
+        assert_eq!(row.mixed, "mlp500");
     }
 }

@@ -62,10 +62,14 @@ impl Default for InferCfg {
 pub struct InferSummary {
     pub requests: u64,
     pub examples: u64,
-    /// Round-trip latency of each timed request, milliseconds.
+    /// Round-trip latency of each timed request, milliseconds
+    /// (measured from the *first* send, so Busy retries count).
     pub latencies_ms: Vec<f64>,
     /// Replies verified bit-identical against the local forward.
     pub checked: u64,
+    /// `Busy` rejections absorbed (each one slept out its hint and
+    /// retried until the request was served).
+    pub busy: u64,
     /// Predictions from the final timed reply (CLI display).
     pub last_preds: Vec<u32>,
 }
@@ -118,6 +122,7 @@ pub fn run_infer(cfg: &InferCfg) -> Result<InferSummary> {
         examples: 0,
         latencies_ms: Vec::with_capacity(cfg.requests),
         checked: 0,
+        busy: 0,
         last_preds: Vec::new(),
     };
 
@@ -128,15 +133,31 @@ pub fn run_infer(cfg: &InferCfg) -> Result<InferSummary> {
             None => bail!("input stream exhausted at request {i}"),
         };
         let sent_at = Instant::now();
-        t.send(&Msg::InferRequest {
+        let request = Msg::InferRequest {
             id: i as u64,
             model: cfg.model.clone(),
             batch: cfg.batch as u32,
             x: x.to_vec(),
-        })?;
-        let reply = match t.recv_deadline(Duration::from_secs(30))? {
-            Some(m) => m,
-            None => bail!("server sent no reply within 30s (request {i})"),
+        };
+        t.send(&request)?;
+        // An admission-control Busy is not an error: sleep out the
+        // server's hint and resend until the request is admitted.
+        let reply = loop {
+            let m = match t.recv_deadline(Duration::from_secs(30))? {
+                Some(m) => m,
+                None => bail!("server sent no reply within 30s (request {i})"),
+            };
+            match m {
+                Msg::Busy { id, retry_after_ms } => {
+                    ensure!(id == i as u64, "busy reply id {id} for request {i}");
+                    summary.busy += 1;
+                    ensure!(summary.busy <= 10_000, "server stayed busy across 10000 retries");
+                    let pause = u64::from(retry_after_ms.clamp(1, 200));
+                    std::thread::sleep(Duration::from_millis(pause));
+                    t.send(&request)?;
+                }
+                other => break other,
+            }
         };
         let rtt_ms = sent_at.elapsed().as_secs_f64() * 1e3;
         let (id, classes, preds, logits) = match reply {
@@ -186,6 +207,123 @@ pub fn run_infer(cfg: &InferCfg) -> Result<InferSummary> {
     // already have exited after its last reply.
     let _ = t.send(&Msg::Shutdown { fault: false, reason: "client done".into() });
     Ok(summary)
+}
+
+/// Outcome of [`run_busy_probe`].
+#[derive(Debug)]
+pub struct BusyProbe {
+    /// `Busy` rejections observed — the probe's purpose: at least one
+    /// must arrive when the server runs with `--max-queue 1`.
+    pub busy: u64,
+    /// Requests eventually served after retries.
+    pub served: u64,
+    /// Replies verified bit-identical against the local forward.
+    pub checked: u64,
+}
+
+/// Admission-control probe: pipeline `cfg.requests` requests
+/// back-to-back on one connection *before reading any reply*, so a
+/// queue-capped server must answer `Busy` for the overflow; then keep
+/// retrying busy ids (after their hints) until every request is
+/// served. With `cfg.check` set, replies are still verified bitwise —
+/// admission control must not perturb results.
+pub fn run_busy_probe(cfg: &InferCfg) -> Result<BusyProbe> {
+    ensure!(cfg.batch > 0, "batch must be positive");
+    ensure!(cfg.requests >= 2, "a busy probe needs at least two pipelined requests");
+    let n = cfg.requests;
+    let (xs, numel) = input_stream(&cfg.model, n * cfg.batch)?;
+    let mut local = if cfg.check {
+        Some(
+            ServeModel::prepare_named(&cfg.model, cfg.seed, cfg.steps, cfg.quant)
+                .context("preparing local reference model for --check")?,
+        )
+    } else {
+        None
+    };
+    let mut t = TcpTransport::connect_retry(&cfg.addr, cfg.connect_timeout)?;
+    for i in 0..n {
+        let (msg, _) = probe_request(&xs, &cfg.model, cfg.batch, numel, i)?;
+        t.send(&msg)?;
+    }
+    let mut probe = BusyProbe { busy: 0, served: 0, checked: 0 };
+    let mut outstanding = vec![true; n];
+    let drain_deadline = Instant::now() + Duration::from_secs(60);
+    while outstanding.iter().any(|&o| o) {
+        ensure!(Instant::now() < drain_deadline, "busy probe did not drain within 60s");
+        let m = match t.recv_deadline(Duration::from_secs(30))? {
+            Some(m) => m,
+            None => bail!("server sent no reply within 30s (busy probe)"),
+        };
+        match m {
+            Msg::Busy { id, retry_after_ms } => {
+                let i = id as usize;
+                ensure!(
+                    outstanding.get(i) == Some(&true),
+                    "busy reply for unknown or finished request {id}"
+                );
+                probe.busy += 1;
+                std::thread::sleep(Duration::from_millis(u64::from(
+                    retry_after_ms.clamp(1, 500),
+                )));
+                let (msg, _) = probe_request(&xs, &cfg.model, cfg.batch, numel, i)?;
+                t.send(&msg)?;
+            }
+            Msg::InferReply { id, classes, preds, logits } => {
+                let i = id as usize;
+                let Some(slot) = outstanding.get_mut(i) else {
+                    bail!("reply for unknown request {id}")
+                };
+                ensure!(*slot, "duplicate reply for request {id}");
+                *slot = false;
+                ensure!(
+                    preds.len() == cfg.batch && logits.len() == cfg.batch * classes as usize,
+                    "malformed reply shape for request {id}"
+                );
+                if let Some(local) = local.as_mut() {
+                    let (_, x) = probe_request(&xs, &cfg.model, cfg.batch, numel, i)?;
+                    let (want_preds, want_logits) = local.infer(x, cfg.batch)?;
+                    let same_bits = preds == want_preds
+                        && logits.len() == want_logits.len()
+                        && logits
+                            .iter()
+                            .zip(want_logits.iter())
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    ensure!(same_bits, "request {id}: reply differs bitwise after Busy retries");
+                    probe.checked += 1;
+                }
+                probe.served += 1;
+            }
+            Msg::Shutdown { fault, reason } => {
+                bail!("server shut the connection (fault={fault}): {reason}")
+            }
+            other => bail!("unexpected reply tag {}", other.tag()),
+        }
+    }
+    let _ = t.send(&Msg::Shutdown { fault: false, reason: "probe done".into() });
+    Ok(probe)
+}
+
+/// Request `i` of the probe's pipelined stream plus its input slice
+/// (the slice backs both resends and the `--check` local forward).
+fn probe_request<'a>(
+    xs: &'a [f32],
+    model: &str,
+    batch: usize,
+    numel: usize,
+    i: usize,
+) -> Result<(Msg, &'a [f32])> {
+    let span = i * batch * numel..(i + 1) * batch * numel;
+    let x = match xs.get(span) {
+        Some(x) => x,
+        None => bail!("input stream exhausted at request {i}"),
+    };
+    let msg = Msg::InferRequest {
+        id: i as u64,
+        model: model.to_string(),
+        batch: batch as u32,
+        x: x.to_vec(),
+    };
+    Ok((msg, x))
 }
 
 #[cfg(test)]

@@ -1,0 +1,297 @@
+//! Nonblocking framed connection for the serve I/O thread.
+//!
+//! The PR-8 serve loop gave every connection a 1 ms *blocking* read
+//! window per sweep, so a half-read frame on one connection consumed
+//! the whole poll budget of the iteration and every other client's
+//! latency absorbed it. [`ServeConn`] fixes the accounting: the socket
+//! is nonblocking, a partially received frame is buffered **on the
+//! connection** and resumed on later sweeps, and the only deadline is
+//! per connection — a frame whose first byte arrived more than
+//! [`FRAME_DEADLINE`] ago without completing is a stalled peer and
+//! errors that connection alone. A sweep over N connections therefore
+//! costs N nonblocking reads, never N poll windows.
+//!
+//! Sends run on the same nonblocking socket: [`ServeConn::send`]
+//! retries `WouldBlock` with a short sleep under [`WRITE_DEADLINE`],
+//! so a client that stops reading its replies stalls its own
+//! connection, not the server.
+
+use crate::net::frame::{parse_header, write_frame, HEADER_LEN};
+use crate::net::Msg;
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Serving frames are capped well below the transport's 256 MiB
+/// `MAX_FRAME`: the largest legal `InferRequest` (4096 examples of the
+/// widest registry input) is under 64 MiB, and an unauthenticated
+/// client must not be able to make the server allocate more than this
+/// per connection off a forged length prefix.
+pub const MAX_SERVE_FRAME: usize = 1 << 26; // 64 MiB
+
+/// A frame whose first byte arrived this long ago without completing
+/// marks the peer as stalled; the deadline is tracked per connection,
+/// never charged to the sweep.
+pub const FRAME_DEADLINE: Duration = Duration::from_secs(5);
+
+/// How long [`ServeConn::send`] retries a full socket buffer before
+/// declaring the peer wedged.
+pub const WRITE_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One serving connection: a nonblocking stream plus the receive state
+/// of its (at most one) in-flight inbound frame.
+pub struct ServeConn {
+    stream: TcpStream,
+    peer: String,
+    hdr: [u8; HEADER_LEN],
+    hdr_filled: usize,
+    /// `(tag, payload_len)` once the header is complete.
+    need: Option<(u8, usize)>,
+    payload: Vec<u8>,
+    pay_filled: usize,
+    /// When the in-flight frame's first byte arrived; the mid-frame
+    /// stall deadline is measured from here.
+    frame_started: Option<Instant>,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+impl ServeConn {
+    pub fn from_stream(stream: TcpStream) -> Result<ServeConn> {
+        stream.set_nonblocking(true).context("setting serve connection nonblocking")?;
+        stream.set_nodelay(true).context("setting TCP_NODELAY on serve connection")?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        Ok(ServeConn {
+            stream,
+            peer,
+            hdr: [0u8; HEADER_LEN],
+            hdr_filled: 0,
+            need: None,
+            payload: Vec::new(),
+            pay_filled: 0,
+            frame_started: None,
+            bytes_sent: 0,
+            bytes_received: 0,
+        })
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// `Ok(None)` when no frame is in flight; `Err` when the in-flight
+    /// frame has been stalled past [`FRAME_DEADLINE`].
+    fn blocked(&self, now: Instant) -> Result<Option<Msg>> {
+        match self.frame_started {
+            Some(t0) if now.saturating_duration_since(t0) >= FRAME_DEADLINE => {
+                bail!(
+                    "connection {}: frame stalled mid-read for {:.1}s",
+                    self.peer,
+                    FRAME_DEADLINE.as_secs_f64()
+                )
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Pull at most one complete message without blocking. `Ok(None)`
+    /// means the socket has no complete frame yet (any partial bytes
+    /// stay buffered on the connection); `Err` means the peer closed,
+    /// sent garbage, or stalled a frame past its deadline — the caller
+    /// drops the connection.
+    pub fn poll_recv(&mut self, now: Instant) -> Result<Option<Msg>> {
+        loop {
+            // Phase 1: assemble the 8-byte header.
+            if self.need.is_none() {
+                let dst = match self.hdr.get_mut(self.hdr_filled..) {
+                    Some(d) if !d.is_empty() => d,
+                    _ => bail!("connection {}: header cursor out of range", self.peer),
+                };
+                match self.stream.read(dst) {
+                    Ok(0) => bail!("connection {} closed by peer", self.peer),
+                    Ok(n) => {
+                        if self.hdr_filled == 0 {
+                            self.frame_started = Some(now);
+                        }
+                        self.hdr_filled += n;
+                        self.bytes_received += n as u64;
+                        if self.hdr_filled < HEADER_LEN {
+                            continue;
+                        }
+                        let (tag, len) = parse_header(self.hdr)
+                            .with_context(|| format!("bad frame header from {}", self.peer))?;
+                        if len > MAX_SERVE_FRAME {
+                            bail!(
+                                "connection {}: frame of {len} bytes exceeds the serving \
+                                 cap of {MAX_SERVE_FRAME}",
+                                self.peer
+                            );
+                        }
+                        self.payload.clear();
+                        self.payload.resize(len, 0);
+                        self.pay_filled = 0;
+                        self.need = Some((tag, len));
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return self.blocked(now),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        return Err(e).context(format!("reading header from {}", self.peer))
+                    }
+                }
+            }
+            // Phase 2: assemble the payload, then decode.
+            let Some((tag, len)) = self.need else { continue };
+            while self.pay_filled < len {
+                let dst = match self.payload.get_mut(self.pay_filled..) {
+                    Some(d) if !d.is_empty() => d,
+                    _ => bail!("connection {}: payload cursor out of range", self.peer),
+                };
+                match self.stream.read(dst) {
+                    Ok(0) => bail!("connection {} closed mid-frame", self.peer),
+                    Ok(n) => {
+                        self.pay_filled += n;
+                        self.bytes_received += n as u64;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return self.blocked(now),
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        return Err(e).context(format!("reading payload from {}", self.peer))
+                    }
+                }
+            }
+            self.hdr_filled = 0;
+            self.need = None;
+            self.frame_started = None;
+            let msg = Msg::decode(tag, &self.payload)
+                .with_context(|| format!("decoding frame from {}", self.peer))?;
+            return Ok(Some(msg));
+        }
+    }
+
+    /// Send one message, retrying `WouldBlock` under [`WRITE_DEADLINE`]
+    /// (the socket is nonblocking, so a full send buffer surfaces as
+    /// `WouldBlock`, not a block).
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let payload = msg.encode_payload();
+        let mut buf: Vec<u8> = Vec::with_capacity(HEADER_LEN + payload.len());
+        write_frame(&mut buf, msg.tag(), &payload)?;
+        let deadline = Instant::now() + WRITE_DEADLINE;
+        let mut sent = 0usize;
+        while sent < buf.len() {
+            let src = match buf.get(sent..) {
+                Some(s) => s,
+                None => bail!("connection {}: send cursor out of range", self.peer),
+            };
+            match self.stream.write(src) {
+                Ok(0) => bail!("connection {} closed during send", self.peer),
+                Ok(n) => sent += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "connection {}: send stalled for {:.0}s (peer not reading)",
+                            self.peer,
+                            WRITE_DEADLINE.as_secs_f64()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e).context(format!("sending to {}", self.peer)),
+            }
+        }
+        self.bytes_sent += buf.len() as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, ServeConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        (client, ServeConn::from_stream(server_side).unwrap())
+    }
+
+    fn frame_bytes(msg: &Msg) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg.tag(), &msg.encode_payload()).unwrap();
+        buf
+    }
+
+    #[test]
+    fn reassembles_a_frame_split_across_sweeps() {
+        let (mut client, mut conn) = pair();
+        let msg = Msg::Heartbeat { node: 3, round: 9 };
+        let bytes = frame_bytes(&msg);
+        let now = Instant::now();
+        assert!(conn.poll_recv(now).unwrap().is_none(), "nothing written yet");
+        // First half (splits the header itself), then the rest.
+        client.write_all(&bytes[..5]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(conn.poll_recv(now).unwrap().is_none(), "half a header is not a frame");
+        client.write_all(&bytes[5..]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(conn.poll_recv(now).unwrap(), Some(msg));
+        assert_eq!(conn.bytes_received, bytes.len() as u64);
+    }
+
+    #[test]
+    fn mid_frame_stall_errors_after_the_per_connection_deadline() {
+        let (mut client, mut conn) = pair();
+        let bytes = frame_bytes(&Msg::Heartbeat { node: 1, round: 1 });
+        client.write_all(&bytes[..3]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
+        // The partial frame is buffered; the connection is not yet dead.
+        assert!(conn.poll_recv(t0).unwrap().is_none());
+        // Fabricated clock: the same stalled frame past the deadline.
+        assert!(conn.poll_recv(t0 + FRAME_DEADLINE).is_err());
+    }
+
+    #[test]
+    fn fresh_idle_connection_never_hits_the_deadline() {
+        let (_client, mut conn) = pair();
+        let t0 = Instant::now();
+        // No frame in flight: even a far-future sweep time is fine.
+        assert!(conn.poll_recv(t0 + FRAME_DEADLINE * 10).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused_before_allocating() {
+        let (mut client, mut conn) = pair();
+        let mut hdr = frame_bytes(&Msg::Heartbeat { node: 1, round: 1 });
+        let huge = ((MAX_SERVE_FRAME + 1) as u32).to_le_bytes();
+        hdr[4..8].copy_from_slice(&huge);
+        client.write_all(&hdr[..8]).unwrap();
+        client.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(conn.poll_recv(Instant::now()).is_err());
+    }
+
+    #[test]
+    fn hangup_is_an_error_not_a_stall() {
+        let (client, mut conn) = pair();
+        drop(client);
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(conn.poll_recv(Instant::now()).is_err());
+    }
+
+    #[test]
+    fn send_roundtrips_through_a_blocking_reader() {
+        let (client, mut conn) = pair();
+        let msg = Msg::Busy { id: 42, retry_after_ms: 5 };
+        conn.send(&msg).unwrap();
+        let mut t = crate::net::TcpTransport::from_stream(client).unwrap();
+        use crate::net::Transport;
+        assert_eq!(t.recv().unwrap(), msg);
+    }
+}

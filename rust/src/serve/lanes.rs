@@ -1,0 +1,496 @@
+//! Execution lanes: persistent per-model forward workers behind the
+//! serve I/O thread.
+//!
+//! Each lane is a long-lived service thread (spawned through
+//! [`crate::kernels::pool::spawn_service`], the crate's one sanctioned
+//! spawn point) owning its own [`Batcher`] and [`PlanCache`]. The I/O
+//! thread assigns models to lanes sticky round-robin on first sight,
+//! so a slow fp32 vgg8bn lane cannot head-of-line-block int8 mlp128
+//! traffic — the two models simply execute on different threads.
+//!
+//! Flow per lane: park on the request channel until the batcher's next
+//! flush deadline, drain the FIFO, then execute it in **chunks** of at
+//! most `max_batch` examples, emitting each chunk's replies to the I/O
+//! thread *before* the next chunk runs (streaming: first results flow
+//! while the tail still computes). Chunking never splits a request,
+//! and replies stay bitwise identical to solo forwards because both
+//! forward paths are batch-composition invariant (see `serve/mod.rs`).
+//!
+//! Admission accounting: the I/O thread increments a lane's `depth`
+//! when it dispatches a request and the lane decrements it after
+//! emitting that request's output, so `depth` is exactly the number of
+//! requests inside the lane — the quantity the `--max-queue` admission
+//! cap bounds.
+//!
+//! This file is in the `hotpath-alloc` lint scope: the lane loop keeps
+//! a lane-lifetime input scratch buffer and borrows single-request
+//! inputs in place, so steady-state iterations allocate only the reply
+//! payloads they hand off (which the outgoing message must own).
+
+use super::batcher::{Batcher, Pending};
+use super::cache::PlanCache;
+use super::server::ServeCfg;
+use super::ServeModel;
+use crate::kernels::pool::spawn_service;
+use crate::net::Msg;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long an idle lane parks between wake-ups when nothing is queued.
+const PARK: Duration = Duration::from_millis(50);
+
+/// Totals the lanes accumulate and the server folds into `ServeStats`
+/// at shutdown.
+#[derive(Default)]
+pub struct LaneCounters {
+    /// Forward passes (flushed chunks) across all lanes.
+    pub batches: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+}
+
+/// One finished unit leaving a lane, headed back to the I/O thread,
+/// which owns all socket writes.
+pub struct LaneOut {
+    /// Index of the destination connection in the server's table.
+    pub conn: usize,
+    /// `InferReply`, or a faulted `Shutdown` when preparation or the
+    /// forward failed.
+    pub reply: Msg,
+    /// `true` = drop the connection after sending the reply.
+    pub fault: bool,
+    /// Examples answered (0 for a fault).
+    pub examples: u64,
+    pub lane: usize,
+    /// Stage timestamps: admission, forward start, forward end. The
+    /// I/O thread derives the queue/execute/reply latency split from
+    /// these plus its own send completion time.
+    pub arrived: Instant,
+    pub exec_start: Instant,
+    pub exec_done: Instant,
+}
+
+struct Lane {
+    tx: Option<Sender<Pending>>,
+    depth: Arc<AtomicUsize>,
+    depth_max: usize,
+    join: Option<JoinHandle<()>>,
+}
+
+/// The I/O thread's handle on every lane: dispatch, depth queries, and
+/// the sticky model-to-lane assignment.
+pub struct LanePool {
+    lanes: Vec<Lane>,
+    assign: BTreeMap<String, usize>,
+    next_lane: usize,
+    counters: Arc<LaneCounters>,
+}
+
+impl LanePool {
+    /// Spawn `cfg.lanes` execution lanes (min 1), each parked on its
+    /// request channel. Outputs flow to `out_tx`.
+    pub fn start(cfg: &ServeCfg, out_tx: Sender<LaneOut>) -> LanePool {
+        let counters = Arc::new(LaneCounters::default());
+        let lanes = (0..cfg.lanes.max(1))
+            .map(|li| {
+                let (tx, rx) = channel::<Pending>();
+                let depth = Arc::new(AtomicUsize::new(0));
+                let lane_depth = Arc::clone(&depth);
+                let lane_counters = Arc::clone(&counters);
+                let lane_out = out_tx.clone();
+                let lane_cfg = cfg.clone();
+                let join = spawn_service(&format!("lane-{li}"), move || {
+                    lane_loop(li, lane_cfg, rx, lane_out, lane_depth, lane_counters)
+                });
+                Lane { tx: Some(tx), depth, depth_max: 0, join: Some(join) }
+            })
+            .collect();
+        LanePool { lanes, assign: BTreeMap::new(), next_lane: 0, counters }
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The lane serving `model`: sticky round-robin on first sight, so
+    /// distinct models land on distinct lanes until lanes run out.
+    pub fn lane_for(&mut self, model: &str) -> usize {
+        if let Some(&l) = self.assign.get(model) {
+            return l;
+        }
+        let l = self.next_lane % self.lanes.len().max(1);
+        self.next_lane += 1;
+        self.assign.insert(model.to_string(), l);
+        l
+    }
+
+    /// Requests currently inside `lane` (queued or executing).
+    pub fn depth(&self, lane: usize) -> usize {
+        self.lanes.get(lane).map(|l| l.depth.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Hand an admitted request to its lane. The caller has already
+    /// checked the queue cap; a send failure means the lane thread
+    /// died, which is a server bug, not peer behavior.
+    pub fn dispatch(&mut self, lane: usize, p: Pending) -> Result<()> {
+        let Some(l) = self.lanes.get_mut(lane) else {
+            bail!("dispatch to nonexistent lane {lane}");
+        };
+        let d = l.depth.fetch_add(1, Ordering::AcqRel) + 1;
+        l.depth_max = l.depth_max.max(d);
+        match &l.tx {
+            Some(tx) if tx.send(p).is_ok() => Ok(()),
+            _ => {
+                l.depth.fetch_sub(1, Ordering::AcqRel);
+                bail!("lane {lane} is no longer accepting requests (thread died?)")
+            }
+        }
+    }
+
+    /// True when no request is inside any lane.
+    pub fn all_idle(&self) -> bool {
+        self.lanes.iter().all(|l| l.depth.load(Ordering::Acquire) == 0)
+    }
+
+    /// Per-lane high-water marks of queue depth.
+    pub fn depth_maxes(&self) -> Vec<usize> {
+        self.lanes.iter().map(|l| l.depth_max).collect()
+    }
+
+    pub fn counters(&self) -> &LaneCounters {
+        &self.counters
+    }
+
+    /// Close every request channel and join the lane threads; lanes
+    /// flush whatever they still hold before exiting.
+    pub fn shutdown(&mut self) {
+        for l in &mut self.lanes {
+            l.tx = None;
+        }
+        for l in &mut self.lanes {
+            if let Some(j) = l.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// One lane's life: park, drain, flush in chunks, emit.
+fn lane_loop(
+    lane: usize,
+    cfg: ServeCfg,
+    rx: Receiver<Pending>,
+    out: Sender<LaneOut>,
+    depth: Arc<AtomicUsize>,
+    counters: Arc<LaneCounters>,
+) {
+    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_delay);
+    let mut cache = PlanCache::new(cfg.cache_cap);
+    // Lane-lifetime input scratch: multi-request chunks concatenate
+    // into it, so steady-state flushes reuse its capacity.
+    let mut xs: Vec<f32> = Vec::new();
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        let timeout = match batcher.deadline() {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => PARK,
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(p) => {
+                batcher.push(p);
+                while let Ok(p) = rx.try_recv() {
+                    batcher.push(p);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => open = false,
+        }
+        let now = Instant::now();
+        // On shutdown (channel closed) the deadline no longer matters:
+        // flush everything still queued before exiting.
+        let flush_at = if open { now } else { now + cfg.max_delay };
+        if !batcher.ready(flush_at) {
+            continue;
+        }
+        let drained = batcher.take_ready(flush_at);
+        let mut i = 0usize;
+        while i < drained.len() {
+            let Some(model) = drained.get(i).map(|p| p.model.as_str()) else { break };
+            // Maximal FIFO run of one model (the common case is the
+            // whole drain: per-model lanes see one model).
+            let mut j = i + 1;
+            while drained.get(j).map(|p| p.model.as_str()) == Some(model) {
+                j += 1;
+            }
+            // Chunk the run at request granularity so one forward
+            // covers at most `max_batch` examples; emit each chunk's
+            // replies before the next chunk runs.
+            let mut c0 = i;
+            while c0 < j {
+                let mut c1 = c0;
+                let mut examples = 0usize;
+                while c1 < j {
+                    let b = drained.get(c1).map(|p| p.batch).unwrap_or(0);
+                    if c1 > c0 && examples + b > cfg.max_batch {
+                        break;
+                    }
+                    examples += b;
+                    c1 += 1;
+                }
+                if let Some(chunk) = drained.get(c0..c1) {
+                    run_chunk(lane, &cfg, &mut cache, &counters, &out, &depth, chunk, &mut xs);
+                }
+                c0 = c1.max(c0 + 1);
+            }
+            i = j;
+        }
+    }
+}
+
+/// Execute one same-model chunk and emit a reply (or fault) per
+/// request. The lane decrements `depth` only after the output is on
+/// the channel, so the I/O thread's idle check cannot race ahead of an
+/// un-drained reply.
+#[allow(clippy::too_many_arguments)]
+fn run_chunk(
+    lane: usize,
+    cfg: &ServeCfg,
+    cache: &mut PlanCache,
+    counters: &LaneCounters,
+    out: &Sender<LaneOut>,
+    depth: &AtomicUsize,
+    chunk: &[Pending],
+    xs: &mut Vec<f32>,
+) {
+    let Some(model) = chunk.first().map(|p| p.model.as_str()) else { return };
+    let exec_start = Instant::now();
+    let want = cfg.quant_for(model);
+    // Exactly one of hit/miss happens per lookup; the build closure
+    // runs only on a miss, so this flag avoids reading the cache's own
+    // counters while the returned `&mut` plan is still borrowed.
+    let mut missed = false;
+    let sm = match cache.get_or_try_insert(model, || {
+        missed = true;
+        ServeModel::prepare_named(model, cfg.seed, cfg.steps, want)
+    }) {
+        Ok(sm) => sm,
+        Err(e) => {
+            counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let reason = format!("preparing model '{model}': {e:#}");
+            emit_faults(lane, out, depth, chunk, &reason, exec_start);
+            return;
+        }
+    };
+    if missed {
+        counters.cache_misses.fetch_add(1, Ordering::Relaxed);
+    } else {
+        counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+    let total: usize = chunk.iter().map(|p| p.batch).sum();
+    // A single-request chunk borrows the request's own buffer; only a
+    // multi-request chunk concatenates into the lane scratch.
+    let input: &[f32] = match chunk {
+        [only] => &only.x,
+        _ => {
+            xs.clear();
+            for p in chunk {
+                xs.extend_from_slice(&p.x);
+            }
+            xs
+        }
+    };
+    let result = sm.infer(input, total);
+    let exec_done = Instant::now();
+    let (preds, logits) = match result {
+        Ok(pair) => pair,
+        Err(e) => {
+            // Validation should make this unreachable; if a forward
+            // still fails, fault the chunk and keep the lane alive.
+            let reason = format!("forward failed for '{model}': {e:#}");
+            emit_faults(lane, out, depth, chunk, &reason, exec_done);
+            return;
+        }
+    };
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    let classes = sm.classes;
+    let mut preds = preds.into_iter();
+    let mut logits = logits.into_iter();
+    for p in chunk {
+        let reply = Msg::InferReply {
+            id: p.id,
+            classes: classes as u32,
+            preds: preds.by_ref().take(p.batch).collect(),
+            logits: logits.by_ref().take(p.batch * classes).collect(),
+        };
+        let _ = out.send(LaneOut {
+            conn: p.conn,
+            reply,
+            fault: false,
+            examples: p.batch as u64,
+            lane,
+            arrived: p.arrived,
+            exec_start,
+            exec_done,
+        });
+        depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Emit a faulted `Shutdown` for every request in a failed chunk.
+fn emit_faults(
+    lane: usize,
+    out: &Sender<LaneOut>,
+    depth: &AtomicUsize,
+    chunk: &[Pending],
+    reason: &str,
+    at: Instant,
+) {
+    for p in chunk {
+        let reply = Msg::Shutdown { fault: true, reason: reason.to_string() };
+        let _ = out.send(LaneOut {
+            conn: p.conn,
+            reply,
+            fault: true,
+            examples: 0,
+            lane,
+            arrived: p.arrived,
+            exec_start: at,
+            exec_done: at,
+        });
+        depth.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::QuantMode;
+
+    fn cfg(lanes: usize) -> ServeCfg {
+        ServeCfg {
+            lanes,
+            quant: QuantMode::Int8,
+            seed: 3,
+            steps: 0,
+            max_batch: 4,
+            max_delay: Duration::from_millis(1),
+            ..ServeCfg::default()
+        }
+    }
+
+    fn req(conn: usize, id: u64, model: &str, batch: usize, numel: usize) -> Pending {
+        Pending {
+            conn,
+            id,
+            model: model.into(),
+            batch,
+            x: vec![0.25; batch * numel],
+            arrived: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn distinct_models_land_on_distinct_lanes() {
+        let (tx, _rx) = channel();
+        let mut pool = LanePool::start(&cfg(2), tx);
+        let a = pool.lane_for("mlp128");
+        let b = pool.lane_for("vgg8bn");
+        assert_ne!(a, b, "two models, two lanes");
+        assert_eq!(pool.lane_for("mlp128"), a, "assignment is sticky");
+        assert_eq!(pool.lane_for("lenet5"), a % 2, "third model wraps round-robin");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn lane_serves_requests_and_returns_to_idle() {
+        let (tx, rx) = channel();
+        let mut pool = LanePool::start(&cfg(1), tx);
+        let m = ServeModel::prepare_named("mlp128", 3, 0, QuantMode::Int8).unwrap();
+        let numel = m.input_numel;
+        let lane = pool.lane_for("mlp128");
+        for id in 0..3u64 {
+            pool.dispatch(lane, req(7, id, "mlp128", 1, numel)).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            let o = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(!o.fault);
+            assert_eq!(o.conn, 7);
+            assert_eq!(o.examples, 1);
+            assert!(o.exec_done >= o.exec_start && o.exec_start >= o.arrived);
+            match o.reply {
+                Msg::InferReply { id, preds, .. } => {
+                    assert_eq!(preds.len(), 1);
+                    got.push(id);
+                }
+                other => panic!("expected InferReply, got tag {}", other.tag()),
+            }
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2], "every request answered exactly once");
+        // Depth returns to zero once outputs are emitted.
+        for _ in 0..200 {
+            if pool.all_idle() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(pool.all_idle());
+        assert!(pool.depth_maxes().iter().any(|&d| d > 0));
+        assert_eq!(pool.counters().cache_misses.load(Ordering::Relaxed), 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn bad_model_faults_the_chunk_not_the_lane() {
+        let (tx, rx) = channel();
+        let mut pool = LanePool::start(&cfg(1), tx);
+        let lane = pool.lane_for("no-such-model");
+        // Validation normally screens these out; the lane must still
+        // survive one arriving (defense in depth).
+        pool.dispatch(lane, req(0, 1, "no-such-model", 1, 4)).unwrap();
+        let o = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(o.fault);
+        assert!(matches!(o.reply, Msg::Shutdown { fault: true, .. }));
+        // The lane is still alive and serves a real model afterwards.
+        let m = ServeModel::prepare_named("mlp128", 3, 0, QuantMode::Int8).unwrap();
+        let lane = pool.lane_for("mlp128");
+        pool.dispatch(lane, req(0, 2, "mlp128", 1, m.input_numel)).unwrap();
+        let o = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(!o.fault);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn chunking_streams_a_long_run_in_max_batch_pieces() {
+        // max_batch 4, six batch-2 requests => 3 forwards, all replies
+        // bitwise equal to a solo forward (checked e2e; here: counts).
+        let (tx, rx) = channel();
+        let mut pool = LanePool::start(&cfg(1), tx);
+        let m = ServeModel::prepare_named("mlp128", 3, 0, QuantMode::Int8).unwrap();
+        let lane = pool.lane_for("mlp128");
+        for id in 0..6u64 {
+            pool.dispatch(lane, req(0, id, "mlp128", 2, m.input_numel)).unwrap();
+        }
+        for _ in 0..6 {
+            let o = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(o.examples, 2);
+        }
+        let batches = pool.counters().batches.load(Ordering::Relaxed);
+        assert!(batches >= 3, "6 batch-2 requests at max_batch 4 need >= 3 forwards");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dispatch_to_a_missing_lane_is_an_error() {
+        let (tx, _rx) = channel();
+        let mut pool = LanePool::start(&cfg(1), tx);
+        assert!(pool.dispatch(9, req(0, 1, "mlp128", 1, 4)).is_err());
+        pool.shutdown();
+    }
+}

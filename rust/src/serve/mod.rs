@@ -10,14 +10,16 @@
 //! answers `InferRequest` frames over the same wire protocol the
 //! distributed coordinator speaks.
 //!
-//! Layering:
+//! Layering (the staged pipeline; see DESIGN.md §Serving):
 //!
 //! ```text
-//! server      nonblocking accept + poll loop, request validation
+//! server      I/O thread: nonblocking accept + per-connection frame
+//!   |         reassembly (conn), validation, admission control (Busy)
+//! lanes       per-model execution lanes on persistent service threads
+//!   |         (kernels::pool::spawn_service), streaming chunk replies
+//! batcher     per-lane micro-batch queue: flush on max-batch/deadline
 //!   |
-//! batcher     micro-batch queue: flush on max-batch or deadline
-//!   |
-//! cache       per-model LRU of prepared (folded + quantized) plans
+//! cache       per-lane LRU of prepared (folded + quantized) plans
 //!   |
 //! ServeModel  fold -> PreparedForward (fp32) + Int8Model (quantized)
 //! ```
@@ -45,13 +47,17 @@ pub mod batcher;
 pub mod bench;
 pub mod cache;
 pub mod client;
+pub mod conn;
+pub mod lanes;
 pub mod server;
 
 pub use batcher::{Batcher, Pending};
 pub use bench::{run_bench, BenchCfg, BenchRow};
 pub use cache::PlanCache;
-pub use client::{run_infer, InferCfg, InferSummary};
-pub use server::{run_serve, ServeCfg, ServeStats};
+pub use client::{run_busy_probe, run_infer, BusyProbe, InferCfg, InferSummary};
+pub use conn::ServeConn;
+pub use lanes::{LaneOut, LanePool};
+pub use server::{default_lanes, run_serve, ServeCfg, ServeStats};
 
 use crate::runtime::backend::native::models::ModelSpec;
 use crate::runtime::backend::native::{fold, Int8Model, NativeBackend, PreparedForward};

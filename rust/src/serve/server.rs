@@ -1,35 +1,62 @@
-//! The serving loop: nonblocking accept, per-connection polling,
-//! micro-batched folded/quantized forwards, framed replies.
+//! The serving pipeline: a nonblocking I/O thread feeding per-model
+//! execution lanes, with admission control and streamed replies.
 //!
-//! Single-threaded by design — the forward pass dominates wall time
-//! and is already bit-deterministic at any kernel thread count, so one
-//! poll loop multiplexing every connection keeps reply order and
-//! latency accounting simple while still serving concurrent clients
-//! (each poll round visits every live connection).
+//! ```text
+//! listener -> I/O thread -------- lanes (kernels::pool::spawn_service)
+//!             accept              +--------------------------------+
+//!             poll_recv (buffered | lane 0: mlp128   Batcher ->    |
+//!               per-conn frames)  |   chunked forward -> LaneOut   |
+//!             validate            | lane 1: vgg8bn   Batcher ->    |
+//!             admission control   |   chunked forward -> LaneOut   |
+//!             dispatch --------->-+--------------------------------+
+//!             send replies <------------ LaneOut stream
+//! ```
 //!
-//! Protocol per connection: clients send `InferRequest` frames and
-//! read `InferReply` frames; either side ends with `Shutdown`. A
-//! malformed or invalid request earns a faulted `Shutdown` naming the
-//! reason and the connection is dropped — the server itself never
-//! exits on peer misbehavior.
+//! The I/O thread owns every socket: it accepts, reassembles frames
+//! incrementally per connection ([`super::conn::ServeConn`] — a
+//! half-read frame costs other connections nothing), validates
+//! requests against the registry, and applies **admission control**:
+//! if the target lane already holds `max_queue` requests the server
+//! answers a typed [`Msg::Busy`] with a retry hint instead of queueing
+//! unboundedly — memory stays bounded under overload and the client
+//! gets an actionable backoff. Admitted requests go to their model's
+//! lane, which micro-batches and executes them and streams each
+//! chunk's replies back while later chunks still compute.
+//!
+//! A malformed or invalid request still earns a faulted `Shutdown`
+//! naming the reason and drops only that connection — the server
+//! itself never exits on peer misbehavior.
 
-use super::batcher::{Batcher, Pending};
-use super::cache::PlanCache;
-use super::{QuantMode, ServeModel};
-use crate::net::{Msg, TcpTransport, Transport};
+use super::batcher::Pending;
+use super::conn::ServeConn;
+use super::lanes::{LaneOut, LanePool};
+use super::QuantMode;
+use crate::net::Msg;
 use crate::runtime::Engine;
 use crate::util::math::percentile;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Hard cap on examples per request, mirroring the decoder's guard in
 /// `net::proto` so an admitted request can never out-size the wire.
 pub const MAX_REQUEST_BATCH: usize = 4096;
 
-/// How long one poll round waits on each connection for the *start* of
-/// a frame. Small, so a round visits every connection quickly.
-const POLL: Duration = Duration::from_millis(1);
+/// Env var overriding the default execution-lane count.
+pub const ENV_LANES: &str = "DITHERPROP_SERVE_LANES";
+
+/// Default lane count: `DITHERPROP_SERVE_LANES` when set, else 2 (one
+/// fast and one slow model run side by side without head-of-line
+/// blocking; more models than lanes share round-robin).
+pub fn default_lanes() -> usize {
+    std::env::var(ENV_LANES)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|v| v.clamp(1, 64))
+        .unwrap_or(2)
+}
 
 #[derive(Debug, Clone)]
 pub struct ServeCfg {
@@ -39,15 +66,25 @@ pub struct ServeCfg {
     /// `--check` replies must use the same pair.
     pub seed: u64,
     pub steps: usize,
-    /// Flush the micro-batch queue at this many queued examples.
+    /// Flush a lane's micro-batch queue at this many queued examples;
+    /// also the chunk size of streamed execution (one forward covers
+    /// at most this many examples).
     pub max_batch: usize,
     /// ... or once the oldest queued request has waited this long.
     pub max_delay: Duration,
-    /// LRU capacity of the prepared-plan cache.
+    /// LRU capacity of each lane's prepared-plan cache.
     pub cache_cap: usize,
     /// Serve exactly this many requests, then return (tests, benches,
     /// CI smoke). `None` serves until the process dies.
     pub max_requests: Option<u64>,
+    /// Execution lanes (persistent forward workers). Min 1.
+    pub lanes: usize,
+    /// Admission cap: a request whose lane already holds this many
+    /// requests is answered `Busy` instead of queued.
+    pub max_queue: usize,
+    /// Models served BN-folded fp32 regardless of `quant` (mixed-mode
+    /// serving: e.g. int8 mlp128 next to fp32 vgg8bn in one process).
+    pub fp32_models: Vec<String>,
     pub verbose: bool,
 }
 
@@ -61,7 +98,22 @@ impl Default for ServeCfg {
             max_delay: Duration::from_millis(2),
             cache_cap: 4,
             max_requests: None,
+            lanes: default_lanes(),
+            max_queue: 64,
+            fp32_models: Vec::new(),
             verbose: false,
+        }
+    }
+}
+
+impl ServeCfg {
+    /// Numeric mode for `model`: the global `quant` unless the model
+    /// is listed in `fp32_models`.
+    pub fn quant_for(&self, model: &str) -> QuantMode {
+        if self.fp32_models.iter().any(|m| m == model) {
+            QuantMode::Fp32
+        } else {
+            self.quant
         }
     }
 }
@@ -73,12 +125,26 @@ pub struct ServeStats {
     pub served: u64,
     /// Examples inside those requests.
     pub examples: u64,
-    /// Forward passes (flushed micro-batches, per model group).
+    /// Forward passes (flushed chunks, across all lanes).
     pub batches: u64,
-    /// Requests rejected with a faulted `Shutdown`.
+    /// Requests rejected with a faulted `Shutdown` (or whose reply had
+    /// no live connection left to receive it).
     pub rejected: u64,
+    /// Requests answered `Busy` by admission control (not counted as
+    /// served or rejected; clients retry them).
+    pub busy: u64,
     /// Admission-to-reply latency of each served request, milliseconds.
     pub latencies_ms: Vec<f64>,
+    /// Stage splits of the same requests: admission -> forward start.
+    pub queue_ms: Vec<f64>,
+    /// Forward start -> forward end (the chunk's execution).
+    pub exec_ms: Vec<f64>,
+    /// Forward end -> reply on the socket.
+    pub reply_ms: Vec<f64>,
+    /// Per-lane high-water mark of queue depth.
+    pub lane_depth_max: Vec<usize>,
+    /// Execution lanes the server ran.
+    pub lanes: usize,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub elapsed_s: f64,
@@ -93,6 +159,18 @@ impl ServeStats {
         percentile(&self.latencies_ms, 99.0)
     }
 
+    pub fn queue_p99_ms(&self) -> f64 {
+        percentile(&self.queue_ms, 99.0)
+    }
+
+    pub fn exec_p99_ms(&self) -> f64 {
+        percentile(&self.exec_ms, 99.0)
+    }
+
+    pub fn reply_p99_ms(&self) -> f64 {
+        percentile(&self.reply_ms, 99.0)
+    }
+
     pub fn req_per_s(&self) -> f64 {
         if self.elapsed_s > 0.0 {
             self.served as f64 / self.elapsed_s
@@ -105,7 +183,9 @@ impl ServeStats {
         format!(
             "served {} requests ({} examples) in {} forwards over {:.2}s | \
              p50 {:.3} ms, p99 {:.3} ms, {:.1} req/s | \
-             cache {} hits / {} misses | {} rejected",
+             stage p99 queue/exec/reply {:.3}/{:.3}/{:.3} ms | \
+             {} lanes (max depth {:?}) | \
+             cache {} hits / {} misses | {} busy | {} rejected",
             self.served,
             self.examples,
             self.batches,
@@ -113,8 +193,14 @@ impl ServeStats {
             self.p50_ms(),
             self.p99_ms(),
             self.req_per_s(),
+            self.queue_p99_ms(),
+            self.exec_p99_ms(),
+            self.reply_p99_ms(),
+            self.lanes,
+            self.lane_depth_max,
             self.cache_hits,
             self.cache_misses,
+            self.busy,
             self.rejected
         )
     }
@@ -142,30 +228,46 @@ fn validate(engine: &Engine, model: &str, batch: u32, x_len: usize) -> Result<()
 }
 
 /// Send a faulted `Shutdown` naming `reason`, then drop the slot.
-fn fault_drop(slot: &mut Option<Box<dyn Transport>>, reason: &str) {
-    if let Some(t) = slot.as_mut() {
-        let _ = t.send(&Msg::Shutdown { fault: true, reason: reason.to_string() });
+fn fault_drop(slot: &mut Option<ServeConn>, reason: &str) {
+    if let Some(c) = slot.as_mut() {
+        let _ = c.send(&Msg::Shutdown { fault: true, reason: reason.to_string() });
     }
     *slot = None;
 }
 
-/// Run the serving loop on an already-bound listener until
+/// The `Busy` retry hint: one flush delay plus the lane's estimated
+/// drain time (depth x mean execution), clamped to a sane range.
+fn retry_hint_ms(cfg: &ServeCfg, depth: usize, exec_mean_ms: Option<f64>) -> u32 {
+    let mean = exec_mean_ms.unwrap_or_else(|| cfg.max_delay.as_secs_f64() * 1e3);
+    let est = cfg.max_delay.as_secs_f64() * 1e3 + mean * depth as f64;
+    est.clamp(1.0, 60_000.0) as u32
+}
+
+/// Run the serving pipeline on an already-bound listener until
 /// `max_requests` is reached (never returns when it is `None`).
 pub fn run_serve(listener: &TcpListener, cfg: &ServeCfg) -> Result<ServeStats> {
     listener.set_nonblocking(true).context("setting listener nonblocking")?;
     let engine = Engine::native()?;
-    let mut cache = PlanCache::new(cfg.cache_cap);
-    let mut batcher = Batcher::new(cfg.max_batch, cfg.max_delay);
-    let mut conns: Vec<Option<Box<dyn Transport>>> = Vec::new();
-    let mut stats = ServeStats::default();
+    let (out_tx, out_rx) = channel::<LaneOut>();
+    let mut pool = LanePool::start(cfg, out_tx);
+    let mut conns: Vec<Option<ServeConn>> = Vec::new();
+    let mut stats = ServeStats { lanes: pool.lane_count(), ..ServeStats::default() };
     let started = Instant::now();
+    // Running mean of chunk execution time, feeding the Busy hint.
+    let mut exec_sum_ms = 0.0f64;
+    let mut exec_n = 0u64;
 
     loop {
-        // Admit every connection waiting on the listener.
+        let mut progressed = false;
+
+        // Stage 1: admit every connection waiting on the listener.
         loop {
             match listener.accept() {
-                Ok((stream, _peer)) => match TcpTransport::from_stream(stream) {
-                    Ok(t) => conns.push(Some(Box::new(t))),
+                Ok((stream, _peer)) => match ServeConn::from_stream(stream) {
+                    Ok(c) => {
+                        conns.push(Some(c));
+                        progressed = true;
+                    }
                     Err(e) => {
                         if cfg.verbose {
                             eprintln!("[serve] rejected connection: {e:#}");
@@ -177,136 +279,165 @@ pub fn run_serve(listener: &TcpListener, cfg: &ServeCfg) -> Result<ServeStats> {
             }
         }
 
-        // One short poll per live connection.
-        for (ci, slot) in conns.iter_mut().enumerate() {
-            let Some(t) = slot.as_mut() else { continue };
-            match t.recv_deadline(POLL) {
-                Ok(None) => {}
-                Ok(Some(Msg::InferRequest { id, model, batch, x })) => {
-                    match validate(&engine, &model, batch, x.len()) {
-                        Ok(()) => batcher.push(Pending {
-                            conn: ci,
-                            id,
-                            model,
-                            batch: batch as usize,
-                            x,
-                            arrived: Instant::now(),
-                        }),
-                        Err(reason) => {
-                            stats.rejected += 1;
-                            fault_drop(slot, &reason);
+        // Stage 2: one nonblocking poll per connection, draining every
+        // complete frame it has buffered. A half-read frame stays
+        // buffered on its own connection (per-connection deadline
+        // inside ServeConn) and costs this sweep nothing.
+        let now = Instant::now();
+        for ci in 0..conns.len() {
+            loop {
+                let msg = {
+                    let Some(slot) = conns.get_mut(ci) else { break };
+                    let Some(c) = slot.as_mut() else { break };
+                    match c.poll_recv(now) {
+                        Ok(Some(m)) => m,
+                        Ok(None) => break,
+                        Err(e) => {
+                            if cfg.verbose {
+                                eprintln!("[serve] dropping connection: {e:#}");
+                            }
+                            *slot = None;
+                            break;
                         }
                     }
+                };
+                progressed = true;
+                match msg {
+                    Msg::InferRequest { id, model, batch, x } => {
+                        if let Err(reason) = validate(&engine, &model, batch, x.len()) {
+                            stats.rejected += 1;
+                            if let Some(slot) = conns.get_mut(ci) {
+                                fault_drop(slot, &reason);
+                            }
+                            break;
+                        }
+                        let lane = pool.lane_for(&model);
+                        let depth = pool.depth(lane);
+                        if depth >= cfg.max_queue.max(1) {
+                            // Admission control: typed Busy, request not
+                            // queued, connection stays open.
+                            stats.busy += 1;
+                            let mean =
+                                if exec_n > 0 { Some(exec_sum_ms / exec_n as f64) } else { None };
+                            let hint = retry_hint_ms(cfg, depth, mean);
+                            let busy = Msg::Busy { id, retry_after_ms: hint };
+                            let Some(slot) = conns.get_mut(ci) else { break };
+                            let alive =
+                                slot.as_mut().map(|c| c.send(&busy).is_ok()).unwrap_or(false);
+                            if !alive {
+                                *slot = None;
+                                break;
+                            }
+                            continue;
+                        }
+                        pool.dispatch(
+                            lane,
+                            Pending {
+                                conn: ci,
+                                id,
+                                model,
+                                batch: batch as usize,
+                                x,
+                                arrived: Instant::now(),
+                            },
+                        )?;
+                    }
+                    Msg::Shutdown { .. } => {
+                        if let Some(slot) = conns.get_mut(ci) {
+                            *slot = None;
+                        }
+                        break;
+                    }
+                    other => {
+                        stats.rejected += 1;
+                        if let Some(slot) = conns.get_mut(ci) {
+                            fault_drop(slot, &format!("unexpected message tag {}", other.tag()));
+                        }
+                        break;
+                    }
                 }
-                Ok(Some(Msg::Shutdown { .. })) => *slot = None,
-                Ok(Some(other)) => {
-                    stats.rejected += 1;
-                    fault_drop(slot, &format!("unexpected message tag {}", other.tag()));
-                }
-                Err(_) => *slot = None, // peer hung up or sent garbage
             }
         }
 
-        // Flush: group the FIFO drain by model, one forward per group.
-        let now = Instant::now();
-        if batcher.ready(now) {
-            let drained = batcher.take_ready(now);
-            let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
-            for p in drained {
-                match groups.iter_mut().find(|(m, _)| *m == p.model) {
-                    Some((_, g)) => g.push(p),
-                    None => groups.push((p.model.clone(), vec![p])),
-                }
-            }
-            for (model, group) in groups {
-                let prepared = cache.get_or_try_insert(&model, || {
-                    ServeModel::prepare_named(&model, cfg.seed, cfg.steps, cfg.quant)
-                });
-                let sm = match prepared {
-                    Ok(sm) => sm,
-                    Err(e) => {
-                        let reason = format!("preparing model '{model}': {e:#}");
-                        for p in &group {
-                            stats.rejected += 1;
-                            if let Some(slot) = conns.get_mut(p.conn) {
-                                fault_drop(slot, &reason);
-                            }
-                        }
-                        continue;
-                    }
-                };
-                let total: usize = group.iter().map(|p| p.batch).sum();
-                let mut xs = Vec::with_capacity(total * sm.input_numel);
-                for p in &group {
-                    xs.extend_from_slice(&p.x);
-                }
-                let (preds, logits) = match sm.infer(&xs, total) {
-                    Ok(out) => out,
-                    Err(e) => {
-                        // Validation should make this unreachable; if a
-                        // forward still fails, fault the group, keep
-                        // serving.
-                        let reason = format!("forward failed for '{model}': {e:#}");
-                        for p in &group {
-                            stats.rejected += 1;
-                            if let Some(slot) = conns.get_mut(p.conn) {
-                                fault_drop(slot, &reason);
-                            }
-                        }
-                        continue;
-                    }
-                };
-                stats.batches += 1;
-                let classes = sm.classes;
-                let done = Instant::now();
-                let mut preds = preds.into_iter();
-                let mut logits = logits.into_iter();
-                for p in group {
-                    let reply = Msg::InferReply {
-                        id: p.id,
-                        classes: classes as u32,
-                        preds: preds.by_ref().take(p.batch).collect(),
-                        logits: logits.by_ref().take(p.batch * classes).collect(),
-                    };
-                    if let Some(slot) = conns.get_mut(p.conn) {
-                        if let Some(t) = slot.as_mut() {
-                            match t.send(&reply) {
-                                Ok(()) => {
-                                    stats.served += 1;
-                                    stats.examples += p.batch as u64;
-                                    stats
-                                        .latencies_ms
-                                        .push(done.saturating_duration_since(p.arrived).as_secs_f64() * 1e3);
+        // Stage 3: drain lane outputs and put replies on the wire.
+        // Chunked lanes emit while later chunks compute, so replies
+        // stream out of this drain across sweeps.
+        loop {
+            match out_rx.try_recv() {
+                Ok(o) => {
+                    progressed = true;
+                    let sent_ok = match conns.get_mut(o.conn) {
+                        Some(slot) => match slot.as_mut() {
+                            Some(c) => match c.send(&o.reply) {
+                                Ok(()) => true,
+                                Err(_) => {
+                                    *slot = None;
+                                    false
                                 }
-                                Err(_) => *slot = None,
-                            }
+                            },
+                            None => false,
+                        },
+                        None => false,
+                    };
+                    if o.fault {
+                        stats.rejected += 1;
+                        if let Some(slot) = conns.get_mut(o.conn) {
+                            *slot = None;
                         }
+                    } else if sent_ok {
+                        let done = Instant::now();
+                        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+                        stats.served += 1;
+                        stats.examples += o.examples;
+                        let exec = ms(o.exec_done.saturating_duration_since(o.exec_start));
+                        stats.queue_ms.push(ms(o.exec_start.saturating_duration_since(o.arrived)));
+                        stats.exec_ms.push(exec);
+                        stats.reply_ms.push(ms(done.saturating_duration_since(o.exec_done)));
+                        stats.latencies_ms.push(ms(done.saturating_duration_since(o.arrived)));
+                        exec_sum_ms += exec;
+                        exec_n += 1;
+                        if cfg.verbose && stats.served % 64 == 0 {
+                            eprintln!(
+                                "[serve] {} requests served ({} busy, {} rejected)",
+                                stats.served, stats.busy, stats.rejected
+                            );
+                        }
+                    } else {
+                        // The reply had no live connection left: still a
+                        // terminal outcome, or `max_requests` accounting
+                        // could stall the shutdown.
+                        stats.rejected += 1;
                     }
                 }
-                if cfg.verbose {
-                    eprintln!(
-                        "[serve] {model}: batch of {total} examples served ({} total requests)",
-                        stats.served
-                    );
-                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => bail!("every execution lane died"),
             }
         }
 
         if let Some(cap) = cfg.max_requests {
-            if stats.served + stats.rejected >= cap && batcher.is_empty() {
+            // `all_idle` (Acquire) observes each lane's decrement only
+            // after its output send, and outputs were just drained — so
+            // idle + cap reached means nothing is in flight anywhere.
+            if stats.served + stats.rejected >= cap && pool.all_idle() {
                 break;
             }
         }
 
-        // Nothing to poll: sleep instead of spinning on accept().
-        if conns.iter().all(|c| c.is_none()) {
-            std::thread::sleep(Duration::from_millis(2));
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(300));
         }
     }
 
-    stats.cache_hits = cache.hits;
-    stats.cache_misses = cache.misses;
+    pool.shutdown();
+    stats.lane_depth_max = pool.depth_maxes();
+    let c = pool.counters();
+    stats.batches = c.batches.load(Ordering::Relaxed);
+    stats.cache_hits = c.cache_hits.load(Ordering::Relaxed);
+    stats.cache_misses = c.cache_misses.load(Ordering::Relaxed);
     stats.elapsed_s = started.elapsed().as_secs_f64();
+    if cfg.verbose {
+        eprintln!("[serve] {}", stats.summary());
+    }
     Ok(stats)
 }
 
@@ -327,19 +458,53 @@ mod tests {
     }
 
     #[test]
-    fn stats_summary_reports_percentiles() {
+    fn stats_summary_reports_percentiles_stages_and_busy() {
         let stats = ServeStats {
             served: 4,
             examples: 8,
             batches: 2,
+            busy: 3,
+            lanes: 2,
             latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            queue_ms: vec![0.5; 4],
+            exec_ms: vec![1.0; 4],
+            reply_ms: vec![0.25; 4],
+            lane_depth_max: vec![2, 1],
             elapsed_s: 2.0,
             ..ServeStats::default()
         };
         assert_eq!(stats.p50_ms(), 3.0);
         assert_eq!(stats.p99_ms(), 4.0);
         assert_eq!(stats.req_per_s(), 2.0);
+        assert_eq!(stats.exec_p99_ms(), 1.0);
         let s = stats.summary();
         assert!(s.contains("p50") && s.contains("p99") && s.contains("req/s"), "{s}");
+        assert!(s.contains("3 busy") && s.contains("2 lanes"), "{s}");
+    }
+
+    #[test]
+    fn quant_for_respects_fp32_overrides() {
+        let cfg = ServeCfg {
+            quant: QuantMode::Int8,
+            fp32_models: vec!["vgg8bn".into()],
+            ..ServeCfg::default()
+        };
+        assert_eq!(cfg.quant_for("mlp128"), QuantMode::Int8);
+        assert_eq!(cfg.quant_for("vgg8bn"), QuantMode::Fp32);
+    }
+
+    #[test]
+    fn retry_hint_scales_with_depth_and_clamps() {
+        let cfg = ServeCfg { max_delay: Duration::from_millis(2), ..ServeCfg::default() };
+        let idle = retry_hint_ms(&cfg, 1, None);
+        let deep = retry_hint_ms(&cfg, 16, Some(10.0));
+        assert!(idle >= 1);
+        assert!(deep > idle, "deeper queues hint longer waits");
+        assert!(retry_hint_ms(&cfg, usize::MAX / 2, Some(1e12)) <= 60_000);
+    }
+
+    #[test]
+    fn default_lanes_is_at_least_one() {
+        assert!(default_lanes() >= 1);
     }
 }

@@ -92,6 +92,7 @@ fn sample_msgs() -> Vec<Msg> {
             preds: vec![2, 0],
             logits: vec![0.1, 0.2, 0.7, 0.6, 0.3, 0.1],
         },
+        Msg::Busy { id: 78, retry_after_ms: 250 },
     ]
 }
 
@@ -177,10 +178,10 @@ fn garbage_payloads_never_panic() {
         let junk: Vec<u8> = (0..n).map(|_| (g.u32() & 0xFF) as u8).collect();
         let tag = (g.u32() & 0xFF) as u8;
         let r = Msg::decode(tag, &junk);
-        // Unknown tags must always be rejected; known tags (1..=11 as
-        // of proto v4) may decode by coincidence but must not panic
+        // Unknown tags must always be rejected; known tags (1..=12 as
+        // of proto v5) may decode by coincidence but must not panic
         // doing so.
-        (1..=11).contains(&tag) || r.is_err()
+        (1..=12).contains(&tag) || r.is_err()
     });
 }
 
@@ -215,6 +216,14 @@ fn corrupt_counts_cannot_force_oversized_allocations() {
     let mut payload = msg.encode_payload();
     let batch_at = 8 + 4 + 1; // id + str length prefix + "m"
     payload[batch_at..batch_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Msg::decode(msg.tag(), &payload).is_err());
+
+    // Busy layout: id u64 | retry_after_ms u32 — a corrupt hint beyond
+    // the one-hour plausibility guard must be rejected (a client would
+    // otherwise sleep on attacker-chosen durations).
+    let msg = Msg::Busy { id: 1, retry_after_ms: 5 };
+    let mut payload = msg.encode_payload();
+    payload[8..12].copy_from_slice(&3_600_001u32.to_le_bytes());
     assert!(Msg::decode(msg.tag(), &payload).is_err());
 }
 

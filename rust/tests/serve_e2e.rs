@@ -9,7 +9,8 @@
 
 #![cfg(feature = "native")]
 
-use ditherprop::serve::{run_infer, run_serve, InferCfg, QuantMode, ServeCfg};
+use ditherprop::serve::{run_busy_probe, run_infer, run_serve, InferCfg, QuantMode, ServeCfg};
+use ditherprop::util::math::percentile;
 use std::net::TcpListener;
 use std::time::Duration;
 
@@ -81,6 +82,128 @@ fn int8_replies_are_bit_identical_to_local_forward() {
 fn fp32_replies_are_bit_identical_on_a_folded_bn_model() {
     // vgg8bn folds real BatchNorm stages before serving.
     e2e(QuantMode::Fp32, "vgg8bn", 0);
+}
+
+/// The lane executor's headline guarantee: a slow fp32 vgg8bn client
+/// and a fast int8 mlp128 client share one server, and because the two
+/// models run on different execution lanes the fast model's tail
+/// latency stays bounded by its own work, not the slow model's — while
+/// every reply from both models remains bitwise identical to a solo
+/// local forward.
+#[test]
+fn mixed_models_do_not_head_of_line_block() {
+    const MLP_REQUESTS: usize = 12;
+    const VGG_REQUESTS: usize = 5;
+    const WARMUP: usize = 1;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let serve_cfg = ServeCfg {
+        quant: QuantMode::Int8,
+        seed: 5,
+        steps: 0,
+        max_batch: 8,
+        max_delay: Duration::from_millis(2),
+        lanes: 2,
+        fp32_models: vec!["vgg8bn".into()],
+        max_requests: Some((MLP_REQUESTS + VGG_REQUESTS + 2 * WARMUP) as u64),
+        ..ServeCfg::default()
+    };
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| run_serve(&listener, &serve_cfg));
+        let client = |model: &str, batch: usize, requests: usize, quant: QuantMode| InferCfg {
+            addr: addr.clone(),
+            model: model.to_string(),
+            batch,
+            requests,
+            warmup: WARMUP,
+            seed: 5,
+            steps: 0,
+            quant,
+            check: true,
+            connect_timeout: Duration::from_secs(10),
+        };
+        let vgg = s.spawn({
+            let cfg = client("vgg8bn", 4, VGG_REQUESTS, QuantMode::Fp32);
+            move || run_infer(&cfg)
+        });
+        let mlp = s.spawn({
+            let cfg = client("mlp128", 1, MLP_REQUESTS, QuantMode::Int8);
+            move || run_infer(&cfg)
+        });
+
+        let vgg = vgg.join().expect("vgg thread").expect("vgg client");
+        let mlp = mlp.join().expect("mlp thread").expect("mlp client");
+        assert_eq!(vgg.checked as usize, VGG_REQUESTS + WARMUP, "fp32 replies bitwise clean");
+        assert_eq!(mlp.checked as usize, MLP_REQUESTS + WARMUP, "int8 replies bitwise clean");
+
+        // The head-of-line bound: with per-model lanes, the fast
+        // model's p99 must stay below the slow model's median forward
+        // (with a floor absorbing scheduler noise on loaded CI boxes).
+        // A single serial loop cannot pass this: every mlp request
+        // stuck behind a vgg batch-4 forward would inherit its latency.
+        let mlp_p99 = percentile(&mlp.latencies_ms, 99.0);
+        let vgg_p50 = percentile(&vgg.latencies_ms, 50.0);
+        assert!(
+            mlp_p99 < vgg_p50.max(25.0),
+            "mlp p99 {mlp_p99:.3} ms head-of-line blocked behind vgg (p50 {vgg_p50:.3} ms)"
+        );
+
+        let stats = server.join().expect("server thread").expect("server run");
+        assert_eq!(stats.served, (MLP_REQUESTS + VGG_REQUESTS + 2 * WARMUP) as u64);
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.busy, 0, "well under the queue cap");
+        assert_eq!(stats.lanes, 2);
+        assert_eq!(stats.lane_depth_max.len(), 2);
+        assert_eq!(stats.cache_misses, 2, "each model prepared once, on its own lane");
+    });
+}
+
+/// Overload answers a typed `Busy`, never unbounded queueing: with the
+/// queue cap forced to 1, a client that pipelines all its requests at
+/// once must see at least one `Busy`, and after retrying, every reply
+/// is still bitwise identical to a local forward.
+#[test]
+fn queue_cap_overload_returns_busy_and_replies_stay_bitwise_clean() {
+    const REQUESTS: usize = 4;
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let serve_cfg = ServeCfg {
+        quant: QuantMode::Int8,
+        seed: 5,
+        steps: 0,
+        lanes: 1,
+        max_queue: 1,
+        max_batch: 1,
+        max_delay: Duration::from_millis(5),
+        max_requests: Some(REQUESTS as u64),
+        ..ServeCfg::default()
+    };
+
+    std::thread::scope(|s| {
+        let server = s.spawn(|| run_serve(&listener, &serve_cfg));
+        let probe_cfg = InferCfg {
+            addr: addr.clone(),
+            model: "mlp128".into(),
+            batch: 1,
+            requests: REQUESTS,
+            warmup: 0,
+            seed: 5,
+            steps: 0,
+            quant: QuantMode::Int8,
+            check: true,
+            connect_timeout: Duration::from_secs(10),
+        };
+        let probe = run_busy_probe(&probe_cfg).expect("busy probe");
+        assert!(probe.busy >= 1, "cap 1 with {REQUESTS} pipelined requests must reject");
+        assert_eq!(probe.served as usize, REQUESTS, "every request served after retries");
+        assert_eq!(probe.checked as usize, REQUESTS, "busy retries preserve bit-identity");
+
+        let stats = server.join().expect("server thread").expect("server run");
+        assert_eq!(stats.served as usize, REQUESTS);
+        assert_eq!(stats.busy, probe.busy);
+        assert!(stats.lane_depth_max.iter().all(|&d| d <= 1), "cap held: {stats:?}");
+    });
 }
 
 #[test]

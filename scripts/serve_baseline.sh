@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Re-measure the serve-gate baseline on the current host: run the full
+# bench-serve sweep (single-model cells plus the mixed-model
+# head-of-line pair at 1 vs 2 lanes), stamp the report as a *measured*
+# baseline (`meta.baseline_kind = "measured"`, vs the seed's hand-set
+# "bound" rows), and rewrite BENCH_serving.json. Review the diff before
+# committing — a baseline measured on a noisy host makes the gate
+# either toothless (too slow) or flaky (too fast).
+#
+# usage: scripts/serve_baseline.sh [requests_per_client] [out.json]
+set -euo pipefail
+
+requests="${1:-24}"
+out="${2:-$(dirname "$0")/../BENCH_serving.json}"
+tmp="$(mktemp /tmp/serve_baseline.XXXXXX.json)"
+trap 'rm -f "$tmp"' EXIT
+
+(cd "$(dirname "$0")/../rust" \
+  && cargo run --release -- bench-serve --model mlp128 --quant int8 \
+       --requests "$requests" --json "$tmp")
+
+jq -e '.schema == "ditherprop-bench-v1" and .bench == "serve_latency"' "$tmp" > /dev/null \
+  || { echo "serve-baseline: bench-serve did not emit a serve_latency report" >&2; exit 2; }
+
+# Sanity before stamping: the mixed-model pair must show the lane
+# executor working — the 2-lane cell's p99 under fp32 background load
+# at most half the 1-lane cell's. A baseline violating this was
+# measured against a broken build; refuse to commit it.
+jq -e '
+  ([.rows[] | select(.mixed != "none" and .lanes == 1)][0]) as $one
+  | ([.rows[] | select(.mixed != "none" and .lanes >= 2)][0]) as $many
+  | $one != null and $many != null and $many.p99_ms * 2 <= $one.p99_ms
+' "$tmp" > /dev/null \
+  || { echo "serve-baseline: mixed-model p99 not >=2x better with lanes than without" >&2
+       echo "serve-baseline: refusing to stamp a baseline from a non-pipelined build" >&2
+       exit 1; }
+
+note="measured serve-gate baseline (scripts/serve_baseline.sh, --requests $requests, quiet host);"
+note="$note scripts/serve_gate.sh fails on any sweep cell missing from a fresh run,"
+note="$note above these p50/p99 ceilings, or below the req/s floor."
+jq --arg note "$note" \
+  '.meta.baseline_kind = "measured" | .meta.note = $note' "$tmp" > "$out"
+
+n=$(jq '.rows | length' "$out")
+n_mixed=$(jq '[.rows[] | select(.mixed != "none")] | length' "$out")
+echo "serve-baseline: wrote $n rows ($n_mixed mixed-model) (baseline_kind=measured) to $out"

@@ -4,13 +4,16 @@
 # sweep cell blows past its bounds. Plain bash + jq, no new
 # dependencies.
 #
-# Rows join on (model, quant, batch, clients). The baseline's p50_ms /
-# p99_ms are latency *ceilings* and req_per_s a throughput *floor*,
-# scaled by the tolerance factor: a fresh cell fails if its p50 or p99
-# exceeds ceiling * tol, or its req/s drops under floor / tol. The
-# committed baseline is `baseline_kind: "bound"` (generous hand-set
-# bounds, so the gate catches catastrophic regressions without flaking
-# on runner speed); a re-measured baseline tightens it.
+# Rows join on (model, quant, batch, clients, lanes, mixed) — lanes
+# defaults to 1 and mixed to "none" on either side, so pre-lane-executor
+# reports still join. The baseline's p50_ms / p99_ms are latency
+# *ceilings* and req_per_s a throughput *floor*, scaled by the
+# tolerance factor: a fresh cell fails if its p50 or p99 exceeds
+# ceiling * tol, or its req/s drops under floor / tol. The committed
+# baseline is `baseline_kind: "bound"` (generous hand-set bounds, so
+# the gate catches catastrophic regressions without flaking on runner
+# speed); re-measure with scripts/serve_baseline.sh to tighten it. The
+# gate's verdict line names the baseline kind either way.
 #
 # usage: scripts/serve_gate.sh <fresh.json> [baseline.json] [tolerance]
 set -euo pipefail
@@ -37,9 +40,11 @@ fails=$(jq -r --slurpfile f "$fresh" --argjson tol "$tol" --arg kind "$kind" '
     | . as $b
     | [ $f[0].rows[]
         | select(.model == $b.model and .quant == $b.quant
-                 and .batch == $b.batch and .clients == $b.clients) ][0] as $n
+                 and .batch == $b.batch and .clients == $b.clients
+                 and (.lanes // 1) == ($b.lanes // 1)
+                 and (.mixed // "none") == ($b.mixed // "none")) ][0] as $n
     | if $n == null then
-        "MISSING  \($b.model)/\($b.quant) b\($b.batch) c\($b.clients): no matching row in the fresh run (baseline_kind=\($kind))"
+        "MISSING  \($b.model)/\($b.quant) b\($b.batch) c\($b.clients) l\($b.lanes // 1) mixed=\($b.mixed // "none"): no matching row in the fresh run (baseline_kind=\($kind))"
       else
         [ (if $n.p50_ms > $b.p50_ms * $tol then
              "p50 \($n.p50_ms)ms > \($kind) ceiling \($b.p50_ms)ms x \($tol)" else empty end),
@@ -49,7 +54,7 @@ fails=$(jq -r --slurpfile f "$fresh" --argjson tol "$tol" --arg kind "$kind" '
              "req/s \($n.req_per_s) < \($kind) floor \($b.req_per_s) / \($tol)" else empty end)
         ]
         | if length > 0 then
-            "REGRESSED \($b.model)/\($b.quant) b\($b.batch) c\($b.clients): " + join("; ")
+            "REGRESSED \($b.model)/\($b.quant) b\($b.batch) c\($b.clients) l\($b.lanes // 1) mixed=\($b.mixed // "none"): " + join("; ")
           else empty end
       end
   ] | .[]' "$baseline")
